@@ -1,0 +1,104 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+`xla` rust crate binds) rejects (`proto.id() <= INT_MAX`).  The text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per variant plus ``manifest.json`` describing
+shapes/dtypes so the rust loader can validate its inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, C chunks per call, B chunk length, K candidate slots)
+VERIFY_VARIANTS = [
+    ("verify_16x65536x2048", 16, 65536, 2048),
+    ("verify_16x65536x8192", 16, 65536, 8192),
+    ("verify_1x65536x2048", 1, 65536, 2048),
+]
+
+# (name, C, B, num_buckets)
+PROFILE_VARIANTS = [
+    ("profile_16x65536x1024", 16, 65536, 1024),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_verify(c: int, b: int, k: int) -> str:
+    chunks = jax.ShapeDtypeStruct((c, b), jnp.int32)
+    cands = jax.ShapeDtypeStruct((k,), jnp.int32)
+    return to_hlo_text(jax.jit(model.verify_counts).lower(chunks, cands))
+
+
+def lower_profile(c: int, b: int, nb: int) -> str:
+    chunks = jax.ShapeDtypeStruct((c, b), jnp.int32)
+    fn = lambda x: model.skew_profile(x, num_buckets=nb)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(chunks))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "stream_pad": model.STREAM_PAD,
+                "candidate_pad": model.CANDIDATE_PAD, "entries": []}
+
+    for name, c, b, k in VERIFY_VARIANTS:
+        text = lower_verify(c, b, k)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append({
+            "name": name, "kind": "verify", "chunks": c, "chunk_len": b,
+            "k": k, "file": f"{name}.hlo.txt",
+            "inputs": [["i32", [c, b]], ["i32", [k]]],
+            "outputs": [["f32", [k]]],
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for name, c, b, nb in PROFILE_VARIANTS:
+        text = lower_profile(c, b, nb)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append({
+            "name": name, "kind": "profile", "chunks": c, "chunk_len": b,
+            "num_buckets": nb, "file": f"{name}.hlo.txt",
+            "inputs": [["i32", [c, b]]],
+            "outputs": [["f32", [c, nb]]],
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

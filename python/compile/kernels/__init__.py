@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (build-time only; lowered into AOT artifacts)."""
+
+from .candidate_count import candidate_count  # noqa: F401
+from .histogram import block_histogram, fib_hash32  # noqa: F401

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: batched candidate-frequency counting.
+
+The paper's hot loop (hash-table counter updates) is pointer-chasing and,
+as the paper's own Intel-Phi experiment shows, hostile to wide SIMD.  The
+dense, data-parallel part of the pipeline is *candidate verification*:
+given the <=K candidate items reported by (parallel) Space Saving and the
+raw stream, compute every candidate's exact frequency.  That is what this
+kernel does, reformulated for a TPU-like memory hierarchy:
+
+  - the stream is processed in blocks of ``block_b`` items; each grid step
+    stages one block from HBM into VMEM (BlockSpec),
+  - the block is compared against the full candidate vector (broadcast
+    compare -> (B, K) one-hot match matrix, formed only in registers/VMEM,
+    never materialized in HBM),
+  - the match matrix is column-reduced; on a real TPU the reduction
+    ``ones(1,B) @ match(B,K)`` maps onto the MXU systolic array while the
+    compare feeds the VPU,
+  - partial counts accumulate into the output block, which Pallas keeps
+    resident in VMEM across grid steps (same out index_map every step).
+
+VMEM budget (see DESIGN.md SHardware-Adaptation): with B=2048, K<=8192,
+the staged operands are B*4 + K*4 bytes and the transient match tile is
+B*K*4 bytes float32 at worst; we sub-tile K with a second grid axis so the
+live tile stays under ~8 MiB.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; the interpret path lowers to plain HLO so the same kernel
+runs inside the AOT artifact consumed by the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes, chosen for the VMEM budget documented above.
+DEFAULT_BLOCK_B = 2048
+DEFAULT_BLOCK_K = 1024
+
+
+def _count_kernel(stream_ref, cand_ref, out_ref):
+    """One grid step: count occurrences of cand block within stream block.
+
+    Grid = (num_stream_blocks, num_cand_blocks).  The output block index
+    depends only on the candidate-block axis, so Pallas accumulates the
+    stream axis in VMEM without HBM round-trips.
+    """
+    sb = pl.program_id(0)
+
+    # (B,) items and (Kb,) candidates staged in VMEM by BlockSpec.
+    items = stream_ref[...]
+    cands = cand_ref[...]
+
+    # (B, Kb) one-hot match matrix; compare on the VPU.
+    match = (items[:, None] == cands[None, :]).astype(jnp.float32)
+    # Column sum == ones(1,B) @ match -> MXU-shaped reduction.
+    partial = jnp.sum(match, axis=0)
+
+    # First stream block initializes the accumulator, later blocks add.
+    @pl.when(sb == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(sb != 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k"))
+def candidate_count(
+    stream: jax.Array,
+    candidates: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Exact frequency of every candidate in ``stream``.
+
+    Args:
+      stream: (N,) int32/uint32 item ids; N must be a multiple of block_b
+        (pad with a sentinel absent from candidates, e.g. 0xFFFFFFFF).
+      candidates: (K,) item ids; K must be a multiple of block_k.
+      block_b / block_k: VMEM tile sizes.
+
+    Returns:
+      (K,) float32 counts (float so the reduction is MXU-friendly; exact
+      for counts < 2**24, far above any realistic block budget).
+    """
+    n = stream.shape[0]
+    k = candidates.shape[0]
+    # Clamp tiles to the operand shapes (small inputs use a single tile).
+    block_b = min(block_b, n)
+    block_k = min(block_k, k)
+    if n % block_b != 0:
+        raise ValueError(f"stream length {n} not a multiple of {block_b}")
+    if k % block_k != 0:
+        raise ValueError(f"candidate length {k} not a multiple of {block_k}")
+
+    grid = (n // block_b, k // block_k)
+    return pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda sb, kb: (sb,)),
+            pl.BlockSpec((block_k,), lambda sb, kb: (kb,)),
+        ],
+        out_specs=pl.BlockSpec((block_k,), lambda sb, kb: (kb,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,
+    )(stream.astype(jnp.int32), candidates.astype(jnp.int32))

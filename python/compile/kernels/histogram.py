@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: per-block bucketed histogram of hashed item ids.
+
+Second kernel of the offline pipeline: a coarse *sketch pre-pass* that
+histograms stream blocks into ``num_buckets`` hash buckets.  The rust
+coordinator uses it to (a) estimate block skew for adaptive sharding and
+(b) cheaply bound which blocks can contain heavy candidates (a bucket's
+total is an upper bound on any item hashed into it, CountMin-style with
+one row).
+
+TPU formulation: bucketing is a one-hot scatter, expressed densely as
+compare-against-iota + matmul-shaped reduce, so it lands on VPU+MXU just
+like candidate_count.  Buckets accumulate in VMEM across the stream grid
+axis.
+
+The hash is a Fibonacci multiplicative hash (Knuth) on int32, kept
+bit-exact with the rust side (`pss::gen::fib_hash32`) and with ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 2048
+
+# Knuth's 32-bit Fibonacci multiplier (2**32 / phi, odd).  Kept as a plain
+# python int: weak typing keeps the product uint32 and avoids capturing a
+# traced constant inside the pallas kernel body.
+import numpy as _np
+_FIB_MULT = _np.uint32(2654435769)
+
+
+def fib_hash32(x: jax.Array, num_buckets: int) -> jax.Array:
+    """Fibonacci multiplicative hash into [0, num_buckets).
+
+    num_buckets must be a power of two; the bucket index is taken from the
+    *high* bits of the product, which is where this hash mixes well.
+    """
+    shift = 32 - int(num_buckets).bit_length() + 1
+    h = (x.astype(jnp.uint32) * _FIB_MULT) >> shift
+    return h.astype(jnp.int32)
+
+
+def _hist_kernel(stream_ref, out_ref, *, num_buckets: int):
+    sb = pl.program_id(0)
+
+    items = stream_ref[...]
+    buckets = fib_hash32(items, num_buckets)
+
+    # Dense one-hot scatter: (B, num_buckets) match vs bucket iota, then
+    # column-reduce (MXU-shaped, same trick as candidate_count).
+    iota = jax.lax.iota(jnp.int32, num_buckets)
+    onehot = (buckets[:, None] == iota[None, :]).astype(jnp.float32)
+    partial = jnp.sum(onehot, axis=0)
+
+    @pl.when(sb == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(sb != 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "block_b"))
+def block_histogram(
+    stream: jax.Array,
+    *,
+    num_buckets: int = 1024,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jax.Array:
+    """Histogram ``stream`` into ``num_buckets`` hash buckets.
+
+    Args:
+      stream: (N,) int32/uint32 ids, N a multiple of block_b.
+      num_buckets: power of two, <= 4096 to respect the VMEM budget.
+
+    Returns:
+      (num_buckets,) float32 bucket totals.
+    """
+    n = stream.shape[0]
+    if n % block_b != 0:
+        raise ValueError(f"stream length {n} not a multiple of {block_b}")
+    if num_buckets & (num_buckets - 1) != 0:
+        raise ValueError("num_buckets must be a power of two")
+
+    kernel = functools.partial(_hist_kernel, num_buckets=num_buckets)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_b,),
+        in_specs=[pl.BlockSpec((block_b,), lambda sb: (sb,))],
+        out_specs=pl.BlockSpec((num_buckets,), lambda sb: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_buckets,), jnp.float32),
+        interpret=True,
+    )(stream.astype(jnp.int32))

@@ -1,0 +1,32 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suite compares against;
+they make no tiling or memory-hierarchy assumptions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import numpy as _np
+_FIB_MULT = _np.uint32(2654435769)
+
+
+def candidate_count_ref(stream: jax.Array, candidates: jax.Array) -> jax.Array:
+    """(K,) float32 exact counts of each candidate in stream."""
+    eq = stream.astype(jnp.int32)[:, None] == candidates.astype(jnp.int32)[None, :]
+    return jnp.sum(eq.astype(jnp.float32), axis=0)
+
+
+def fib_hash32_ref(x: jax.Array, num_buckets: int) -> jax.Array:
+    shift = 32 - int(num_buckets).bit_length() + 1
+    return ((x.astype(jnp.uint32) * _FIB_MULT) >> shift).astype(jnp.int32)
+
+
+def block_histogram_ref(stream: jax.Array, num_buckets: int) -> jax.Array:
+    """(num_buckets,) float32 totals via segment_sum."""
+    b = fib_hash32_ref(stream, num_buckets)
+    return jax.ops.segment_sum(
+        jnp.ones_like(b, dtype=jnp.float32), b, num_segments=num_buckets
+    )

@@ -1,0 +1,69 @@
+"""L2: the offline verification compute graph, built on the L1 kernels.
+
+The paper (S1) distinguishes the on-line setting from the off-line one, in
+which "a parallel scan of the input can be used to determine the actual
+frequent items" and discard false positives.  This module is that parallel
+scan, as a single fused XLA program:
+
+  verify_counts : (C, B) stream chunks x (K,) candidates -> (K,) exact counts
+  skew_profile  : (C, B) stream chunks -> (C, NB) per-chunk hash histograms
+
+Both are lowered once by aot.py to HLO text; the rust runtime
+(`pss::runtime`) executes them from the coordinator.  Shapes are static
+(one artifact per variant); the rust side pads the last chunk/candidate
+slots with sentinels.
+
+Sentinel conventions (shared with rust/src/runtime/verifier.rs):
+  STREAM_PAD    = -2  (never a real item id; ids are encoded into [0, 2^31))
+  CANDIDATE_PAD = -1
+Pad slots can never match, so their counts are 0 and are dropped in rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_histogram, candidate_count
+
+STREAM_PAD = -2
+CANDIDATE_PAD = -1
+
+
+@functools.partial(jax.jit, donate_argnums=(), static_argnames=())
+def verify_counts(stream_chunks: jax.Array, candidates: jax.Array):
+    """Exact counts of each candidate over all chunks.
+
+    Args:
+      stream_chunks: (C, B) int32, B a multiple of the kernel stream tile.
+      candidates:    (K,) int32, K a multiple of the kernel candidate tile.
+
+    Returns:
+      1-tuple of (K,) float32 counts (tuple to match return_tuple=True AOT).
+    """
+    k = candidates.shape[0]
+
+    def body(acc, chunk):
+        return acc + candidate_count(chunk, candidates), None
+
+    init = jnp.zeros((k,), jnp.float32)
+    acc, _ = jax.lax.scan(body, init, stream_chunks)
+    return (acc,)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets",))
+def skew_profile(stream_chunks: jax.Array, *, num_buckets: int = 1024):
+    """Per-chunk hash histograms, used by the coordinator's sharder.
+
+    Args:
+      stream_chunks: (C, B) int32.
+
+    Returns:
+      1-tuple of (C, num_buckets) float32 bucket totals.
+    """
+    hist = jax.vmap(lambda c: block_histogram(c, num_buckets=num_buckets))(
+        stream_chunks
+    )
+    return (hist,)

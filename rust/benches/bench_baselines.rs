@@ -1,0 +1,46 @@
+//! Related-work comparison (paper §2): Space Saving vs Frequent
+//! (Misra–Gries), Lossy Counting, CountMin and CountSketch, per-item.
+
+use pss::baselines::{CountMin, CountSketch, Exact, Frequent, LossyCounting};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::summary::{FrequencySummary, SpaceSaving};
+use pss::util::benchkit::{black_box, run};
+
+const N: usize = 1 << 20;
+
+fn main() {
+    println!("# bench_baselines — counter and sketch algorithms, per-item");
+    let items = GeneratedSource::zipf(N as u64, 1 << 22, 1.1, 13).slice(0, N as u64);
+    let k = 2000usize;
+
+    run("baseline/space_saving/k=2000", Some(N as f64), || {
+        let mut a = SpaceSaving::new(k);
+        a.offer_all(black_box(&items));
+        black_box(a.processed());
+    });
+    run("baseline/frequent/k=2000", Some(N as f64), || {
+        let mut a = Frequent::new(k);
+        a.offer_all(black_box(&items));
+        black_box(a.processed());
+    });
+    run("baseline/lossy_counting/k=2000", Some(N as f64), || {
+        let mut a = LossyCounting::new(k);
+        a.offer_all(black_box(&items));
+        black_box(a.processed());
+    });
+    run("baseline/count_min/w=2048,d=4", Some(N as f64), || {
+        let mut a = CountMin::new(2048, 4, k);
+        a.offer_all(black_box(&items));
+        black_box(a.processed());
+    });
+    run("baseline/count_sketch/w=2048,d=5", Some(N as f64), || {
+        let mut a = CountSketch::new(2048, 5, k);
+        a.offer_all(black_box(&items));
+        black_box(a.processed());
+    });
+    run("baseline/exact_hashmap", Some(N as f64), || {
+        let mut a = Exact::new();
+        a.offer_all(black_box(&items));
+        black_box(a.processed());
+    });
+}

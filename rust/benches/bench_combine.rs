@@ -1,0 +1,39 @@
+//! The combine operator (paper Algorithm 2): merge cost vs counter
+//! budget k — the term the paper blames for reduced scalability at
+//! large k ("the greater the number of counters, the greater the time
+//! taken for the reduction").
+
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::summary::{FrequencySummary, SpaceSaving, Summary};
+use pss::util::benchkit::{black_box, run};
+
+fn summary(k: usize, seed: u64) -> Summary {
+    let src = GeneratedSource::zipf(400_000, 1 << 20, 1.1, seed);
+    let mut ss = SpaceSaving::new(k);
+    ss.offer_all(&src.slice(0, 400_000));
+    ss.freeze()
+}
+
+fn main() {
+    println!("# bench_combine — Algorithm 2 merge cost vs k");
+    for &k in &[500usize, 1000, 2000, 4000, 8000] {
+        let a = summary(k, 1);
+        let b = summary(k, 2);
+        run(&format!("combine/disjointish/k={k}"), Some(k as f64), || {
+            black_box(a.combine(&b));
+        });
+    }
+
+    // Fully-overlapping inputs (every item in both summaries).
+    let a = summary(2000, 3);
+    let b = Summary::new(2000, a.n(), a.counters().to_vec());
+    run("combine/identical-items/k=2000", Some(2000.0), || {
+        black_box(a.combine(&b));
+    });
+
+    // Prune path.
+    let big = summary(8000, 4);
+    run("prune/k=8000", Some(8000.0), || {
+        black_box(big.prune(400_000, 8000));
+    });
+}

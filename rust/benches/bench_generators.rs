@@ -1,0 +1,54 @@
+//! Workload synthesis throughput: the rejection-inversion zipf sampler
+//! (paper's input distributions), the uniform control, and the
+//! decomposition-independent chunked source.
+
+use pss::gen::{GeneratedSource, ItemSource, UniformSampler, ZipfSampler};
+use pss::util::benchkit::{black_box, run};
+use pss::util::SplitMix64;
+
+const N: usize = 1 << 20;
+
+fn main() {
+    println!("# bench_generators — synthesis throughput");
+    for &(label, s, q) in &[
+        ("zipf/s=1.1", 1.1f64, 0.0f64),
+        ("zipf/s=1.8", 1.8, 0.0),
+        ("mandelbrot/s=1.3,q=2.7", 1.3, 2.7),
+    ] {
+        let z = ZipfSampler::with_shift(1 << 22, s, q);
+        let mut rng = SplitMix64::new(3);
+        run(&format!("sampler/{label}"), Some(N as f64), || {
+            let mut acc = 0u64;
+            for _ in 0..N {
+                acc = acc.wrapping_add(z.sample(&mut rng));
+            }
+            black_box(acc);
+        });
+    }
+
+    let u = UniformSampler::new(1 << 22);
+    let mut rng = SplitMix64::new(4);
+    run("sampler/uniform", Some(N as f64), || {
+        let mut acc = 0u64;
+        for _ in 0..N {
+            acc = acc.wrapping_add(u.sample(&mut rng));
+        }
+        black_box(acc);
+    });
+
+    // Chunk-seeded source fill (what the workers actually call).
+    let src = GeneratedSource::zipf(N as u64, 1 << 22, 1.1, 9);
+    let mut buf = vec![0u64; N];
+    run("source/fill/zipf1.1/1M", Some(N as f64), || {
+        src.fill(0, black_box(&mut buf));
+    });
+
+    run("rng/splitmix64", Some(N as f64), || {
+        let mut r = SplitMix64::new(1);
+        let mut acc = 0u64;
+        for _ in 0..N {
+            acc = acc.wrapping_add(r.next_u64());
+        }
+        black_box(acc);
+    });
+}

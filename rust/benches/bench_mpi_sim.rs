@@ -1,0 +1,38 @@
+//! End-to-end benchmark for paper Tables III/IV and Figure 4: the
+//! MPI / hybrid cluster simulations — wallclock cost of the simulator
+//! itself plus the regenerated paper grids.
+
+use pss::bench_harness::run_experiment;
+use pss::distsim::{simulate, ClusterSpec, MachineModel, NetworkModel, SimWorkload};
+use pss::util::benchkit::{black_box, run};
+
+fn main() {
+    println!("# bench_mpi_sim — Tables III/IV, Fig 4");
+
+    let w = SimWorkload::paper(29_000_000_000, 2000, 1.1, 10_000_000, 1);
+    let net = NetworkModel::qdr_infiniband();
+    for ranks in [32u32, 128, 512] {
+        let cluster = ClusterSpec::mpi(MachineModel::xeon_e5_2630_v3(), ranks);
+        run(&format!("simulate/mpi/ranks={ranks}"), None, || {
+            black_box(simulate(&w, &cluster, &net).unwrap());
+        });
+    }
+    for ranks in [16u32, 64] {
+        let cluster = ClusterSpec::hybrid(MachineModel::xeon_e5_2630_v3(), ranks, 8);
+        run(&format!("simulate/hybrid/ranks={ranks}x8"), None, || {
+            black_box(simulate(&w, &cluster, &net).unwrap());
+        });
+    }
+
+    run("repro/tab3/scale=1e8", None, || {
+        black_box(run_experiment("tab3", 100_000_000, 1).unwrap());
+    });
+    run("repro/tab4/scale=1e8", None, || {
+        black_box(run_experiment("tab4", 100_000_000, 1).unwrap());
+    });
+
+    let out = run_experiment("tab3", 10_000_000, 1).unwrap();
+    println!("\n{}", out[0].rendered);
+    let out = run_experiment("tab4", 10_000_000, 1).unwrap();
+    println!("{}", out[0].rendered);
+}

@@ -1,0 +1,41 @@
+//! End-to-end benchmark for paper Table II / Figures 1–3 (OpenMP): real
+//! multi-threaded Parallel Space Saving on this host, plus the
+//! calibrated-simulator regeneration of the full paper grid.
+//!
+//! Real-thread scaling on this host is bounded by its core count; the
+//! simulated grid is the paper-scale artifact (see EXPERIMENTS.md).
+
+use pss::bench_harness::run_experiment;
+use pss::gen::GeneratedSource;
+use pss::parallel::{run_shared, SummaryKind};
+use pss::util::benchkit::{black_box, run};
+
+fn main() {
+    println!("# bench_openmp_e2e — Table II / Fig 1-3 end-to-end");
+
+    // Real execution: shared-memory parallel run over 4M items.
+    let n = 4_000_000u64;
+    let src = GeneratedSource::zipf(n, 1 << 22, 1.1, 5);
+    let host_threads = std::thread::available_parallelism().map_or(1, |p| p.get());
+    for threads in [1usize, 2, 4, 8] {
+        if threads > host_threads * 2 {
+            break;
+        }
+        run(
+            &format!("openmp_real/n=4M/k=2000/threads={threads}"),
+            Some(n as f64),
+            || {
+                black_box(run_shared(&src, 2000, 2000, threads, SummaryKind::Heap));
+            },
+        );
+    }
+
+    // Simulated paper grid: wallclock of regenerating Table II.
+    run("repro/tab2/scale=1e8", None, || {
+        black_box(run_experiment("tab2", 100_000_000, 1).unwrap());
+    });
+
+    // Print the actual table once at a fidelity-relevant scale.
+    let out = run_experiment("tab2", 10_000_000, 1).unwrap();
+    println!("\n{}", out[0].rendered);
+}

@@ -1,0 +1,46 @@
+//! The parallel reduction: combine-tree cost vs worker count and k —
+//! the overhead component of paper Figure 3 measured in isolation.
+
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::parallel::tree_reduce;
+use pss::summary::{FrequencySummary, SpaceSaving, Summary};
+use pss::util::benchkit::{black_box, run};
+
+fn summaries(p: usize, k: usize) -> Vec<Summary> {
+    let n = 100_000u64;
+    let src = GeneratedSource::zipf(n * p as u64, 1 << 20, 1.1, 11);
+    (0..p)
+        .map(|r| {
+            let mut ss = SpaceSaving::new(k);
+            ss.offer_all(&src.slice(r as u64 * n, (r as u64 + 1) * n));
+            ss.freeze()
+        })
+        .collect()
+}
+
+fn main() {
+    println!("# bench_reduction — combine tree vs workers and k");
+    for &p in &[2usize, 4, 8, 16, 64] {
+        for &k in &[2000usize, 8000] {
+            let input = summaries(p, k);
+            run(&format!("tree_reduce/p={p}/k={k}"), None, || {
+                black_box(tree_reduce(black_box(input.clone())));
+            });
+        }
+    }
+
+    // Ablation (DESIGN.md §5 design choices): binary tree vs flat
+    // sequential fold. Same result guarantees, different depth — the
+    // tree is what OpenMP/MPI reductions execute; the fold is the naive
+    // alternative a leader process would run.
+    for &p in &[16usize, 64] {
+        let input = summaries(p, 2000);
+        run(&format!("ablation/flat_fold/p={p}/k=2000"), None, || {
+            let mut acc = input[0].clone();
+            for s in &input[1..] {
+                acc = acc.combine(s);
+            }
+            black_box(acc);
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! The PJRT offline-verification path: throughput of the AOT
+//! `verify_counts` program (items × candidates per second) vs the rust
+//! exact-oracle alternative. Requires `make artifacts`.
+
+use pss::baselines::Exact;
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::runtime::Verifier;
+use pss::summary::FrequencySummary;
+use pss::util::benchkit::{black_box, run};
+
+fn main() {
+    println!("# bench_runtime_verify — PJRT candidate verification");
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut v = match Verifier::new(&dir) {
+        Ok(v) => v,
+        Err(e) => {
+            println!("SKIP: {e}");
+            return;
+        }
+    };
+
+    let n = 1_048_576u64; // one full 16x65536 super-chunk
+    let items = GeneratedSource::zipf(n, 1 << 20, 1.1, 17).slice(0, n);
+    let cands: Vec<u64> = (1..=128).collect();
+
+    run("pjrt_verify/1M items x 128 cands", Some(n as f64), || {
+        black_box(v.count(black_box(&items), black_box(&cands)).unwrap());
+    });
+
+    let cands_big: Vec<u64> = (1..=2048).collect();
+    run("pjrt_verify/1M items x 2048 cands", Some(n as f64), || {
+        black_box(v.count(black_box(&items), black_box(&cands_big)).unwrap());
+    });
+
+    // Ragged tail: exercises the 1-chunk program + padding.
+    let ragged = &items[..70_001];
+    run("pjrt_verify/70k ragged x 128 cands", Some(70_001.0), || {
+        black_box(v.count(black_box(ragged), black_box(&cands)).unwrap());
+    });
+
+    // Rust oracle for the same job (memory O(distinct), cpu hash-heavy).
+    run("oracle_hashmap/1M items", Some(n as f64), || {
+        let mut e = Exact::new();
+        e.offer_all(black_box(&items));
+        black_box(e.distinct());
+    });
+}

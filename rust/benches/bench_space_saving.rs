@@ -1,0 +1,108 @@
+//! The L3 hot path: sequential Space Saving per-item update throughput.
+//!
+//! Ablation: heap variant vs Metwally bucket-list variant, across the
+//! paper's counter budgets and skews. DESIGN.md §7 target: ≥ 25 M
+//! items/s/core at k=2000 ρ=1.1 (the paper's own Xeon rate is ~29.8 ns
+//! /item ≈ 33 M items/s; this host differs, the ratio is what matters —
+//! see EXPERIMENTS.md §Perf).
+
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::summary::{FrequencySummary, SpaceSaving, StreamSummary};
+use pss::util::benchkit::{black_box, run};
+
+const N: usize = 1 << 20;
+
+fn stream(skew: f64, universe: u64) -> Vec<u64> {
+    let src = if skew > 0.0 {
+        GeneratedSource::zipf(N as u64, universe, skew, 7)
+    } else {
+        GeneratedSource::uniform(N as u64, universe, 7)
+    };
+    src.slice(0, N as u64)
+}
+
+fn main() {
+    println!("# bench_space_saving — per-item update hot path (N={N})");
+    for &(label, skew) in &[("zipf1.1", 1.1f64), ("zipf1.8", 1.8), ("uniform", 0.0)] {
+        let items = stream(skew, 1 << 22);
+        for &k in &[500usize, 2000, 8000] {
+            run(
+                &format!("space_saving/heap/{label}/k={k}"),
+                Some(N as f64),
+                || {
+                    let mut ss = SpaceSaving::new(k);
+                    ss.offer_all(black_box(&items));
+                    black_box(ss.processed());
+                },
+            );
+            run(
+                &format!("space_saving/bucket/{label}/k={k}"),
+                Some(N as f64),
+                || {
+                    let mut ss = StreamSummary::new(k);
+                    ss.offer_all(black_box(&items));
+                    black_box(ss.processed());
+                },
+            );
+        }
+    }
+
+    // Monitored-increment fast path in isolation (all hits).
+    let hot = vec![42u64; N];
+    run("space_saving/heap/all-hits/k=2000", Some(N as f64), || {
+        let mut ss = SpaceSaving::new(2000);
+        ss.offer_all(black_box(&hot));
+        black_box(ss.processed());
+    });
+
+    // Eviction worst case: every item distinct.
+    let cold: Vec<u64> = (0..N as u64).collect();
+    run("space_saving/heap/all-misses/k=2000", Some(N as f64), || {
+        let mut ss = SpaceSaving::new(2000);
+        ss.offer_all(black_box(&cold));
+        black_box(ss.processed());
+    });
+
+    // Ablation: the in-crate FastMap vs std::HashMap on the Space
+    // Saving access pattern (get-hit / miss+remove+insert churn) —
+    // the justification for rolling our own map (EXPERIMENTS.md §Perf).
+    let items = stream(1.1, 1 << 22);
+    run("ablation/fastmap/churn", Some(N as f64), || {
+        let mut m = pss::util::FastMap::with_capacity(2000);
+        let mut live: Vec<u64> = Vec::with_capacity(2000);
+        for &it in &items {
+            if m.get(it).is_none() {
+                if live.len() < 2000 {
+                    m.insert(it, live.len() as u32);
+                    live.push(it);
+                } else {
+                    let victim = live[(it % 2000) as usize];
+                    if let Some(v) = m.remove(victim) {
+                        m.insert(it, v);
+                        live[(it % 2000) as usize] = it;
+                    }
+                }
+            }
+        }
+        black_box(m.len());
+    });
+    run("ablation/std_hashmap/churn", Some(N as f64), || {
+        let mut m = std::collections::HashMap::with_capacity(4000);
+        let mut live: Vec<u64> = Vec::with_capacity(2000);
+        for &it in &items {
+            if !m.contains_key(&it) {
+                if live.len() < 2000 {
+                    m.insert(it, live.len() as u32);
+                    live.push(it);
+                } else {
+                    let victim = live[(it % 2000) as usize];
+                    if let Some(v) = m.remove(&victim) {
+                        m.insert(it, v);
+                        live[(it % 2000) as usize] = it;
+                    }
+                }
+            }
+        }
+        black_box(m.len());
+    });
+}

@@ -1,0 +1,173 @@
+//! `CountMin` — the Cormode–Muthukrishnan sketch (J. Algorithms 2005),
+//! the paper's §2 representative of the *sketch-based* class.
+//!
+//! `d` rows × `w` columns of counters; each row hashes the item to one
+//! column; the estimate is the row-wise minimum. Over-estimates by at
+//! most `εn = (e/w)·n` with probability `1 - e^-d`. A candidate min-heap
+//! of the current top items turns the sketch into a frequent-items
+//! reporter comparable to Space Saving.
+
+use crate::summary::counter::Counter;
+use crate::summary::traits::FrequencySummary;
+use crate::util::hash::row_hash;
+use std::collections::{BinaryHeap, HashMap};
+use std::cmp::Reverse;
+
+/// CountMin sketch plus a top-candidate tracker of size `heap_cap`.
+#[derive(Debug, Clone)]
+pub struct CountMin {
+    rows: usize,
+    width: usize,
+    table: Vec<u64>,
+    /// Current top candidates: item -> estimate.
+    candidates: HashMap<u64, u64>,
+    heap_cap: usize,
+    n: u64,
+}
+
+impl CountMin {
+    /// `width` columns (≈ e/ε), `rows` hash functions (≈ ln 1/δ),
+    /// tracking the `heap_cap` largest items for reporting.
+    pub fn new(width: usize, rows: usize, heap_cap: usize) -> Self {
+        assert!(width.is_power_of_two(), "width must be a power of two");
+        assert!(rows >= 1 && heap_cap >= 1);
+        Self {
+            rows,
+            width,
+            table: vec![0; width * rows],
+            candidates: HashMap::with_capacity(heap_cap * 2),
+            heap_cap,
+            n: 0,
+        }
+    }
+
+    /// Sketch estimate (row-wise min) regardless of candidate tracking.
+    pub fn query(&self, item: u64) -> u64 {
+        let mut est = u64::MAX;
+        for r in 0..self.rows {
+            let col = (row_hash(item, r as u64) as usize) & (self.width - 1);
+            est = est.min(self.table[r * self.width + col]);
+        }
+        est
+    }
+
+    fn shrink_candidates(&mut self) {
+        if self.candidates.len() <= self.heap_cap {
+            return;
+        }
+        // Keep the heap_cap largest estimates.
+        let mut heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+        for (&item, &est) in &self.candidates {
+            heap.push(Reverse((est, item)));
+            if heap.len() > self.heap_cap {
+                heap.pop();
+            }
+        }
+        self.candidates = heap.into_iter().map(|Reverse((e, i))| (i, e)).collect();
+    }
+}
+
+impl FrequencySummary for CountMin {
+    fn capacity(&self) -> usize {
+        self.heap_cap
+    }
+
+    fn offer(&mut self, item: u64) {
+        self.n += 1;
+        let mut est = u64::MAX;
+        for r in 0..self.rows {
+            let col = (row_hash(item, r as u64) as usize) & (self.width - 1);
+            let cell = &mut self.table[r * self.width + col];
+            *cell += 1;
+            est = est.min(*cell);
+        }
+        self.candidates.insert(item, est);
+        if self.candidates.len() > self.heap_cap * 2 {
+            self.shrink_candidates();
+        }
+    }
+
+    fn processed(&self) -> u64 {
+        self.n
+    }
+
+    fn counters(&self) -> Vec<Counter> {
+        let mut snapshot = self.clone();
+        snapshot.shrink_candidates();
+        snapshot
+            .candidates
+            .iter()
+            .map(|(&item, &est)| Counter { item, count: est, err: est.saturating_sub(1) })
+            .collect()
+    }
+
+    fn estimate(&self, item: u64) -> Option<u64> {
+        Some(self.query(item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn never_underestimates() {
+        let mut rng = SplitMix64::new(51);
+        let items: Vec<u64> = (0..30_000).map(|_| rng.next_below(2_000)).collect();
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &i in &items {
+            *truth.entry(i).or_default() += 1;
+        }
+        let mut cm = CountMin::new(1024, 4, 64);
+        cm.offer_all(&items);
+        for (&item, &f) in &truth {
+            assert!(cm.query(item) >= f, "CountMin under-estimated");
+        }
+    }
+
+    #[test]
+    fn error_within_bound_whp() {
+        let mut rng = SplitMix64::new(52);
+        let n = 100_000u64;
+        let items: Vec<u64> = (0..n).map(|_| rng.next_below(5_000)).collect();
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &i in &items {
+            *truth.entry(i).or_default() += 1;
+        }
+        let width = 2048usize;
+        let mut cm = CountMin::new(width, 5, 64);
+        cm.offer_all(&items);
+        // ε = e/width; allow 3x slack for the tail.
+        let bound = (3.0 * std::f64::consts::E / width as f64 * n as f64) as u64;
+        let mut violations = 0;
+        for (&item, &f) in &truth {
+            if cm.query(item) > f + bound {
+                violations += 1;
+            }
+        }
+        assert!(violations * 100 < truth.len(), "too many large errors");
+    }
+
+    #[test]
+    fn heavy_hitters_reported() {
+        let mut rng = SplitMix64::new(53);
+        let mut items = Vec::new();
+        for hh in 0..5u64 {
+            items.extend(std::iter::repeat(hh).take(5_000));
+        }
+        items.extend((0..25_000).map(|_| 100 + rng.next_below(50_000)));
+        for i in (1..items.len()).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+        let mut cm = CountMin::new(4096, 4, 16);
+        cm.offer_all(&items);
+        let reported: std::collections::HashSet<u64> =
+            cm.counters().iter().map(|c| c.item).collect();
+        for hh in 0..5u64 {
+            assert!(reported.contains(&hh), "missed heavy hitter {hh}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! `CountSketch` — Charikar, Chen, Farach-Colton (ICALP 2002): the
+//! signed sketch the paper's §2 cites alongside CountMin.
+//!
+//! Each row hashes the item to a column *and* to a sign in {−1, +1};
+//! updates add the sign, the estimate is the **median** of the signed row
+//! reads. Unbiased (errors cancel), two-sided error `O(‖f‖₂/√w)`.
+
+use crate::summary::counter::Counter;
+use crate::summary::traits::FrequencySummary;
+use crate::util::hash::row_hash;
+use std::collections::HashMap;
+
+/// CountSketch with candidate tracking (same reporting scheme as
+/// [`CountMin`](super::count_min::CountMin) so comparisons are fair).
+#[derive(Debug, Clone)]
+pub struct CountSketch {
+    rows: usize,
+    width: usize,
+    table: Vec<i64>,
+    candidates: HashMap<u64, i64>,
+    heap_cap: usize,
+    n: u64,
+}
+
+impl CountSketch {
+    /// `width` columns (power of two), `rows` independent rows (odd, for
+    /// a well-defined median), reporting the top `heap_cap` items.
+    pub fn new(width: usize, rows: usize, heap_cap: usize) -> Self {
+        assert!(width.is_power_of_two());
+        assert!(rows % 2 == 1, "rows must be odd for the median");
+        Self {
+            rows,
+            width,
+            table: vec![0; width * rows],
+            candidates: HashMap::with_capacity(heap_cap * 2),
+            heap_cap,
+            n: 0,
+        }
+    }
+
+    #[inline]
+    fn cell_and_sign(&self, item: u64, row: usize) -> (usize, i64) {
+        let h = row_hash(item, row as u64);
+        let col = (h as usize) & (self.width - 1);
+        // Take the sign from a high bit not used for the column.
+        let sign = if (h >> 60) & 1 == 1 { 1 } else { -1 };
+        (row * self.width + col, sign)
+    }
+
+    /// Median-of-rows estimate (may be negative for noise items).
+    pub fn query(&self, item: u64) -> i64 {
+        let mut reads: Vec<i64> = (0..self.rows)
+            .map(|r| {
+                let (cell, sign) = self.cell_and_sign(item, r);
+                self.table[cell] * sign
+            })
+            .collect();
+        reads.sort_unstable();
+        reads[self.rows / 2]
+    }
+
+    fn shrink_candidates(&mut self) {
+        if self.candidates.len() <= self.heap_cap {
+            return;
+        }
+        let mut v: Vec<(u64, i64)> = self.candidates.iter().map(|(k, v)| (*k, *v)).collect();
+        v.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(self.heap_cap);
+        self.candidates = v.into_iter().collect();
+    }
+}
+
+impl FrequencySummary for CountSketch {
+    fn capacity(&self) -> usize {
+        self.heap_cap
+    }
+
+    fn offer(&mut self, item: u64) {
+        self.n += 1;
+        for r in 0..self.rows {
+            let (cell, sign) = self.cell_and_sign(item, r);
+            self.table[cell] += sign;
+        }
+        let est = self.query(item);
+        self.candidates.insert(item, est);
+        if self.candidates.len() > self.heap_cap * 2 {
+            self.shrink_candidates();
+        }
+    }
+
+    fn processed(&self) -> u64 {
+        self.n
+    }
+
+    fn counters(&self) -> Vec<Counter> {
+        let mut snapshot = self.clone();
+        snapshot.shrink_candidates();
+        snapshot
+            .candidates
+            .iter()
+            .filter(|(_, est)| **est > 0)
+            .map(|(&item, &est)| Counter { item, count: est as u64, err: 0 })
+            .collect()
+    }
+
+    fn estimate(&self, item: u64) -> Option<u64> {
+        let q = self.query(item);
+        (q > 0).then_some(q as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn heavy_items_estimated_closely() {
+        let mut rng = SplitMix64::new(61);
+        let mut items = Vec::new();
+        for hh in 0..4u64 {
+            items.extend(std::iter::repeat(hh).take(10_000));
+        }
+        items.extend((0..20_000).map(|_| 100 + rng.next_below(100_000)));
+        for i in (1..items.len()).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+        let mut cs = CountSketch::new(4096, 5, 16);
+        cs.offer_all(&items);
+        for hh in 0..4u64 {
+            let est = cs.query(hh);
+            let err = (est - 10_000).abs();
+            assert!(err < 1_000, "heavy item {hh} est {est}");
+        }
+    }
+
+    #[test]
+    fn estimate_unbiased_on_average() {
+        let mut rng = SplitMix64::new(62);
+        let items: Vec<u64> = (0..50_000).map(|_| rng.next_below(1_000)).collect();
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &i in &items {
+            *truth.entry(i).or_default() += 1;
+        }
+        let mut cs = CountSketch::new(2048, 5, 64);
+        cs.offer_all(&items);
+        let mean_err: f64 = truth
+            .iter()
+            .map(|(&i, &f)| cs.query(i) as f64 - f as f64)
+            .sum::<f64>()
+            / truth.len() as f64;
+        assert!(mean_err.abs() < 10.0, "bias {mean_err}");
+    }
+
+    #[test]
+    fn rows_must_be_odd() {
+        let r = std::panic::catch_unwind(|| CountSketch::new(64, 4, 8));
+        assert!(r.is_err());
+    }
+}

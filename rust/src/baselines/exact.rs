@@ -1,0 +1,117 @@
+//! `Exact` — exact frequency counting: the ground-truth oracle behind
+//! every accuracy metric (ARE, precision, recall) and the off-line
+//! verification comparison for the PJRT artifact path.
+
+use crate::summary::counter::Counter;
+use crate::summary::traits::FrequencySummary;
+use std::collections::HashMap;
+
+/// Exact counts over the full stream (memory `O(distinct items)`).
+#[derive(Debug, Clone, Default)]
+pub struct Exact {
+    counts: HashMap<u64, u64>,
+    n: u64,
+}
+
+impl Exact {
+    /// New empty oracle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Exact frequency (0 when unseen).
+    pub fn count(&self, item: u64) -> u64 {
+        self.counts.get(&item).copied().unwrap_or(0)
+    }
+
+    /// All true k-majority elements: `f > n/k`, descending by frequency.
+    pub fn k_majority(&self, k: u64) -> Vec<Counter> {
+        let thresh = self.n / k;
+        let mut v: Vec<Counter> = self
+            .counts
+            .iter()
+            .filter(|(_, &f)| f > thresh)
+            .map(|(&item, &f)| Counter { item, count: f, err: 0 })
+            .collect();
+        v.sort_unstable_by(|a, b| b.count.cmp(&a.count).then(a.item.cmp(&b.item)));
+        v
+    }
+
+    /// The `top` most frequent items, descending.
+    pub fn top_k(&self, top: usize) -> Vec<Counter> {
+        let mut v: Vec<Counter> = self
+            .counts
+            .iter()
+            .map(|(&item, &f)| Counter { item, count: f, err: 0 })
+            .collect();
+        v.sort_unstable_by(|a, b| b.count.cmp(&a.count).then(a.item.cmp(&b.item)));
+        v.truncate(top);
+        v
+    }
+
+    /// Number of distinct items seen.
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+impl FrequencySummary for Exact {
+    fn capacity(&self) -> usize {
+        usize::MAX
+    }
+
+    fn offer(&mut self, item: u64) {
+        self.n += 1;
+        *self.counts.entry(item).or_default() += 1;
+    }
+
+    fn processed(&self) -> u64 {
+        self.n
+    }
+
+    fn counters(&self) -> Vec<Counter> {
+        self.counts
+            .iter()
+            .map(|(&item, &count)| Counter { item, count, err: 0 })
+            .collect()
+    }
+
+    fn estimate(&self, item: u64) -> Option<u64> {
+        self.counts.get(&item).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_counts() {
+        let mut e = Exact::new();
+        e.offer_all(&[1, 2, 1, 3, 1, 2]);
+        assert_eq!(e.count(1), 3);
+        assert_eq!(e.count(2), 2);
+        assert_eq!(e.count(9), 0);
+        assert_eq!(e.distinct(), 3);
+        assert_eq!(e.processed(), 6);
+    }
+
+    #[test]
+    fn k_majority_thresholding() {
+        let mut e = Exact::new();
+        // n = 10; k = 3 -> threshold 3, need f > 3.
+        e.offer_all(&[1, 1, 1, 1, 2, 2, 2, 3, 3, 4]);
+        let hh = e.k_majority(3);
+        assert_eq!(hh.len(), 1);
+        assert_eq!(hh[0].item, 1);
+    }
+
+    #[test]
+    fn top_k_order() {
+        let mut e = Exact::new();
+        e.offer_all(&[5, 5, 5, 7, 7, 9]);
+        let t = e.top_k(2);
+        assert_eq!(t[0].item, 5);
+        assert_eq!(t[1].item, 7);
+    }
+}

@@ -1,0 +1,144 @@
+//! `Frequent` — the Misra–Gries algorithm (1982), as re-discovered by
+//! Demaine, López-Ortiz, Munro (ESA 2002) and Karp, Shenker,
+//! Papadimitriou (2003): the paper's §2 ancestor of Space Saving and the
+//! subject of the authors' earlier parallel-merge work [23].
+//!
+//! Update rule with `k-1` counters: monitored items increment; an
+//! unmonitored item takes a spare counter if one exists; otherwise *all*
+//! counters decrement by one (zeroed counters become spare). Guarantees
+//! `f - n/k <= f̂ <= f` — an UNDER-estimate, unlike Space Saving.
+//!
+//! The decrement-all is implemented physically but costs amortized `O(1)`
+//! per item: total decrement mass is bounded by total increment mass.
+
+use crate::summary::counter::Counter;
+use crate::summary::traits::FrequencySummary;
+use crate::util::FastMap;
+
+/// Misra–Gries summary with `k - 1` counters (solves k-majority).
+#[derive(Debug, Clone)]
+pub struct Frequent {
+    items: Vec<u64>,
+    counts: Vec<u64>,
+    /// Spare (zero-count) slot ids.
+    free: Vec<u32>,
+    map: FastMap,
+    k: usize,
+    n: u64,
+}
+
+impl Frequent {
+    /// `k` is the k-majority parameter; the structure keeps `k-1` counters.
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 2, "k-majority needs k >= 2");
+        let cap = k - 1;
+        Self {
+            items: vec![0; cap],
+            counts: vec![0; cap],
+            free: (0..cap as u32).rev().collect(),
+            map: FastMap::with_capacity(cap),
+            k,
+            n: 0,
+        }
+    }
+}
+
+impl FrequencySummary for Frequent {
+    fn capacity(&self) -> usize {
+        self.k - 1
+    }
+
+    fn offer(&mut self, item: u64) {
+        self.n += 1;
+        if let Some(slot) = self.map.get(item) {
+            self.counts[slot as usize] += 1;
+        } else if let Some(slot) = self.free.pop() {
+            self.items[slot as usize] = item;
+            self.counts[slot as usize] = 1;
+            self.map.insert(item, slot);
+        } else {
+            // Decrement everything; newly-zeroed counters become spare.
+            for slot in 0..self.counts.len() {
+                debug_assert!(self.counts[slot] > 0);
+                self.counts[slot] -= 1;
+                if self.counts[slot] == 0 {
+                    self.map.remove(self.items[slot]);
+                    self.free.push(slot as u32);
+                }
+            }
+        }
+    }
+
+    fn processed(&self) -> u64 {
+        self.n
+    }
+
+    fn counters(&self) -> Vec<Counter> {
+        self.items
+            .iter()
+            .zip(&self.counts)
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| Counter { item: *i, count: *c, err: 0 })
+            .collect()
+    }
+
+    fn estimate(&self, item: u64) -> Option<u64> {
+        self.map.get(item).map(|s| self.counts[s as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn never_overestimates() {
+        let mut rng = SplitMix64::new(31);
+        let items: Vec<u64> = (0..20_000).map(|_| rng.next_below(100)).collect();
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &i in &items {
+            *truth.entry(i).or_default() += 1;
+        }
+        let mut f = Frequent::new(16);
+        f.offer_all(&items);
+        for c in f.counters() {
+            let t = truth[&c.item];
+            assert!(c.count <= t, "over-estimate");
+            assert!(c.count + items.len() as u64 / 16 >= t, "error bound broken");
+        }
+    }
+
+    #[test]
+    fn recall_one_for_k_majority() {
+        // 42 appears > n/4 times -> must survive with k=4.
+        let mut items = vec![42u64; 3_000];
+        let mut rng = SplitMix64::new(32);
+        items.extend((0..7_000).map(|_| 100 + rng.next_below(5_000)));
+        for i in (1..items.len()).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+        let mut f = Frequent::new(4);
+        f.offer_all(&items);
+        assert!(f.estimate(42).is_some(), "k-majority element lost");
+    }
+
+    #[test]
+    fn majority_classic() {
+        let mut f = Frequent::new(2); // single counter: Boyer–Moore
+        f.offer_all(&[1, 2, 1, 3, 1, 1]);
+        assert_eq!(f.counters()[0].item, 1);
+    }
+
+    #[test]
+    fn decrement_frees_slots() {
+        let mut f = Frequent::new(3); // 2 counters
+        f.offer_all(&[1, 2, 3]); // third item triggers decrement-all
+        // counters for 1 and 2 both drop to 0 -> both spare.
+        assert_eq!(f.counters().len(), 0);
+        f.offer(9);
+        assert_eq!(f.estimate(9), Some(1));
+    }
+}

@@ -1,0 +1,138 @@
+//! `LossyCounting` — Manku & Motwani (VLDB 2002), the other major
+//! counter-based algorithm the paper's §2 cites.
+//!
+//! The stream is processed in buckets of width `w = ⌈1/ε⌉`. Each entry
+//! carries its count plus `delta`, the maximum count it could have missed
+//! before insertion (current bucket id - 1). At bucket boundaries every
+//! entry with `count + delta <= bucket` is deleted. Guarantees
+//! `f - εn <= f̂ <= f` with `O((1/ε) log εn)` space.
+
+use crate::summary::counter::Counter;
+use crate::summary::traits::FrequencySummary;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    count: u64,
+    delta: u64,
+}
+
+/// Lossy Counting with error parameter `ε = 1/k` (so it is comparable to
+/// a Space Saving instance with `k` counters).
+#[derive(Debug, Clone)]
+pub struct LossyCounting {
+    entries: HashMap<u64, Entry>,
+    /// Bucket width `w = ⌈1/ε⌉ = k`.
+    width: u64,
+    /// Current bucket id (1-based).
+    bucket: u64,
+    n: u64,
+    k: usize,
+}
+
+impl LossyCounting {
+    /// Create with error ε = 1/k.
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        Self {
+            entries: HashMap::new(),
+            width: k as u64,
+            bucket: 1,
+            n: 0,
+            k,
+        }
+    }
+
+    fn compress(&mut self) {
+        let b = self.bucket;
+        self.entries.retain(|_, e| e.count + e.delta > b);
+    }
+}
+
+impl FrequencySummary for LossyCounting {
+    fn capacity(&self) -> usize {
+        // Space is adaptive; report the nominal 1/ε for comparability.
+        self.k
+    }
+
+    fn offer(&mut self, item: u64) {
+        self.n += 1;
+        let b = self.bucket;
+        self.entries
+            .entry(item)
+            .and_modify(|e| e.count += 1)
+            .or_insert(Entry { count: 1, delta: b - 1 });
+        if self.n % self.width == 0 {
+            self.compress();
+            self.bucket += 1;
+        }
+    }
+
+    fn processed(&self) -> u64 {
+        self.n
+    }
+
+    fn counters(&self) -> Vec<Counter> {
+        self.entries
+            .iter()
+            .map(|(item, e)| Counter { item: *item, count: e.count + e.delta, err: e.delta })
+            .collect()
+    }
+
+    fn estimate(&self, item: u64) -> Option<u64> {
+        self.entries.get(&item).map(|e| e.count + e.delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn error_bound_holds() {
+        let mut rng = SplitMix64::new(41);
+        let items: Vec<u64> = (0..50_000)
+            .map(|_| if rng.next_f64() < 0.5 { rng.next_below(10) } else { rng.next_below(10_000) })
+            .collect();
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &i in &items {
+            *truth.entry(i).or_default() += 1;
+        }
+        let k = 100;
+        let mut lc = LossyCounting::new(k);
+        lc.offer_all(&items);
+        let eps_n = items.len() as u64 / k as u64;
+        for c in lc.counters() {
+            let f = truth.get(&c.item).copied().unwrap_or(0);
+            assert!(c.count >= f, "reported estimate must upper-bound f");
+            assert!(c.count <= f + eps_n, "over-estimate beyond εn");
+        }
+        // Recall: every item with f > n/k survives.
+        for (item, f) in &truth {
+            if *f > eps_n {
+                assert!(lc.estimate(*item).is_some(), "lost frequent item {item}");
+            }
+        }
+    }
+
+    #[test]
+    fn space_stays_bounded() {
+        let mut rng = SplitMix64::new(42);
+        let mut lc = LossyCounting::new(50);
+        for _ in 0..200_000 {
+            lc.offer(rng.next_below(1_000_000));
+        }
+        // Theory: O((1/ε) log εn) = 50 * log(200000/50) ≈ 50 * 12.
+        assert!(lc.entries.len() <= 50 * 14, "space blow-up: {}", lc.entries.len());
+    }
+
+    #[test]
+    fn exact_within_first_bucket() {
+        let mut lc = LossyCounting::new(100);
+        lc.offer_all(&[1, 1, 2, 3, 3, 3]);
+        assert_eq!(lc.estimate(3), Some(3));
+        assert_eq!(lc.estimate(1), Some(2));
+    }
+}

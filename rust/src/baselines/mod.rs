@@ -1,0 +1,20 @@
+//! Comparator algorithms from the paper's related-work section (§2) plus
+//! the exact oracle used for ground truth.
+//!
+//! * [`Frequent`] — Misra–Gries / Demaine et al. decrement-based counters.
+//! * [`LossyCounting`] — Manku–Motwani bucketed deletion.
+//! * [`CountMin`] — Cormode–Muthukrishnan sketch (+ candidate heap).
+//! * [`CountSketch`] — Charikar–Chen–Farach-Colton signed sketch.
+//! * [`Exact`] — exact hash-map counts: the metrics oracle.
+
+pub mod count_min;
+pub mod count_sketch;
+pub mod exact;
+pub mod frequent;
+pub mod lossy_counting;
+
+pub use count_min::CountMin;
+pub use count_sketch::CountSketch;
+pub use exact::Exact;
+pub use frequent::Frequent;
+pub use lossy_counting::LossyCounting;

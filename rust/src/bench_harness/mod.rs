@@ -1,0 +1,12 @@
+//! The reproduction harness: one driver per paper table/figure.
+//!
+//! `pss repro --exp <id>` renders the same rows/series the paper reports
+//! (runtime+speedup grids, ARE curves, fractional-overhead curves, the
+//! Phi comparisons) from the calibrated simulator; `--out <dir>` also
+//! writes CSVs for replotting. The experiment registry lives in
+//! [`crate::config::EXPERIMENTS`]; the index mapping each id to paper
+//! artifact and modules is DESIGN.md §5.
+
+pub mod experiments;
+
+pub use experiments::{run_experiment, ExperimentOutput};

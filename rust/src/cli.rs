@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (the vendored crate set has no `clap`):
+//! `pss <subcommand> [--flag value]... [--switch]...`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand (first positional).
+    pub command: String,
+    /// `--key value` pairs.
+    pub flags: BTreeMap<String, String>,
+    /// Bare `--switch`es.
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut args = Args { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument '{a}'"));
+            };
+            if name.is_empty() {
+                return Err("bare '--' not supported".into());
+            }
+            // `--key=value` or `--key value` or switch.
+            if let Some((k, v)) = name.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                args.flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                args.switches.push(name.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("bad value for --{key}: '{v}'")),
+        }
+    }
+
+    /// Required typed flag.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, String> {
+        self.flags
+            .get(key)
+            .ok_or_else(|| format!("missing required --{key}"))?
+            .parse()
+            .map_err(|_| format!("bad value for --{key}"))
+    }
+
+    /// Switch presence.
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_switches() {
+        let a = parse("repro --exp tab3 --scale 1000 --list");
+        assert_eq!(a.command, "repro");
+        assert_eq!(a.get("exp"), Some("tab3"));
+        assert_eq!(a.get_or::<u64>("scale", 1).unwrap(), 1000);
+        assert!(a.has("list"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --k=500 --skew=1.8");
+        assert_eq!(a.get_or::<usize>("k", 0).unwrap(), 500);
+        assert_eq!(a.get_or::<f64>("skew", 0.0).unwrap(), 1.8);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("run --k abc");
+        assert!(a.get_or::<usize>("k", 1).is_err());
+        assert!(a.require::<u64>("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["run".into(), "stray".into()]).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Experiment configuration: JSON-backed run configs and the paper
+//! experiment registry (Table I).
+
+use std::path::Path;
+
+use crate::util::Json;
+use crate::Result;
+
+/// Configuration of one `pss run` (synthetic stream + execution shape).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Stream length.
+    pub n: u64,
+    /// Rank universe of the generator.
+    pub universe: u64,
+    /// Zipf skew (0 = uniform).
+    pub skew: f64,
+    /// Zipf-Mandelbrot shift.
+    pub shift: f64,
+    /// Generation seed.
+    pub seed: u64,
+    /// Space Saving counters.
+    pub k: usize,
+    /// k-majority parameter (defaults to `k`).
+    pub k_majority: u64,
+    /// Worker threads / shards.
+    pub threads: usize,
+    /// Coordinator chunk length.
+    pub chunk_len: usize,
+    /// Bounded queue depth (chunks) per shard.
+    pub queue_depth: usize,
+    /// Run the PJRT offline verification afterwards.
+    pub verify: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            n: 10_000_000,
+            universe: 1 << 22,
+            skew: 1.1,
+            shift: 0.0,
+            seed: 42,
+            k: 2000,
+            k_majority: 2000,
+            threads: 4,
+            chunk_len: 65_536,
+            queue_depth: 8,
+            verify: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; absent fields keep defaults.
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad config: {e}"))?;
+        let mut c = Self::default();
+        let get_u = |k: &str| j.get(k).and_then(|v| v.as_u64());
+        let get_f = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        if let Some(v) = get_u("n") { c.n = v; }
+        if let Some(v) = get_u("universe") { c.universe = v; }
+        if let Some(v) = get_f("skew") { c.skew = v; }
+        if let Some(v) = get_f("shift") { c.shift = v; }
+        if let Some(v) = get_u("seed") { c.seed = v; }
+        if let Some(v) = get_u("k") { c.k = v as usize; }
+        if let Some(v) = get_u("k_majority") { c.k_majority = v; } else { c.k_majority = c.k as u64; }
+        if let Some(v) = get_u("threads") { c.threads = v as usize; }
+        if let Some(v) = get_u("chunk_len") { c.chunk_len = v as usize; }
+        if let Some(v) = get_u("queue_depth") { c.queue_depth = v as usize; }
+        if let Some(v) = j.get("verify").and_then(|v| v.as_bool()) { c.verify = v; }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Sanity limits.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n >= 1, "n must be positive");
+        anyhow::ensure!(self.universe >= 1, "universe must be positive");
+        anyhow::ensure!(self.skew >= 0.0, "skew must be non-negative");
+        anyhow::ensure!(self.k >= 1, "k must be positive");
+        anyhow::ensure!(self.k_majority >= 2, "k_majority must be >= 2");
+        anyhow::ensure!(self.threads >= 1, "threads must be positive");
+        anyhow::ensure!(self.chunk_len >= 1, "chunk_len must be positive");
+        Ok(())
+    }
+
+    /// Serialize to JSON (for `--dump-config`).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"n\": {}, \"universe\": {}, \"skew\": {}, \"shift\": {}, \"seed\": {},\n \
+              \"k\": {}, \"k_majority\": {}, \"threads\": {}, \"chunk_len\": {},\n \
+              \"queue_depth\": {}, \"verify\": {}}}",
+            self.n, self.universe, self.skew, self.shift, self.seed, self.k,
+            self.k_majority, self.threads, self.chunk_len, self.queue_depth, self.verify
+        )
+    }
+}
+
+/// One paper experiment (Table I + figure/table ids).
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentInfo {
+    /// CLI id (`pss repro --exp <id>`).
+    pub id: &'static str,
+    /// What it regenerates.
+    pub what: &'static str,
+}
+
+/// The full registry (DESIGN.md §5).
+pub const EXPERIMENTS: &[ExperimentInfo] = &[
+    ExperimentInfo { id: "fig1a", what: "ARE vs cores, varying k (OpenMP, n=8B, rho=1.1)" },
+    ExperimentInfo { id: "fig1b", what: "ARE vs cores, varying n (OpenMP, k=2000, rho=1.1)" },
+    ExperimentInfo { id: "fig1c", what: "ARE vs cores, varying rho (OpenMP, n=8B, k=2000)" },
+    ExperimentInfo { id: "fig2a", what: "runtime vs cores, varying k (OpenMP)" },
+    ExperimentInfo { id: "fig2b", what: "runtime vs cores, varying n (OpenMP)" },
+    ExperimentInfo { id: "fig2c", what: "runtime vs cores, varying rho (OpenMP)" },
+    ExperimentInfo { id: "tab2", what: "Table II: OpenMP runtime+speedup grid (1-16 cores)" },
+    ExperimentInfo { id: "fig3a", what: "fractional overhead vs threads, varying k (OpenMP)" },
+    ExperimentInfo { id: "fig3b", what: "fractional overhead vs threads, varying n (OpenMP)" },
+    ExperimentInfo { id: "tab3", what: "Table III: pure MPI grid (1-512 cores)" },
+    ExperimentInfo { id: "tab4", what: "Table IV: hybrid MPI/OpenMP grid (1-512 cores)" },
+    ExperimentInfo { id: "fig4", what: "Fig 4: MPI vs hybrid speedup + overhead (n=8B, 29B)" },
+    ExperimentInfo { id: "fig5", what: "Fig 5: Phi thread sweep 15-240 (n=3B)" },
+    ExperimentInfo { id: "fig6", what: "Fig 6: Xeon vs MIC sockets 1-64 (n=3B)" },
+    ExperimentInfo { id: "all", what: "every table and figure above" },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        let c = RunConfig { n: 123, k: 7, k_majority: 7, ..Default::default() };
+        std::fs::write(&p, c.to_json()).unwrap();
+        let c2 = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        std::fs::write(&p, r#"{"n": 5000, "skew": 1.8}"#).unwrap();
+        let c = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c.n, 5000);
+        assert_eq!(c.skew, 1.8);
+        assert_eq!(c.k, RunConfig::default().k);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        std::fs::write(&p, r#"{"k_majority": 1}"#).unwrap();
+        assert!(RunConfig::from_json_file(&p).is_err());
+    }
+
+    #[test]
+    fn registry_has_all_paper_artifacts() {
+        let ids: Vec<&str> = EXPERIMENTS.iter().map(|e| e.id).collect();
+        for want in ["fig1a", "fig2b", "tab2", "tab3", "tab4", "fig4", "fig5", "fig6"] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+}

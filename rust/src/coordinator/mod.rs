@@ -1,0 +1,22 @@
+//! The L3 streaming coordinator — Parallel Space Saving as a service.
+//!
+//! The paper's Algorithm 1 is a one-shot batch job; production stream
+//! mining runs continuously. This module wraps the same machinery
+//! (block-partitioned sequential Space Saving + combine-tree reduction)
+//! in a sharded, backpressured ingestion service:
+//!
+//! * [`router`] — chunk routing (round-robin / least-loaded).
+//! * [`service`] — shard workers over bounded queues, `push`/`finish`
+//!   API, ingestion statistics.
+//!
+//! The offline verification pass (PJRT `verify_counts` artifact, see
+//! [`crate::runtime`]) plugs in after `finish()` to discard false
+//! positives when the stream is replayable.
+
+pub mod profiler;
+pub mod router;
+pub mod service;
+
+pub use profiler::{ChunkProfile, SkewProfiler, StreamProfile};
+pub use router::{Router, Routing};
+pub use service::{run_source, Coordinator, CoordinatorConfig, IngestStats, QueryResult};

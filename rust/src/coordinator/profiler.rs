@@ -1,0 +1,209 @@
+//! Stream skew profiling via the PJRT `skew_profile` artifact.
+//!
+//! The L1 `block_histogram` kernel (lowered into
+//! `profile_16x65536x1024.hlo.txt`) buckets each 65 536-item chunk by a
+//! Fibonacci hash. The coordinator uses the per-chunk bucket histograms
+//! for two things:
+//!
+//! * a **skew estimate** (top-bucket share and normalized entropy) that
+//!   tells the operator whether [`Routing::LeastLoaded`] is worth it and
+//!   how large `k` should be relative to the head, and
+//! * a CountMin-style **upper bound**: a bucket's total bounds the
+//!   frequency of every item hashing into it, so chunks whose maximum
+//!   bucket stays below the global threshold cannot contain a heavy
+//!   candidate.
+//!
+//! [`Routing::LeastLoaded`]: super::router::Routing::LeastLoaded
+
+use crate::runtime::{ArtifactKind, Runtime};
+use crate::Result;
+
+/// Profile of one stream chunk.
+#[derive(Debug, Clone)]
+pub struct ChunkProfile {
+    /// Items in the chunk (excluding padding).
+    pub items: u64,
+    /// Largest bucket total — an upper bound on the most frequent item
+    /// in the chunk.
+    pub max_bucket: u64,
+    /// Top-bucket share of the chunk (1/num_buckets ≈ uniform; →1 ≈
+    /// single dominating item).
+    pub top_share: f64,
+    /// Normalized Shannon entropy of the bucket distribution (1 =
+    /// uniform, 0 = degenerate).
+    pub entropy: f64,
+}
+
+/// Aggregate profile over a whole stream.
+#[derive(Debug, Clone)]
+pub struct StreamProfile {
+    /// Per-chunk profiles, in stream order.
+    pub chunks: Vec<ChunkProfile>,
+}
+
+impl StreamProfile {
+    /// Mean normalized entropy (the stream-level skew indicator).
+    pub fn mean_entropy(&self) -> f64 {
+        if self.chunks.is_empty() {
+            return 1.0;
+        }
+        self.chunks.iter().map(|c| c.entropy).sum::<f64>() / self.chunks.len() as f64
+    }
+
+    /// Mean top-bucket share.
+    pub fn mean_top_share(&self) -> f64 {
+        if self.chunks.is_empty() {
+            return 0.0;
+        }
+        self.chunks.iter().map(|c| c.top_share).sum::<f64>() / self.chunks.len() as f64
+    }
+
+    /// Chunks that *cannot* contain an item with frequency above
+    /// `threshold` (their max bucket stays below it) — candidates for
+    /// cheap skipping in the offline verification pass.
+    pub fn skippable(&self, threshold: u64) -> usize {
+        self.chunks.iter().filter(|c| c.max_bucket <= threshold).count()
+    }
+}
+
+/// Profiler over the AOT `skew_profile` program.
+pub struct SkewProfiler {
+    rt: Runtime,
+    entry: String,
+    chunks_per_call: usize,
+    chunk_len: usize,
+    num_buckets: usize,
+    stream_pad: i32,
+}
+
+impl SkewProfiler {
+    /// Open against an artifact directory.
+    pub fn new(dir: &std::path::Path) -> Result<Self> {
+        let rt = Runtime::new(dir)?;
+        let entry = rt
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::Profile)
+            .ok_or_else(|| anyhow::anyhow!("no profile artifact (run `make artifacts`)"))?
+            .clone();
+        let stream_pad = rt.manifest().stream_pad;
+        Ok(Self {
+            rt,
+            entry: entry.name.clone(),
+            chunks_per_call: entry.chunks,
+            chunk_len: entry.chunk_len,
+            num_buckets: entry.num_buckets,
+            stream_pad,
+        })
+    }
+
+    /// Profile a stream of item ids.
+    pub fn profile(&mut self, items: &[u64]) -> Result<StreamProfile> {
+        let enc = crate::runtime::verifier::encode::items_to_i32(items)?;
+        let call_len = self.chunks_per_call * self.chunk_len;
+        let mut chunks = Vec::new();
+        let mut pos = 0usize;
+        while pos < enc.len() {
+            let take = (enc.len() - pos).min(call_len);
+            let mut buf = enc[pos..pos + take].to_vec();
+            buf.resize(call_len, self.stream_pad);
+            let hist = self.rt.run_profile(&self.entry, &buf)?;
+            // Only rows covering real items (padding inflates one bucket
+            // — the pad sentinel hashes somewhere — so per-row item
+            // counts come from the un-padded prefix length).
+            let mut remaining = take;
+            for row in 0..self.chunks_per_call {
+                if remaining == 0 {
+                    break;
+                }
+                let row_items = remaining.min(self.chunk_len);
+                let h = &hist[row * self.num_buckets..(row + 1) * self.num_buckets];
+                chunks.push(profile_row(h, row_items as u64, self.chunk_len as u64));
+                remaining -= row_items;
+            }
+            pos += take;
+        }
+        Ok(StreamProfile { chunks })
+    }
+}
+
+/// Build one [`ChunkProfile`] from a bucket histogram row.
+///
+/// When the row is padded (`items < row_len`), the pad sentinel's own
+/// bucket is corrected by the pad count before computing statistics.
+fn profile_row(hist: &[f32], items: u64, row_len: u64) -> ChunkProfile {
+    let pad = (row_len - items) as f64;
+    let mut totals: Vec<f64> = hist.iter().map(|&x| x as f64).collect();
+    if pad > 0.0 {
+        // All pad items share one bucket (identical sentinel): subtract
+        // from the largest bucket that can hold them.
+        if let Some(mx) = totals
+            .iter_mut()
+            .filter(|v| **v >= pad)
+            .max_by(|a, b| a.partial_cmp(b).unwrap())
+        {
+            *mx -= pad;
+        }
+    }
+    let n: f64 = totals.iter().sum();
+    let max_bucket = totals.iter().copied().fold(0.0, f64::max);
+    let (top_share, entropy) = if n > 0.0 {
+        let mut h = 0.0;
+        for &v in &totals {
+            if v > 0.0 {
+                let p = v / n;
+                h -= p * p.ln();
+            }
+        }
+        (max_bucket / n, h / (totals.len() as f64).ln())
+    } else {
+        (0.0, 1.0)
+    };
+    ChunkProfile { items, max_bucket: max_bucket as u64, top_share, entropy }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_row_uniformish() {
+        let hist = vec![4.0f32; 256];
+        let p = profile_row(&hist, 1024, 1024);
+        assert!(p.entropy > 0.99);
+        assert!((p.top_share - 4.0 / 1024.0).abs() < 1e-9);
+        assert_eq!(p.max_bucket, 4);
+    }
+
+    #[test]
+    fn profile_row_degenerate() {
+        let mut hist = vec![0.0f32; 256];
+        hist[7] = 1024.0;
+        let p = profile_row(&hist, 1024, 1024);
+        assert_eq!(p.entropy, 0.0);
+        assert_eq!(p.top_share, 1.0);
+    }
+
+    #[test]
+    fn profile_row_pad_correction() {
+        // 512 real items uniform + 512 pad items stacked on one bucket.
+        let mut hist = vec![2.0f32; 256];
+        hist[0] += 512.0;
+        let p = profile_row(&hist, 512, 1024);
+        assert_eq!(p.max_bucket, 2);
+        assert!(p.entropy > 0.99);
+    }
+
+    #[test]
+    fn stream_profile_aggregates() {
+        let sp = StreamProfile {
+            chunks: vec![
+                ChunkProfile { items: 10, max_bucket: 100, top_share: 0.9, entropy: 0.2 },
+                ChunkProfile { items: 10, max_bucket: 3, top_share: 0.1, entropy: 0.8 },
+            ],
+        };
+        assert!((sp.mean_entropy() - 0.5).abs() < 1e-12);
+        assert_eq!(sp.skippable(50), 1);
+    }
+}

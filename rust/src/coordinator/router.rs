@@ -1,0 +1,90 @@
+//! Chunk routing policies for the streaming coordinator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// How incoming chunks are assigned to shard workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Cycle through shards — the block decomposition of Algorithm 1 in
+    /// streaming form (every shard sees an interleaved 1/s of the
+    /// stream, which is still a valid partition for the combine merge).
+    RoundRobin,
+    /// Send each chunk to the shard with the least queued items —
+    /// adaptive balancing for heterogeneous shards (the coordinator
+    /// analogue of the paper's ⌊n/p⌋/⌈n/p⌉ balance guarantee).
+    LeastLoaded,
+}
+
+/// Shared routing state (load counters are updated by both the router
+/// and the shard workers as they drain).
+#[derive(Debug)]
+pub struct Router {
+    routing: Routing,
+    next: u64,
+    /// Queued items per shard (enqueued − drained).
+    pub loads: Arc<Vec<AtomicU64>>,
+}
+
+impl Router {
+    /// New router over `shards` workers.
+    pub fn new(routing: Routing, shards: usize) -> Self {
+        assert!(shards >= 1);
+        Self {
+            routing,
+            next: 0,
+            loads: Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect()),
+        }
+    }
+
+    /// Choose the shard for a chunk of `len` items and account its load.
+    pub fn route(&mut self, len: usize) -> usize {
+        let shard = match self.routing {
+            Routing::RoundRobin => {
+                let s = (self.next % self.loads.len() as u64) as usize;
+                self.next += 1;
+                s
+            }
+            Routing::LeastLoaded => self
+                .loads
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .expect("at least one shard"),
+        };
+        self.loads[shard].fetch_add(len as u64, Ordering::Relaxed);
+        shard
+    }
+
+    /// Worker-side: mark `len` items drained from `shard`.
+    pub fn drained(loads: &[AtomicU64], shard: usize, len: usize) {
+        loads[shard].fetch_sub(len as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(Routing::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(10)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_drained_shard() {
+        let mut r = Router::new(Routing::LeastLoaded, 3);
+        let a = r.route(100); // 0
+        let b = r.route(50); // 1 (0 has load)
+        let c = r.route(10); // 2
+        assert_eq!((a, b, c), (0, 1, 2));
+        // Shard 2 has least load (10) -> next pick is 2 again.
+        assert_eq!(r.route(5), 2);
+        // Drain shard 0 fully; it becomes the least loaded.
+        Router::drained(&r.loads, 0, 100);
+        assert_eq!(r.route(1), 0);
+    }
+}

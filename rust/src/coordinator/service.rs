@@ -1,0 +1,296 @@
+//! The streaming coordinator: sharded ingestion with bounded queues
+//! (backpressure), per-shard Space Saving, and a final combine-tree
+//! merge — Parallel Space Saving as a long-running service rather than
+//! a one-shot batch job.
+//!
+//! Topology:
+//!
+//! ```text
+//!  push(chunk) ─▶ router ─▶ [bounded queue]─▶ shard 0: SpaceSaving
+//!                        ─▶ [bounded queue]─▶ shard 1: SpaceSaving
+//!                        ─▶      ...      ─▶ shard s: SpaceSaving
+//!  finish() ──────────────── join ─▶ tree_reduce(combine) ─▶ prune
+//! ```
+//!
+//! Queues are `std::sync::mpsc::sync_channel`s of `queue_depth` chunks;
+//! a full queue blocks the producer (backpressure), and every such stall
+//! is counted in [`IngestStats::backpressure_events`].
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use crate::gen::ItemSource;
+use crate::parallel::reduction::tree_reduce;
+use crate::summary::{Counter, FrequencySummary, StreamSummary, Summary};
+
+use super::router::{Router, Routing};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Shard workers (each owns one Space Saving instance).
+    pub shards: usize,
+    /// Counters per shard summary.
+    pub k: usize,
+    /// k-majority parameter for the final prune.
+    pub k_majority: u64,
+    /// Bounded queue depth, in chunks, per shard.
+    pub queue_depth: usize,
+    /// Chunk routing policy.
+    pub routing: Routing,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            k: 2000,
+            k_majority: 2000,
+            queue_depth: 8,
+            routing: Routing::RoundRobin,
+        }
+    }
+}
+
+/// Ingestion statistics.
+#[derive(Debug, Clone, Default)]
+pub struct IngestStats {
+    /// Chunks accepted.
+    pub chunks: u64,
+    /// Items accepted.
+    pub items: u64,
+    /// Producer stalls on a full shard queue.
+    pub backpressure_events: u64,
+    /// Items processed per shard.
+    pub per_shard_items: Vec<u64>,
+}
+
+/// Final result of a coordinator session.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    /// Merged global summary.
+    pub summary: Summary,
+    /// k-majority candidates (`f̂ > n/k_majority`), descending.
+    pub frequent: Vec<Counter>,
+    /// Ingestion statistics.
+    pub stats: IngestStats,
+}
+
+enum Msg {
+    Chunk(Vec<u64>),
+    Finish,
+}
+
+/// A running coordinator session.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    senders: Vec<SyncSender<Msg>>,
+    handles: Vec<JoinHandle<(Summary, u64)>>,
+    router: Router,
+    stats: IngestStats,
+}
+
+impl Coordinator {
+    /// Spawn the shard workers.
+    pub fn start(cfg: CoordinatorConfig) -> Self {
+        assert!(cfg.shards >= 1 && cfg.queue_depth >= 1);
+        let router = Router::new(cfg.routing, cfg.shards);
+        let mut senders = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+            let k = cfg.k;
+            let loads = router.loads.clone();
+            handles.push(std::thread::spawn(move || {
+                // Bucket-list Space Saving: O(1) amortized and ~30% faster
+                // on the eviction-heavy paths (see EXPERIMENTS.md §Perf).
+                let mut ss = StreamSummary::new(k);
+                let mut items = 0u64;
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Chunk(chunk) => {
+                            ss.offer_all(&chunk);
+                            items += chunk.len() as u64;
+                            Router::drained(&loads, shard, chunk.len());
+                        }
+                        Msg::Finish => break,
+                    }
+                }
+                (ss.freeze(), items)
+            }));
+            senders.push(tx);
+        }
+        Self {
+            stats: IngestStats { per_shard_items: vec![0; cfg.shards], ..Default::default() },
+            cfg,
+            senders,
+            handles,
+            router,
+        }
+    }
+
+    /// Configuration in use.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Ingest one chunk. Blocks when the target shard's queue is full
+    /// (counted as a backpressure event).
+    pub fn push(&mut self, chunk: Vec<u64>) {
+        if chunk.is_empty() {
+            return;
+        }
+        let shard = self.router.route(chunk.len());
+        self.stats.chunks += 1;
+        self.stats.items += chunk.len() as u64;
+        self.stats.per_shard_items[shard] += chunk.len() as u64;
+        match self.senders[shard].try_send(Msg::Chunk(chunk)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(msg)) => {
+                self.stats.backpressure_events += 1;
+                // Block until the shard drains — backpressure, not drop.
+                self.senders[shard].send(msg).expect("shard died");
+            }
+            Err(TrySendError::Disconnected(_)) => panic!("shard died"),
+        }
+    }
+
+    /// Current queued load per shard (items), for monitoring.
+    pub fn queued(&self) -> Vec<u64> {
+        self.router
+            .loads
+            .iter()
+            .map(|l| l.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Drain, merge and prune.
+    pub fn finish(self) -> QueryResult {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Finish);
+        }
+        drop(self.senders);
+        let mut summaries = Vec::with_capacity(self.handles.len());
+        let mut stats = self.stats;
+        for (shard, h) in self.handles.into_iter().enumerate() {
+            let (summary, items) = h.join().expect("shard panicked");
+            debug_assert_eq!(items, stats.per_shard_items[shard]);
+            summaries.push(summary);
+        }
+        let summary = tree_reduce(summaries);
+        let frequent = summary.prune(stats.items, self.cfg.k_majority);
+        stats.per_shard_items.shrink_to_fit();
+        QueryResult { summary, frequent, stats }
+    }
+}
+
+/// Convenience: stream an [`ItemSource`] through a coordinator in
+/// `chunk_len`-item chunks.
+pub fn run_source(
+    cfg: CoordinatorConfig,
+    source: &dyn ItemSource,
+    chunk_len: usize,
+) -> QueryResult {
+    let mut c = Coordinator::start(cfg);
+    let n = source.len();
+    let mut pos = 0u64;
+    while pos < n {
+        let take = ((n - pos) as usize).min(chunk_len);
+        c.push(source.slice(pos, pos + take as u64));
+        pos += take as u64;
+    }
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Exact;
+    use crate::gen::GeneratedSource;
+    use crate::metrics::AccuracyReport;
+
+    #[test]
+    fn coordinator_matches_batch_guarantees() {
+        let src = GeneratedSource::zipf(120_000, 4_000, 1.1, 33);
+        let cfg = CoordinatorConfig { shards: 4, k: 256, k_majority: 256, ..Default::default() };
+        let out = run_source(cfg, &src, 4096);
+        assert_eq!(out.stats.items, 120_000);
+
+        let mut exact = Exact::new();
+        exact.offer_all(&src.slice(0, 120_000));
+        let acc = AccuracyReport::evaluate(&out.frequent, &exact, 256);
+        assert_eq!(acc.recall, 1.0);
+        assert_eq!(acc.precision, 1.0);
+    }
+
+    #[test]
+    fn round_robin_balances_items() {
+        let src = GeneratedSource::uniform(100_000, 1000, 1);
+        let cfg = CoordinatorConfig { shards: 5, k: 64, k_majority: 64, ..Default::default() };
+        let out = run_source(cfg, &src, 1000);
+        let min = *out.stats.per_shard_items.iter().min().unwrap();
+        let max = *out.stats.per_shard_items.iter().max().unwrap();
+        assert!(max - min <= 1000, "imbalance: {:?}", out.stats.per_shard_items);
+    }
+
+    #[test]
+    fn least_loaded_routing_works() {
+        let src = GeneratedSource::zipf(50_000, 500, 1.8, 2);
+        let cfg = CoordinatorConfig {
+            shards: 3,
+            k: 64,
+            k_majority: 64,
+            routing: Routing::LeastLoaded,
+            ..Default::default()
+        };
+        let out = run_source(cfg, &src, 2048);
+        assert_eq!(out.stats.items, 50_000);
+        assert!(out.frequent.iter().any(|c| c.item == 1));
+    }
+
+    #[test]
+    fn backpressure_fires_with_tiny_queues() {
+        let src = GeneratedSource::uniform(200_000, 100, 3);
+        let cfg = CoordinatorConfig {
+            shards: 1,
+            k: 32,
+            k_majority: 32,
+            queue_depth: 1,
+            ..Default::default()
+        };
+        let out = run_source(cfg, &src, 256);
+        assert!(
+            out.stats.backpressure_events > 0,
+            "expected stalls with a depth-1 queue and 782 chunks"
+        );
+        assert_eq!(out.stats.items, 200_000);
+    }
+
+    #[test]
+    fn empty_chunks_ignored_and_empty_stream_ok() {
+        let mut c = Coordinator::start(CoordinatorConfig::default());
+        c.push(Vec::new());
+        let out = c.finish();
+        assert_eq!(out.stats.items, 0);
+        assert!(out.frequent.is_empty());
+    }
+
+    #[test]
+    fn incremental_push_api() {
+        let mut c = Coordinator::start(CoordinatorConfig {
+            shards: 2,
+            k: 16,
+            k_majority: 4,
+            ..Default::default()
+        });
+        for _ in 0..100 {
+            c.push(vec![7; 50]);
+            c.push(vec![1, 2, 3, 4, 5]);
+        }
+        let out = c.finish();
+        assert_eq!(out.stats.items, 100 * 55);
+        assert_eq!(out.frequent.len(), 1);
+        assert_eq!(out.frequent[0].item, 7);
+    }
+}

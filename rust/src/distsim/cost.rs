@@ -1,0 +1,149 @@
+//! Calibration tables for the virtual cost model.
+//!
+//! Every factor is anchored at the paper's own measurements (Tables
+//! II–IV, single-core rows, Xeon E5-2630 v3, Intel C++ v17), normalized
+//! to the reference operating point **k = 2000, ρ = 1.1, n = 8 B**, where
+//! the measured per-item cost is 238.45 s / 8e9 ≈ 29.8 ns.
+//!
+//! The simulator multiplies the machine's `base_item_ns` by:
+//!
+//! * [`k_factor`] — counter-count dependence (more counters → bigger
+//!   working set → more cache misses; non-monotone dip at 2000 exactly
+//!   as measured),
+//! * [`skew_factor`] — skew dependence (ρ = 1.8 streams hit the
+//!   monitored-increment fast path more often: factor ≈ 0.8),
+//! * [`n_factor`] — stream-size dependence (bigger streams touch more
+//!   distinct items; the OpenMP binary showed a pronounced 29 B
+//!   anomaly, the MPI binary did not — both tables are kept),
+//! * [`contention`] — saturating per-node memory-bandwidth contention in
+//!   the number of active hardware threads per node.
+
+/// Piecewise-linear interpolation through `(x, y)` points (sorted by x),
+/// flat extrapolation outside the range.
+pub fn interp(points: &[(f64, f64)], x: f64) -> f64 {
+    debug_assert!(points.len() >= 2);
+    if x <= points[0].0 {
+        return points[0].1;
+    }
+    for w in points.windows(2) {
+        let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+        if x <= x1 {
+            return y0 + (y1 - y0) * (x - x0) / (x1 - x0);
+        }
+    }
+    points.last().unwrap().1
+}
+
+/// Per-item cost factor vs. the number of Space Saving counters `k`
+/// (paper Table II "Varying k" single-core row over the k=2000 cell).
+/// Interpolated in `log2 k`.
+pub fn k_factor(k: u64) -> f64 {
+    const PTS: &[(f64, f64)] = &[
+        // (log2 k, factor): 279.63, 244.56, 238.45, 258.01, 277.79 / 238.45
+        (8.9658, 1.1727), // k = 500
+        (9.9658, 1.0256), // k = 1000
+        (10.9658, 1.0000), // k = 2000
+        (11.9658, 1.0820), // k = 4000
+        (12.9658, 1.1650), // k = 8000
+    ];
+    interp(PTS, (k.max(1) as f64).log2())
+}
+
+/// Per-item cost factor vs. zipf skew ρ (paper Table II "Varying ρ":
+/// 190.08 s at ρ=1.8 vs 238.45 s at ρ=1.1).
+pub fn skew_factor(rho: f64) -> f64 {
+    const PTS: &[(f64, f64)] = &[(1.1, 1.0), (1.8, 0.7972)];
+    interp(PTS, rho)
+}
+
+/// Which binary's calibration to use for the n-dependence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NTable {
+    /// OpenMP binary (Table II): shows the 29 B single-core anomaly.
+    OpenMp,
+    /// MPI / hybrid binaries (Tables III–IV): flat in n.
+    Mpi,
+}
+
+/// Per-item cost factor vs. stream length `n` (billions), relative to
+/// the 8 B reference.
+pub fn n_factor(table: NTable, n: u64) -> f64 {
+    let nb = n as f64 / 1e9;
+    match table {
+        // 120.60/ (238.45/2), 1.0, 481.33/(238.45*2), 1047.10/(238.45*29/8)
+        NTable::OpenMp => interp(
+            &[(4.0, 1.0117), (8.0, 1.0), (16.0, 1.0093), (29.0, 1.2114)],
+            nb,
+        ),
+        // 122.24/(238.96/2), 1.0, 481.52/(238.96*2), 874.88/(238.96*29/8)
+        NTable::Mpi => interp(
+            &[(4.0, 1.0231), (8.0, 1.0), (16.0, 1.0075), (29.0, 1.0100)],
+            nb,
+        ),
+    }
+}
+
+/// Saturating per-node memory-bandwidth contention: the slowdown of one
+/// worker's scan when `active` hardware threads share the node.
+///
+/// `1 + γ₁(a−1)/(1 + γ₂(a−1))` — fitted to Table II (OpenMP, 8 B):
+/// measured slowdowns 1.03/1.16/1.27/1.31 at 2/4/8/16 threads, and
+/// consistent with Table III's ~1.25–1.30 at 16 MPI ranks per node.
+pub fn contention(gamma1: f64, gamma2: f64, active: u32) -> f64 {
+    let a = active.saturating_sub(1) as f64;
+    1.0 + gamma1 * a / (1.0 + gamma2 * a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interp_basics() {
+        let pts = [(0.0, 0.0), (10.0, 100.0)];
+        assert_eq!(interp(&pts, -5.0), 0.0);
+        assert_eq!(interp(&pts, 5.0), 50.0);
+        assert_eq!(interp(&pts, 50.0), 100.0);
+    }
+
+    #[test]
+    fn k_factor_anchors() {
+        assert!((k_factor(2000) - 1.0).abs() < 1e-4);
+        assert!((k_factor(500) - 1.1727).abs() < 1e-3);
+        assert!((k_factor(8000) - 1.1650).abs() < 1e-3);
+        // Dip at 2000: cheaper than both 500 and 8000.
+        assert!(k_factor(2000) < k_factor(500));
+        assert!(k_factor(2000) < k_factor(8000));
+    }
+
+    #[test]
+    fn skew_factor_monotone_down() {
+        assert!((skew_factor(1.1) - 1.0).abs() < 1e-9);
+        assert!(skew_factor(1.8) < 0.8);
+        assert!(skew_factor(1.4) < 1.0 && skew_factor(1.4) > skew_factor(1.8));
+    }
+
+    #[test]
+    fn n_factor_tables_disagree_at_29b() {
+        let omp = n_factor(NTable::OpenMp, 29_000_000_000);
+        let mpi = n_factor(NTable::Mpi, 29_000_000_000);
+        assert!(omp > 1.2 && mpi < 1.05, "omp={omp} mpi={mpi}");
+    }
+
+    #[test]
+    fn contention_saturates() {
+        let c16 = contention(0.08, 0.20, 16);
+        let c8 = contention(0.08, 0.20, 8);
+        let c2 = contention(0.08, 0.20, 2);
+        assert!(c2 < c8 && c8 < c16);
+        assert!((c16 - 1.30).abs() < 0.05, "c16={c16}");
+        // Doubling threads far out barely moves it.
+        assert!(contention(0.08, 0.20, 64) - c16 < 0.08);
+    }
+
+    #[test]
+    fn reference_point_is_identity() {
+        let f = k_factor(2000) * skew_factor(1.1) * n_factor(NTable::Mpi, 8_000_000_000);
+        assert!((f - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,194 @@
+//! Machine cost models, calibrated to the paper's testbed.
+
+use super::cost::{self, NTable};
+
+/// Cost parameters of one machine type.
+#[derive(Debug, Clone)]
+pub struct MachineModel {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// Physical cores per socket.
+    pub cores_per_socket: u32,
+    /// Sockets per node.
+    pub sockets_per_node: u32,
+    /// Hardware threads per core that still add throughput (the paper
+    /// found 2 of the Phi's 4; Xeon ran with hyperthreading disabled).
+    pub useful_smt: u32,
+    /// Per-item Space Saving cost at the reference point
+    /// (k=2000, ρ=1.1, n=8B), nanoseconds.
+    pub base_item_ns: f64,
+    /// Memory-contention fit (γ₁, γ₂) for [`cost::contention`].
+    pub gamma: (f64, f64),
+    /// Thread spawn cost, ns per thread (OpenMP region entry).
+    pub spawn_ns_per_thread: f64,
+    /// Barrier / join cost, ns per tree level.
+    pub barrier_ns: f64,
+    /// Combine merge cost, ns per counter.
+    pub combine_ns_per_counter: f64,
+    /// Sort cost, ns per counter per log₂(k) (freeze + post-merge sort).
+    pub sort_ns_per_counter: f64,
+    /// Device/node memory in bytes (bounds the workload a rank can hold).
+    pub mem_bytes: u64,
+    /// Penalty multiplier once threads exceed `useful_smt × cores`
+    /// (oversubscription: the paper's 240-thread Phi runs were *slower*
+    /// than 120).
+    pub oversub_penalty: f64,
+}
+
+impl MachineModel {
+    /// Intel Xeon E5-2630 v3 (octa-core, 2.4 GHz) — the Galileo node CPU.
+    ///
+    /// `base_item_ns` = 238.45 s / 8e9 items (Table II, 1 core, k=2000,
+    /// ρ=1.1, n=8B). Contention fitted to Table II slowdowns
+    /// (1.03/1.16/1.27/1.31 at 2/4/8/16 threads per node).
+    pub fn xeon_e5_2630_v3() -> Self {
+        Self {
+            name: "Xeon E5-2630 v3",
+            cores_per_socket: 8,
+            sockets_per_node: 2,
+            useful_smt: 1, // hyperthreading disabled on Galileo
+            base_item_ns: 29.81,
+            gamma: (0.08, 0.20),
+            spawn_ns_per_thread: 30_000.0,
+            barrier_ns: 5_000.0,
+            combine_ns_per_counter: 55.0,
+            sort_ns_per_counter: 9.0,
+            mem_bytes: 128 << 30,
+            oversub_penalty: 1.15,
+        }
+    }
+
+    /// Intel Phi 7120P (61 in-order cores @ 1.238 GHz, 4-way SMT, 16 GB
+    /// GDDR5).
+    ///
+    /// Per-thread cost derated ×36 from the Xeon: in-order pipeline at
+    /// half the clock, and — the paper's own diagnosis (§4.4) — the
+    /// hash-table update loop defeats both the 512-bit SIMD unit and the
+    /// cache hierarchy (unordered, unpredictable accesses, no locality).
+    /// The paper measured ~2–3× slower than a Xeon socket at the Phi's
+    /// best configuration (120 threads = 2 hw threads/core); this factor
+    /// reproduces that ratio.
+    pub fn phi_7120p() -> Self {
+        Self {
+            name: "Phi 7120P",
+            cores_per_socket: 61,
+            sockets_per_node: 1,
+            useful_smt: 2,
+            base_item_ns: 29.81 * 36.0,
+            // High-bandwidth GDDR5: contention milder per thread.
+            gamma: (0.015, 0.10),
+            spawn_ns_per_thread: 45_000.0,
+            barrier_ns: 12_000.0,
+            combine_ns_per_counter: 160.0,
+            sort_ns_per_counter: 28.0,
+            mem_bytes: 16 << 30,
+            oversub_penalty: 1.18,
+        }
+    }
+
+    /// Hardware threads per node that add throughput.
+    pub fn max_useful_threads_per_node(&self) -> u32 {
+        self.cores_per_socket * self.sockets_per_node * self.useful_smt
+    }
+
+    /// Virtual seconds for one worker to scan `items` stream elements
+    /// with `k` counters at skew `rho`, while `active_on_node` hardware
+    /// threads share its node.
+    ///
+    /// The stream-size cost factor is evaluated on the *per-worker
+    /// block* (`items`), not the total stream: the paper's Table II
+    /// shows the 29 B slowdown at 1 core (29 B block) but near-ideal —
+    /// even superlinear — speedups once the per-core block shrinks
+    /// (2 cores, 14.5 B/core: speedup 2.36), i.e. the anomaly is a
+    /// working-set effect that vanishes with smaller blocks.
+    pub fn scan_seconds(
+        &self,
+        items: u64,
+        k: u64,
+        rho: f64,
+        _n_total: u64,
+        ntable: NTable,
+        active_on_node: u32,
+    ) -> f64 {
+        let per_item = self.base_item_ns
+            * cost::k_factor(k)
+            * cost::skew_factor(rho)
+            * cost::n_factor(ntable, items);
+        let useful = self.max_useful_threads_per_node();
+        let contended = cost::contention(self.gamma.0, self.gamma.1, active_on_node.min(useful));
+        // Oversubscription: workers beyond the useful hardware threads
+        // time-slice — each worker's wallclock stretches by the ratio,
+        // plus a switching penalty (paper Fig. 5: 240 Phi threads are
+        // slower than 120).
+        let oversub = if active_on_node > useful {
+            active_on_node as f64 / useful as f64 * self.oversub_penalty
+        } else {
+            1.0
+        };
+        items as f64 * per_item * contended * oversub * 1e-9
+    }
+
+    /// Virtual seconds for one combine of two k-counter summaries
+    /// (hash-index build + merge + re-sort).
+    pub fn combine_seconds(&self, k: u64) -> f64 {
+        let kf = k as f64;
+        (kf * self.combine_ns_per_counter + kf * (kf.max(2.0)).log2() * self.sort_ns_per_counter)
+            * 1e-9
+    }
+
+    /// Virtual seconds to enter/exit a parallel region of `threads`.
+    pub fn spawn_seconds(&self, threads: u32) -> f64 {
+        threads as f64 * self.spawn_ns_per_thread * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xeon_single_core_matches_paper_anchor() {
+        let m = MachineModel::xeon_e5_2630_v3();
+        // Table II: 8B items, k=2000, ρ=1.1, 1 core -> 238.45 s.
+        let t = m.scan_seconds(8_000_000_000, 2000, 1.1, 8_000_000_000, NTable::OpenMp, 1);
+        assert!((t - 238.45).abs() / 238.45 < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn xeon_16_thread_slowdown_in_band() {
+        let m = MachineModel::xeon_e5_2630_v3();
+        let t1 = m.scan_seconds(1_000_000, 2000, 1.1, 8_000_000_000, NTable::OpenMp, 1);
+        let t16 = m.scan_seconds(1_000_000, 2000, 1.1, 8_000_000_000, NTable::OpenMp, 16);
+        let slow = t16 / t1;
+        assert!((1.25..1.40).contains(&slow), "slowdown {slow}");
+    }
+
+    #[test]
+    fn phi_socket_slower_than_xeon_socket() {
+        // Paper §4.4: Phi (120 thr) is ~2–3× slower than a Xeon socket
+        // (8 cores) on the same 3B-item workload.
+        let xeon = MachineModel::xeon_e5_2630_v3();
+        let phi = MachineModel::phi_7120p();
+        let n = 3_000_000_000u64;
+        let t_xeon = xeon.scan_seconds(n / 8, 2000, 1.1, n, NTable::Mpi, 8);
+        let t_phi = phi.scan_seconds(n / 120, 2000, 1.1, n, NTable::Mpi, 120);
+        let ratio = t_phi / t_xeon;
+        assert!((1.8..3.5).contains(&ratio), "phi/xeon ratio {ratio}");
+    }
+
+    #[test]
+    fn phi_240_threads_worse_than_120() {
+        let phi = MachineModel::phi_7120p();
+        let n = 3_000_000_000u64;
+        let t120 = phi.scan_seconds(n / 120, 2000, 1.1, n, NTable::Mpi, 120);
+        let t240 = phi.scan_seconds(n / 240, 2000, 1.1, n, NTable::Mpi, 240);
+        assert!(t240 > t120, "t120={t120} t240={t240}");
+    }
+
+    #[test]
+    fn combine_scales_with_k() {
+        let m = MachineModel::xeon_e5_2630_v3();
+        assert!(m.combine_seconds(8000) > 3.0 * m.combine_seconds(2000));
+        assert!(m.combine_seconds(2000) < 0.01, "combine stays sub-10ms");
+    }
+}

@@ -1,0 +1,36 @@
+//! Deterministic cluster simulator — the substitute for the paper's
+//! Galileo testbed (516 nodes of 2× octa-core Xeon E5-2630 v3 + Intel
+//! Phi 7120P accelerators, QDR Infiniband).
+//!
+//! Design (DESIGN.md §2): the *algorithm executes for real* — every
+//! simulated rank/thread runs actual sequential Space Saving over its
+//! block of a real (scaled) stream, and the reduction performs actual
+//! `combine` calls in the exact recursive-halving tree MPI would use —
+//! while *time is charged virtually* from calibrated cost models:
+//!
+//! * [`machine`] — per-machine cost parameters (Xeon E5-2630 v3,
+//!   Phi 7120P), calibrated against the paper's own single-core
+//!   measurements (Tables II–IV).
+//! * [`cost`] — the calibration tables: per-item cost factors in `k`,
+//!   skew ρ, stream size `n`, and the saturating memory-contention model.
+//! * [`network`] — α–β message model (QDR Infiniband, PCIe offload).
+//! * [`topology`] — cluster shape: nodes × ranks × threads, placement.
+//! * [`mpisim`] — the engine: decompose → real local scans → timed
+//!   combine tree → pruned result + virtual [`PhaseTimes`].
+//!
+//! Accuracy metrics from a simulated run are *real* (computed on the
+//! scaled stream against an exact oracle); runtimes are *virtual*
+//! (paper-scale seconds from the cost model).
+//!
+//! [`PhaseTimes`]: crate::metrics::PhaseTimes
+
+pub mod cost;
+pub mod machine;
+pub mod mpisim;
+pub mod network;
+pub mod topology;
+
+pub use machine::MachineModel;
+pub use mpisim::{simulate, SimOutcome, SimWorkload};
+pub use network::NetworkModel;
+pub use topology::{ClusterSpec, Flavor};

@@ -1,0 +1,373 @@
+//! The simulation engine: real algorithm execution + virtual time.
+//!
+//! A simulated run is bit-faithful to paper Algorithm 1: the (scaled)
+//! stream is block-decomposed over `ranks × threads` workers, every
+//! worker runs real sequential Space Saving, summaries are combined in
+//! the exact recursive-halving tree an MPI user-defined reduction
+//! executes (intra-rank shared-memory tree first for hybrid runs), and
+//! the root prunes. Alongside, every phase is charged virtual seconds
+//! from the calibrated machine/network models at **paper scale**
+//! (`n_virtual` items), so a laptop reproduces 512-core Galileo curves.
+
+use crate::gen::{GeneratedSource, ItemSource};
+use crate::metrics::PhaseTimes;
+use crate::parallel::partition::block_range;
+use crate::summary::{Counter, FrequencySummary, StreamSummary, Summary};
+
+use super::cost::NTable;
+use super::network::NetworkModel;
+use super::topology::{ClusterSpec, Flavor};
+
+/// MPI launcher/runtime init cost: base + per-rank dispatch (PMI wire-up
+/// is linear in ranks at Galileo's scale).
+const MPI_INIT_BASE_S: f64 = 0.05;
+const MPI_INIT_PER_RANK_S: f64 = 2.0e-3;
+
+/// Bytes per stream item resident on a device (the paper stores 32-bit
+/// ids; 3 B items ≈ 12 GB just fits the Phi's 16 GB — §4.3).
+const DEVICE_BYTES_PER_ITEM: u64 = 4;
+
+/// A workload to simulate: paper-scale `n_virtual` for the clock, scaled
+/// `n_real` for the actual computation.
+#[derive(Debug, Clone)]
+pub struct SimWorkload {
+    /// Stream length the virtual clock charges (paper scale).
+    pub n_virtual: u64,
+    /// Stream length actually processed (accuracy is real at this size).
+    pub n_real: u64,
+    /// Space Saving counters per summary.
+    pub k: usize,
+    /// k-majority parameter for the final prune (the paper uses the
+    /// number of counters, i.e. `φ = 1/k`).
+    pub k_majority: u64,
+    /// Zipf skew ρ (0.0 = uniform stream).
+    pub skew: f64,
+    /// Item universe (distinct ranks) of the generator.
+    pub universe: u64,
+    /// Generation seed.
+    pub seed: u64,
+}
+
+impl SimWorkload {
+    /// A paper experiment point: `n_virtual` items at skew `rho` with
+    /// `k` counters, executed for real at `scale_denominator`× reduction
+    /// (default universe 2²²).
+    pub fn paper(n_virtual: u64, k: usize, rho: f64, scale_denominator: u64, seed: u64) -> Self {
+        Self {
+            n_virtual,
+            n_real: (n_virtual / scale_denominator).max(1),
+            k,
+            k_majority: k as u64,
+            skew: rho,
+            universe: 1 << 22,
+            seed,
+        }
+    }
+
+    /// The deterministic generated source for the real computation.
+    pub fn source(&self) -> GeneratedSource {
+        if self.skew > 0.0 {
+            GeneratedSource::zipf(self.n_real, self.universe, self.skew, self.seed)
+        } else {
+            GeneratedSource::uniform(self.n_real, self.universe, self.seed)
+        }
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Virtual phase times at paper scale (seconds).
+    pub times: PhaseTimes,
+    /// The reduced global summary (real, over the scaled stream).
+    pub summary: Summary,
+    /// Pruned k-majority candidates (real).
+    pub frequent: Vec<Counter>,
+    /// Per-rank virtual scan-finish times (spawn + local scan + intra
+    /// reduce), for load-balance inspection.
+    pub rank_finish: Vec<f64>,
+    /// Modeled per-rank device memory footprint, bytes.
+    pub rank_mem_bytes: u64,
+}
+
+impl SimOutcome {
+    /// Total virtual runtime.
+    pub fn total_seconds(&self) -> f64 {
+        self.times.total()
+    }
+}
+
+/// Simulate one run of Parallel Space Saving on `cluster`.
+///
+/// Errors if a rank's block cannot fit its device memory (the paper's
+/// 16 GB Phi bound) or the spec is degenerate.
+pub fn simulate(
+    w: &SimWorkload,
+    cluster: &ClusterSpec,
+    net: &NetworkModel,
+) -> anyhow::Result<SimOutcome> {
+    anyhow::ensure!(cluster.ranks >= 1 && cluster.threads_per_rank >= 1, "empty cluster");
+    let ranks = cluster.ranks as u64;
+    let threads = cluster.threads_per_rank as u64;
+    let m = &cluster.machine;
+
+    // ---- memory gate (per-rank resident block) --------------------------
+    let rank_block_virtual = w.n_virtual.div_ceil(ranks);
+    let rank_mem = rank_block_virtual * DEVICE_BYTES_PER_ITEM;
+    anyhow::ensure!(
+        rank_mem <= m.mem_bytes,
+        "rank block of {} items ({} GiB) exceeds {} memory ({} GiB)",
+        rank_block_virtual,
+        rank_mem >> 30,
+        m.name,
+        m.mem_bytes >> 30
+    );
+
+    let ntable = match cluster.flavor {
+        Flavor::OpenMp => NTable::OpenMp,
+        _ => NTable::Mpi,
+    };
+
+    // ---- spawn phase -----------------------------------------------------
+    let mut spawn = match cluster.flavor {
+        Flavor::OpenMp => m.spawn_seconds(cluster.threads_per_rank),
+        Flavor::Mpi => MPI_INIT_BASE_S + MPI_INIT_PER_RANK_S * ranks as f64,
+        Flavor::Hybrid => {
+            MPI_INIT_BASE_S
+                + MPI_INIT_PER_RANK_S * ranks as f64
+                + m.spawn_seconds(cluster.threads_per_rank)
+        }
+        Flavor::MicOffload => {
+            MPI_INIT_BASE_S
+                + MPI_INIT_PER_RANK_S * ranks as f64
+                + m.spawn_seconds(cluster.threads_per_rank)
+        }
+    };
+    if cluster.flavor == Flavor::MicOffload {
+        // Host -> device dataset transfer overlaps across accelerators
+        // (each has its own PCIe link): charge one rank block.
+        spawn += NetworkModel::pcie_offload()
+            .transfer_seconds(rank_block_virtual * DEVICE_BYTES_PER_ITEM);
+    }
+
+    // ---- local scans (real + virtual) ------------------------------------
+    let src = w.source();
+    let total_workers = ranks * threads;
+    let mut rank_summaries: Vec<Summary> = Vec::with_capacity(ranks as usize);
+    let mut rank_scan_virtual: Vec<f64> = Vec::with_capacity(ranks as usize);
+    let mut rank_finish: Vec<f64> = Vec::with_capacity(ranks as usize);
+    let intra_levels = (threads as f64).log2().ceil() as u32;
+
+    for r in 0..ranks {
+        let active = cluster.active_threads_on_node(r as u32);
+        let mut worker_summaries: Vec<Summary> = Vec::with_capacity(threads as usize);
+        let mut worker_virtual_max = 0.0f64;
+        for t in 0..threads {
+            let wid = r * threads + t;
+            // Real block over the scaled stream.
+            let (lo, hi) = block_range(w.n_real, total_workers, wid);
+            let mut ss = StreamSummary::new(w.k);
+            let mut buf = vec![0u64; 1 << 14];
+            let mut pos = lo;
+            while pos < hi {
+                let take = ((hi - pos) as usize).min(buf.len());
+                src.fill(pos, &mut buf[..take]);
+                ss.offer_all(&buf[..take]);
+                pos += take as u64;
+            }
+            worker_summaries.push(ss.freeze());
+            // Virtual block at paper scale.
+            let (vlo, vhi) = block_range(w.n_virtual, total_workers, wid);
+            let tv = m.scan_seconds(vhi - vlo, w.k as u64, w.skew, w.n_virtual, ntable, active)
+                // freeze sort of k counters
+                + w.k as f64 * (w.k as f64).max(2.0).log2() * m.sort_ns_per_counter * 1e-9;
+            worker_virtual_max = worker_virtual_max.max(tv);
+        }
+        // Intra-rank shared-memory reduction (hybrid/OpenMP).
+        let rank_summary = crate::parallel::reduction::tree_reduce(worker_summaries);
+        let intra = intra_levels as f64 * (m.combine_seconds(w.k as u64) + m.barrier_ns * 1e-9);
+        rank_summaries.push(rank_summary);
+        rank_scan_virtual.push(worker_virtual_max);
+        rank_finish.push(spawn + worker_virtual_max + intra);
+    }
+
+    let scan = rank_scan_virtual.iter().copied().fold(0.0, f64::max);
+
+    // ---- inter-rank reduction tree (recursive halving) -------------------
+    let shared = NetworkModel::shared_memory();
+    let mut live: Vec<(u32, f64, Summary)> = rank_finish
+        .iter()
+        .zip(rank_summaries)
+        .enumerate()
+        .map(|(r, (t, s))| (r as u32, *t, s))
+        .collect();
+    while live.len() > 1 {
+        let mut next: Vec<(u32, f64, Summary)> = Vec::with_capacity(live.len() / 2 + 1);
+        let mut it = live.into_iter();
+        while let Some((ra, ta, sa)) = it.next() {
+            match it.next() {
+                Some((rb, tb, sb)) => {
+                    let link = if cluster.node_of(ra) == cluster.node_of(rb) {
+                        &shared
+                    } else {
+                        net
+                    };
+                    let arrive = tb + link.transfer_seconds(sb.wire_bytes());
+                    let done = ta.max(arrive) + m.combine_seconds(w.k as u64);
+                    next.push((ra, done, sa.combine(&sb)));
+                }
+                None => next.push((ra, ta, sa)),
+            }
+        }
+        live = next;
+    }
+    let (_, t_root, summary) = live.pop().expect("non-empty reduction");
+    let reduce = (t_root - spawn - scan).max(0.0);
+
+    // ---- prune ------------------------------------------------------------
+    // Virtual: linear pass over k counters on the root.
+    let prune = w.k as f64 * 10.0e-9;
+    // Real: threshold at the real stream length.
+    let frequent = summary.prune(w.n_real, w.k_majority);
+
+    Ok(SimOutcome {
+        times: PhaseTimes { spawn, scan, reduce, prune },
+        summary,
+        frequent,
+        rank_finish,
+        rank_mem_bytes: rank_mem,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Exact;
+    use crate::distsim::machine::MachineModel;
+    use crate::metrics::AccuracyReport;
+
+    fn xeon() -> MachineModel {
+        MachineModel::xeon_e5_2630_v3()
+    }
+
+    fn qdr() -> NetworkModel {
+        NetworkModel::qdr_infiniband()
+    }
+
+    #[test]
+    fn single_rank_matches_paper_29b_mpi() {
+        // Table III: 29 B items, k=2000, ρ=1.1, 1 core -> 874.88 s.
+        let w = SimWorkload::paper(29_000_000_000, 2000, 1.1, 100_000, 1);
+        let c = ClusterSpec::mpi(xeon(), 1);
+        let out = simulate(&w, &c, &qdr()).unwrap();
+        let t = out.total_seconds();
+        assert!((t - 874.88).abs() / 874.88 < 0.05, "t={t}");
+    }
+
+    #[test]
+    fn openmp_29b_single_core_anomaly_reproduced() {
+        // Table II: 29 B, 1 OpenMP core -> 1047.10 s (the OpenMP binary's
+        // n-dependence).
+        let w = SimWorkload::paper(29_000_000_000, 2000, 1.1, 100_000, 1);
+        let c = ClusterSpec::openmp(xeon(), 1);
+        let out = simulate(&w, &c, &qdr()).unwrap();
+        let t = out.total_seconds();
+        assert!((t - 1047.1).abs() / 1047.1 < 0.05, "t={t}");
+    }
+
+    #[test]
+    fn mpi_512_core_band() {
+        // Table III: 29 B, 512 ranks -> 3.35 s (speedup 261).
+        let w = SimWorkload::paper(29_000_000_000, 2000, 1.1, 1_000_000, 1);
+        let c = ClusterSpec::mpi(xeon(), 512);
+        let out = simulate(&w, &c, &qdr()).unwrap();
+        let t = out.total_seconds();
+        assert!((2.3..4.5).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn hybrid_beats_mpi_at_512_cores() {
+        // Tables III vs IV at 512 cores: 3.35 s MPI vs 2.40 s hybrid.
+        let w = SimWorkload::paper(29_000_000_000, 2000, 1.1, 1_000_000, 1);
+        let mpi = simulate(&w, &ClusterSpec::mpi(xeon(), 512), &qdr()).unwrap();
+        let hyb = simulate(&w, &ClusterSpec::hybrid(xeon(), 64, 8), &qdr()).unwrap();
+        assert!(
+            hyb.total_seconds() < mpi.total_seconds(),
+            "hybrid {} !< mpi {}",
+            hyb.total_seconds(),
+            mpi.total_seconds()
+        );
+    }
+
+    #[test]
+    fn accuracy_is_real_and_perfect_recall() {
+        let w = SimWorkload {
+            n_virtual: 8_000_000_000,
+            n_real: 200_000,
+            k: 200,
+            k_majority: 200,
+            skew: 1.1,
+            universe: 50_000,
+            seed: 3,
+        };
+        let c = ClusterSpec::mpi(xeon(), 32);
+        let out = simulate(&w, &c, &qdr()).unwrap();
+        let mut exact = Exact::new();
+        let src = w.source();
+        exact.offer_all(&src.slice(0, w.n_real));
+        let acc = AccuracyReport::evaluate(&out.frequent, &exact, w.k_majority);
+        assert_eq!(acc.recall, 1.0);
+        assert_eq!(acc.precision, 1.0);
+        assert!(acc.are < 0.01, "ARE {}", acc.are);
+    }
+
+    #[test]
+    fn phi_memory_gate() {
+        // 8 B items on one Phi (32 GB virtual footprint) must be refused.
+        let w = SimWorkload::paper(8_000_000_000, 2000, 1.1, 1_000_000, 1);
+        let c = ClusterSpec::mic_offload(1, 120);
+        assert!(simulate(&w, &c, &qdr()).is_err());
+        // 3 B fits (12 GB < 16 GB) — the paper's §4.3 configuration.
+        let w3 = SimWorkload::paper(3_000_000_000, 2000, 1.1, 1_000_000, 1);
+        assert!(simulate(&w3, &c, &qdr()).is_ok());
+    }
+
+    #[test]
+    fn simulated_equals_sequential_result() {
+        // The simulated reduction must produce the same frequent set as a
+        // plain sequential run over the same real stream.
+        let w = SimWorkload {
+            n_virtual: 1_000_000,
+            n_real: 100_000,
+            k: 100,
+            k_majority: 100,
+            skew: 1.4,
+            universe: 10_000,
+            seed: 9,
+        };
+        let src = w.source();
+        let mut seq = StreamSummary::new(w.k);
+        seq.offer_all(&src.slice(0, w.n_real));
+        let seq_frequent = seq.freeze().prune(w.n_real, w.k_majority);
+
+        for ranks in [2u32, 7, 16] {
+            let out =
+                simulate(&w, &ClusterSpec::mpi(xeon(), ranks), &qdr()).unwrap();
+            let a: Vec<u64> = seq_frequent.iter().map(|c| c.item).collect();
+            let b: Vec<u64> = out.frequent.iter().map(|c| c.item).collect();
+            assert_eq!(a, b, "ranks={ranks}");
+        }
+    }
+
+    #[test]
+    fn reduce_time_grows_with_k() {
+        let mk = |k: usize| {
+            let w = SimWorkload::paper(8_000_000_000, k, 1.1, 10_000_000, 1);
+            simulate(&w, &ClusterSpec::mpi(xeon(), 128), &qdr())
+                .unwrap()
+                .times
+                .reduce
+        };
+        assert!(mk(8000) > mk(500), "reduction cost must grow with k");
+    }
+}

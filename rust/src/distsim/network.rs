@@ -1,0 +1,76 @@
+//! α–β network model: message time = α + bytes/β.
+//!
+//! Presets for the paper's interconnects: QDR Infiniband (Galileo's
+//! 40 Gb/s fabric), intra-node shared memory, and the PCIe gen2 x16 link
+//! to the Phi accelerator (used for offload transfer charges).
+
+/// Point-to-point message cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// Latency per message, seconds.
+    pub alpha: f64,
+    /// Bandwidth, bytes per second.
+    pub beta: f64,
+}
+
+impl NetworkModel {
+    /// QDR Infiniband: ~1.3 µs MPI latency, 40 Gb/s signal → ~4 GB/s
+    /// effective payload bandwidth.
+    pub fn qdr_infiniband() -> Self {
+        Self { alpha: 1.3e-6, beta: 4.0e9 }
+    }
+
+    /// Intra-node shared-memory transport (MPI ranks on one node).
+    pub fn shared_memory() -> Self {
+        Self { alpha: 0.3e-6, beta: 12.0e9 }
+    }
+
+    /// PCIe gen2 x16 to the Phi accelerator (~6.5 GB/s effective, plus
+    /// offload-launch latency folded into α).
+    pub fn pcie_offload() -> Self {
+        Self { alpha: 100e-6, beta: 6.5e9 }
+    }
+
+    /// Time to move `bytes` point-to-point.
+    pub fn transfer_seconds(&self, bytes: u64) -> f64 {
+        self.alpha + bytes as f64 / self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let n = NetworkModel::qdr_infiniband();
+        let t = n.transfer_seconds(64);
+        assert!((t - n.alpha) / n.alpha < 0.02);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let n = NetworkModel::qdr_infiniband();
+        let t = n.transfer_seconds(1 << 30);
+        assert!((t - (1u64 << 30) as f64 / n.beta).abs() / t < 0.01);
+    }
+
+    #[test]
+    fn summary_message_is_microseconds() {
+        // k=8000 counters * 24 B ≈ 192 KB → tens of µs on QDR: the
+        // paper's observation that reduction cost grows with k.
+        let n = NetworkModel::qdr_infiniband();
+        let t2000 = n.transfer_seconds(2000 * 24 + 16);
+        let t8000 = n.transfer_seconds(8000 * 24 + 16);
+        assert!(t8000 > 3.0 * t2000);
+        assert!(t8000 < 1e-3);
+    }
+
+    #[test]
+    fn pcie_dataset_transfer_is_seconds() {
+        // 3B u32 items = 12 GB → ~2 s, the Phi offload charge.
+        let n = NetworkModel::pcie_offload();
+        let t = n.transfer_seconds(12 * (1u64 << 30));
+        assert!((1.5..2.5).contains(&t), "t={t}");
+    }
+}

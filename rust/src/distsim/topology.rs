@@ -1,0 +1,152 @@
+//! Cluster topology: how ranks and threads map onto nodes.
+
+use super::machine::MachineModel;
+
+/// Which parallel code path a simulated run models (paper §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flavor {
+    /// Pure OpenMP: one process, `threads_per_rank` threads on one node.
+    OpenMp,
+    /// Pure MPI: one single-threaded rank per core.
+    Mpi,
+    /// Hybrid MPI/OpenMP: multi-threaded ranks (8 threads/rank in the
+    /// paper's Xeon runs).
+    Hybrid,
+    /// Hybrid with the compute offloaded to a MIC accelerator; charges
+    /// the PCIe dataset transfer and uses the Phi machine model.
+    MicOffload,
+}
+
+/// A simulated cluster allocation.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Machine model of the compute devices.
+    pub machine: MachineModel,
+    /// MPI ranks.
+    pub ranks: u32,
+    /// OpenMP threads within each rank.
+    pub threads_per_rank: u32,
+    /// Ranks co-located per node (1 rank/node for MicOffload: one
+    /// accelerator per rank).
+    pub ranks_per_node: u32,
+    /// Code-path flavor (selects calibration table + overhead charges).
+    pub flavor: Flavor,
+}
+
+impl ClusterSpec {
+    /// Pure OpenMP on one node.
+    pub fn openmp(machine: MachineModel, threads: u32) -> Self {
+        Self { machine, ranks: 1, threads_per_rank: threads, ranks_per_node: 1, flavor: Flavor::OpenMp }
+    }
+
+    /// Pure MPI, `ranks` single-threaded processes packed
+    /// `cores-per-node` to a node.
+    pub fn mpi(machine: MachineModel, ranks: u32) -> Self {
+        let per_node = machine.cores_per_socket * machine.sockets_per_node;
+        Self {
+            machine,
+            ranks,
+            threads_per_rank: 1,
+            ranks_per_node: per_node.min(ranks.max(1)),
+            flavor: Flavor::Mpi,
+        }
+    }
+
+    /// Hybrid: one rank per socket, 8 threads each (the paper's layout).
+    pub fn hybrid(machine: MachineModel, ranks: u32, threads_per_rank: u32) -> Self {
+        let per_node = ((machine.cores_per_socket * machine.sockets_per_node)
+            / threads_per_rank.max(1))
+        .max(1);
+        Self {
+            machine,
+            ranks,
+            threads_per_rank,
+            ranks_per_node: per_node.min(ranks.max(1)),
+            flavor: Flavor::Hybrid,
+        }
+    }
+
+    /// MIC offload: one rank per accelerator, `threads` OpenMP threads
+    /// on the device.
+    pub fn mic_offload(ranks: u32, threads: u32) -> Self {
+        Self {
+            machine: MachineModel::phi_7120p(),
+            ranks,
+            threads_per_rank: threads,
+            ranks_per_node: 1,
+            flavor: Flavor::MicOffload,
+        }
+    }
+
+    /// Total worker threads across the allocation.
+    pub fn total_workers(&self) -> u64 {
+        self.ranks as u64 * self.threads_per_rank as u64
+    }
+
+    /// Node index hosting `rank` (dense packing, as `mpirun` does).
+    pub fn node_of(&self, rank: u32) -> u32 {
+        rank / self.ranks_per_node.max(1)
+    }
+
+    /// Active hardware threads on `rank`'s node during the scan phase.
+    pub fn active_threads_on_node(&self, rank: u32) -> u32 {
+        let node = self.node_of(rank);
+        let first = node * self.ranks_per_node;
+        let co_resident = self.ranks.min(first + self.ranks_per_node) - first;
+        co_resident * self.threads_per_rank
+    }
+
+    /// Number of nodes the allocation spans.
+    pub fn nodes(&self) -> u32 {
+        self.ranks.div_ceil(self.ranks_per_node.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mpi_packs_16_per_xeon_node() {
+        let c = ClusterSpec::mpi(MachineModel::xeon_e5_2630_v3(), 64);
+        assert_eq!(c.ranks_per_node, 16);
+        assert_eq!(c.nodes(), 4);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(15), 0);
+        assert_eq!(c.node_of(16), 1);
+        assert_eq!(c.active_threads_on_node(3), 16);
+    }
+
+    #[test]
+    fn hybrid_two_ranks_per_node() {
+        let c = ClusterSpec::hybrid(MachineModel::xeon_e5_2630_v3(), 64, 8);
+        assert_eq!(c.ranks_per_node, 2);
+        assert_eq!(c.nodes(), 32);
+        assert_eq!(c.active_threads_on_node(0), 16);
+        assert_eq!(c.total_workers(), 512);
+    }
+
+    #[test]
+    fn partial_last_node() {
+        let c = ClusterSpec::mpi(MachineModel::xeon_e5_2630_v3(), 20);
+        assert_eq!(c.nodes(), 2);
+        // Last node hosts only 4 ranks -> 4 active threads.
+        assert_eq!(c.active_threads_on_node(19), 4);
+        assert_eq!(c.active_threads_on_node(0), 16);
+    }
+
+    #[test]
+    fn openmp_single_node() {
+        let c = ClusterSpec::openmp(MachineModel::xeon_e5_2630_v3(), 16);
+        assert_eq!(c.nodes(), 1);
+        assert_eq!(c.active_threads_on_node(0), 16);
+    }
+
+    #[test]
+    fn mic_allocation() {
+        let c = ClusterSpec::mic_offload(4, 120);
+        assert_eq!(c.nodes(), 4);
+        assert_eq!(c.total_workers(), 480);
+        assert_eq!(c.active_threads_on_node(2), 120);
+    }
+}

@@ -1,0 +1,181 @@
+//! The `PSSD` binary dataset format.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"PSSD\x01\0\0\0"
+//! 8       8     n           (u64 item count)
+//! 16      8     universe    (u64)
+//! 24      8     skew        (f64 bits; 0.0 for uniform)
+//! 32      8     shift q     (f64 bits)
+//! 40      8     seed        (u64)
+//! 48      n*8   items       (u64 each)
+//! ```
+//!
+//! Written by `pss generate`, consumed by [`FileSource`] for streaming
+//! block reads from any worker.
+//!
+//! [`FileSource`]: super::source::FileSource
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::Result;
+
+use super::source::FileSource;
+
+const MAGIC: [u8; 8] = *b"PSSD\x01\0\0\0";
+const HEADER_LEN: u64 = 48;
+
+/// Parsed dataset header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetHeader {
+    /// Item count.
+    pub n: u64,
+    /// Rank universe size.
+    pub universe: u64,
+    /// Zipf skew (0.0 = uniform).
+    pub skew: f64,
+    /// Mandelbrot shift.
+    pub shift: f64,
+    /// Generation seed.
+    pub seed: u64,
+}
+
+/// Streaming dataset writer.
+pub struct DatasetWriter {
+    out: BufWriter<File>,
+    declared_n: u64,
+    written: u64,
+}
+
+impl DatasetWriter {
+    /// Create `path`, writing a header that declares `header.n` items.
+    pub fn create(path: &Path, header: &DatasetHeader) -> Result<Self> {
+        let f = File::create(path)?;
+        let mut out = BufWriter::with_capacity(1 << 20, f);
+        out.write_all(&MAGIC)?;
+        out.write_all(&header.n.to_le_bytes())?;
+        out.write_all(&header.universe.to_le_bytes())?;
+        out.write_all(&header.skew.to_le_bytes())?;
+        out.write_all(&header.shift.to_le_bytes())?;
+        out.write_all(&header.seed.to_le_bytes())?;
+        Ok(Self { out, declared_n: header.n, written: 0 })
+    }
+
+    /// Append a block of items.
+    pub fn write_items(&mut self, items: &[u64]) -> Result<()> {
+        for &it in items {
+            self.out.write_all(&it.to_le_bytes())?;
+        }
+        self.written += items.len() as u64;
+        Ok(())
+    }
+
+    /// Flush and validate the declared count.
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        anyhow::ensure!(
+            self.written == self.declared_n,
+            "dataset declared {} items but wrote {}",
+            self.declared_n,
+            self.written
+        );
+        Ok(())
+    }
+}
+
+/// Dataset opener: header parsing + [`FileSource`] construction.
+pub struct DatasetReader;
+
+impl DatasetReader {
+    /// Read and validate the header of `path`.
+    pub fn header(path: &Path) -> Result<DatasetHeader> {
+        let mut f = File::open(path)?;
+        let mut buf = [0u8; HEADER_LEN as usize];
+        f.read_exact(&mut buf)?;
+        anyhow::ensure!(buf[..8] == MAGIC, "not a PSSD dataset: bad magic");
+        let u64_at = |o: usize| u64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+        let f64_at = |o: usize| f64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+        let header = DatasetHeader {
+            n: u64_at(8),
+            universe: u64_at(16),
+            skew: f64_at(24),
+            shift: f64_at(32),
+            seed: u64_at(40),
+        };
+        let expect = HEADER_LEN + header.n * 8;
+        let actual = f.metadata()?.len();
+        anyhow::ensure!(
+            actual == expect,
+            "dataset truncated: expected {expect} bytes, found {actual}"
+        );
+        Ok(header)
+    }
+
+    /// Open `path` as an [`ItemSource`](super::source::ItemSource).
+    pub fn open(path: &Path) -> Result<(DatasetHeader, FileSource)> {
+        let header = Self::header(path)?;
+        let f = File::open(path)?;
+        Ok((header.clone(), FileSource::new(f, HEADER_LEN, header.n)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::source::{GeneratedSource, ItemSource};
+    use crate::util::TempDir;
+
+    #[test]
+    fn roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("t.pssd");
+        let header = DatasetHeader { n: 5_000, universe: 100, skew: 1.1, shift: 0.0, seed: 3 };
+        let src = GeneratedSource::zipf(5_000, 100, 1.1, 3);
+        let mut w = DatasetWriter::create(&path, &header).unwrap();
+        let items = src.slice(0, 5_000);
+        w.write_items(&items[..2_500]).unwrap();
+        w.write_items(&items[2_500..]).unwrap();
+        w.finish().unwrap();
+
+        let (h2, fs) = DatasetReader::open(&path).unwrap();
+        assert_eq!(h2, header);
+        assert_eq!(fs.len(), 5_000);
+        assert_eq!(fs.slice(0, 5_000), items);
+        assert_eq!(fs.slice(1_234, 1_240), items[1_234..1_240].to_vec());
+    }
+
+    #[test]
+    fn wrong_count_rejected() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("bad.pssd");
+        let header = DatasetHeader { n: 10, universe: 5, skew: 0.0, shift: 0.0, seed: 0 };
+        let mut w = DatasetWriter::create(&path, &header).unwrap();
+        w.write_items(&[1, 2, 3]).unwrap();
+        assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("junk.pssd");
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        assert!(DatasetReader::header(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("trunc.pssd");
+        let header = DatasetHeader { n: 100, universe: 5, skew: 0.0, shift: 0.0, seed: 0 };
+        let mut w = DatasetWriter::create(&path, &header).unwrap();
+        w.write_items(&vec![1; 100]).unwrap();
+        w.finish().unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 8]).unwrap();
+        assert!(DatasetReader::header(&path).is_err());
+    }
+}

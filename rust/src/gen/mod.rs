@@ -1,0 +1,23 @@
+//! Workload synthesis and dataset I/O.
+//!
+//! The paper evaluates on zipfian streams (skew ρ ∈ {1.1, 1.8}) of 1–29
+//! billion items. This module provides:
+//!
+//! * [`ZipfSampler`] — an `O(1)` rejection-inversion sampler for the
+//!   zipf / zipf-Mandelbrot family (the Hurwitz-zeta distribution of the
+//!   authors' Information Sciences paper is the same family),
+//! * [`UniformSampler`] — the unskewed control,
+//! * [`ItemSource`] — random-access, thread-safe stream sources whose
+//!   content is independent of the parallel decomposition (chunk-seeded
+//!   RNG), so `p` workers see the *same* stream for every `p`,
+//! * [`dataset`] — the `PSSD` binary on-disk format + chunked readers.
+
+pub mod dataset;
+pub mod source;
+pub mod uniform;
+pub mod zipf;
+
+pub use dataset::{DatasetHeader, DatasetReader, DatasetWriter};
+pub use source::{FileSource, GeneratedSource, InMemorySource, ItemSource};
+pub use uniform::UniformSampler;
+pub use zipf::ZipfSampler;

@@ -1,0 +1,249 @@
+//! `ItemSource` — random-access, thread-safe stream sources.
+//!
+//! The parallel layers (OpenMP threads, MPI ranks, the coordinator's
+//! shard workers) all consume the stream through this trait, which makes
+//! two guarantees the experiments rely on:
+//!
+//! 1. **Decomposition independence**: the item at position `i` does not
+//!    depend on which worker reads it or on the block boundaries —
+//!    [`GeneratedSource`] seeds its RNG *per fixed-size generation chunk*
+//!    (`GEN_CHUNK` positions), so any `[left, right)` range re-generates
+//!    identically for every `p`. Sequential and parallel runs therefore
+//!    process bit-identical streams.
+//! 2. **Zero shared mutable state**: `fill` takes `&self`; sources are
+//!    `Sync` and can be read by any number of workers concurrently.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::sync::Mutex;
+
+use crate::util::{hash::mix64, SplitMix64};
+
+use super::zipf::ZipfSampler;
+
+/// Positions per generation chunk (fixed so streams are decomposition-
+/// independent; must divide typical block sizes cheaply).
+pub const GEN_CHUNK: u64 = 4096;
+
+/// A random-access stream of `u64` item ids.
+pub trait ItemSource: Sync {
+    /// Total number of items.
+    fn len(&self) -> u64;
+
+    /// True if the stream is empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fill `out` with the items at positions `[start, start + out.len())`.
+    fn fill(&self, start: u64, out: &mut [u64]);
+
+    /// Convenience: materialize `[start, end)` as a vector.
+    fn slice(&self, start: u64, end: u64) -> Vec<u64> {
+        let mut v = vec![0u64; (end - start) as usize];
+        self.fill(start, &mut v);
+        v
+    }
+}
+
+// ---------------------------------------------------------------- memory
+
+/// A fully materialized stream (tests, small workloads).
+#[derive(Debug, Clone)]
+pub struct InMemorySource {
+    items: Vec<u64>,
+}
+
+impl InMemorySource {
+    /// Wrap a vector of items.
+    pub fn new(items: Vec<u64>) -> Self {
+        Self { items }
+    }
+
+    /// Borrow the underlying items.
+    pub fn items(&self) -> &[u64] {
+        &self.items
+    }
+}
+
+impl ItemSource for InMemorySource {
+    fn len(&self) -> u64 {
+        self.items.len() as u64
+    }
+
+    fn fill(&self, start: u64, out: &mut [u64]) {
+        let s = start as usize;
+        out.copy_from_slice(&self.items[s..s + out.len()]);
+    }
+}
+
+// ------------------------------------------------------------- generated
+
+/// Distribution drawn by a [`GeneratedSource`].
+#[derive(Debug, Clone)]
+pub enum Distribution {
+    /// Zipf / zipf-Mandelbrot over a rank universe.
+    Zipf(ZipfSampler),
+    /// Uniform over `[1, universe]`.
+    Uniform { universe: u64 },
+}
+
+/// A stream synthesized on the fly: nothing is stored; any range
+/// regenerates deterministically from `(seed, chunk_index)`.
+#[derive(Debug, Clone)]
+pub struct GeneratedSource {
+    dist: Distribution,
+    seed: u64,
+    n: u64,
+}
+
+impl GeneratedSource {
+    /// Zipf stream of `n` items, skew `s`, over `universe` ranks.
+    pub fn zipf(n: u64, universe: u64, s: f64, seed: u64) -> Self {
+        Self { dist: Distribution::Zipf(ZipfSampler::new(universe, s)), seed, n }
+    }
+
+    /// Zipf-Mandelbrot stream with shift `q`.
+    pub fn zipf_mandelbrot(n: u64, universe: u64, s: f64, q: f64, seed: u64) -> Self {
+        Self {
+            dist: Distribution::Zipf(ZipfSampler::with_shift(universe, s, q)),
+            seed,
+            n,
+        }
+    }
+
+    /// Uniform stream.
+    pub fn uniform(n: u64, universe: u64, seed: u64) -> Self {
+        Self { dist: Distribution::Uniform { universe }, seed, n }
+    }
+
+    #[inline]
+    fn draw(&self, rng: &mut SplitMix64) -> u64 {
+        match &self.dist {
+            Distribution::Zipf(z) => z.sample(rng),
+            Distribution::Uniform { universe } => 1 + rng.next_below(*universe),
+        }
+    }
+}
+
+impl ItemSource for GeneratedSource {
+    fn len(&self) -> u64 {
+        self.n
+    }
+
+    fn fill(&self, start: u64, out: &mut [u64]) {
+        debug_assert!(start + out.len() as u64 <= self.n);
+        let mut pos = start;
+        let end = start + out.len() as u64;
+        let mut off = 0usize;
+        while pos < end {
+            let chunk = pos / GEN_CHUNK;
+            let chunk_start = chunk * GEN_CHUNK;
+            let chunk_end = (chunk_start + GEN_CHUNK).min(self.n);
+            // Per-chunk RNG: decomposition-independent regeneration.
+            let mut rng = SplitMix64::new(mix64(self.seed ^ mix64(chunk)));
+            // Burn draws up to `pos` within the chunk.
+            // (A draw consumes a variable number of RNG words under
+            // rejection, so we re-draw items, not RNG words.)
+            for _ in chunk_start..pos {
+                self.draw(&mut rng);
+            }
+            let take = ((chunk_end.min(end)) - pos) as usize;
+            for slot in &mut out[off..off + take] {
+                *slot = self.draw(&mut rng);
+            }
+            off += take;
+            pos += take as u64;
+        }
+    }
+}
+
+// ------------------------------------------------------------------ file
+
+/// A stream backed by a `PSSD` dataset file (see [`super::dataset`]).
+///
+/// Reads are `pread`-style (seek + read on a per-call handle clone) so
+/// concurrent workers don't serialize on one file offset.
+pub struct FileSource {
+    file: Mutex<File>,
+    data_offset: u64,
+    n: u64,
+}
+
+impl FileSource {
+    /// Open from a file positioned at its data section.
+    pub(crate) fn new(file: File, data_offset: u64, n: u64) -> Self {
+        Self { file: Mutex::new(file), data_offset, n }
+    }
+}
+
+impl ItemSource for FileSource {
+    fn len(&self) -> u64 {
+        self.n
+    }
+
+    fn fill(&self, start: u64, out: &mut [u64]) {
+        debug_assert!(start + out.len() as u64 <= self.n);
+        let mut buf = vec![0u8; out.len() * 8];
+        {
+            let mut f = self.file.lock().expect("file lock poisoned");
+            f.seek(SeekFrom::Start(self.data_offset + start * 8))
+                .expect("seek failed");
+            f.read_exact(&mut buf).expect("dataset read failed");
+        }
+        for (i, chunk) in buf.chunks_exact(8).enumerate() {
+            out[i] = u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inmemory_roundtrip() {
+        let s = InMemorySource::new(vec![10, 20, 30, 40]);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.slice(1, 3), vec![20, 30]);
+    }
+
+    #[test]
+    fn generated_is_decomposition_independent() {
+        let src = GeneratedSource::zipf(20_000, 1_000, 1.1, 42);
+        let whole = src.slice(0, 20_000);
+        // Any partition must reproduce the same items.
+        for p in [2u64, 3, 7, 16] {
+            let mut parts = Vec::new();
+            for r in 0..p {
+                let left = r * 20_000 / p;
+                let right = (r + 1) * 20_000 / p;
+                parts.extend(src.slice(left, right));
+            }
+            assert_eq!(parts, whole, "p={p} changed the stream");
+        }
+    }
+
+    #[test]
+    fn generated_unaligned_ranges() {
+        let src = GeneratedSource::uniform(10_000, 500, 7);
+        let whole = src.slice(0, 10_000);
+        assert_eq!(src.slice(4095, 4097), whole[4095..4097].to_vec());
+        assert_eq!(src.slice(1, 9999), whole[1..9999].to_vec());
+    }
+
+    #[test]
+    fn generated_zipf_is_skewed() {
+        let src = GeneratedSource::zipf(50_000, 10_000, 1.8, 1);
+        let items = src.slice(0, 50_000);
+        let ones = items.iter().filter(|&&x| x == 1).count();
+        assert!(ones as f64 > 0.4 * 50_000.0, "rank 1 share {ones}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = GeneratedSource::zipf(1_000, 100, 1.1, 1).slice(0, 1_000);
+        let b = GeneratedSource::zipf(1_000, 100, 1.1, 2).slice(0, 1_000);
+        assert_ne!(a, b);
+    }
+}

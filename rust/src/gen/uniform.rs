@@ -1,0 +1,49 @@
+//! Uniform item sampling — the no-skew control distribution.
+
+use crate::util::SplitMix64;
+
+/// Uniform over `[1, universe]` (rank-compatible with [`ZipfSampler`]).
+///
+/// [`ZipfSampler`]: super::zipf::ZipfSampler
+#[derive(Debug, Clone)]
+pub struct UniformSampler {
+    universe: u64,
+}
+
+impl UniformSampler {
+    /// New sampler over `[1, universe]`.
+    pub fn new(universe: u64) -> Self {
+        assert!(universe >= 1);
+        Self { universe }
+    }
+
+    /// Draw one item.
+    #[inline]
+    pub fn sample(&self, rng: &mut SplitMix64) -> u64 {
+        1 + rng.next_below(self.universe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_range_and_roughly_flat() {
+        let s = UniformSampler::new(100);
+        let mut rng = SplitMix64::new(81);
+        let mut hist = vec![0u64; 101];
+        let draws = 200_000;
+        for _ in 0..draws {
+            hist[s.sample(&mut rng) as usize] += 1;
+        }
+        assert_eq!(hist[0], 0);
+        let expect = draws as f64 / 100.0;
+        for (i, &c) in hist.iter().enumerate().skip(1) {
+            assert!(
+                (c as f64 - expect).abs() < expect * 0.15,
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Zipf / Zipf-Mandelbrot sampling by rejection-inversion.
+//!
+//! Samples ranks `x ∈ {1..universe}` with `P(x) ∝ (x + q)^{-s}` — `q = 0`
+//! is pure zipf (the paper's workloads, ρ = s), `q > 0` is
+//! zipf-Mandelbrot (the linguistics workloads the paper's §1 motivates).
+//!
+//! Algorithm: Hörmann & Derflinger's rejection-inversion, the same scheme
+//! as Apache Commons RNG's `RejectionInversionZipfSampler`, generalized
+//! to the shifted hazard `h(x) = (x+q)^{-s}`: `O(1)` expected time per
+//! sample, no tables, any universe size. The shift preserves the
+//! decreasing-convexity `h` needs, so the envelope construction is
+//! unchanged.
+
+use crate::util::SplitMix64;
+
+/// Rejection-inversion sampler for `P(x) ∝ (x+q)^{-s}`, `x ∈ [1, n]`.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    /// Universe size (number of distinct ranks).
+    n: u64,
+    /// Skew exponent `s > 0` (the paper's ρ).
+    s: f64,
+    /// Mandelbrot shift `q >= 0` (0 = pure zipf).
+    q: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+    threshold: f64,
+}
+
+impl ZipfSampler {
+    /// Pure zipf with skew `s` over `universe` ranks.
+    pub fn new(universe: u64, s: f64) -> Self {
+        Self::with_shift(universe, s, 0.0)
+    }
+
+    /// Zipf-Mandelbrot with skew `s` and shift `q`.
+    pub fn with_shift(universe: u64, s: f64, q: f64) -> Self {
+        assert!(universe >= 1, "universe must be >= 1");
+        assert!(s > 0.0, "skew must be positive");
+        assert!(q >= 0.0, "shift must be non-negative");
+        let mut z = Self {
+            n: universe,
+            s,
+            q,
+            h_integral_x1: 0.0,
+            h_integral_n: 0.0,
+            threshold: 0.0,
+        };
+        z.h_integral_x1 = z.h_integral(1.5) - z.h(1.0);
+        z.h_integral_n = z.h_integral(universe as f64 + 0.5);
+        z.threshold = 2.0 - z.h_integral_inverse(z.h_integral(2.5) - z.h(2.0));
+        z
+    }
+
+    /// Universe size.
+    pub fn universe(&self) -> u64 {
+        self.n
+    }
+
+    /// Skew exponent.
+    pub fn skew(&self) -> f64 {
+        self.s
+    }
+
+    /// `h(x) = (x+q)^{-s}`.
+    #[inline]
+    fn h(&self, x: f64) -> f64 {
+        (x + self.q).powf(-self.s)
+    }
+
+    /// Antiderivative of `h`: `(x+q)^{1-s}/(1-s)` (or `ln(x+q)` at s=1).
+    #[inline]
+    fn h_integral(&self, x: f64) -> f64 {
+        if (self.s - 1.0).abs() < 1e-12 {
+            (x + self.q).ln()
+        } else {
+            (x + self.q).powf(1.0 - self.s) / (1.0 - self.s)
+        }
+    }
+
+    /// Inverse of [`Self::h_integral`].
+    #[inline]
+    fn h_integral_inverse(&self, y: f64) -> f64 {
+        if (self.s - 1.0).abs() < 1e-12 {
+            y.exp() - self.q
+        } else {
+            (y * (1.0 - self.s)).powf(1.0 / (1.0 - self.s)) - self.q
+        }
+    }
+
+    /// Draw one rank in `[1, universe]`.
+    #[inline]
+    pub fn sample(&self, rng: &mut SplitMix64) -> u64 {
+        loop {
+            let u = self.h_integral_n
+                + rng.next_f64() * (self.h_integral_x1 - self.h_integral_n);
+            let x = self.h_integral_inverse(u);
+            // Clamp to the valid rank range (floating error at the edges).
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if k - x <= self.threshold || u >= self.h_integral(k + 0.5) - self.h(k) {
+                return k as u64;
+            }
+        }
+    }
+
+    /// Exact probability of rank `x` (for tests/metrics; `O(universe)`
+    /// on first call pattern — computes the normalizer by summation).
+    pub fn exact_pmf(&self, x: u64) -> f64 {
+        assert!(x >= 1 && x <= self.n);
+        let z: f64 = (1..=self.n).map(|i| (i as f64 + self.q).powf(-self.s)).sum();
+        (x as f64 + self.q).powf(-self.s) / z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(universe: u64, s: f64, q: f64, draws: usize, seed: u64) -> Vec<f64> {
+        let z = ZipfSampler::with_shift(universe, s, q);
+        let mut rng = SplitMix64::new(seed);
+        let mut hist = vec![0u64; universe as usize + 1];
+        for _ in 0..draws {
+            hist[z.sample(&mut rng) as usize] += 1;
+        }
+        hist.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    fn check_against_pmf(universe: u64, s: f64, q: f64, seed: u64) {
+        let draws = 400_000;
+        let emp = empirical(universe, s, q, draws, seed);
+        let z = ZipfSampler::with_shift(universe, s, q);
+        // Compare the head (top 20 ranks) within 5 sigma binomial noise.
+        for x in 1..=20.min(universe) {
+            let p = z.exact_pmf(x);
+            let sigma = (p * (1.0 - p) / draws as f64).sqrt();
+            let diff = (emp[x as usize] - p).abs();
+            assert!(
+                diff < 5.0 * sigma + 1e-4,
+                "rank {x}: emp {} vs pmf {p} (s={s}, q={q})",
+                emp[x as usize]
+            );
+        }
+        // Total variation over the whole support stays small.
+        let tv: f64 = (1..=universe)
+            .map(|x| (emp[x as usize] - z.exact_pmf(x)).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(tv < 0.02, "TV distance {tv} too large (s={s}, q={q})");
+    }
+
+    #[test]
+    fn matches_pmf_skew_1_1() {
+        check_against_pmf(1_000, 1.1, 0.0, 71);
+    }
+
+    #[test]
+    fn matches_pmf_skew_1_8() {
+        check_against_pmf(1_000, 1.8, 0.0, 72);
+    }
+
+    #[test]
+    fn matches_pmf_s_equal_1() {
+        check_against_pmf(500, 1.0, 0.0, 73);
+    }
+
+    #[test]
+    fn matches_pmf_mandelbrot() {
+        check_against_pmf(1_000, 1.3, 2.7, 74);
+    }
+
+    #[test]
+    fn samples_in_range() {
+        for &(s, q) in &[(0.5, 0.0), (1.0, 0.0), (1.1, 0.0), (1.8, 3.0), (3.0, 0.5)] {
+            let z = ZipfSampler::with_shift(100, s, q);
+            let mut rng = SplitMix64::new(75);
+            for _ in 0..50_000 {
+                let x = z.sample(&mut rng);
+                assert!((1..=100).contains(&x), "out of range: {x} (s={s}, q={q})");
+            }
+        }
+    }
+
+    #[test]
+    fn universe_one() {
+        let z = ZipfSampler::new(1, 1.1);
+        let mut rng = SplitMix64::new(76);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn rank_one_dominates_high_skew() {
+        let emp = empirical(10_000, 1.8, 0.0, 100_000, 77);
+        assert!(emp[1] > 0.5, "rank 1 should carry most mass at s=1.8");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let z = ZipfSampler::new(1_000, 1.1);
+        let mut a = SplitMix64::new(9);
+        let mut b = SplitMix64::new(9);
+        for _ in 0..1_000 {
+            assert_eq!(z.sample(&mut a), z.sample(&mut b));
+        }
+    }
+}

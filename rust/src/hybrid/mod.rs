@@ -1,0 +1,158 @@
+//! The hybrid MPI × OpenMP composition (paper §3, last paragraphs, and
+//! the §4.2 comparison): the input is partitioned among MPI ranks, each
+//! rank's sub-array is partitioned again among its OpenMP threads, the
+//! per-thread summaries are merged by the intra-node user-defined
+//! reduction, and the per-rank summaries by the MPI reduction.
+//!
+//! The execution semantics live in [`distsim`] (`Flavor::Hybrid` runs
+//! the two-level decomposition and the two-level combine tree); this
+//! module owns the *experiment logic*: paper-shaped configurations and
+//! the MPI-vs-hybrid comparison of Figure 4 / Tables III–IV.
+//!
+//! [`distsim`]: crate::distsim
+
+use crate::distsim::{simulate, ClusterSpec, MachineModel, NetworkModel, SimOutcome, SimWorkload};
+use crate::metrics::fractional_overhead;
+
+/// The paper's hybrid layout: 8 threads per MPI process, one process per
+/// socket, hyperthreading off.
+pub const THREADS_PER_RANK: u32 = 8;
+
+/// One (cores → outcome) comparison point between the pure-MPI and the
+/// hybrid code paths.
+#[derive(Debug, Clone)]
+pub struct ComparisonPoint {
+    /// Total cores (= MPI ranks for pure MPI; ranks × 8 for hybrid).
+    pub cores: u32,
+    /// Pure-MPI outcome.
+    pub mpi: SimOutcome,
+    /// Hybrid outcome (None when cores < [`THREADS_PER_RANK`]).
+    pub hybrid: Option<SimOutcome>,
+}
+
+impl ComparisonPoint {
+    /// Speedups relative to the given single-core baselines.
+    pub fn speedups(&self, mpi_t1: f64, hybrid_t1: f64) -> (f64, Option<f64>) {
+        (
+            mpi_t1 / self.mpi.total_seconds(),
+            self.hybrid.as_ref().map(|h| hybrid_t1 / h.total_seconds()),
+        )
+    }
+
+    /// Fractional overheads (paper Fig. 4 right-hand panels).
+    pub fn overheads(&self) -> (f64, Option<f64>) {
+        (
+            fractional_overhead(&self.mpi.times),
+            self.hybrid.as_ref().map(|h| fractional_overhead(&h.times)),
+        )
+    }
+}
+
+/// Run the pure-MPI configuration on `cores` Xeon cores.
+pub fn run_mpi(w: &SimWorkload, cores: u32) -> anyhow::Result<SimOutcome> {
+    simulate(
+        w,
+        &ClusterSpec::mpi(MachineModel::xeon_e5_2630_v3(), cores),
+        &NetworkModel::qdr_infiniband(),
+    )
+}
+
+/// Run the hybrid configuration on `cores` Xeon cores (8 threads/rank).
+pub fn run_hybrid(w: &SimWorkload, cores: u32) -> anyhow::Result<SimOutcome> {
+    anyhow::ensure!(
+        cores % THREADS_PER_RANK == 0 || cores == 1,
+        "hybrid needs a multiple of {THREADS_PER_RANK} cores (got {cores})"
+    );
+    let (ranks, threads) = if cores == 1 {
+        (1, 1) // the single-core baseline row of Table IV
+    } else {
+        (cores / THREADS_PER_RANK, THREADS_PER_RANK)
+    };
+    simulate(
+        w,
+        &ClusterSpec::hybrid(MachineModel::xeon_e5_2630_v3(), ranks, threads),
+        &NetworkModel::qdr_infiniband(),
+    )
+}
+
+/// The §4.2 sweep: pure MPI vs hybrid across `cores_list`.
+pub fn compare(w: &SimWorkload, cores_list: &[u32]) -> anyhow::Result<Vec<ComparisonPoint>> {
+    cores_list
+        .iter()
+        .map(|&cores| {
+            Ok(ComparisonPoint {
+                cores,
+                mpi: run_mpi(w, cores)?,
+                hybrid: (cores == 1 || cores % THREADS_PER_RANK == 0)
+                    .then(|| run_hybrid(w, cores))
+                    .transpose()?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload() -> SimWorkload {
+        SimWorkload::paper(29_000_000_000, 2000, 1.1, 1_000_000, 1)
+    }
+
+    #[test]
+    fn paper_cores_sweep_shapes() {
+        let w = workload();
+        let pts = compare(&w, &[1, 32, 64, 128, 256, 512]).unwrap();
+        let t1_mpi = pts[0].mpi.total_seconds();
+        let t1_hyb = pts[0].hybrid.as_ref().unwrap().total_seconds();
+
+        // Monotone decreasing runtimes.
+        for w2 in pts.windows(2) {
+            assert!(w2[1].mpi.total_seconds() < w2[0].mpi.total_seconds());
+        }
+
+        // Table III band: MPI efficiency at 512 cores ~50% (paper 51%).
+        let last = pts.last().unwrap();
+        let (s_mpi, s_hyb) = last.speedups(t1_mpi, t1_hyb);
+        let eff_mpi = s_mpi / 512.0;
+        let eff_hyb = s_hyb.unwrap() / 512.0;
+        assert!((0.40..0.62).contains(&eff_mpi), "mpi eff {eff_mpi}");
+        // Table IV: hybrid efficiency > 62%.
+        assert!(eff_hyb > 0.60, "hybrid eff {eff_hyb}");
+        assert!(eff_hyb > eff_mpi, "hybrid must beat MPI at 512 cores");
+    }
+
+    #[test]
+    fn hybrid_reduces_overhead_at_scale() {
+        let w = workload();
+        let pts = compare(&w, &[256, 512]).unwrap();
+        for p in &pts {
+            let (o_mpi, o_hyb) = p.overheads();
+            assert!(
+                o_hyb.unwrap() < o_mpi,
+                "cores={}: hybrid overhead {} !< mpi {}",
+                p.cores,
+                o_hyb.unwrap(),
+                o_mpi
+            );
+        }
+    }
+
+    #[test]
+    fn comparable_at_low_core_counts() {
+        // Paper: "the performance of both versions are comparable" below
+        // ~128 cores.
+        let w = workload();
+        let pts = compare(&w, &[32, 64]).unwrap();
+        for p in &pts {
+            let h = p.hybrid.as_ref().unwrap().total_seconds();
+            let m = p.mpi.total_seconds();
+            assert!((h - m).abs() / m < 0.15, "cores={}: {h} vs {m}", p.cores);
+        }
+    }
+
+    #[test]
+    fn rejects_non_multiple_cores() {
+        assert!(run_hybrid(&workload(), 12).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! # pss — Parallel Space Saving
+//!
+//! A full reproduction of *Parallel Space Saving on Multi and Many-Core
+//! Processors* (Cafaro, Pulimeno, Epicoco, Aloisio — Concurrency and
+//! Computation: Practice and Experience, 2016) as a three-layer
+//! Rust + JAX/Pallas stack.
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`util`] — fast hashing, open-addressing map, deterministic RNG.
+//! * [`summary`] — the Space Saving stream summaries and the paper's
+//!   `combine` merge operator (Algorithm 2).
+//! * [`baselines`] — Frequent (Misra–Gries), Lossy Counting, CountMin,
+//!   CountSketch, and an exact oracle, for the related-work comparisons.
+//! * [`gen`] — zipf / zipf-Mandelbrot workload generators and the binary
+//!   dataset format.
+//! * [`parallel`] — the shared-memory ("OpenMP") parallel algorithm:
+//!   block decomposition + user-defined tree reduction (Algorithm 1).
+//! * [`distsim`] — a deterministic discrete-event cluster simulator
+//!   (virtual clocks, α–β network, machine models) substituting for the
+//!   paper's Galileo cluster; `mpisim` runs the pure-MPI version on it.
+//! * [`hybrid`] — the MPI × OpenMP hybrid composition.
+//! * [`mic`] — the Intel Phi (MIC) offload model.
+//! * [`metrics`] — ARE / precision / recall / fractional overhead and
+//!   paper-style table/figure reporting.
+//! * [`runtime`] — PJRT client executing the AOT artifacts (offline
+//!   candidate verification; python is never on the streaming path).
+//! * [`coordinator`] — the streaming orchestrator service: sharding,
+//!   backpressure, chunk batching, end-to-end queries.
+//! * [`config`] — TOML experiment configuration and paper presets.
+//! * [`bench_harness`] — one driver per paper table/figure.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod distsim;
+pub mod gen;
+pub mod hybrid;
+pub mod metrics;
+pub mod mic;
+pub mod parallel;
+pub mod runtime;
+pub mod summary;
+pub mod util;
+
+pub use summary::{Counter, FrequencySummary, SpaceSaving, StreamSummary};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,309 @@
+//! `pss` — the Parallel Space Saving coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `generate` — synthesize a zipf/uniform PSSD dataset file.
+//! * `run` — run the streaming coordinator over a dataset or synthetic
+//!   stream (shared-memory Parallel Space Saving), optionally verifying
+//!   candidates through the PJRT artifacts.
+//! * `repro` — regenerate a paper table/figure on the calibrated
+//!   cluster simulator (`--list` shows all experiment ids).
+//! * `verify` — offline exact verification of a run's candidates via
+//!   the AOT `verify_counts` program.
+//! * `info` — build/runtime diagnostics.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use pss::baselines::Exact;
+use pss::cli::Args;
+use pss::config::{RunConfig, EXPERIMENTS};
+use pss::coordinator::{run_source, CoordinatorConfig, Routing};
+use pss::gen::{DatasetHeader, DatasetReader, DatasetWriter, GeneratedSource, ItemSource};
+use pss::metrics::AccuracyReport;
+use pss::summary::FrequencySummary;
+
+const USAGE: &str = "\
+pss — Parallel Space Saving on multi- and many-core processors
+      (Cafaro, Pulimeno, Epicoco, Aloisio — CCPE 2016)
+
+USAGE:
+  pss generate --out <file.pssd> [--n N] [--universe U] [--skew R] [--seed S]
+  pss run      [--input <file.pssd> | --n N --skew R] [--k K] [--threads T]
+               [--chunk-len C] [--queue-depth Q] [--routing rr|ll]
+               [--config cfg.json] [--verify] [--artifacts DIR]
+  pss repro    --exp <id> [--scale D] [--seed S] [--out DIR]   (or --list)
+  pss verify   --input <file.pssd> [--k K] [--artifacts DIR]
+  pss profile  --input <file.pssd> [--artifacts DIR]
+  pss info
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let r = match args.command.as_str() {
+        "generate" => cmd_generate(&args),
+        "run" => cmd_run(&args),
+        "repro" => cmd_repro(&args),
+        "verify" => cmd_verify(&args),
+        "profile" => cmd_profile(&args),
+        "info" => cmd_info(),
+        "" | "help" | "-h" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand '{other}'\n\n{USAGE}")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let out: PathBuf = args.require("out").map_err(anyhow::Error::msg)?;
+    let n: u64 = args.get_or("n", 10_000_000).map_err(anyhow::Error::msg)?;
+    let universe: u64 = args.get_or("universe", 1 << 22).map_err(anyhow::Error::msg)?;
+    let skew: f64 = args.get_or("skew", 1.1).map_err(anyhow::Error::msg)?;
+    let shift: f64 = args.get_or("shift", 0.0).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_or("seed", 42).map_err(anyhow::Error::msg)?;
+
+    let header = DatasetHeader { n, universe, skew, shift, seed };
+    let src: Box<dyn ItemSource> = if skew > 0.0 {
+        Box::new(GeneratedSource::zipf_mandelbrot(n, universe, skew, shift, seed))
+    } else {
+        Box::new(GeneratedSource::uniform(n, universe, seed))
+    };
+    let mut w = DatasetWriter::create(&out, &header)?;
+    let mut pos = 0u64;
+    let mut buf = vec![0u64; 1 << 16];
+    while pos < n {
+        let take = ((n - pos) as usize).min(buf.len());
+        src.fill(pos, &mut buf[..take]);
+        w.write_items(&buf[..take])?;
+        pos += take as u64;
+    }
+    w.finish()?;
+    println!("wrote {} items to {} (universe={universe}, skew={skew})", n, out.display());
+    Ok(())
+}
+
+fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_json_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    // Flags override file values.
+    if let Some(v) = args.get("n") { cfg.n = v.parse()?; }
+    if let Some(v) = args.get("universe") { cfg.universe = v.parse()?; }
+    if let Some(v) = args.get("skew") { cfg.skew = v.parse()?; }
+    if let Some(v) = args.get("seed") { cfg.seed = v.parse()?; }
+    if let Some(v) = args.get("k") {
+        cfg.k = v.parse()?;
+        cfg.k_majority = cfg.k as u64;
+    }
+    if let Some(v) = args.get("threads") { cfg.threads = v.parse()?; }
+    if let Some(v) = args.get("chunk-len") { cfg.chunk_len = v.parse()?; }
+    if let Some(v) = args.get("queue-depth") { cfg.queue_depth = v.parse()?; }
+    if args.has("verify") { cfg.verify = true; }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let routing = match args.get("routing").unwrap_or("rr") {
+        "rr" => Routing::RoundRobin,
+        "ll" => Routing::LeastLoaded,
+        other => anyhow::bail!("unknown routing '{other}' (rr|ll)"),
+    };
+
+    let source: Box<dyn ItemSource> = match args.get("input") {
+        Some(path) => {
+            let (header, fs) = DatasetReader::open(std::path::Path::new(path))?;
+            println!(
+                "dataset: {} items, universe={}, skew={}",
+                header.n, header.universe, header.skew
+            );
+            Box::new(fs)
+        }
+        None => {
+            println!(
+                "synthetic: {} items, universe={}, skew={}",
+                cfg.n, cfg.universe, cfg.skew
+            );
+            if cfg.skew > 0.0 {
+                Box::new(GeneratedSource::zipf_mandelbrot(
+                    cfg.n, cfg.universe, cfg.skew, cfg.shift, cfg.seed,
+                ))
+            } else {
+                Box::new(GeneratedSource::uniform(cfg.n, cfg.universe, cfg.seed))
+            }
+        }
+    };
+
+    let t0 = std::time::Instant::now();
+    let result = run_source(
+        CoordinatorConfig {
+            shards: cfg.threads,
+            k: cfg.k,
+            k_majority: cfg.k_majority,
+            queue_depth: cfg.queue_depth,
+            routing,
+        },
+        source.as_ref(),
+        cfg.chunk_len,
+    );
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    println!(
+        "processed {} items in {:.3}s ({:.1} M items/s) over {} shards ({} backpressure stalls)",
+        result.stats.items,
+        elapsed,
+        result.stats.items as f64 / elapsed / 1e6,
+        cfg.threads,
+        result.stats.backpressure_events,
+    );
+    println!(
+        "k-majority candidates (f̂ > n/{}): {}",
+        cfg.k_majority,
+        result.frequent.len()
+    );
+    for c in result.frequent.iter().take(20) {
+        println!("  item {:>12}  f̂={:<12} ε≤{}", c.item, c.count, c.err);
+    }
+    if result.frequent.len() > 20 {
+        println!("  ... ({} more)", result.frequent.len() - 20);
+    }
+
+    if cfg.verify {
+        let dir = artifacts_dir(args);
+        let mut v = pss::runtime::Verifier::new(&dir)?;
+        let items = source.slice(0, source.len());
+        let report = v.verify_report(&items, &result.frequent, cfg.k_majority)?;
+        println!(
+            "PJRT verification: precision={:.4} ARE={:.3e} confirmed={}",
+            report.precision,
+            report.are,
+            report.confirmed.len()
+        );
+    }
+    Ok(())
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(pss::runtime::Manifest::default_dir)
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    if args.has("list") {
+        println!("available experiments:");
+        for e in EXPERIMENTS {
+            println!("  {:6}  {}", e.id, e.what);
+        }
+        return Ok(());
+    }
+    let exp: String = args.require("exp").map_err(anyhow::Error::msg)?;
+    let scale: u64 = args.get_or("scale", 10_000).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_or("seed", 1).map_err(anyhow::Error::msg)?;
+    let outputs = pss::bench_harness::run_experiment(&exp, scale, seed)?;
+    for o in &outputs {
+        println!("{}", o.rendered);
+        if let Some(dir) = args.get("out") {
+            let dir = PathBuf::from(dir);
+            std::fs::create_dir_all(&dir)?;
+            let path = dir.join(format!("{}.csv", o.name));
+            let mut f = std::fs::File::create(&path)?;
+            f.write_all(o.csv.as_bytes())?;
+            println!("[csv written to {}]", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let input: PathBuf = args.require("input").map_err(anyhow::Error::msg)?;
+    let k: usize = args.get_or("k", 2000).map_err(anyhow::Error::msg)?;
+    let (header, fs) = DatasetReader::open(&input)?;
+    let items = fs.slice(0, header.n);
+
+    // On-line pass: Space Saving.
+    let mut ss = pss::summary::SpaceSaving::new(k);
+    ss.offer_all(&items);
+    let reported = ss.freeze().prune(header.n, k as u64);
+
+    // Off-line pass: PJRT exact verification + rust oracle cross-check.
+    let mut v = pss::runtime::Verifier::new(&artifacts_dir(args))?;
+    let report = v.verify_report(&items, &reported, k as u64)?;
+    let mut exact = Exact::new();
+    exact.offer_all(&items);
+    let acc = AccuracyReport::evaluate(&reported, &exact, k as u64);
+
+    println!("reported candidates : {}", reported.len());
+    println!("confirmed (PJRT)    : {}", report.confirmed.len());
+    println!("precision           : {:.4} (PJRT) / {:.4} (oracle)", report.precision, acc.precision);
+    println!("ARE                 : {:.3e} (PJRT) / {:.3e} (oracle)", report.are, acc.are);
+    println!("recall (oracle)     : {:.4}", acc.recall);
+    anyhow::ensure!(
+        (report.are - acc.are).abs() < 1e-12,
+        "PJRT and oracle disagree — artifact bug"
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let input: PathBuf = args.require("input").map_err(anyhow::Error::msg)?;
+    let (header, fs) = DatasetReader::open(&input)?;
+    let items = fs.slice(0, header.n);
+    let mut profiler = pss::coordinator::SkewProfiler::new(&artifacts_dir(args))?;
+    let profile = profiler.profile(&items)?;
+    println!(
+        "profiled {} items in {} chunks (PJRT skew_profile artifact)",
+        header.n,
+        profile.chunks.len()
+    );
+    println!("mean normalized entropy : {:.4} (1 = uniform)", profile.mean_entropy());
+    println!("mean top-bucket share   : {:.4}", profile.mean_top_share());
+    let thresh = header.n / 100;
+    println!(
+        "chunks skippable at f > n/100 threshold: {}/{}",
+        profile.skippable(thresh),
+        profile.chunks.len()
+    );
+    let hint = if profile.mean_entropy() < 0.7 {
+        "heavily skewed: small k suffices; round-robin routing is fine"
+    } else {
+        "near-uniform: prefer larger k; least-loaded routing helps under burst"
+    };
+    println!("hint: {hint}");
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("pss {} — Parallel Space Saving (CCPE 2016 reproduction)", env!("CARGO_PKG_VERSION"));
+    let dir = pss::runtime::Manifest::default_dir();
+    match pss::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} programs in {}", m.entries.len(), dir.display());
+            for e in &m.entries {
+                println!(
+                    "  {:28} {:?} chunks={} chunk_len={} k={} buckets={}",
+                    e.name, e.kind, e.chunks, e.chunk_len, e.k, e.num_buckets
+                );
+            }
+            match pss::runtime::Runtime::new(&dir) {
+                Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+                Err(e) => println!("PJRT unavailable: {e}"),
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Accuracy metrics, exactly as the paper §4 defines them.
+//!
+//! * relative error `Δf = |f − f̂| / f`; **ARE** averages `Δf` over all
+//!   measured (reported) frequencies,
+//! * **precision** = true k-majority items reported / items reported
+//!   (quantifies false positives),
+//! * **recall** = true k-majority items reported / true k-majority items.
+
+use crate::baselines::Exact;
+use crate::summary::Counter;
+
+/// Average Relative Error of the reported counters against exact counts.
+///
+/// Items reported but absent from the stream contribute `Δf = 1` (worst
+/// case `|f − f̂|/f̂` convention would be undefined at `f = 0`; the paper's
+/// streams never produce this case since Space Saving only reports seen
+/// items — the guard is for sketch baselines).
+pub fn average_relative_error(reported: &[Counter], exact: &Exact) -> f64 {
+    if reported.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = reported
+        .iter()
+        .map(|c| {
+            let f = exact.count(c.item);
+            if f == 0 {
+                1.0
+            } else {
+                (f as f64 - c.count as f64).abs() / f as f64
+            }
+        })
+        .sum();
+    total / reported.len() as f64
+}
+
+/// Precision of `reported` against the true k-majority set.
+pub fn precision(reported: &[Counter], exact: &Exact, k: u64) -> f64 {
+    if reported.is_empty() {
+        return 1.0;
+    }
+    let truth: std::collections::HashSet<u64> =
+        exact.k_majority(k).iter().map(|c| c.item).collect();
+    let hits = reported.iter().filter(|c| truth.contains(&c.item)).count();
+    hits as f64 / reported.len() as f64
+}
+
+/// Recall of `reported` against the true k-majority set.
+pub fn recall(reported: &[Counter], exact: &Exact, k: u64) -> f64 {
+    let truth: std::collections::HashSet<u64> =
+        exact.k_majority(k).iter().map(|c| c.item).collect();
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let hits = reported.iter().filter(|c| truth.contains(&c.item)).count();
+    hits as f64 / truth.len() as f64
+}
+
+/// Bundle of all three metrics for one run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyReport {
+    /// Average relative error over reported items.
+    pub are: f64,
+    /// Fraction of reported items that are truly frequent.
+    pub precision: f64,
+    /// Fraction of truly frequent items that were reported.
+    pub recall: f64,
+}
+
+impl AccuracyReport {
+    /// Evaluate `reported` against `exact` for k-majority parameter `k`.
+    pub fn evaluate(reported: &[Counter], exact: &Exact, k: u64) -> Self {
+        Self {
+            are: average_relative_error(reported, exact),
+            precision: precision(reported, exact, k),
+            recall: recall(reported, exact, k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::FrequencySummary;
+
+    fn oracle(items: &[u64]) -> Exact {
+        let mut e = Exact::new();
+        e.offer_all(items);
+        e
+    }
+
+    #[test]
+    fn are_zero_when_exact() {
+        let e = oracle(&[1, 1, 1, 2, 2]);
+        let reported = vec![Counter { item: 1, count: 3, err: 0 }];
+        assert_eq!(average_relative_error(&reported, &e), 0.0);
+    }
+
+    #[test]
+    fn are_measures_overestimate() {
+        let e = oracle(&[1, 1, 1, 2]);
+        // f̂ = 4, f = 3 -> Δf = 1/3.
+        let reported = vec![Counter { item: 1, count: 4, err: 1 }];
+        assert!((average_relative_error(&reported, &e) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn precision_counts_false_positives() {
+        // n=8, k=2 -> threshold 4: only item 1 (f=5) is frequent.
+        let e = oracle(&[1, 1, 1, 1, 1, 2, 2, 3]);
+        let reported = vec![
+            Counter { item: 1, count: 5, err: 0 },
+            Counter { item: 2, count: 3, err: 1 },
+        ];
+        assert_eq!(precision(&reported, &e, 2), 0.5);
+        assert_eq!(recall(&reported, &e, 2), 1.0);
+    }
+
+    #[test]
+    fn recall_detects_misses() {
+        let e = oracle(&[1, 1, 1, 1, 2, 2, 2, 2]);
+        // k=2 -> threshold 4: neither clears (f=4 each, need >4) -> empty
+        // truth -> recall 1 by convention.
+        assert_eq!(recall(&[], &e, 2), 1.0);
+        // k=3 -> threshold 2: both are frequent; reporting one -> 0.5.
+        let reported = vec![Counter { item: 1, count: 4, err: 0 }];
+        assert_eq!(recall(&reported, &e, 3), 0.5);
+    }
+
+    #[test]
+    fn unseen_reported_item_counts_as_full_error() {
+        let e = oracle(&[1, 1]);
+        let reported = vec![Counter { item: 99, count: 5, err: 0 }];
+        assert_eq!(average_relative_error(&reported, &e), 1.0);
+    }
+}

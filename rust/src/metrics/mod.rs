@@ -1,0 +1,14 @@
+//! Evaluation metrics (paper §4 definitions) and report formatting.
+//!
+//! * [`accuracy`] — Average Relative Error, precision, recall.
+//! * [`timing`] — phase breakdowns and the paper's *fractional overhead*
+//!   (Figure 3): overhead time / computational time.
+//! * [`report`] — paper-style ASCII tables and figure series (+ CSV).
+
+pub mod accuracy;
+pub mod report;
+pub mod timing;
+
+pub use accuracy::{average_relative_error, precision, recall, AccuracyReport};
+pub use report::{Series, Table};
+pub use timing::{fractional_overhead, PhaseTimes};

@@ -1,0 +1,201 @@
+//! Paper-style output: ASCII tables (Tables II–IV) and figure series
+//! (Figures 1–6), with CSV export for external plotting.
+
+use std::fmt::Write as _;
+
+/// A rectangular table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row (must match the header arity).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no rows were added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (w, c) in widths.iter().zip(cells) {
+                let _ = write!(s, " {c:>w$} |", w = w);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let _ = writeln!(
+            out,
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Render as CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+}
+
+/// A figure: one x column plus named y series (log-log plots in the
+/// paper become aligned numeric columns here + CSV for replotting).
+#[derive(Debug, Clone)]
+pub struct Series {
+    title: String,
+    x_label: String,
+    names: Vec<String>,
+    xs: Vec<f64>,
+    ys: Vec<Vec<Option<f64>>>,
+}
+
+impl Series {
+    /// New figure with an x-axis label and one name per y series.
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>, names: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            x_label: x_label.into(),
+            names: names.iter().map(|s| s.to_string()).collect(),
+            xs: Vec::new(),
+            ys: Vec::new(),
+        }
+    }
+
+    /// Append one x point with one value per series (None = missing).
+    pub fn point(&mut self, x: f64, values: Vec<Option<f64>>) {
+        assert_eq!(values.len(), self.names.len(), "series arity mismatch");
+        self.xs.push(x);
+        self.ys.push(values);
+    }
+
+    /// Render as an aligned numeric block.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            self.title.clone(),
+            &std::iter::once(self.x_label.as_str())
+                .chain(self.names.iter().map(|s| s.as_str()))
+                .collect::<Vec<_>>(),
+        );
+        for (x, row) in self.xs.iter().zip(&self.ys) {
+            let mut cells = vec![format_num(*x)];
+            cells.extend(row.iter().map(|v| v.map_or("-".into(), format_num)));
+            t.row(cells);
+        }
+        t.render()
+    }
+
+    /// CSV export.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{},{}", self.x_label, self.names.join(","));
+        for (x, row) in self.xs.iter().zip(&self.ys) {
+            let cells: Vec<String> = row
+                .iter()
+                .map(|v| v.map_or(String::new(), |v| format!("{v}")))
+                .collect();
+            let _ = writeln!(out, "{x},{}", cells.join(","));
+        }
+        out
+    }
+}
+
+/// Compact numeric formatting: integers plain, small values scientific.
+fn format_num(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1e6 || v.abs() < 1e-3 {
+        format!("{v:.3e}")
+    } else if (v - v.round()).abs() < 1e-9 {
+        format!("{}", v.round() as i64)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["cores", "time", "speedup"]);
+        t.row(vec!["1".into(), "120.60".into(), "1".into()]);
+        t.row(vec!["16".into(), "9.74".into(), "12.37".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("cores"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn series_handles_missing() {
+        let mut s = Series::new("fig", "cores", &["mpi", "hybrid"]);
+        s.point(1.0, vec![Some(874.88), None]);
+        s.point(512.0, vec![Some(3.35), Some(2.40)]);
+        let r = s.render();
+        assert!(r.contains('-'));
+        let csv = s.to_csv();
+        assert!(csv.starts_with("cores,mpi,hybrid"));
+    }
+
+    #[test]
+    fn format_num_branches() {
+        assert_eq!(format_num(0.0), "0");
+        assert_eq!(format_num(16.0), "16");
+        assert_eq!(format_num(12.37), "12.37");
+        assert!(format_num(1e-8).contains('e'));
+    }
+}

@@ -1,0 +1,84 @@
+//! Phase timing and the paper's *fractional overhead* metric (Figure 3):
+//! the ratio of overhead time (thread spawning, synchronization, the
+//! reduction operator) over the computational time.
+//!
+//! Times are plain `f64` seconds so the same types carry both measured
+//! wallclock (this host) and simulated cluster time (`distsim`).
+
+/// Per-phase time breakdown of one parallel run, in seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimes {
+    /// Worker spawn / teardown (OpenMP parallel-region entry, MPI init).
+    pub spawn: f64,
+    /// Local sequential Space Saving scan (the computational part).
+    pub scan: f64,
+    /// Sort + parallel reduction with the combine operator.
+    pub reduce: f64,
+    /// Final prune on the root.
+    pub prune: f64,
+}
+
+impl PhaseTimes {
+    /// Total wall time of the run.
+    pub fn total(&self) -> f64 {
+        self.spawn + self.scan + self.reduce + self.prune
+    }
+
+    /// Overhead component (everything that is not the local scan).
+    pub fn overhead(&self) -> f64 {
+        self.spawn + self.reduce + self.prune
+    }
+
+    /// Element-wise accumulation (for averaging repeated runs).
+    pub fn add(&mut self, other: &PhaseTimes) {
+        self.spawn += other.spawn;
+        self.scan += other.scan;
+        self.reduce += other.reduce;
+        self.prune += other.prune;
+    }
+
+    /// Scale every phase (for averaging repeated runs).
+    pub fn scale(&self, by: f64) -> PhaseTimes {
+        PhaseTimes {
+            spawn: self.spawn * by,
+            scan: self.scan * by,
+            reduce: self.reduce * by,
+            prune: self.prune * by,
+        }
+    }
+}
+
+/// Fractional overhead = overhead time / computational time (paper Fig. 3).
+pub fn fractional_overhead(t: &PhaseTimes) -> f64 {
+    if t.scan == 0.0 {
+        return 0.0;
+    }
+    t.overhead() / t.scan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_and_overhead() {
+        let t = PhaseTimes { spawn: 1.0, scan: 10.0, reduce: 2.0, prune: 0.5 };
+        assert!((t.total() - 13.5).abs() < 1e-12);
+        assert!((t.overhead() - 3.5).abs() < 1e-12);
+        assert!((fractional_overhead(&t) - 0.35).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_scan_guard() {
+        let t = PhaseTimes::default();
+        assert_eq!(fractional_overhead(&t), 0.0);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = PhaseTimes { spawn: 1.0, scan: 2.0, reduce: 3.0, prune: 4.0 };
+        a.add(&a.clone());
+        let half = a.scale(0.5);
+        assert_eq!(half, PhaseTimes { spawn: 1.0, scan: 2.0, reduce: 3.0, prune: 4.0 });
+    }
+}

@@ -1,0 +1,128 @@
+//! The Intel Phi (MIC) offload experiments — paper §4.3 (single-
+//! accelerator thread sweep, Figure 5) and §4.4 (Xeon-vs-Phi socket
+//! scaling, Figure 6).
+//!
+//! The offload execution model follows the paper: the Space Saving scan
+//! and the user-defined reduction run on the accelerator, I/O stays on
+//! the host, and the dataset crosses PCIe once per run (charged by
+//! `Flavor::MicOffload` in [`distsim`]).
+//!
+//! [`distsim`]: crate::distsim
+
+use crate::distsim::{simulate, ClusterSpec, MachineModel, NetworkModel, SimOutcome, SimWorkload};
+
+/// §4.3 sweep: one accelerator, varying OpenMP thread counts.
+/// Paper values: 15, 30, 60, 120, 240 — best at 120 (2 hw threads/core).
+pub fn phi_thread_sweep(
+    w: &SimWorkload,
+    threads_list: &[u32],
+) -> anyhow::Result<Vec<(u32, SimOutcome)>> {
+    threads_list
+        .iter()
+        .map(|&t| {
+            let out = simulate(
+                w,
+                &ClusterSpec::mic_offload(1, t),
+                &NetworkModel::qdr_infiniband(),
+            )?;
+            Ok((t, out))
+        })
+        .collect()
+}
+
+/// One §4.4 comparison point: `sockets` compute devices, where a Xeon
+/// socket is 8 cores (one hybrid rank) and a MIC socket is one Phi
+/// accelerator at 120 threads.
+#[derive(Debug, Clone)]
+pub struct SocketPoint {
+    /// Number of sockets/accelerators.
+    pub sockets: u32,
+    /// Hybrid MPI/OpenMP on Xeon sockets.
+    pub xeon: SimOutcome,
+    /// MPI + offload on Phi accelerators.
+    pub mic: SimOutcome,
+}
+
+/// §4.4 sweep: Xeon sockets vs Phi accelerators at equal socket counts.
+pub fn xeon_vs_mic(w: &SimWorkload, sockets_list: &[u32]) -> anyhow::Result<Vec<SocketPoint>> {
+    let net = NetworkModel::qdr_infiniband();
+    sockets_list
+        .iter()
+        .map(|&s| {
+            let xeon = simulate(
+                w,
+                &ClusterSpec::hybrid(MachineModel::xeon_e5_2630_v3(), s, 8),
+                &net,
+            )?;
+            let mic = simulate(w, &ClusterSpec::mic_offload(s, 120), &net)?;
+            Ok(SocketPoint { sockets: s, xeon, mic })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload() -> SimWorkload {
+        // §4.3/§4.4 configuration: 3 B items (fits the Phi's 16 GB),
+        // k=2000, ρ=1.1.
+        SimWorkload::paper(3_000_000_000, 2000, 1.1, 1_000_000, 1)
+    }
+
+    #[test]
+    fn best_phi_config_is_120_threads() {
+        // Paper Figure 5: 120 threads (2 hw threads/core) beats 15, 30,
+        // 60 and 240.
+        let w = workload();
+        let sweep = phi_thread_sweep(&w, &[15, 30, 60, 120, 240]).unwrap();
+        let times: Vec<(u32, f64)> =
+            sweep.iter().map(|(t, o)| (*t, o.total_seconds())).collect();
+        let best = times
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(best.0, 120, "times: {times:?}");
+        // Monotone improvement up to 120.
+        for w2 in times[..4].windows(2) {
+            assert!(w2[1].1 < w2[0].1, "times: {times:?}");
+        }
+    }
+
+    #[test]
+    fn phi_never_beats_xeon_socket_for_socket() {
+        // Paper Figure 6 / §5: "the Intel Phi accelerator did not provide
+        // any advantage with regard to the Intel Xeon processor".
+        let w = workload();
+        let pts = xeon_vs_mic(&w, &[1, 4, 8, 16, 32, 64]).unwrap();
+        for p in &pts {
+            assert!(
+                p.mic.total_seconds() > p.xeon.total_seconds(),
+                "sockets={}: mic {} !> xeon {}",
+                p.sockets,
+                p.mic.total_seconds(),
+                p.xeon.total_seconds()
+            );
+        }
+        // And the gap is the paper's ~2–3×(+offload) at one socket.
+        let r = pts[0].mic.total_seconds() / pts[0].xeon.total_seconds();
+        assert!((1.8..4.0).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn phi_scales_across_accelerators() {
+        let w = workload();
+        let pts = xeon_vs_mic(&w, &[1, 4, 8]).unwrap();
+        assert!(pts[1].mic.total_seconds() < pts[0].mic.total_seconds() / 2.5);
+        assert!(pts[2].mic.total_seconds() < pts[1].mic.total_seconds());
+    }
+
+    #[test]
+    fn varying_k_keeps_ordering() {
+        for k in [500usize, 8000] {
+            let w = SimWorkload::paper(3_000_000_000, k, 1.1, 1_000_000, 1);
+            let pts = xeon_vs_mic(&w, &[8]).unwrap();
+            assert!(pts[0].mic.total_seconds() > pts[0].xeon.total_seconds(), "k={k}");
+        }
+    }
+}

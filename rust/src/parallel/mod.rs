@@ -1,0 +1,19 @@
+//! The shared-memory ("OpenMP") Parallel Space Saving algorithm —
+//! paper **Algorithm 1** with the user-defined reduction of §3.
+//!
+//! * [`partition`] — the block domain decomposition (lines 3–4).
+//! * [`thread_pool`] — scoped-thread fork/join, the stand-in for an
+//!   OpenMP parallel region.
+//! * [`reduction`] — pairwise tree reduction with the `combine` operator,
+//!   the stand-in for OpenMP v4's user-defined reduction.
+//! * [`shared`] — the end-to-end driver: decompose → local Space Saving
+//!   scans → tree reduce → prune, with per-phase timing.
+
+pub mod partition;
+pub mod reduction;
+pub mod shared;
+pub mod thread_pool;
+
+pub use partition::block_range;
+pub use reduction::tree_reduce;
+pub use shared::{run_shared, SharedRunResult, SummaryKind};

@@ -1,0 +1,60 @@
+//! Block domain decomposition — paper Algorithm 1 lines 3–4:
+//! `left = ⌊r·n/p⌋`, `right = ⌊(r+1)·n/p⌋ − 1`, so every worker holds
+//! either `⌊n/p⌋` or `⌈n/p⌉` elements.
+
+/// Half-open range `[left, right)` of worker `r` among `p` over `n` items.
+///
+/// (The paper states the inclusive `right − 1`; half-open is the rust
+/// idiom and covers the same elements.)
+#[inline]
+pub fn block_range(n: u64, p: u64, r: u64) -> (u64, u64) {
+    debug_assert!(p >= 1 && r < p);
+    // u128 so r*n cannot overflow for paper-scale n on many workers.
+    let left = ((r as u128 * n as u128) / p as u128) as u64;
+    let right = (((r + 1) as u128 * n as u128) / p as u128) as u64;
+    (left, right)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_exactly_without_overlap() {
+        for &(n, p) in &[(10u64, 3u64), (29, 16), (1_000_000, 7), (5, 8), (0, 4)] {
+            let mut next = 0u64;
+            for r in 0..p {
+                let (l, rgt) = block_range(n, p, r);
+                assert_eq!(l, next, "gap/overlap at rank {r} (n={n}, p={p})");
+                assert!(rgt >= l);
+                next = rgt;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn sizes_differ_by_at_most_one() {
+        for &(n, p) in &[(29u64, 16u64), (1_000, 7), (12345, 13)] {
+            let sizes: Vec<u64> = (0..p)
+                .map(|r| {
+                    let (l, rt) = block_range(n, p, r);
+                    rt - l
+                })
+                .collect();
+            let min = *sizes.iter().min().unwrap();
+            let max = *sizes.iter().max().unwrap();
+            assert!(max - min <= 1);
+            assert_eq!(min, n / p);
+        }
+    }
+
+    #[test]
+    fn no_overflow_at_paper_scale() {
+        // 29 billion items on 512 ranks.
+        let n = 29_000_000_000u64;
+        let (l, r) = block_range(n, 512, 511);
+        assert_eq!(r, n);
+        assert!(r - l <= n / 512 + 1);
+    }
+}

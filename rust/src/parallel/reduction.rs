@@ -1,0 +1,107 @@
+//! Pairwise tree reduction with the `combine` operator — the
+//! shared-memory stand-in for OpenMP v4's user-defined reduction (and,
+//! structurally, for `MPI_Reduce` with a user-defined op: both execute a
+//! ⌈log₂ p⌉-depth combine tree).
+
+use crate::summary::Summary;
+
+use super::thread_pool::fork_join;
+
+/// Reduce `summaries` to one with a binary combine tree.
+///
+/// Each round pairs adjacent survivors — on the compacted vector this is
+/// exactly the recursive-halving schedule (`i` with `i + 2^d` on original
+/// indices) that MPI implementations use, so the simulated and real
+/// versions agree on tree shape (which matters: combine is
+/// order-sensitive in its exact `f̂` values, though not in its
+/// guarantees). Each round's combines are independent and run fork/join,
+/// mirroring what the OpenMP runtime does during a reduction.
+pub fn tree_reduce(mut current: Vec<Summary>) -> Summary {
+    assert!(!current.is_empty(), "nothing to reduce");
+    while current.len() > 1 {
+        let npairs = current.len() / 2;
+        let refs = &current;
+        let mut next: Vec<Summary> = if npairs > 1 {
+            fork_join(npairs, |w| refs[2 * w].combine(&refs[2 * w + 1]))
+        } else {
+            vec![refs[0].combine(&refs[1])]
+        };
+        if current.len() % 2 == 1 {
+            next.push(current.pop().expect("odd leftover"));
+        }
+        current = next;
+    }
+    current.pop().expect("non-empty")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::{FrequencySummary, SpaceSaving};
+    use crate::util::SplitMix64;
+
+    fn summarize(items: &[u64], k: usize) -> Summary {
+        let mut ss = SpaceSaving::new(k);
+        ss.offer_all(items);
+        ss.freeze()
+    }
+
+    #[test]
+    fn reduce_single_is_identity() {
+        let s = summarize(&[1, 1, 2], 4);
+        assert_eq!(tree_reduce(vec![s.clone()]).counters(), s.counters());
+    }
+
+    #[test]
+    fn reduce_matches_sequential_fold_for_two() {
+        let a = summarize(&[1, 1, 2, 3], 4);
+        let b = summarize(&[2, 2, 5], 4);
+        let want = a.combine(&b);
+        assert_eq!(tree_reduce(vec![a, b]).counters(), want.counters());
+    }
+
+    #[test]
+    fn reduce_preserves_n_and_guarantees() {
+        let mut rng = SplitMix64::new(91);
+        for p in [2usize, 3, 4, 5, 8, 13, 16] {
+            let k = 32;
+            let blocks: Vec<Vec<u64>> = (0..p)
+                .map(|_| (0..4_000).map(|_| rng.next_below(100)).collect())
+                .collect();
+            let total_n: u64 = blocks.iter().map(|b| b.len() as u64).sum();
+            let reduced =
+                tree_reduce(blocks.iter().map(|b| summarize(b, k)).collect());
+            assert_eq!(reduced.n(), total_n, "p={p}");
+
+            // Recall on the union: every global k-majority item survives.
+            let mut exact = crate::baselines::Exact::new();
+            for b in &blocks {
+                exact.offer_all(b);
+            }
+            let monitored: std::collections::HashSet<u64> =
+                reduced.counters().iter().map(|c| c.item).collect();
+            let thresh = total_n / k as u64;
+            for c in exact.k_majority(k as u64) {
+                assert!(
+                    monitored.contains(&c.item),
+                    "p={p}: lost frequent item {} (f={} > {thresh})",
+                    c.item,
+                    c.count
+                );
+            }
+            // Over-approximation: every reported count upper-bounds truth.
+            for c in reduced.counters() {
+                assert!(c.count >= exact.count(c.item), "p={p}: under-estimate");
+                assert!(c.count - c.err <= exact.count(c.item), "p={p}: bad err");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_handles_non_power_of_two() {
+        let blocks: Vec<Summary> =
+            (0..7).map(|i| summarize(&vec![i as u64; 10], 4)).collect();
+        let r = tree_reduce(blocks);
+        assert_eq!(r.n(), 70);
+    }
+}

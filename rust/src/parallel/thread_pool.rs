@@ -1,0 +1,60 @@
+//! Fork/join over worker ranks — the stand-in for an OpenMP parallel
+//! region. Built on `std::thread::scope` so workers may borrow the
+//! shared, immutable [`ItemSource`](crate::gen::ItemSource).
+
+/// Run `f(rank)` on `workers` scoped threads and collect results in rank
+/// order. Panics in workers propagate.
+pub fn fork_join<T, F>(workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers >= 1);
+    if workers == 1 {
+        // Avoid spawn overhead for the sequential baseline.
+        return vec![f(0)];
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|r| scope.spawn({ let f = &f; move || f(r) }))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_rank_order() {
+        let out = fork_join(8, |r| r * 10);
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn all_workers_run() {
+        let counter = AtomicUsize::new(0);
+        fork_join(16, |_| counter.fetch_add(1, Ordering::SeqCst));
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let id = std::thread::current().id();
+        let out = fork_join(1, move |_| std::thread::current().id() == id);
+        assert!(out[0], "workers=1 must not spawn");
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panic_propagates() {
+        fork_join(2, |r| {
+            if r == 1 {
+                panic!("boom");
+            }
+            r
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! Artifact discovery: `artifacts/manifest.json` parsing.
+//!
+//! The manifest is written by `python/compile/aot.py` and describes each
+//! lowered HLO-text program (shapes, padding sentinels) so the loader can
+//! validate inputs before handing them to PJRT.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+use crate::Result;
+
+/// What a lowered program computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `verify_counts`: (C,B) chunks × (K,) candidates → (K,) counts.
+    Verify,
+    /// `skew_profile`: (C,B) chunks → (C, NB) per-chunk histograms.
+    Profile,
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Program name (e.g. `verify_16x65536x2048`).
+    pub name: String,
+    /// Program kind.
+    pub kind: ArtifactKind,
+    /// Chunks per call (C).
+    pub chunks: usize,
+    /// Items per chunk (B).
+    pub chunk_len: usize,
+    /// Candidate slots (verify) — 0 for profile programs.
+    pub k: usize,
+    /// Histogram buckets (profile) — 0 for verify programs.
+    pub num_buckets: usize,
+    /// HLO text file name within the artifact dir.
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// Stream padding sentinel (never matches a candidate).
+    pub stream_pad: i32,
+    /// Candidate padding sentinel.
+    pub candidate_pad: i32,
+    /// All programs.
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        anyhow::ensure!(
+            j.get("format").and_then(|f| f.as_str()) == Some("hlo-text"),
+            "unsupported artifact format"
+        );
+        let stream_pad = j
+            .get("stream_pad")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing stream_pad"))? as i32;
+        let candidate_pad = j
+            .get("candidate_pad")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing candidate_pad"))? as i32;
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?
+        {
+            let s = |key: &str| e.get(key).and_then(|v| v.as_str()).map(str::to_string);
+            let u = |key: &str| e.get(key).and_then(|v| v.as_u64()).unwrap_or(0) as usize;
+            let kind = match s("kind").as_deref() {
+                Some("verify") => ArtifactKind::Verify,
+                Some("profile") => ArtifactKind::Profile,
+                other => anyhow::bail!("unknown artifact kind {other:?}"),
+            };
+            entries.push(ArtifactEntry {
+                name: s("name").ok_or_else(|| anyhow::anyhow!("entry missing name"))?,
+                kind,
+                chunks: u("chunks"),
+                chunk_len: u("chunk_len"),
+                k: u("k"),
+                num_buckets: u("num_buckets"),
+                file: s("file").ok_or_else(|| anyhow::anyhow!("entry missing file"))?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), stream_pad, candidate_pad, entries })
+    }
+
+    /// The default artifact directory: `$PSS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PSS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Find an entry by name.
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The verify program with the smallest candidate capacity ≥ `k`,
+    /// preferring the requested super-chunk count.
+    pub fn best_verify(&self, k: usize, chunks: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Verify && e.k >= k && e.chunks == chunks)
+            .min_by_key(|e| e.k)
+    }
+
+    /// Absolute path of an entry's HLO text.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "stream_pad": -2, "candidate_pad": -1,
+      "entries": [
+        {"name": "verify_16x65536x2048", "kind": "verify", "chunks": 16,
+         "chunk_len": 65536, "k": 2048, "file": "v16.hlo.txt"},
+        {"name": "verify_16x65536x8192", "kind": "verify", "chunks": 16,
+         "chunk_len": 65536, "k": 8192, "file": "v16b.hlo.txt"},
+        {"name": "verify_1x65536x2048", "kind": "verify", "chunks": 1,
+         "chunk_len": 65536, "k": 2048, "file": "v1.hlo.txt"},
+        {"name": "profile_16x65536x1024", "kind": "profile", "chunks": 16,
+         "chunk_len": 65536, "num_buckets": 1024, "file": "p.hlo.txt"}
+      ]}"#;
+
+    #[test]
+    fn loads_and_selects() {
+        let d = TempDir::new().unwrap();
+        write_manifest(d.path(), SAMPLE);
+        let m = Manifest::load(d.path()).unwrap();
+        assert_eq!(m.stream_pad, -2);
+        assert_eq!(m.entries.len(), 4);
+        // Smallest capacity >= k.
+        assert_eq!(m.best_verify(100, 16).unwrap().k, 2048);
+        assert_eq!(m.best_verify(3000, 16).unwrap().k, 8192);
+        assert!(m.best_verify(10_000, 16).is_none());
+        assert_eq!(m.best_verify(100, 1).unwrap().name, "verify_1x65536x2048");
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let d = TempDir::new().unwrap();
+        write_manifest(d.path(), r#"{"format": "protobuf", "entries": []}"#);
+        assert!(Manifest::load(d.path()).is_err());
+    }
+}

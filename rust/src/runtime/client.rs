@@ -1,0 +1,119 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute
+//! many times from the rust side. Python never runs here — this is the
+//! request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** is the
+//! interchange format (the text parser reassigns jax's 64-bit
+//! instruction ids, which xla_extension 0.5.1's proto path rejects), and
+//! programs are lowered with `return_tuple=True`, so results unwrap with
+//! `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::Result;
+
+use super::artifacts::{ArtifactEntry, Manifest};
+
+/// A compiled-program cache over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory and create the CPU client.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Open from the default artifact directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&mut self, entry: &ArtifactEntry) -> Result<()> {
+        if self.cache.contains_key(&entry.name) {
+            return Ok(());
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(entry.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute a verify program: `chunks` is row-major `(C, B)` i32,
+    /// `cands` is `(K,)` i32; returns the `(K,)` f32 counts.
+    pub fn run_verify(
+        &mut self,
+        entry_name: &str,
+        chunks: &[i32],
+        cands: &[i32],
+    ) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .entry(entry_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {entry_name}"))?
+            .clone();
+        anyhow::ensure!(
+            chunks.len() == entry.chunks * entry.chunk_len,
+            "chunks len {} != {}x{}",
+            chunks.len(),
+            entry.chunks,
+            entry.chunk_len
+        );
+        anyhow::ensure!(cands.len() == entry.k, "cands len {} != {}", cands.len(), entry.k);
+        self.compile(&entry)?;
+        let exe = self.cache.get(&entry.name).expect("just compiled");
+
+        let x = xla::Literal::vec1(chunks)
+            .reshape(&[entry.chunks as i64, entry.chunk_len as i64])?;
+        let y = xla::Literal::vec1(cands);
+        let result = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a profile program: `(C, B)` i32 chunks → `(C, NB)` f32
+    /// histograms (row-major).
+    pub fn run_profile(&mut self, entry_name: &str, chunks: &[i32]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .entry(entry_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {entry_name}"))?
+            .clone();
+        anyhow::ensure!(
+            chunks.len() == entry.chunks * entry.chunk_len,
+            "chunks len {} != {}x{}",
+            chunks.len(),
+            entry.chunks,
+            entry.chunk_len
+        );
+        self.compile(&entry)?;
+        let exe = self.cache.get(&entry.name).expect("just compiled");
+
+        let x = xla::Literal::vec1(chunks)
+            .reshape(&[entry.chunks as i64, entry.chunk_len as i64])?;
+        let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

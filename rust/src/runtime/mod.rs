@@ -1,0 +1,20 @@
+//! PJRT runtime — the rust side of the AOT bridge.
+//!
+//! `make artifacts` runs python **once** (jax/Pallas → HLO text, see
+//! `python/compile/aot.py`); this module loads those artifacts with the
+//! `xla` crate (`PjRtClient::cpu` → `HloModuleProto::from_text_file` →
+//! `compile` → `execute`) and serves them to the coordinator. Python is
+//! never on the request path.
+//!
+//! * [`artifacts`] — manifest discovery and program selection.
+//! * [`client`] — compile-once/execute-many PJRT wrapper.
+//! * [`verifier`] — offline candidate verification (exact counts, false
+//!   positive pruning, ARE) on the `verify_counts` program.
+
+pub mod artifacts;
+pub mod client;
+pub mod verifier;
+
+pub use artifacts::{ArtifactEntry, ArtifactKind, Manifest};
+pub use client::Runtime;
+pub use verifier::{VerifiedReport, Verifier};

@@ -1,0 +1,222 @@
+//! Offline candidate verification on the PJRT artifacts.
+//!
+//! Paper §1: in the off-line setting "a parallel scan of the input can be
+//! used to determine the actual frequent items" and discard false
+//! positives. That scan is exactly what the AOT-compiled
+//! `verify_counts` program does (DESIGN.md §Hardware-Adaptation): the
+//! coordinator hands it the stream in fixed-shape super-chunks and the
+//! ≤K reported candidates, and gets back exact frequencies — used for
+//! false-positive pruning and for ARE/precision reports without an
+//! `O(distinct)` hash map.
+
+use crate::summary::Counter;
+use crate::Result;
+
+use super::client::Runtime;
+
+/// Maximum item id the i32 artifact interface can carry.
+pub const MAX_ITEM: u64 = (i32::MAX as u64) - 1;
+
+/// Exact-count verification report for a reported candidate set.
+#[derive(Debug, Clone)]
+pub struct VerifiedReport {
+    /// `(item, estimated f̂, exact f)` for each reported counter.
+    pub rows: Vec<(u64, u64, u64)>,
+    /// Confirmed frequent items (exact `f > n/k`), descending by `f`.
+    pub confirmed: Vec<Counter>,
+    /// Average relative error of the estimates against exact counts.
+    pub are: f64,
+    /// Precision: confirmed / reported.
+    pub precision: f64,
+}
+
+/// Pad-and-encode helpers (pure; unit-tested without PJRT).
+pub mod encode {
+    /// Encode item ids to i32, validating the id range.
+    pub fn items_to_i32(items: &[u64]) -> anyhow::Result<Vec<i32>> {
+        items
+            .iter()
+            .map(|&x| {
+                anyhow::ensure!(x <= super::MAX_ITEM, "item id {x} exceeds i32 artifact range");
+                Ok(x as i32)
+            })
+            .collect()
+    }
+
+    /// Pad `v` to `len` with `pad`.
+    pub fn pad_to(mut v: Vec<i32>, len: usize, pad: i32) -> Vec<i32> {
+        debug_assert!(v.len() <= len);
+        v.resize(len, pad);
+        v
+    }
+}
+
+/// The verifier: owns a [`Runtime`] and drives the fixed-shape programs.
+pub struct Verifier {
+    rt: Runtime,
+}
+
+impl Verifier {
+    /// Open against an artifact directory.
+    pub fn new(dir: &std::path::Path) -> Result<Self> {
+        Ok(Self { rt: Runtime::new(dir)? })
+    }
+
+    /// Open against `$PSS_ARTIFACTS` / `./artifacts`.
+    pub fn from_default_dir() -> Result<Self> {
+        Ok(Self { rt: Runtime::from_default_dir()? })
+    }
+
+    /// Borrow the underlying runtime.
+    pub fn runtime(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    /// Exact frequency of every candidate in `items`, via the AOT
+    /// verify programs (super-chunks of 16×65536, remainder via the
+    /// 1×65536 program, final partial chunk padded with the stream
+    /// sentinel). Candidates beyond one program's capacity are processed
+    /// in batches.
+    pub fn count(&mut self, items: &[u64], candidates: &[u64]) -> Result<Vec<u64>> {
+        if candidates.is_empty() {
+            return Ok(Vec::new());
+        }
+        let m = self.rt.manifest();
+        let stream_pad = m.stream_pad;
+        let cand_pad = m.candidate_pad;
+        let big = m
+            .best_verify(1, 16)
+            .ok_or_else(|| anyhow::anyhow!("no 16-chunk verify artifact"))?
+            .clone();
+        let small = m
+            .best_verify(1, 1)
+            .ok_or_else(|| anyhow::anyhow!("no 1-chunk verify artifact"))?
+            .clone();
+        // Candidate batch capacity: the largest 16-chunk program.
+        let cap = m
+            .entries
+            .iter()
+            .filter(|e| e.kind == super::artifacts::ArtifactKind::Verify)
+            .map(|e| e.k)
+            .max()
+            .unwrap_or(big.k);
+
+        let enc_items = encode::items_to_i32(items)?;
+        let mut totals = vec![0u64; candidates.len()];
+
+        for (batch_idx, cand_batch) in candidates.chunks(cap).enumerate() {
+            let base = batch_idx * cap;
+            // Pick the smallest program that fits this batch, per shape.
+            let m = self.rt.manifest();
+            let big = m.best_verify(cand_batch.len(), 16).unwrap_or(&big).clone();
+            let small = m.best_verify(cand_batch.len(), 1).unwrap_or(&small).clone();
+            let cand_big = encode::pad_to(encode::items_to_i32(cand_batch)?, big.k, cand_pad);
+            let cand_small =
+                encode::pad_to(encode::items_to_i32(cand_batch)?, small.k, cand_pad);
+
+            let super_len = big.chunks * big.chunk_len;
+            let mut pos = 0usize;
+            // Full super-chunks through the 16-chunk program.
+            while pos + super_len <= enc_items.len() {
+                let counts =
+                    self.rt
+                        .run_verify(&big.name, &enc_items[pos..pos + super_len], &cand_big)?;
+                for (t, c) in totals[base..base + cand_batch.len()]
+                    .iter_mut()
+                    .zip(&counts)
+                {
+                    *t += *c as u64;
+                }
+                pos += super_len;
+            }
+            // Remainder through the 1-chunk program, padding the tail.
+            while pos < enc_items.len() {
+                let take = (enc_items.len() - pos).min(small.chunk_len);
+                let chunk = encode::pad_to(
+                    enc_items[pos..pos + take].to_vec(),
+                    small.chunk_len,
+                    stream_pad,
+                );
+                let counts = self.rt.run_verify(&small.name, &chunk, &cand_small)?;
+                for (t, c) in totals[base..base + cand_batch.len()]
+                    .iter_mut()
+                    .zip(&counts)
+                {
+                    *t += *c as u64;
+                }
+                pos += take;
+            }
+        }
+        Ok(totals)
+    }
+
+    /// Verify a reported summary against the stream: exact counts,
+    /// false-positive pruning at threshold `n/k_majority`, ARE.
+    pub fn verify_report(
+        &mut self,
+        items: &[u64],
+        reported: &[Counter],
+        k_majority: u64,
+    ) -> Result<VerifiedReport> {
+        let cands: Vec<u64> = reported.iter().map(|c| c.item).collect();
+        let exact = self.count(items, &cands)?;
+        let n = items.len() as u64;
+        let thresh = n / k_majority;
+
+        let rows: Vec<(u64, u64, u64)> = reported
+            .iter()
+            .zip(&exact)
+            .map(|(c, &f)| (c.item, c.count, f))
+            .collect();
+        let mut confirmed: Vec<Counter> = rows
+            .iter()
+            .filter(|(_, _, f)| *f > thresh)
+            .map(|&(item, _, f)| Counter { item, count: f, err: 0 })
+            .collect();
+        confirmed.sort_unstable_by(|a, b| b.count.cmp(&a.count).then(a.item.cmp(&b.item)));
+
+        let are = if rows.is_empty() {
+            0.0
+        } else {
+            rows.iter()
+                .map(|&(_, est, f)| {
+                    if f == 0 {
+                        1.0
+                    } else {
+                        (est as f64 - f as f64).abs() / f as f64
+                    }
+                })
+                .sum::<f64>()
+                / rows.len() as f64
+        };
+        let precision = if rows.is_empty() {
+            1.0
+        } else {
+            confirmed.len() as f64 / rows.len() as f64
+        };
+        Ok(VerifiedReport { rows, confirmed, are, precision })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::encode::*;
+
+    #[test]
+    fn encode_validates_range() {
+        assert!(items_to_i32(&[0, 1, super::MAX_ITEM]).is_ok());
+        assert!(items_to_i32(&[super::MAX_ITEM + 1]).is_err());
+    }
+
+    #[test]
+    fn pad_fills_with_sentinel() {
+        let v = pad_to(vec![1, 2, 3], 6, -2);
+        assert_eq!(v, vec![1, 2, 3, -2, -2, -2]);
+    }
+
+    #[test]
+    fn pad_noop_at_exact_len() {
+        let v = pad_to(vec![1, 2], 2, -1);
+        assert_eq!(v, vec![1, 2]);
+    }
+}

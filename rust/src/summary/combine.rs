@@ -1,0 +1,438 @@
+//! `Summary` — the frozen exchange format — and paper **Algorithm 2**
+//! (`combine`), the user-defined reduction operator that merges two
+//! stream summaries while preserving the Space Saving guarantees.
+//!
+//! The merge rule (Cafaro, Pulimeno, Tempesta — Information Sciences
+//! 2016, recalled in the paper §3): with `m₁`, `m₂` the minimum counts of
+//! the two inputs (0 if an input has spare counters),
+//!
+//! * item in both:      `f̂_C = f̂₁ + f̂₂`,   `ε_C = ε₁ + ε₂`
+//! * item in S₁ only:   `f̂_C = f̂₁ + m₂`,  `ε_C = ε₁ + m₂`
+//! * item in S₂ only:   `f̂_C = f̂₂ + m₁`,  `ε_C = ε₂ + m₁`
+//!
+//! then keep the `k` counters with the greatest frequencies. Correctness
+//! and error bounds of the reduction are proved in [25] of the paper.
+
+use super::counter::{sort_ascending, Counter};
+use crate::util::FastMap;
+
+/// A frozen stream summary: counters sorted **ascending** by frequency
+/// (the order Algorithm 1 line 6 requires, making each input's minimum
+/// its first counter), plus the stream-length and budget metadata the
+/// reduction and the final prune need.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Summary {
+    /// Counter budget `k` (shared by all summaries in one reduction).
+    k: usize,
+    /// Total items represented (sum over merged blocks).
+    n: u64,
+    /// Occupied counters, ascending by count.
+    counters: Vec<Counter>,
+}
+
+impl Summary {
+    /// Build from parts; sorts if needed. `counters.len() <= k`.
+    pub fn new(k: usize, n: u64, mut counters: Vec<Counter>) -> Self {
+        assert!(counters.len() <= k, "more counters than budget");
+        if !counters.windows(2).all(|w| w[0].count <= w[1].count) {
+            sort_ascending(&mut counters);
+        }
+        Self { k, n, counters }
+    }
+
+    /// An empty summary (identity element of [`Summary::combine`]).
+    pub fn empty(k: usize) -> Self {
+        Self { k, n: 0, counters: Vec::new() }
+    }
+
+    /// Counter budget.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Stream length this summary covers.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Counters, ascending by count.
+    pub fn counters(&self) -> &[Counter] {
+        &self.counters
+    }
+
+    /// Minimum frequency (`m` in Algorithm 2): the first counter's count,
+    /// or 0 if the summary still has spare capacity — an under-full
+    /// summary has seen every one of its items exactly.
+    pub fn min_count(&self) -> u64 {
+        if self.counters.len() < self.k {
+            0
+        } else {
+            self.counters.first().map_or(0, |c| c.count)
+        }
+    }
+
+    /// Estimated frequency of `item`, if present.
+    pub fn estimate(&self, item: u64) -> Option<u64> {
+        self.counters.iter().find(|c| c.item == item).map(|c| c.count)
+    }
+
+    /// Serialized size in bytes when shipped between ranks (one record is
+    /// item + count + err). Used by the network model.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.counters.len() * 24 + 16) as u64
+    }
+
+    /// Paper **Algorithm 2**: merge two summaries into one that preserves
+    /// the Space Saving bounds for the union of the underlying streams.
+    pub fn combine(&self, other: &Summary) -> Summary {
+        assert_eq!(self.k, other.k, "combine requires equal k");
+        let k = self.k;
+        let m1 = self.min_count();
+        let m2 = other.min_count();
+
+        // Index S2 by item (the paper's `S2.find`).
+        let mut idx2 = FastMap::with_capacity(other.counters.len());
+        for (i, c) in other.counters.iter().enumerate() {
+            idx2.insert(c.item, i as u32);
+        }
+        let mut consumed2 = vec![false; other.counters.len()];
+
+        // Three merge classes. `only1` and `only2` inherit their input's
+        // (count, item) ascending order (a constant is added to every
+        // count), so only `both` needs sorting — that drops the combine
+        // from an O((2k) log 2k) full sort to O(|both| log |both|) plus
+        // a linear 3-way merge (EXPERIMENTS.md §Perf change 5).
+        let mut both: Vec<Counter> = Vec::new();
+        let mut only1: Vec<Counter> = Vec::with_capacity(self.counters.len());
+
+        // Scan S1 (Algorithm 2 lines 5–15).
+        for c1 in &self.counters {
+            if let Some(i2) = idx2.get(c1.item) {
+                let c2 = other.counters[i2 as usize];
+                consumed2[i2 as usize] = true; // the paper's S2.remove
+                both.push(Counter {
+                    item: c1.item,
+                    count: c1.count + c2.count,
+                    err: c1.err + c2.err,
+                });
+            } else {
+                only1.push(Counter {
+                    item: c1.item,
+                    count: c1.count + m2,
+                    err: c1.err + m2,
+                });
+            }
+        }
+        // Scan what remains of S2 (lines 16–20).
+        let mut only2: Vec<Counter> = Vec::with_capacity(other.counters.len() - both.len());
+        for (c2, used) in other.counters.iter().zip(&consumed2) {
+            if !*used {
+                only2.push(Counter {
+                    item: c2.item,
+                    count: c2.count + m1,
+                    err: c2.err + m1,
+                });
+            }
+        }
+        sort_ascending(&mut both);
+
+        // 3-way merge ascending by (count, item) — identical order to
+        // the full sort — keeping the k greatest (line 21, PRUNE(k)).
+        let total = both.len() + only1.len() + only2.len();
+        let mut merged: Vec<Counter> = Vec::with_capacity(total.min(k));
+        let skip = total.saturating_sub(k);
+        let key = |c: &Counter| (c.count, c.item);
+        let (mut i, mut j, mut l) = (0, 0, 0);
+        for rank in 0..total {
+            let pick_b = i < both.len()
+                && (j >= only1.len() || key(&both[i]) <= key(&only1[j]))
+                && (l >= only2.len() || key(&both[i]) <= key(&only2[l]));
+            let pick_1 = !pick_b
+                && j < only1.len()
+                && (l >= only2.len() || key(&only1[j]) <= key(&only2[l]));
+            let c = if pick_b {
+                i += 1;
+                both[i - 1]
+            } else if pick_1 {
+                j += 1;
+                only1[j - 1]
+            } else {
+                l += 1;
+                only2[l - 1]
+            };
+            if rank >= skip {
+                merged.push(c);
+            }
+        }
+        Summary { k, n: self.n + other.n, counters: merged }
+    }
+
+    /// Final output filter (Algorithm 1 line 9, `PRUNED`): keep items
+    /// whose estimate clears the k-majority threshold `⌊n/k⌋ + 1`, i.e.
+    /// `f̂ > n/k`, reported descending by frequency.
+    pub fn prune(&self, n: u64, k_majority: u64) -> Vec<Counter> {
+        let thresh = n / k_majority;
+        let mut out: Vec<Counter> = self
+            .counters
+            .iter()
+            .copied()
+            .filter(|c| c.count > thresh)
+            .collect();
+        out.reverse(); // ascending -> descending
+        out
+    }
+
+    /// Top-`m` query (Metwally et al.'s *integrated* frequent + top-k
+    /// computation, paper ref [21]): the `m` counters with the greatest
+    /// estimates, descending.
+    pub fn top_k(&self, m: usize) -> Vec<Counter> {
+        let take = m.min(self.counters.len());
+        let mut out: Vec<Counter> =
+            self.counters[self.counters.len() - take..].to_vec();
+        out.reverse();
+        out
+    }
+
+    /// Guaranteed top-`m`: the longest prefix of [`Summary::top_k`]
+    /// whose *order is certain* — element `i` is guaranteed to outrank
+    /// element `i+1` when its guaranteed count (`f̂ᵢ − εᵢ`) is at least
+    /// the next element's estimate `f̂ᵢ₊₁` (estimates never
+    /// under-estimate, so `f̂ᵢ₊₁ ≥ fᵢ₊₁`). Metwally's "guaranteed
+    /// top-k" criterion.
+    pub fn top_k_guaranteed(&self, m: usize) -> Vec<Counter> {
+        let cand = self.top_k(m.saturating_add(1));
+        let mut out = Vec::with_capacity(m.min(cand.len()));
+        for i in 0..m.min(cand.len()) {
+            let next_est = cand.get(i + 1).map_or(0, |c| c.count);
+            if cand[i].guaranteed() >= next_est {
+                out.push(cand[i]);
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Guaranteed-frequent subset: items whose *lower bound* clears the
+    /// threshold (no false positive possible, used when the offline
+    /// verification pass is unavailable).
+    pub fn prune_guaranteed(&self, n: u64, k_majority: u64) -> Vec<Counter> {
+        let thresh = n / k_majority;
+        let mut out: Vec<Counter> = self
+            .counters
+            .iter()
+            .copied()
+            .filter(|c| c.guaranteed() > thresh)
+            .collect();
+        out.reverse();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::space_saving::SpaceSaving;
+    use crate::summary::traits::FrequencySummary;
+    use crate::util::SplitMix64;
+    use std::collections::HashMap;
+
+    fn summarize(items: &[u64], k: usize) -> Summary {
+        let mut ss = SpaceSaving::new(k);
+        ss.offer_all(items);
+        ss.freeze()
+    }
+
+    fn truth(items: &[u64]) -> HashMap<u64, u64> {
+        let mut t = HashMap::new();
+        for &i in items {
+            *t.entry(i).or_default() += 1;
+        }
+        t
+    }
+
+    #[test]
+    fn combine_disjoint_underfull_is_exact() {
+        let s1 = summarize(&[1, 1, 2], 8);
+        let s2 = summarize(&[3, 3, 3, 4], 8);
+        let c = s1.combine(&s2);
+        assert_eq!(c.n(), 7);
+        // Both inputs under-full => m1 = m2 = 0 => exact union.
+        assert_eq!(c.estimate(1), Some(2));
+        assert_eq!(c.estimate(3), Some(3));
+        assert_eq!(c.estimate(4), Some(1));
+    }
+
+    #[test]
+    fn combine_overlapping_sums() {
+        let s1 = summarize(&[1, 1, 2, 2, 2], 8);
+        let s2 = summarize(&[1, 2, 2], 8);
+        let c = s1.combine(&s2);
+        assert_eq!(c.estimate(1), Some(3));
+        assert_eq!(c.estimate(2), Some(5));
+    }
+
+    #[test]
+    fn combine_identity() {
+        let s = summarize(&[5, 5, 6, 7, 7, 7], 4);
+        let e = Summary::empty(4);
+        assert_eq!(s.combine(&e).counters(), s.counters());
+        assert_eq!(e.combine(&s).counters(), s.counters());
+    }
+
+    #[test]
+    fn combine_commutative_in_estimates() {
+        let mut rng = SplitMix64::new(21);
+        let a: Vec<u64> = (0..5_000).map(|_| rng.next_below(300)).collect();
+        let b: Vec<u64> = (0..5_000).map(|_| rng.next_below(300)).collect();
+        let (sa, sb) = (summarize(&a, 64), summarize(&b, 64));
+        let ab = sa.combine(&sb);
+        let ba = sb.combine(&sa);
+        let mut ca: Vec<_> = ab.counters().to_vec();
+        let mut cb: Vec<_> = ba.counters().to_vec();
+        ca.sort_unstable_by_key(|c| c.item);
+        cb.sort_unstable_by_key(|c| c.item);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn combined_bounds_hold() {
+        // The central theorem: after combining, for every monitored item
+        // count - err <= f_true <= count, and every item with
+        // f > (n1+n2)/k is monitored.
+        let mut rng = SplitMix64::new(22);
+        for trial in 0..20 {
+            let k = 32;
+            let a: Vec<u64> = (0..8_000)
+                .map(|_| {
+                    if rng.next_f64() < 0.6 {
+                        rng.next_below(8)
+                    } else {
+                        rng.next_below(4_000)
+                    }
+                })
+                .collect();
+            let b: Vec<u64> = (0..8_000)
+                .map(|_| {
+                    if rng.next_f64() < 0.6 {
+                        rng.next_below(8)
+                    } else {
+                        5_000 + rng.next_below(4_000)
+                    }
+                })
+                .collect();
+            let c = summarize(&a, k).combine(&summarize(&b, k));
+
+            let mut all = a.clone();
+            all.extend_from_slice(&b);
+            let t = truth(&all);
+            for ctr in c.counters() {
+                let f = t.get(&ctr.item).copied().unwrap_or(0);
+                assert!(ctr.count >= f, "trial {trial}: under-estimate");
+                assert!(
+                    ctr.count - ctr.err <= f,
+                    "trial {trial}: error bound broken: item {} f̂={} ε={} f={}",
+                    ctr.item,
+                    ctr.count,
+                    ctr.err,
+                    f
+                );
+            }
+            let monitored: std::collections::HashSet<u64> =
+                c.counters().iter().map(|x| x.item).collect();
+            let thresh = (all.len() as u64) / (k as u64);
+            for (item, f) in &t {
+                if *f > thresh {
+                    assert!(monitored.contains(item), "trial {trial}: lost {item}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prune_filters_threshold() {
+        let s = Summary::new(
+            4,
+            100,
+            vec![
+                Counter { item: 1, count: 5, err: 0 },
+                Counter { item: 2, count: 26, err: 0 },
+                Counter { item: 3, count: 60, err: 1 },
+            ],
+        );
+        // k-majority with k=4: threshold 100/4 = 25, need f̂ > 25.
+        let out = s.prune(100, 4);
+        assert_eq!(out.iter().map(|c| c.item).collect::<Vec<_>>(), vec![3, 2]);
+        // Guaranteed: item 2 guaranteed 26 > 25 yes; item 3: 59 > 25 yes.
+        let g = s.prune_guaranteed(100, 4);
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn combine_truncates_to_k_greatest() {
+        let s1 = summarize(&[1, 1, 1, 2, 2, 3], 3);
+        let s2 = summarize(&[4, 4, 4, 4, 5, 6], 3);
+        let c = s1.combine(&s2);
+        assert!(c.counters().len() <= 3);
+        // Highest-frequency survivors must include 4 (f̂>=4) and 1 (f̂>=3).
+        assert!(c.estimate(4).is_some());
+        assert!(c.estimate(1).is_some());
+    }
+
+    #[test]
+    fn top_k_returns_greatest_descending() {
+        let s = summarize(&[1, 1, 1, 2, 2, 3, 3, 3, 3], 8);
+        let t = s.top_k(2);
+        assert_eq!(t.iter().map(|c| c.item).collect::<Vec<_>>(), vec![3, 1]);
+        assert!(s.top_k(100).len() == 3, "clamps to occupied counters");
+    }
+
+    #[test]
+    fn top_k_guaranteed_stops_at_uncertain_order() {
+        // Exact summary (err 0): full order is guaranteed.
+        let s = summarize(&[1, 1, 1, 2, 2, 3], 8);
+        assert_eq!(s.top_k_guaranteed(3).len(), 3);
+
+        // Uncertain: item with large err cannot be guaranteed above the
+        // next estimate.
+        let s = Summary::new(
+            4,
+            20,
+            vec![
+                Counter { item: 10, count: 10, err: 0 },
+                Counter { item: 20, count: 7, err: 6 }, // guaranteed 1
+                Counter { item: 30, count: 3, err: 0 },
+            ],
+        );
+        let g = s.top_k_guaranteed(3);
+        // 10 (guaranteed 10 >= 7) is certain; 20 (guaranteed 1 < 3) is not.
+        assert_eq!(g.iter().map(|c| c.item).collect::<Vec<_>>(), vec![10]);
+    }
+
+    #[test]
+    fn top_k_guaranteed_under_merge() {
+        let mut rng = SplitMix64::new(77);
+        let a: Vec<u64> = (0..6_000).map(|_| rng.next_below(40)).collect();
+        let b: Vec<u64> = (0..6_000).map(|_| rng.next_below(40)).collect();
+        let merged = summarize(&a, 16).combine(&summarize(&b, 16));
+        let t = truth(&{
+            let mut all = a.clone();
+            all.extend_from_slice(&b);
+            all
+        });
+        // The guaranteed ranking must agree with the true ranking.
+        let g = merged.top_k_guaranteed(5);
+        let mut true_rank: Vec<(u64, u64)> =
+            t.iter().map(|(i, f)| (*f, *i)).collect();
+        true_rank.sort_unstable_by(|x, y| y.cmp(x));
+        for (i, c) in g.iter().enumerate() {
+            assert_eq!(c.item, true_rank[i].1, "guaranteed rank {i} wrong");
+        }
+    }
+
+    #[test]
+    fn wire_bytes_scales_with_len() {
+        let s = summarize(&[1, 2, 3, 4], 8);
+        assert_eq!(s.wire_bytes(), 4 * 24 + 16);
+    }
+}

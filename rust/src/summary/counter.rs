@@ -1,0 +1,59 @@
+//! The counter record shared by every summary implementation.
+
+/// One monitored item: the paper's `S[i].e` / `S[i].f̂` pair plus the
+/// over-estimation bound `err` (the minimum counter value at the moment
+/// the item took over this counter; Space Saving guarantees
+/// `count - err <= f_true <= count`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Counter {
+    /// Item id. Generators encode items into `[0, 2^63)`.
+    pub item: u64,
+    /// Estimated frequency `f̂` (never under-estimates).
+    pub count: u64,
+    /// Over-estimation bound `ε`: `f_true >= count - err`.
+    pub err: u64,
+}
+
+impl Counter {
+    /// New counter with a fresh item observed `count` times exactly.
+    pub fn exact(item: u64, count: u64) -> Self {
+        Self { item, count, err: 0 }
+    }
+
+    /// Guaranteed (lower-bound) frequency.
+    #[inline]
+    pub fn guaranteed(&self) -> u64 {
+        self.count - self.err
+    }
+}
+
+/// Sort ascending by estimated frequency (ties broken by item id so the
+/// order — and therefore the pruned survivor set — is deterministic).
+pub fn sort_ascending(counters: &mut [Counter]) {
+    counters.sort_unstable_by(|a, b| a.count.cmp(&b.count).then(a.item.cmp(&b.item)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guaranteed_subtracts_err() {
+        let c = Counter { item: 1, count: 10, err: 3 };
+        assert_eq!(c.guaranteed(), 7);
+    }
+
+    #[test]
+    fn sort_is_deterministic_on_ties() {
+        let mut v = vec![
+            Counter { item: 5, count: 2, err: 0 },
+            Counter { item: 3, count: 2, err: 0 },
+            Counter { item: 9, count: 1, err: 0 },
+        ];
+        sort_ascending(&mut v);
+        assert_eq!(
+            v.iter().map(|c| c.item).collect::<Vec<_>>(),
+            vec![9, 3, 5]
+        );
+    }
+}

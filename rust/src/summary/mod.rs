@@ -1,0 +1,24 @@
+//! Stream summaries: the sequential Space Saving algorithm (two
+//! implementations) and the paper's `combine` merge operator.
+//!
+//! * [`SpaceSaving`] — hash map + slot-indexed binary min-heap, `O(log k)`
+//!   per item. Simple, cache-friendly, the default.
+//! * [`StreamSummary`] — Metwally's bucket-list structure, `O(1)`
+//!   amortized per item. Ablation target (`bench_space_saving`).
+//! * [`Summary`] — the frozen, frequency-sorted summary value that ranks
+//!   and threads exchange; [`Summary::combine`] is paper Algorithm 2.
+//!
+//! Both live implementations share the [`FrequencySummary`] trait so the
+//! parallel layers are generic over the structure used per worker.
+
+pub mod combine;
+pub mod counter;
+pub mod space_saving;
+pub mod stream_summary;
+pub mod traits;
+
+pub use combine::Summary;
+pub use counter::Counter;
+pub use space_saving::SpaceSaving;
+pub use stream_summary::StreamSummary;
+pub use traits::FrequencySummary;

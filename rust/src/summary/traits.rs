@@ -1,0 +1,88 @@
+//! The `FrequencySummary` trait: what the parallel layers require of a
+//! per-worker sequential summary structure.
+
+use super::combine::Summary;
+use super::counter::{sort_ascending, Counter};
+
+/// A live, updatable frequency summary over a stream prefix.
+pub trait FrequencySummary {
+    /// Number of counters (the `k` in k-majority).
+    fn capacity(&self) -> usize;
+
+    /// Process one stream item (the paper's Space Saving update rule).
+    fn offer(&mut self, item: u64);
+
+    /// Total items processed so far.
+    fn processed(&self) -> u64;
+
+    /// Snapshot of all occupied counters, in no particular order.
+    fn counters(&self) -> Vec<Counter>;
+
+    /// Estimated frequency of `item`, if monitored.
+    fn estimate(&self, item: u64) -> Option<u64>;
+
+    /// Process a slice of items.
+    fn offer_all(&mut self, items: &[u64]) {
+        for &it in items {
+            self.offer(it);
+        }
+    }
+
+    /// Freeze into the exchange format: counters sorted ascending by
+    /// frequency (paper Algorithm 1 line 6 — "sort local by counters'
+    /// frequency in ascending order").
+    fn freeze(&self) -> Summary {
+        let mut counters = self.counters();
+        sort_ascending(&mut counters);
+        Summary::new(self.capacity(), self.processed(), counters)
+    }
+}
+
+/// Invariant checks shared by the test suites of both implementations.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Run `items` through `s` and assert every Space Saving invariant:
+    /// 1. sum of counts == items processed,
+    /// 2. counts never under-estimate, and over-estimate by at most `err`,
+    /// 3. every item with f > n/k is reported (recall = 1),
+    /// 4. at most k counters are used.
+    pub fn check_invariants<S: FrequencySummary>(s: &mut S, items: &[u64]) {
+        s.offer_all(items);
+        let n = items.len() as u64;
+        assert_eq!(s.processed(), n);
+
+        let counters = s.counters();
+        assert!(counters.len() <= s.capacity());
+        assert_eq!(counters.iter().map(|c| c.count).sum::<u64>(), n);
+
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &it in items {
+            *truth.entry(it).or_default() += 1;
+        }
+        for c in &counters {
+            let f = truth.get(&c.item).copied().unwrap_or(0);
+            assert!(c.count >= f, "under-estimate: item {} f̂={} f={}", c.item, c.count, f);
+            assert!(
+                c.count - c.err <= f,
+                "err bound violated: item {} f̂={} err={} f={}",
+                c.item,
+                c.count,
+                c.err,
+                f
+            );
+        }
+
+        let k = s.capacity() as u64;
+        let thresh = n / k;
+        let monitored: std::collections::HashSet<u64> =
+            counters.iter().map(|c| c.item).collect();
+        for (item, f) in &truth {
+            if *f > thresh {
+                assert!(monitored.contains(item), "missed frequent item {item} (f={f})");
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Micro-benchmark harness (the vendored crate set has no `criterion`).
+//!
+//! Auto-calibrates iteration counts to a target measurement window,
+//! reports mean ± stddev and optional throughput, and prints
+//! criterion-style lines so `cargo bench` output stays familiar. Used by
+//! every target in `rust/benches/`.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Mean wall time per iteration, nanoseconds.
+    pub mean_ns: f64,
+    /// Standard deviation across measurement batches, nanoseconds.
+    pub stddev_ns: f64,
+    /// Total iterations measured.
+    pub iters: u64,
+    /// Items processed per iteration (enables a throughput line).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Items per second, if `items_per_iter` was declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|ipi| ipi / (self.mean_ns * 1e-9))
+    }
+
+    /// One criterion-style report line.
+    pub fn line(&self) -> String {
+        let t = if self.mean_ns < 1_000.0 {
+            format!("{:.1} ns", self.mean_ns)
+        } else if self.mean_ns < 1_000_000.0 {
+            format!("{:.2} µs", self.mean_ns / 1e3)
+        } else if self.mean_ns < 1e9 {
+            format!("{:.2} ms", self.mean_ns / 1e6)
+        } else {
+            format!("{:.3} s", self.mean_ns / 1e9)
+        };
+        let sd = if self.mean_ns > 0.0 {
+            format!(" ±{:.1}%", self.stddev_ns / self.mean_ns * 100.0)
+        } else {
+            String::new()
+        };
+        match self.throughput() {
+            Some(tp) if tp >= 1e6 => {
+                format!("{:<44} {t}{sd}  [{:.1} M items/s]", self.name, tp / 1e6)
+            }
+            Some(tp) => format!("{:<44} {t}{sd}  [{:.0} items/s]", self.name, tp),
+            None => format!("{:<44} {t}{sd}", self.name),
+        }
+    }
+}
+
+/// Measure `f`, auto-calibrating to ~`min_time_s` of total measurement
+/// split over 10 batches. `items_per_iter` enables throughput reporting.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    min_time_s: f64,
+    items_per_iter: Option<f64>,
+    mut f: F,
+) -> BenchResult {
+    // Warmup + calibration: find iterations/batch for ~min_time_s/10.
+    let mut per_batch = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..per_batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_time_s / 10.0 || per_batch >= 1 << 30 {
+            break;
+        }
+        let grow = if dt <= 1e-9 { 1024.0 } else { (min_time_s / 10.0 / dt * 1.2).max(2.0) };
+        per_batch = (per_batch as f64 * grow).ceil() as u64;
+    }
+
+    const BATCHES: usize = 10;
+    let mut batch_means = Vec::with_capacity(BATCHES);
+    let mut total_iters = 0u64;
+    for _ in 0..BATCHES {
+        let t0 = Instant::now();
+        for _ in 0..per_batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        batch_means.push(dt / per_batch as f64 * 1e9);
+        total_iters += per_batch;
+    }
+    let mean = batch_means.iter().sum::<f64>() / BATCHES as f64;
+    let var = batch_means.iter().map(|m| (m - mean).powi(2)).sum::<f64>() / BATCHES as f64;
+
+    BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        stddev_ns: var.sqrt(),
+        iters: total_iters,
+        items_per_iter,
+    }
+}
+
+/// Run and print one benchmark.
+pub fn run<F: FnMut()>(name: &str, items_per_iter: Option<f64>, f: F) -> BenchResult {
+    let r = bench(name, bench_seconds(), items_per_iter, f);
+    println!("{}", r.line());
+    r
+}
+
+/// Measurement budget per benchmark: `$PSS_BENCH_SECS` (default 1.0).
+pub fn bench_seconds() -> f64 {
+    std::env::var("PSS_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Opaque value sink (prevents the optimizer from deleting the work).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleepless_work() {
+        let mut acc = 0u64;
+        let r = bench("spin", 0.05, Some(1000.0), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 10);
+        assert!(r.throughput().unwrap() > 0.0);
+        black_box(acc);
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            mean_ns: 2_500_000.0,
+            stddev_ns: 25_000.0,
+            iters: 100,
+            items_per_iter: None,
+        };
+        assert!(r.line().contains("ms"));
+    }
+}

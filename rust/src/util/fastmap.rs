@@ -1,0 +1,286 @@
+//! `FastMap` — open-addressing hash map `u64 -> u32` for the Space Saving
+//! hot loop.
+//!
+//! Why not `std::collections::HashMap`: SipHash dominates the per-item
+//! cost at the throughput target (≥25 M items/s/core, DESIGN.md §7).
+//! This map uses `mix64` Fibonacci-style mixing, linear probing, and
+//! backward-shift deletion (no tombstones, so probe sequences never rot
+//! under the constant evict/insert churn Space Saving produces once its
+//! counters are full).
+//!
+//! Keys are item ids; `u64::MAX` is reserved as the EMPTY marker (item
+//! ids are encoded into `[0, 2^63)` by the generators). Values are slot
+//! indices into the caller's counter storage (`u32`, so a summary may
+//! hold up to 4 G counters — far beyond any realistic `k`).
+
+const EMPTY: u64 = u64::MAX;
+
+/// Slot hash: single-multiply Fibonacci hashing, taking the *high* bits
+/// of the product (where the multiplicative mix is strongest). One
+/// multiply + one shift per probe sequence — measurably cheaper in the
+/// Space Saving eviction path than a full 3-multiply finalizer, with no
+/// observable probe-length penalty at our ≤50% load factor.
+#[inline]
+fn slot_hash(key: u64, shift: u32) -> usize {
+    (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> shift) as usize
+}
+
+/// Open-addressing `u64 -> u32` map with backward-shift deletion.
+#[derive(Debug, Clone)]
+pub struct FastMap {
+    keys: Vec<u64>,
+    vals: Vec<u32>,
+    mask: usize,
+    /// `64 - log2(slots)`: high-bits shift for [`slot_hash`].
+    shift: u32,
+    len: usize,
+}
+
+impl FastMap {
+    /// Create a map sized for `capacity` entries at ≤50% load.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let slots = (capacity.max(4) * 2).next_power_of_two();
+        Self {
+            keys: vec![EMPTY; slots],
+            vals: vec![0; slots],
+            mask: slots - 1,
+            shift: 64 - slots.trailing_zeros(),
+            len: 0,
+        }
+    }
+
+    /// Number of entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no entries.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn slot_of(&self, key: u64) -> usize {
+        slot_hash(key, self.shift)
+    }
+
+    /// Look up `key`.
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<u32> {
+        debug_assert_ne!(key, EMPTY);
+        let mut i = self.slot_of(key);
+        loop {
+            let k = unsafe { *self.keys.get_unchecked(i) };
+            if k == key {
+                return Some(unsafe { *self.vals.get_unchecked(i) });
+            }
+            if k == EMPTY {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Insert or overwrite `key -> val`.
+    #[inline]
+    pub fn insert(&mut self, key: u64, val: u32) {
+        debug_assert_ne!(key, EMPTY);
+        debug_assert!(self.len * 2 <= self.mask + 1, "FastMap over-full");
+        let mut i = self.slot_of(key);
+        loop {
+            let k = unsafe { *self.keys.get_unchecked(i) };
+            if k == key {
+                unsafe { *self.vals.get_unchecked_mut(i) = val };
+                return;
+            }
+            if k == EMPTY {
+                unsafe {
+                    *self.keys.get_unchecked_mut(i) = key;
+                    *self.vals.get_unchecked_mut(i) = val;
+                }
+                self.len += 1;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Remove `key`, backward-shifting the cluster so probing stays exact.
+    /// Returns the removed value.
+    #[inline]
+    pub fn remove(&mut self, key: u64) -> Option<u32> {
+        debug_assert_ne!(key, EMPTY);
+        let mut i = self.slot_of(key);
+        loop {
+            let k = self.keys[i];
+            if k == EMPTY {
+                return None;
+            }
+            if k == key {
+                break;
+            }
+            i = (i + 1) & self.mask;
+        }
+        let removed = self.vals[i];
+        // Backward-shift: move later cluster members into the hole when
+        // their home slot does not lie after the hole.
+        let mut hole = i;
+        let mut j = (i + 1) & self.mask;
+        loop {
+            let k = self.keys[j];
+            if k == EMPTY {
+                break;
+            }
+            let home = self.slot_of(k);
+            // Is `home` cyclically within (hole, j]? If so we must NOT
+            // move it; otherwise moving it to `hole` keeps it reachable.
+            let dist_home = j.wrapping_sub(home) & self.mask;
+            let dist_hole = j.wrapping_sub(hole) & self.mask;
+            if dist_home >= dist_hole {
+                self.keys[hole] = k;
+                self.vals[hole] = self.vals[j];
+                hole = j;
+            }
+            j = (j + 1) & self.mask;
+        }
+        self.keys[hole] = EMPTY;
+        self.len -= 1;
+        Some(removed)
+    }
+
+    /// Prefetch the probe cacheline for `key` (software pipelining for
+    /// streaming workloads: hash the item a few positions ahead and pull
+    /// its slot into L1 before `get`/`insert` needs it).
+    #[inline]
+    pub fn prefetch(&self, key: u64) {
+        let i = self.slot_of(key);
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            _mm_prefetch(self.keys.as_ptr().add(i) as *const i8, _MM_HINT_T0);
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = i;
+        }
+    }
+
+    /// Visit every `(key, value)` pair.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u32)> + '_ {
+        self.keys
+            .iter()
+            .zip(self.vals.iter())
+            .filter(|(k, _)| **k != EMPTY)
+            .map(|(k, v)| (*k, *v))
+    }
+
+    /// Remove all entries, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.keys.fill(EMPTY);
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut m = FastMap::with_capacity(16);
+        m.insert(10, 1);
+        m.insert(20, 2);
+        assert_eq!(m.get(10), Some(1));
+        assert_eq!(m.get(20), Some(2));
+        assert_eq!(m.get(30), None);
+        assert_eq!(m.remove(10), Some(1));
+        assert_eq!(m.get(10), None);
+        assert_eq!(m.get(20), Some(2));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn overwrite_same_key() {
+        let mut m = FastMap::with_capacity(4);
+        m.insert(5, 1);
+        m.insert(5, 9);
+        assert_eq!(m.get(5), Some(9));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn churn_matches_std_hashmap() {
+        // Space-saving-like workload: constant evict/insert churn at a
+        // fixed population, checked against std::HashMap.
+        let mut m = FastMap::with_capacity(512);
+        let mut oracle: HashMap<u64, u32> = HashMap::new();
+        let mut rng = SplitMix64::new(11);
+        let mut population: Vec<u64> = (1..=512u64).collect();
+        for (key, v) in population.iter().zip(0u32..) {
+            m.insert(*key, v);
+            oracle.insert(*key, v);
+        }
+        for step in 0..100_000u64 {
+            let idx = rng.next_below(population.len() as u64) as usize;
+            let old = population[idx];
+            let new = 1000 + step; // fresh key
+            let val = oracle[&old];
+            assert_eq!(m.remove(old), Some(val));
+            oracle.remove(&old);
+            m.insert(new, val);
+            oracle.insert(new, val);
+            population[idx] = new;
+            if step % 8192 == 0 {
+                for k in &population {
+                    assert_eq!(m.get(*k), oracle.get(k).copied(), "key {k}");
+                }
+            }
+        }
+        assert_eq!(m.len(), oracle.len());
+        let mut got: Vec<_> = m.iter().collect();
+        got.sort_unstable();
+        let mut want: Vec<_> = oracle.iter().map(|(k, v)| (*k, *v)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn backward_shift_keeps_cluster_reachable() {
+        // Force a collision cluster by filling half the table, then delete
+        // from the middle and verify everything is still reachable.
+        let mut m = FastMap::with_capacity(32);
+        let keys: Vec<u64> = (1..=32).collect();
+        for (i, k) in keys.iter().enumerate() {
+            m.insert(*k, i as u32);
+        }
+        for k in keys.iter().step_by(3) {
+            m.remove(*k);
+        }
+        for (i, k) in keys.iter().enumerate() {
+            if (i % 3) == 0 {
+                assert_eq!(m.get(*k), None);
+            } else {
+                assert_eq!(m.get(*k), Some(i as u32), "key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut m = FastMap::with_capacity(8);
+        for k in 1..=8 {
+            m.insert(k, k as u32);
+        }
+        m.clear();
+        assert!(m.is_empty());
+        for k in 1..=8 {
+            assert_eq!(m.get(k), None);
+        }
+        m.insert(3, 7);
+        assert_eq!(m.get(3), Some(7));
+    }
+}

@@ -1,0 +1,16 @@
+//! Low-level substrates shared by every layer: deterministic RNG, fast
+//! integer hashing, and an open-addressing hash map tuned for the Space
+//! Saving hot loop.
+
+pub mod benchkit;
+pub mod fastmap;
+pub mod hash;
+pub mod json;
+pub mod rng;
+pub mod testdir;
+
+pub use fastmap::FastMap;
+pub use hash::{fib_hash32, mix64};
+pub use json::Json;
+pub use rng::SplitMix64;
+pub use testdir::TempDir;

@@ -1,0 +1,131 @@
+//! Integration: the streaming coordinator service under realistic load
+//! patterns — bursty producers, skewed shards, graceful drain — and its
+//! composition with the PJRT verification path.
+
+use pss::baselines::Exact;
+use pss::coordinator::{run_source, Coordinator, CoordinatorConfig, Routing};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::metrics::AccuracyReport;
+use pss::summary::FrequencySummary;
+use pss::util::SplitMix64;
+
+#[test]
+fn bursty_producer_with_backpressure() {
+    let cfg = CoordinatorConfig {
+        shards: 2,
+        k: 128,
+        k_majority: 128,
+        queue_depth: 2,
+        routing: Routing::RoundRobin,
+    };
+    let mut c = Coordinator::start(cfg);
+    let mut rng = SplitMix64::new(77);
+    let mut pushed = 0u64;
+    // Bursts of random sizes.
+    for _ in 0..400 {
+        let burst = 1 + rng.next_below(4000) as usize;
+        let chunk: Vec<u64> = (0..burst).map(|_| rng.next_below(500)).collect();
+        pushed += burst as u64;
+        c.push(chunk);
+    }
+    let out = c.finish();
+    assert_eq!(out.stats.items, pushed);
+    assert_eq!(out.summary.n(), pushed);
+}
+
+#[test]
+fn routing_policies_agree_on_results() {
+    let src = GeneratedSource::zipf(250_000, 10_000, 1.2, 13);
+    let mk = |routing| CoordinatorConfig {
+        shards: 4,
+        k: 256,
+        k_majority: 256,
+        queue_depth: 8,
+        routing,
+    };
+    let rr = run_source(mk(Routing::RoundRobin), &src, 4096);
+    let ll = run_source(mk(Routing::LeastLoaded), &src, 4096);
+    // Different shard assignment => possibly different f̂, but identical
+    // guarantees: same recall against exact truth.
+    let mut exact = Exact::new();
+    exact.offer_all(&src.slice(0, 250_000));
+    for out in [&rr, &ll] {
+        let acc = AccuracyReport::evaluate(&out.frequent, &exact, 256);
+        assert_eq!(acc.recall, 1.0);
+        assert_eq!(acc.precision, 1.0);
+    }
+}
+
+#[test]
+fn single_shard_equals_sequential_space_saving() {
+    let src = GeneratedSource::zipf(120_000, 3_000, 1.4, 21);
+    let out = run_source(
+        CoordinatorConfig {
+            shards: 1,
+            k: 100,
+            k_majority: 100,
+            queue_depth: 4,
+            routing: Routing::RoundRobin,
+        },
+        &src,
+        1000,
+    );
+    let mut ss = pss::summary::SpaceSaving::new(100);
+    ss.offer_all(&src.slice(0, 120_000));
+    let seq = ss.freeze().prune(120_000, 100);
+    assert_eq!(
+        out.frequent.iter().map(|c| (c.item, c.count)).collect::<Vec<_>>(),
+        seq.iter().map(|c| (c.item, c.count)).collect::<Vec<_>>(),
+    );
+}
+
+#[test]
+fn coordinator_then_pjrt_verification() {
+    // The full L3 -> artifact composition (also exercised by the
+    // e2e_pipeline example at larger scale).
+    let n = 200_000u64;
+    let src = GeneratedSource::zipf(n, 20_000, 1.1, 31);
+    let out = run_source(
+        CoordinatorConfig {
+            shards: 3,
+            k: 64,
+            k_majority: 64,
+            queue_depth: 8,
+            routing: Routing::RoundRobin,
+        },
+        &src,
+        8192,
+    );
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut v = pss::runtime::Verifier::new(&dir).expect("run `make artifacts`");
+    let items = src.slice(0, n);
+    let report = v.verify_report(&items, &out.frequent, 64).unwrap();
+
+    let mut exact = Exact::new();
+    exact.offer_all(&items);
+    let truth: Vec<u64> = exact.k_majority(64).iter().map(|c| c.item).collect();
+    let confirmed: Vec<u64> = report.confirmed.iter().map(|c| c.item).collect();
+    assert_eq!(confirmed, truth);
+}
+
+#[test]
+fn many_shards_few_items() {
+    let src = GeneratedSource::uniform(100, 10, 5);
+    let out = run_source(
+        CoordinatorConfig {
+            shards: 16,
+            k: 8,
+            k_majority: 4,
+            queue_depth: 2,
+            routing: Routing::RoundRobin,
+        },
+        &src,
+        3,
+    );
+    assert_eq!(out.stats.items, 100);
+    // Guarantee survives extreme over-sharding.
+    let mut exact = Exact::new();
+    exact.offer_all(&src.slice(0, 100));
+    let acc = AccuracyReport::evaluate(&out.frequent, &exact, 4);
+    assert_eq!(acc.recall, 1.0);
+}

@@ -1,0 +1,181 @@
+//! Integration: the reproduction harness regenerates every paper
+//! table/figure with the right *shape* (DESIGN.md §5's "what reproduced
+//! means" list). Runs at a coarse scale to stay fast; `pss repro` uses
+//! finer scales.
+
+use pss::bench_harness::run_experiment;
+
+const SCALE: u64 = 100_000_000; // tiny real streams; virtual clock unaffected
+const SEED: u64 = 1;
+
+/// Parse a grid CSV cell "runtime/speedup".
+fn cell(csv: &str, row_1based: usize, col_1based: usize) -> (f64, f64) {
+    let line = csv.lines().nth(row_1based).expect("row");
+    let cell = line.split(',').nth(col_1based).expect("col");
+    let (t, s) = cell.split_once('/').expect("t/s");
+    (t.parse().unwrap(), s.parse().unwrap())
+}
+
+#[test]
+fn every_experiment_id_runs() {
+    for e in pss::config::EXPERIMENTS {
+        if e.id == "all" {
+            continue;
+        }
+        let outs = run_experiment(e.id, SCALE, SEED).unwrap_or_else(|err| {
+            panic!("{} failed: {err}", e.id);
+        });
+        assert!(!outs.is_empty(), "{} produced nothing", e.id);
+        for o in outs {
+            assert!(!o.rendered.is_empty());
+            assert!(o.csv.lines().count() >= 2, "{}: empty csv", o.name);
+        }
+    }
+}
+
+#[test]
+fn tab2_openmp_bands() {
+    // Paper Table II: 1-core 29B ≈ 1047 s; 16-core efficiency ≥ 75%
+    // across columns, ≥ 90% for n=29B.
+    let csv = run_experiment("tab2", SCALE, SEED).unwrap()[0].csv.clone();
+    // Columns: 1..4 = n sweeps (4,8,16,29B); 5..9 = k; 10..11 = rho.
+    let (t1_29, _) = cell(&csv, 1, 4);
+    assert!((t1_29 - 1047.1).abs() / 1047.1 < 0.05, "t1(29B)={t1_29}");
+    for col in 1..=11 {
+        let (_, s16) = cell(&csv, 5, col);
+        let eff = s16 / 16.0;
+        assert!(eff > 0.70, "col {col}: 16-core efficiency {eff}");
+    }
+    let (_, s16_29) = cell(&csv, 5, 4);
+    assert!(s16_29 / 16.0 > 0.85, "29B 16-core eff {}", s16_29 / 16.0);
+    // Scalability decreases as k grows (paper: reduction cost in k):
+    let (_, s16_k500) = cell(&csv, 5, 5);
+    let (_, s16_k8000) = cell(&csv, 5, 9);
+    assert!(
+        s16_k8000 <= s16_k500 * 1.02,
+        "k=8000 speedup {s16_k8000} should not beat k=500 {s16_k500}"
+    );
+}
+
+#[test]
+fn tab3_tab4_mpi_vs_hybrid_bands() {
+    let t3 = run_experiment("tab3", SCALE, SEED).unwrap()[0].csv.clone();
+    let t4 = run_experiment("tab4", SCALE, SEED).unwrap()[0].csv.clone();
+
+    // Paper anchors: MPI 1-core 29B = 874.88 s; 512-core speedup ≈ 261
+    // (eff ~51%); hybrid 512-core speedup ≈ 363 (eff ~71%).
+    let (t1, _) = cell(&t3, 1, 4);
+    assert!((t1 - 874.88).abs() / 874.88 < 0.05, "t1={t1}");
+    let (_, s512_mpi) = cell(&t3, 6, 4);
+    let (_, s512_hyb) = cell(&t4, 6, 4);
+    assert!((200.0..320.0).contains(&s512_mpi), "mpi 512 speedup {s512_mpi}");
+    assert!(s512_hyb > s512_mpi, "hybrid {s512_hyb} !> mpi {s512_mpi}");
+    assert!(s512_hyb / 512.0 > 0.60, "hybrid eff {}", s512_hyb / 512.0);
+
+    // At 32 cores both are comparable (within 15%).
+    let (t32_mpi, _) = cell(&t3, 2, 4);
+    let (t32_hyb, _) = cell(&t4, 2, 4);
+    assert!((t32_mpi - t32_hyb).abs() / t32_mpi < 0.15);
+}
+
+#[test]
+fn fig1_are_is_tiny_everywhere() {
+    for id in ["fig1a", "fig1b", "fig1c"] {
+        let outs = run_experiment(id, SCALE, SEED).unwrap();
+        for line in outs[0].csv.lines().skip(1) {
+            for v in line.split(',').skip(1) {
+                if v.is_empty() {
+                    continue;
+                }
+                let are_1e8: f64 = v.parse().unwrap();
+                // ARE in 1e-8 units; paper plots values ~0-40. At our
+                // scaled n anything below 1e6 (= ARE 1%) is "zero-ish";
+                // assert well below that.
+                assert!(are_1e8 < 1e5, "{id}: ARE {are_1e8}e-8 too large");
+            }
+        }
+    }
+}
+
+#[test]
+fn fig2_log_log_slope_near_ideal() {
+    let outs = run_experiment("fig2b", SCALE, SEED).unwrap();
+    let csv = &outs[0].csv;
+    // For each n-column, the log-log slope between 1 and 16 cores should
+    // be close to -1 (paper: "a straight line with slope -1 indicates
+    // good scalability").
+    let rows: Vec<Vec<f64>> = csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').map(|v| v.parse().unwrap_or(f64::NAN)).collect())
+        .collect();
+    let first = &rows[0];
+    let last = rows.last().unwrap();
+    for col in 1..first.len() {
+        let slope = (last[col].ln() - first[col].ln()) / (last[0].ln() - first[0].ln());
+        assert!(
+            (-1.05..=-0.80).contains(&slope),
+            "col {col}: log-log slope {slope}"
+        );
+    }
+}
+
+#[test]
+fn fig3_overhead_monotone_in_threads_and_k() {
+    let outs = run_experiment("fig3a", SCALE, SEED).unwrap();
+    let csv = &outs[0].csv;
+    let rows: Vec<Vec<f64>> = csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').map(|v| v.parse().unwrap_or(f64::NAN)).collect())
+        .collect();
+    // Overhead rises with threads (each column)...
+    for col in 1..rows[0].len() {
+        assert!(
+            rows.last().unwrap()[col] > rows[0][col],
+            "col {col} not increasing"
+        );
+    }
+    // ...and with k at 16 threads (k columns are ordered 500..8000).
+    let last = rows.last().unwrap();
+    assert!(
+        last[5] >= last[1] * 0.9,
+        "k=8000 overhead {} vs k=500 {}",
+        last[5],
+        last[1]
+    );
+}
+
+#[test]
+fn fig4_hybrid_wins_at_scale() {
+    let outs = run_experiment("fig4", SCALE, SEED).unwrap();
+    // outs: speedup_8B, overhead_8B, speedup_29B, overhead_29B.
+    for o in &outs {
+        if !o.name.contains("speedup") {
+            continue;
+        }
+        let last = o.csv.lines().last().unwrap();
+        let vals: Vec<f64> = last.split(',').map(|v| v.parse().unwrap_or(f64::NAN)).collect();
+        let (cores, mpi, hybrid) = (vals[0], vals[1], vals[2]);
+        assert_eq!(cores, 512.0);
+        assert!(hybrid > mpi, "{}: hybrid {hybrid} !> mpi {mpi}", o.name);
+    }
+}
+
+#[test]
+fn fig6_phi_loses_at_every_socket_count() {
+    let outs = run_experiment("fig6", SCALE, SEED).unwrap();
+    assert_eq!(outs.len(), 7, "5 k-panels + 2 rho-panels");
+    for o in &outs {
+        for line in o.csv.lines().skip(1) {
+            let vals: Vec<f64> = line.split(',').map(|v| v.parse().unwrap_or(f64::NAN)).collect();
+            let ratio = vals[3];
+            assert!(
+                ratio > 1.0,
+                "{}: phi/xeon ratio {ratio} at sockets {}",
+                o.name,
+                vals[0]
+            );
+        }
+    }
+}

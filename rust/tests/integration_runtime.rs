@@ -1,0 +1,117 @@
+//! Integration: the full AOT bridge — artifacts produced by `make
+//! artifacts` are loaded by the PJRT runtime and produce exact counts
+//! identical to the rust oracle.
+//!
+//! Requires `artifacts/` (the Makefile's `test` target builds it first).
+
+use pss::baselines::Exact;
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::runtime::Verifier;
+use pss::summary::{FrequencySummary, SpaceSaving};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn verifier_counts_match_exact_oracle() {
+    let mut v = Verifier::new(&artifacts_dir()).expect("run `make artifacts` first");
+    let src = GeneratedSource::zipf(300_000, 10_000, 1.1, 7);
+    let items = src.slice(0, 300_000);
+
+    let mut exact = Exact::new();
+    exact.offer_all(&items);
+
+    let cands: Vec<u64> = (1..=64).collect();
+    let counts = v.count(&items, &cands).unwrap();
+    for (c, got) in cands.iter().zip(&counts) {
+        assert_eq!(*got, exact.count(*c), "candidate {c}");
+    }
+}
+
+#[test]
+fn verifier_handles_ragged_tails_and_absent_items() {
+    let mut v = Verifier::new(&artifacts_dir()).expect("run `make artifacts` first");
+    // 70_001 items: one 65536 chunk + ragged tail, via the 1-chunk program.
+    let items: Vec<u64> = (0..70_001u64).map(|i| i % 13).collect();
+    let cands = vec![0u64, 12, 999_999];
+    let counts = v.count(&items, &cands).unwrap();
+    let mut exact = Exact::new();
+    exact.offer_all(&items);
+    assert_eq!(counts[0], exact.count(0));
+    assert_eq!(counts[1], exact.count(12));
+    assert_eq!(counts[2], 0);
+}
+
+#[test]
+fn verify_report_prunes_false_positives() {
+    let mut v = Verifier::new(&artifacts_dir()).expect("run `make artifacts` first");
+    let src = GeneratedSource::zipf(200_000, 5_000, 1.1, 21);
+    let items = src.slice(0, 200_000);
+
+    // Deliberately small k so the summary over-reports: prune must fix it.
+    let k = 16usize;
+    let mut ss = SpaceSaving::new(k);
+    ss.offer_all(&items);
+    let reported = ss.freeze().prune(items.len() as u64, k as u64);
+
+    let report = v.verify_report(&items, &reported, k as u64).unwrap();
+    let mut exact = Exact::new();
+    exact.offer_all(&items);
+    let truth: Vec<u64> = exact.k_majority(k as u64).iter().map(|c| c.item).collect();
+    let confirmed: Vec<u64> = report.confirmed.iter().map(|c| c.item).collect();
+    assert_eq!(confirmed, truth, "confirmed set must equal exact k-majority");
+    // Exact counts in the report rows.
+    for (item, _est, f) in &report.rows {
+        assert_eq!(*f, exact.count(*item));
+    }
+    assert!(report.precision <= 1.0 && report.precision > 0.0);
+}
+
+#[test]
+fn profile_program_mass_is_preserved() {
+    let mut v = Verifier::new(&artifacts_dir()).expect("run `make artifacts` first");
+    let rt = v.runtime();
+    let entry = rt
+        .manifest()
+        .entries
+        .iter()
+        .find(|e| e.kind == pss::runtime::ArtifactKind::Profile)
+        .expect("profile artifact")
+        .clone();
+    let n = entry.chunks * entry.chunk_len;
+    let chunks: Vec<i32> = (0..n as i32).collect();
+    let hist = rt.run_profile(&entry.name, &chunks).unwrap();
+    assert_eq!(hist.len(), entry.chunks * entry.num_buckets);
+    let total: f64 = hist.iter().map(|&x| x as f64).sum();
+    assert_eq!(total as usize, n, "histogram mass must equal item count");
+    // Each chunk row sums to chunk_len.
+    for c in 0..entry.chunks {
+        let row: f64 = hist[c * entry.num_buckets..(c + 1) * entry.num_buckets]
+            .iter()
+            .map(|&x| x as f64)
+            .sum();
+        assert_eq!(row as usize, entry.chunk_len);
+    }
+}
+
+#[test]
+fn skew_profiler_detects_skew_difference() {
+    let mut p = pss::coordinator::SkewProfiler::new(&artifacts_dir())
+        .expect("run `make artifacts` first");
+    let n = 200_000u64;
+    let skewed = GeneratedSource::zipf(n, 1 << 20, 1.8, 4).slice(0, n);
+    let flat = GeneratedSource::uniform(n, 1 << 20, 4).slice(0, n);
+    let ps = p.profile(&skewed).unwrap();
+    let pf = p.profile(&flat).unwrap();
+    assert!(
+        ps.mean_entropy() < pf.mean_entropy() - 0.1,
+        "skewed entropy {} should be well below uniform {}",
+        ps.mean_entropy(),
+        pf.mean_entropy()
+    );
+    assert!(ps.mean_top_share() > pf.mean_top_share() * 5.0);
+    // Padding correction: a ragged stream must not blow up top_share.
+    let ragged = p.profile(&flat[..70_001]).unwrap();
+    assert!(ragged.mean_entropy() > 0.9, "ragged entropy {}", ragged.mean_entropy());
+}

@@ -1,0 +1,280 @@
+//! Property-based tests over the paper's invariants (DESIGN.md §6).
+//!
+//! The vendored crate set has no `proptest`, so this suite drives a
+//! seeded random-case generator (`SplitMix64`) through many trials per
+//! property; every failure message includes the seed for replay.
+
+use std::collections::{HashMap, HashSet};
+
+use pss::baselines::Exact;
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::parallel::{block_range, run_shared, tree_reduce, SummaryKind};
+use pss::summary::{FrequencySummary, SpaceSaving, StreamSummary, Summary};
+use pss::util::SplitMix64;
+
+const TRIALS: u64 = 60;
+
+/// Random stream: length, universe and mixture shape all drawn from rng.
+fn random_stream(rng: &mut SplitMix64) -> Vec<u64> {
+    let n = 500 + rng.next_below(20_000) as usize;
+    let universe = 2 + rng.next_below(5_000);
+    let heavy = 1 + rng.next_below(8);
+    let p_heavy = rng.next_f64() * 0.9;
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < p_heavy {
+                rng.next_below(heavy)
+            } else {
+                heavy + rng.next_below(universe)
+            }
+        })
+        .collect()
+}
+
+fn truth(items: &[u64]) -> HashMap<u64, u64> {
+    let mut t = HashMap::new();
+    for &i in items {
+        *t.entry(i).or_default() += 1;
+    }
+    t
+}
+
+/// Property 1+2: sequential Space Saving — mass conservation, bounded
+/// over-estimation, perfect recall. Both implementations.
+#[test]
+fn prop_sequential_invariants() {
+    for seed in 0..TRIALS {
+        let mut rng = SplitMix64::new(seed);
+        let items = random_stream(&mut rng);
+        let k = 1 + rng.next_below(256) as usize;
+        let t = truth(&items);
+        let thresh = items.len() as u64 / k as u64;
+
+        for (label, counters) in [
+            ("heap", {
+                let mut s = SpaceSaving::new(k);
+                s.offer_all(&items);
+                s.counters()
+            }),
+            ("bucket", {
+                let mut s = StreamSummary::new(k);
+                s.offer_all(&items);
+                s.counters()
+            }),
+        ] {
+            let total: u64 = counters.iter().map(|c| c.count).sum();
+            assert_eq!(total, items.len() as u64, "seed {seed} {label}: mass");
+            let monitored: HashSet<u64> = counters.iter().map(|c| c.item).collect();
+            for c in &counters {
+                let f = t.get(&c.item).copied().unwrap_or(0);
+                assert!(c.count >= f, "seed {seed} {label}: underestimate");
+                assert!(c.count - c.err <= f, "seed {seed} {label}: err bound");
+            }
+            for (item, f) in &t {
+                if *f > thresh {
+                    assert!(monitored.contains(item), "seed {seed} {label}: recall");
+                }
+            }
+        }
+    }
+}
+
+/// Property 3: combine preserves the error bound `f̂ − f ≤ m₁ + m₂` and
+/// the recall guarantee on the union.
+#[test]
+fn prop_combine_error_bound() {
+    for seed in 100..100 + TRIALS {
+        let mut rng = SplitMix64::new(seed);
+        let a = random_stream(&mut rng);
+        let b = random_stream(&mut rng);
+        let k = 2 + rng.next_below(128) as usize;
+
+        let mut sa = SpaceSaving::new(k);
+        sa.offer_all(&a);
+        let mut sb = SpaceSaving::new(k);
+        sb.offer_all(&b);
+        let (fa, fb) = (sa.freeze(), sb.freeze());
+        let bound = fa.min_count() + fb.min_count();
+        let c = fa.combine(&fb);
+
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        let t = truth(&all);
+        for ctr in c.counters() {
+            let f = t.get(&ctr.item).copied().unwrap_or(0);
+            assert!(ctr.count >= f, "seed {seed}: underestimate");
+            assert!(
+                ctr.count - f <= bound,
+                "seed {seed}: overestimate {} > m1+m2 {bound}",
+                ctr.count - f
+            );
+            assert!(ctr.count - ctr.err <= f, "seed {seed}: err bound");
+        }
+        let monitored: HashSet<u64> = c.counters().iter().map(|x| x.item).collect();
+        let thresh = all.len() as u64 / k as u64;
+        for (item, f) in &t {
+            if *f > thresh {
+                assert!(monitored.contains(item), "seed {seed}: union recall");
+            }
+        }
+    }
+}
+
+/// Property 4: the full parallel algorithm keeps recall = 1 for any
+/// thread count, and anything it reports beyond the exact k-majority
+/// set is a near-threshold item whose estimate stays within its own
+/// error bound of the threshold (the paper's 100% precision is an
+/// empirical observation on well-separated workloads, not a guarantee).
+#[test]
+fn prop_parallel_any_split_matches_sequential() {
+    for seed in 200..200 + TRIALS / 3 {
+        let mut rng = SplitMix64::new(seed);
+        let n = 20_000 + rng.next_below(50_000);
+        let k = 16 + rng.next_below(200) as usize;
+        let skew = 1.05 + rng.next_f64();
+        let src = GeneratedSource::zipf(n, 1 + n / 4, skew, seed);
+
+        let threads = 2 + rng.next_below(14) as usize;
+        let par = run_shared(&src, k, k as u64, threads, SummaryKind::Heap);
+
+        let mut exact = Exact::new();
+        exact.offer_all(&src.slice(0, n));
+        let acc = pss::metrics::AccuracyReport::evaluate(&par.frequent, &exact, k as u64);
+        assert_eq!(acc.recall, 1.0, "seed {seed} threads {threads}");
+
+        // Any reported item beyond the true k-majority set must be
+        // explicable by its error bound: f̂ - ε ≤ f ≤ thresh < f̂.
+        let thresh = n / k as u64;
+        let truth_set: HashSet<u64> =
+            exact.k_majority(k as u64).iter().map(|c| c.item).collect();
+        for c in &par.frequent {
+            if !truth_set.contains(&c.item) {
+                let f = exact.count(c.item);
+                assert!(c.count > thresh && c.count - c.err <= f,
+                    "seed {seed}: unexplained false positive {c:?} (f={f})");
+            }
+        }
+
+        // Guaranteed-prune never reports a false positive.
+        for c in par.summary.prune_guaranteed(n, k as u64) {
+            assert!(exact.count(c.item) > thresh,
+                "seed {seed}: guaranteed prune false positive {c:?}");
+        }
+    }
+}
+
+/// Property 5: the reduction guarantee is independent of tree shape —
+/// any random reduction order over the same blocks yields a summary
+/// whose monitored set still covers every global k-majority element.
+#[test]
+fn prop_reduction_order_independence_of_guarantee() {
+    for seed in 300..300 + TRIALS / 3 {
+        let mut rng = SplitMix64::new(seed);
+        let p = 2 + rng.next_below(12) as usize;
+        let k = 8 + rng.next_below(64) as usize;
+        let blocks: Vec<Vec<u64>> = (0..p).map(|_| random_stream(&mut rng)).collect();
+        let summaries: Vec<Summary> = blocks
+            .iter()
+            .map(|b| {
+                let mut s = SpaceSaving::new(k);
+                s.offer_all(b);
+                s.freeze()
+            })
+            .collect();
+
+        // Reference: the canonical tree.
+        let canonical = tree_reduce(summaries.clone());
+
+        // Random fold order.
+        let mut pool = summaries;
+        while pool.len() > 1 {
+            let i = rng.next_below(pool.len() as u64) as usize;
+            let a = pool.swap_remove(i);
+            let j = rng.next_below(pool.len() as u64) as usize;
+            let b = pool.swap_remove(j);
+            pool.push(a.combine(&b));
+        }
+        let random_order = pool.pop().unwrap();
+
+        let mut all = Vec::new();
+        for b in &blocks {
+            all.extend_from_slice(b);
+        }
+        let t = truth(&all);
+        let thresh = all.len() as u64 / k as u64;
+        for reduced in [&canonical, &random_order] {
+            assert_eq!(reduced.n(), all.len() as u64, "seed {seed}");
+            let monitored: HashSet<u64> =
+                reduced.counters().iter().map(|c| c.item).collect();
+            for (item, f) in &t {
+                if *f > thresh {
+                    assert!(monitored.contains(item), "seed {seed}: lost {item}");
+                }
+            }
+        }
+    }
+}
+
+/// Property 6 (decomposition): block ranges always cover exactly without
+/// overlap, for random (n, p).
+#[test]
+fn prop_block_partition_exact_cover() {
+    for seed in 400..400 + TRIALS * 4 {
+        let mut rng = SplitMix64::new(seed);
+        let n = rng.next_below(1 << 40);
+        let p = 1 + rng.next_below(4096);
+        let mut next = 0u64;
+        let mut min_size = u64::MAX;
+        let mut max_size = 0u64;
+        for r in 0..p {
+            let (l, rt) = block_range(n, p, r);
+            assert_eq!(l, next, "seed {seed}");
+            next = rt;
+            min_size = min_size.min(rt - l);
+            max_size = max_size.max(rt - l);
+        }
+        assert_eq!(next, n, "seed {seed}");
+        assert!(max_size - min_size <= 1, "seed {seed}: imbalance");
+    }
+}
+
+/// Property 7 (generator): streams regenerate identically under any
+/// decomposition — the property all parallel comparisons rest on.
+#[test]
+fn prop_generated_source_decomposition_independent() {
+    for seed in 500..500 + TRIALS / 6 {
+        let mut rng = SplitMix64::new(seed);
+        let n = 1_000 + rng.next_below(30_000);
+        let skew = 0.6 + rng.next_f64() * 1.4;
+        let src = GeneratedSource::zipf(n, 1 + rng.next_below(10_000), skew, seed);
+        let whole = src.slice(0, n);
+        let p = 2 + rng.next_below(9);
+        let mut rebuilt = Vec::with_capacity(n as usize);
+        for r in 0..p {
+            let (l, rt) = block_range(n, p, r);
+            rebuilt.extend(src.slice(l, rt));
+        }
+        assert_eq!(rebuilt, whole, "seed {seed} p {p}");
+    }
+}
+
+/// Property 8 (distsim sanity): simulated time is monotone — more cores
+/// never slower at fixed work; more counters never faster reduction.
+#[test]
+fn prop_simulated_time_monotone() {
+    use pss::distsim::{simulate, ClusterSpec, MachineModel, NetworkModel, SimWorkload};
+    let net = NetworkModel::qdr_infiniband();
+    for seed in 600..610 {
+        let mut rng = SplitMix64::new(seed);
+        let nb = 1 + rng.next_below(28);
+        let w = SimWorkload::paper(nb * 1_000_000_000, 2000, 1.1, 10_000_000, seed);
+        let mut last = f64::INFINITY;
+        for ranks in [1u32, 8, 64, 256] {
+            let out = simulate(&w, &ClusterSpec::mpi(MachineModel::xeon_e5_2630_v3(), ranks), &net)
+                .unwrap();
+            let t = out.total_seconds();
+            assert!(t < last, "seed {seed}: ranks={ranks} t={t} last={last}");
+            last = t;
+        }
+    }
+}
