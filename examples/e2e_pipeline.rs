@@ -67,6 +67,8 @@ fn main() -> anyhow::Result<()> {
             k_majority: k as u64,
             queue_depth: 8,
             routing: Routing::RoundRobin,
+            // Batch session (queried only at finish): no epoch publication.
+            epoch_items: 0,
         },
         &file_src,
         65_536,

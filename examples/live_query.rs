@@ -1,0 +1,98 @@
+//! Live queries over a running ingest: writers stream a zipfian
+//! workload through the sharded coordinator while readers concurrently
+//! ask for top-k, point estimates and the k-majority split — all
+//! answered from epoch snapshots, never blocking ingestion.
+//!
+//! ```text
+//! cargo run --release --example live_query
+//! ```
+
+use std::time::{Duration, Instant};
+
+use pss::coordinator::{Coordinator, CoordinatorConfig, Routing};
+use pss::gen::{GeneratedSource, ItemSource};
+
+fn main() {
+    let n = 4_000_000u64;
+    let src = GeneratedSource::zipf(n, 1 << 22, 1.1, 42);
+    let shards = std::thread::available_parallelism().map_or(4, |p| p.get().min(8));
+    let k = 500usize;
+
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards,
+        k,
+        k_majority: k as u64,
+        queue_depth: 8,
+        routing: Routing::RoundRobin,
+        epoch_items: 100_000, // publish a snapshot every 100k items/shard
+    });
+    println!("live query demo: n={n}, {shards} shards, k={k}");
+
+    let t0 = Instant::now();
+    let result = std::thread::scope(|scope| {
+        // Writer thread: the ingest path.
+        let stream = &src;
+        let writer = scope.spawn(move || {
+            let mut pos = 0u64;
+            while pos < n {
+                let take = (n - pos).min(65_536);
+                coord.push(stream.slice(pos, pos + take));
+                pos += take;
+            }
+            coord.finish()
+        });
+
+        // Reader: this thread queries while the writer ingests.
+        let mut polls = 0u32;
+        while !writer.is_finished() {
+            std::thread::sleep(Duration::from_millis(150));
+            polls += 1;
+            let snap = engine.snapshot();
+            let stats = engine.stats();
+            let top: Vec<String> = snap
+                .top_k(3)
+                .iter()
+                .map(|c| format!("{}:{}", c.item, c.count))
+                .collect();
+            println!(
+                "[{:5.2}s] epoch n={:>9} (lag {:>7} items)  ε={:>5}  top3=[{}]  p(item 1)={}",
+                t0.elapsed().as_secs_f64(),
+                snap.n(),
+                stats.staleness_items,
+                snap.epsilon(),
+                top.join(" "),
+                snap.point(1).estimate,
+            );
+            // Snapshot answers are internally consistent: coverage
+            // always equals the sum of the per-shard epochs merged.
+            let part_sum: u64 = snap.epochs().iter().map(|e| e.n).sum();
+            assert_eq!(snap.n(), part_sum);
+        }
+        println!("({polls} live polls)");
+        writer.join().expect("writer panicked")
+    });
+
+    println!(
+        "\ndrained {} items in {:.2}s ({:.1} M items/s), {} epochs published",
+        result.stats.items,
+        t0.elapsed().as_secs_f64(),
+        result.stats.items as f64 / t0.elapsed().as_secs_f64() / 1e6,
+        result.stats.epochs_published,
+    );
+
+    // After finish() the engine serves the drain-time epochs: exact
+    // coverage of the whole stream.
+    let report = engine.frequent();
+    println!(
+        "final k-majority (f̂ > n/{k}): {} guaranteed + {} possible, ε = {}",
+        report.guaranteed.len(),
+        report.possible.len(),
+        report.epsilon
+    );
+    for c in report.guaranteed.iter().take(8) {
+        println!("  item {:>8}  f̂ = {:<9} guaranteed ≥ {}", c.item, c.count, c.guaranteed());
+    }
+    let s = engine.stats();
+    println!("\nserved {} queries ({})", s.queries_served, s.query_latency);
+    assert_eq!(engine.snapshot().n(), n, "drain epochs cover the full stream");
+}

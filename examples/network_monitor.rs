@@ -37,6 +37,8 @@ fn main() {
         k_majority: 50, // report flows with > 2% of packets
         queue_depth: 16,
         routing: Routing::LeastLoaded,
+        // Batch session (queried only at finish): no epoch publication.
+        epoch_items: 0,
     };
     let mut monitor = Coordinator::start(cfg);
 

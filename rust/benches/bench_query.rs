@@ -1,0 +1,87 @@
+//! The live read path (`pss::query`): query latency and snapshot-
+//! publication overhead vs ingest throughput at 1/4/8 shards — the cost
+//! of serving reads while writing, which batch-only Algorithm 1 never
+//! pays.
+
+use pss::coordinator::{Coordinator, CoordinatorConfig, QueryResult, Routing};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::query::{EpochRegistry, QueryEngine};
+use pss::summary::{FrequencySummary, StreamSummary};
+use pss::util::benchkit::{black_box, run};
+
+const N: u64 = 1_000_000;
+const K: usize = 2000;
+const CHUNK: usize = 8_192;
+
+fn config(shards: usize, epoch_items: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        shards,
+        k: K,
+        k_majority: K as u64,
+        queue_depth: 8,
+        routing: Routing::RoundRobin,
+        epoch_items,
+    }
+}
+
+/// One full ingest session; returns the result and the live engine.
+fn session(shards: usize, epoch_items: u64, src: &GeneratedSource) -> (QueryResult, QueryEngine) {
+    let (mut c, q) = Coordinator::spawn(config(shards, epoch_items));
+    let n = src.len();
+    let mut pos = 0u64;
+    while pos < n {
+        let take = ((n - pos) as usize).min(CHUNK);
+        c.push(src.slice(pos, pos + take as u64));
+        pos += take as u64;
+    }
+    (c.finish(), q)
+}
+
+fn main() {
+    println!("# bench_query — live query engine vs ingest");
+    let src = GeneratedSource::zipf(N, 1 << 20, 1.1, 7);
+
+    // 1. Ingest throughput: epoch publication on vs off. The delta is
+    //    the write-path cost of serving live reads.
+    for &shards in &[1usize, 4, 8] {
+        run(&format!("ingest/no-epochs/shards={shards}"), Some(N as f64), || {
+            black_box(session(shards, 0, &src).0.stats.items);
+        });
+        run(
+            &format!("ingest/epochs-65536/shards={shards}"),
+            Some(N as f64),
+            || {
+                black_box(session(shards, 65_536, &src).0.stats.items);
+            },
+        );
+    }
+
+    // 2. Snapshot publication in isolation: freeze (sort k counters)
+    //    plus the Arc swap — what a shard pays per epoch.
+    let mut ss = StreamSummary::new(K);
+    ss.offer_all(&src.slice(0, 400_000));
+    let reg = EpochRegistry::new(1, K);
+    run(&format!("publish/freeze+swap/k={K}"), None, || {
+        reg.publish(0, ss.freeze(), false);
+    });
+
+    // 3. Query latency against fully-published engines: the combine
+    //    tree over `shards` snapshots plus the query itself.
+    for &shards in &[1usize, 4, 8] {
+        let (_result, q) = session(shards, 65_536, &src);
+        run(&format!("query/top10/shards={shards}"), None, || {
+            black_box(q.top_k(10));
+        });
+        run(&format!("query/point/shards={shards}"), None, || {
+            black_box(q.point(1));
+        });
+        run(&format!("query/k-majority/shards={shards}"), None, || {
+            black_box(q.frequent());
+        });
+        let stats = q.stats();
+        println!(
+            "#   shards={shards}: {} queries, latency {}",
+            stats.queries_served, stats.query_latency
+        );
+    }
+}

@@ -6,8 +6,15 @@
 //! in a sharded, backpressured ingestion service:
 //!
 //! * [`router`] — chunk routing (round-robin / least-loaded).
-//! * [`service`] — shard workers over bounded queues, `push`/`finish`
-//!   API, ingestion statistics.
+//! * [`service`] — shard workers over bounded queues, `push`/`try_push`
+//!   /`finish` API, epoch snapshot publication, ingestion statistics.
+//!
+//! [`Coordinator::spawn`](service::Coordinator::spawn) additionally
+//! returns a [`QueryEngine`](crate::query::QueryEngine) handle: shards
+//! publish epoch snapshots (every
+//! [`epoch_items`](service::CoordinatorConfig::epoch_items) items, on
+//! demand, and at drain) that the engine merges to serve live `top_k` /
+//! `point` / `threshold` queries without blocking ingestion.
 //!
 //! The offline verification pass (PJRT `verify_counts` artifact, see
 //! [`crate::runtime`]) plugs in after `finish()` to discard false
@@ -19,4 +26,6 @@ pub mod service;
 
 pub use profiler::{ChunkProfile, SkewProfiler, StreamProfile};
 pub use router::{Router, Routing};
-pub use service::{run_source, Coordinator, CoordinatorConfig, IngestStats, QueryResult};
+pub use service::{
+    run_source, Coordinator, CoordinatorConfig, IngestStats, PushError, QueryResult,
+};

@@ -1,30 +1,43 @@
 //! The streaming coordinator: sharded ingestion with bounded queues
-//! (backpressure), per-shard Space Saving, and a final combine-tree
-//! merge — Parallel Space Saving as a long-running service rather than
-//! a one-shot batch job.
+//! (backpressure), per-shard Space Saving, epoch snapshot publication
+//! for the live read path, and a final combine-tree merge — Parallel
+//! Space Saving as a long-running service rather than a one-shot batch
+//! job.
 //!
 //! Topology:
 //!
 //! ```text
-//!  push(chunk) ─▶ router ─▶ [bounded queue]─▶ shard 0: SpaceSaving
-//!                        ─▶ [bounded queue]─▶ shard 1: SpaceSaving
-//!                        ─▶      ...      ─▶ shard s: SpaceSaving
+//!  push(chunk) ─▶ router ─▶ [bounded queue]─▶ shard 0: SpaceSaving ──▶ epoch Arc ─┐
+//!                        ─▶ [bounded queue]─▶ shard 1: SpaceSaving ──▶ epoch Arc ─┼▶ QueryEngine
+//!                        ─▶      ...      ─▶ shard s: SpaceSaving ──▶ epoch Arc ─┘  (live reads)
 //!  finish() ──────────────── join ─▶ tree_reduce(combine) ─▶ prune
 //! ```
 //!
 //! Queues are `std::sync::mpsc::sync_channel`s of `queue_depth` chunks;
 //! a full queue blocks the producer (backpressure), and every such stall
-//! is counted in [`IngestStats::backpressure_events`].
+//! is counted in [`IngestStats::backpressure_events`]. The non-blocking
+//! [`Coordinator::try_push`] instead returns the chunk in a typed
+//! [`PushError`] and counts the rejection.
+//!
+//! Every `epoch_items` items (and at drain), each shard freezes its
+//! summary and swaps it into the shared [`EpochRegistry`], so
+//! [`QueryEngine`] handles returned by [`Coordinator::spawn`] serve
+//! `top_k` / `point` / `threshold` queries concurrently with ingestion.
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, RecvTimeoutError, SyncSender, TrySendError};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::gen::ItemSource;
 use crate::parallel::reduction::tree_reduce;
+use crate::query::{EpochRegistry, QueryEngine};
 use crate::summary::{Counter, FrequencySummary, StreamSummary, Summary};
 
 use super::router::{Router, Routing};
+
+/// How long an idle shard sleeps between checks for refresh requests.
+const IDLE_POLL: Duration = Duration::from_millis(20);
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -39,6 +52,11 @@ pub struct CoordinatorConfig {
     pub queue_depth: usize,
     /// Chunk routing policy.
     pub routing: Routing,
+    /// Per-shard epoch snapshot cadence, in items: a shard republishes
+    /// its summary after processing this many items since its last
+    /// publication. 0 disables count-triggered publication (snapshots
+    /// then only happen on [`QueryEngine::refresh`] and at drain).
+    pub epoch_items: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -49,6 +67,7 @@ impl Default for CoordinatorConfig {
             k_majority: 2000,
             queue_depth: 8,
             routing: Routing::RoundRobin,
+            epoch_items: 65_536,
         }
     }
 }
@@ -60,11 +79,59 @@ pub struct IngestStats {
     pub chunks: u64,
     /// Items accepted.
     pub items: u64,
-    /// Producer stalls on a full shard queue.
+    /// Producer stalls on a full shard queue (blocking `push`).
     pub backpressure_events: u64,
+    /// Chunks rejected by the non-blocking `try_push`.
+    pub rejected_chunks: u64,
+    /// Epoch snapshots published by the shards (filled at `finish`).
+    pub epochs_published: u64,
     /// Items processed per shard.
     pub per_shard_items: Vec<u64>,
 }
+
+/// Typed rejection from [`Coordinator::try_push`]: the chunk comes back
+/// so the caller can retry, reroute or drop it deliberately.
+#[derive(Debug)]
+pub enum PushError {
+    /// The routed shard's queue was full.
+    Full {
+        /// Shard whose queue rejected the chunk.
+        shard: usize,
+        /// The rejected chunk, returned to the caller.
+        chunk: Vec<u64>,
+    },
+    /// The routed shard's worker has terminated.
+    Disconnected {
+        /// Shard whose worker is gone.
+        shard: usize,
+        /// The rejected chunk, returned to the caller.
+        chunk: Vec<u64>,
+    },
+}
+
+impl PushError {
+    /// Recover the rejected chunk.
+    pub fn into_chunk(self) -> Vec<u64> {
+        match self {
+            PushError::Full { chunk, .. } | PushError::Disconnected { chunk, .. } => chunk,
+        }
+    }
+}
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Full { shard, chunk } => {
+                write!(f, "shard {shard} queue full ({} items returned)", chunk.len())
+            }
+            PushError::Disconnected { shard, chunk } => {
+                write!(f, "shard {shard} worker gone ({} items returned)", chunk.len())
+            }
+        }
+    }
+}
+
+impl std::error::Error for PushError {}
 
 /// Final result of a coordinator session.
 #[derive(Debug, Clone)]
@@ -89,50 +156,109 @@ pub struct Coordinator {
     handles: Vec<JoinHandle<(Summary, u64)>>,
     router: Router,
     stats: IngestStats,
+    engine: QueryEngine,
 }
 
 impl Coordinator {
-    /// Spawn the shard workers.
-    pub fn start(cfg: CoordinatorConfig) -> Self {
+    /// Spawn the shard workers and return the session plus a live
+    /// [`QueryEngine`] handle attached to its epoch registry. The
+    /// engine (and any clone of it) keeps answering queries during
+    /// ingestion and remains valid after [`Coordinator::finish`] —
+    /// final drain snapshots stay published.
+    pub fn spawn(cfg: CoordinatorConfig) -> (Self, QueryEngine) {
         assert!(cfg.shards >= 1 && cfg.queue_depth >= 1);
         let router = Router::new(cfg.routing, cfg.shards);
+        let registry = EpochRegistry::new(cfg.shards, cfg.k);
+        let engine = QueryEngine::new(registry.clone(), cfg.k_majority);
         let mut senders = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
         for shard in 0..cfg.shards {
             let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
             let k = cfg.k;
+            let epoch_items = cfg.epoch_items;
             let loads = router.loads.clone();
+            let registry = registry.clone();
             handles.push(std::thread::spawn(move || {
                 // Bucket-list Space Saving: O(1) amortized and ~30% faster
                 // on the eviction-heavy paths (see EXPERIMENTS.md §Perf).
                 let mut ss = StreamSummary::new(k);
                 let mut items = 0u64;
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Msg::Chunk(chunk) => {
+                let mut since_publish = 0u64;
+                let mut refresh_seen = 0u64;
+                loop {
+                    match rx.recv_timeout(IDLE_POLL) {
+                        Ok(Msg::Chunk(chunk)) => {
                             ss.offer_all(&chunk);
                             items += chunk.len() as u64;
+                            since_publish += chunk.len() as u64;
                             Router::drained(&loads, shard, chunk.len());
+                            let watermark = registry.refresh_watermark();
+                            let due = epoch_items > 0 && since_publish >= epoch_items;
+                            if due || watermark > refresh_seen {
+                                registry.publish(shard, ss.freeze(), false);
+                                since_publish = 0;
+                                refresh_seen = watermark;
+                            }
                         }
-                        Msg::Finish => break,
+                        Ok(Msg::Finish) => break,
+                        Err(RecvTimeoutError::Timeout) => {
+                            // Idle: honor on-demand refresh requests so
+                            // readers are not stuck behind a quiet shard.
+                            let watermark = registry.refresh_watermark();
+                            if watermark > refresh_seen {
+                                registry.publish(shard, ss.freeze(), false);
+                                since_publish = 0;
+                                refresh_seen = watermark;
+                            }
+                        }
+                        Err(RecvTimeoutError::Disconnected) => break,
                     }
                 }
-                (ss.freeze(), items)
+                // Drain: the final epoch covers everything this shard saw.
+                let summary = ss.freeze();
+                registry.publish(shard, summary.clone(), true);
+                (summary, items)
             }));
             senders.push(tx);
         }
-        Self {
+        let coordinator = Self {
             stats: IngestStats { per_shard_items: vec![0; cfg.shards], ..Default::default() },
             cfg,
             senders,
             handles,
             router,
-        }
+            engine: engine.clone(),
+        };
+        (coordinator, engine)
+    }
+
+    /// Spawn without keeping the query handle (batch-style sessions).
+    pub fn start(cfg: CoordinatorConfig) -> Self {
+        Self::spawn(cfg).0
     }
 
     /// Configuration in use.
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
+    }
+
+    /// A live query handle over this session's epoch snapshots (same
+    /// registry as the handle returned by [`Coordinator::spawn`]).
+    pub fn queries(&self) -> QueryEngine {
+        self.engine.clone()
+    }
+
+    /// Ingestion statistics so far (`epochs_published` is finalized by
+    /// [`Coordinator::finish`]).
+    pub fn stats(&self) -> &IngestStats {
+        &self.stats
+    }
+
+    fn account(&mut self, shard: usize, len: usize) {
+        self.stats.chunks += 1;
+        self.stats.items += len as u64;
+        self.stats.per_shard_items[shard] += len as u64;
+        self.engine.registry().add_items_routed(len as u64);
     }
 
     /// Ingest one chunk. Blocks when the target shard's queue is full
@@ -141,10 +267,8 @@ impl Coordinator {
         if chunk.is_empty() {
             return;
         }
-        let shard = self.router.route(chunk.len());
-        self.stats.chunks += 1;
-        self.stats.items += chunk.len() as u64;
-        self.stats.per_shard_items[shard] += chunk.len() as u64;
+        let len = chunk.len();
+        let shard = self.router.route(len);
         match self.senders[shard].try_send(Msg::Chunk(chunk)) {
             Ok(()) => {}
             Err(TrySendError::Full(msg)) => {
@@ -153,6 +277,39 @@ impl Coordinator {
                 self.senders[shard].send(msg).expect("shard died");
             }
             Err(TrySendError::Disconnected(_)) => panic!("shard died"),
+        }
+        self.account(shard, len);
+    }
+
+    /// Non-blocking ingest: route the chunk and enqueue it if the shard
+    /// has room, otherwise hand it straight back as a typed
+    /// [`PushError`] (counted in [`IngestStats::rejected_chunks`]).
+    /// Load-shedding callers can drop the chunk; latency-tolerant ones
+    /// retry or fall back to the blocking [`Coordinator::push`].
+    pub fn try_push(&mut self, chunk: Vec<u64>) -> Result<(), PushError> {
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        let len = chunk.len();
+        let shard = self.router.route(len);
+        match self.senders[shard].try_send(Msg::Chunk(chunk)) {
+            Ok(()) => {
+                self.account(shard, len);
+                Ok(())
+            }
+            Err(err) => {
+                // Undo the router's load accounting for the queued-items
+                // gauge; the chunk never reached the shard.
+                Router::drained(&self.router.loads, shard, len);
+                self.stats.rejected_chunks += 1;
+                Err(match err {
+                    TrySendError::Full(Msg::Chunk(chunk)) => PushError::Full { shard, chunk },
+                    TrySendError::Disconnected(Msg::Chunk(chunk)) => {
+                        PushError::Disconnected { shard, chunk }
+                    }
+                    _ => unreachable!("only chunks are try-sent"),
+                })
+            }
         }
     }
 
@@ -165,7 +322,9 @@ impl Coordinator {
             .collect()
     }
 
-    /// Drain, merge and prune.
+    /// Drain, merge and prune. The epoch registry (and every
+    /// [`QueryEngine`] handle) survives with each shard's final
+    /// snapshot published.
     pub fn finish(self) -> QueryResult {
         for tx in &self.senders {
             let _ = tx.send(Msg::Finish);
@@ -180,6 +339,7 @@ impl Coordinator {
         }
         let summary = tree_reduce(summaries);
         let frequent = summary.prune(stats.items, self.cfg.k_majority);
+        stats.epochs_published = self.engine.registry().epochs_published();
         stats.per_shard_items.shrink_to_fit();
         QueryResult { summary, frequent, stats }
     }
@@ -292,5 +452,107 @@ mod tests {
         assert_eq!(out.stats.items, 100 * 55);
         assert_eq!(out.frequent.len(), 1);
         assert_eq!(out.frequent[0].item, 7);
+    }
+
+    #[test]
+    fn spawn_returns_live_query_handle() {
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            k: 64,
+            k_majority: 8,
+            epoch_items: 100,
+            ..Default::default()
+        });
+        for _ in 0..50 {
+            c.push(vec![3; 40]);
+        }
+        // Epochs were published mid-ingest (cadence 100 items, 2000
+        // items pushed): wait for at least one to land.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while q.stats().items_published == 0 {
+            assert!(std::time::Instant::now() < deadline, "no epoch published");
+            std::thread::yield_now();
+        }
+        let snap = q.snapshot();
+        assert!(snap.n() > 0);
+        assert_eq!(snap.top_k(1)[0].item, 3);
+        let out = c.finish();
+        assert!(out.stats.epochs_published >= 2, "at least the drain epochs");
+        // After finish the engine still answers, now with full coverage.
+        let final_snap = q.snapshot();
+        assert_eq!(final_snap.n(), 2000);
+        assert_eq!(final_snap.point(3).estimate, 2000);
+        assert!(final_snap.epochs().iter().all(|e| e.finished));
+    }
+
+    #[test]
+    fn refresh_publishes_from_idle_shards() {
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            k: 16,
+            k_majority: 4,
+            epoch_items: 0, // no count-triggered publication
+            ..Default::default()
+        });
+        c.push(vec![9; 30]);
+        c.push(vec![9; 30]);
+        q.refresh();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while q.stats().items_published < 60 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "refresh did not reach idle shards: {:?}",
+                q.stats()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(q.point(9).estimate, 60);
+        c.finish();
+    }
+
+    #[test]
+    fn try_push_rejects_when_full_and_counts() {
+        let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 1,
+            k: 16,
+            k_majority: 4,
+            queue_depth: 1,
+            epoch_items: 0,
+            ..Default::default()
+        });
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        let mut rejected_items = 0u64;
+        for _ in 0..5_000 {
+            match c.try_push(vec![1; 64]) {
+                Ok(()) => accepted += 64,
+                Err(e @ PushError::Full { .. }) => {
+                    rejected += 1;
+                    let chunk = e.into_chunk();
+                    assert_eq!(chunk.len(), 64, "chunk comes back intact");
+                    rejected_items += chunk.len() as u64;
+                }
+                Err(other) => panic!("unexpected error: {other}"),
+            }
+        }
+        assert!(
+            rejected > 0,
+            "a depth-1 queue flooded with 5000 chunks must reject some"
+        );
+        assert_eq!(c.stats().rejected_chunks, rejected);
+        let out = c.finish();
+        assert_eq!(out.stats.items, accepted);
+        assert_eq!(out.stats.items + rejected_items, 5_000 * 64);
+        // Accepted mass is fully accounted by the shard summaries.
+        assert_eq!(out.summary.n(), accepted);
+    }
+
+    #[test]
+    fn try_push_empty_is_ok() {
+        let (mut c, _q) = Coordinator::spawn(CoordinatorConfig::default());
+        assert!(c.try_push(Vec::new()).is_ok());
+        let out = c.finish();
+        assert_eq!(out.stats.items, 0);
+        assert_eq!(out.stats.rejected_chunks, 0);
     }
 }

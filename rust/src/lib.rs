@@ -27,6 +27,10 @@
 //!   candidate verification; python is never on the streaming path).
 //! * [`coordinator`] — the streaming orchestrator service: sharding,
 //!   backpressure, chunk batching, end-to-end queries.
+//! * [`query`] — the live read path: shards publish epoch snapshots
+//!   behind atomically-swapped `Arc`s; the [`query::QueryEngine`]
+//!   merges them with the combine tree and serves `top_k` / `point` /
+//!   `threshold` / `stats` concurrently with ingestion.
 //! * [`config`] — TOML experiment configuration and paper presets.
 //! * [`bench_harness`] — one driver per paper table/figure.
 
@@ -41,6 +45,7 @@ pub mod hybrid;
 pub mod metrics;
 pub mod mic;
 pub mod parallel;
+pub mod query;
 pub mod runtime;
 pub mod summary;
 pub mod util;

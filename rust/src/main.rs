@@ -6,6 +6,9 @@
 //! * `run` — run the streaming coordinator over a dataset or synthetic
 //!   stream (shared-memory Parallel Space Saving), optionally verifying
 //!   candidates through the PJRT artifacts.
+//! * `query` — live-query demo: writers stream a synthetic workload
+//!   through the coordinator while this thread issues `top_k` / `point`
+//!   / `threshold` queries against the epoch snapshots.
 //! * `repro` — regenerate a paper table/figure on the calibrated
 //!   cluster simulator (`--list` shows all experiment ids).
 //! * `verify` — offline exact verification of a run's candidates via
@@ -32,6 +35,9 @@ USAGE:
   pss run      [--input <file.pssd> | --n N --skew R] [--k K] [--threads T]
                [--chunk-len C] [--queue-depth Q] [--routing rr|ll]
                [--config cfg.json] [--verify] [--artifacts DIR]
+  pss query    [--n N] [--universe U] [--skew R] [--k K] [--threads T]
+               [--chunk-len C] [--epoch-items E] [--interval-ms I]
+               [--top M] [--watch ITEM]
   pss repro    --exp <id> [--scale D] [--seed S] [--out DIR]   (or --list)
   pss verify   --input <file.pssd> [--k K] [--artifacts DIR]
   pss profile  --input <file.pssd> [--artifacts DIR]
@@ -49,6 +55,7 @@ fn main() {
     let r = match args.command.as_str() {
         "generate" => cmd_generate(&args),
         "run" => cmd_run(&args),
+        "query" => cmd_query(&args),
         "repro" => cmd_repro(&args),
         "verify" => cmd_verify(&args),
         "profile" => cmd_profile(&args),
@@ -155,6 +162,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             k_majority: cfg.k_majority,
             queue_depth: cfg.queue_depth,
             routing,
+            // Batch session: no live readers, skip epoch publication.
+            epoch_items: 0,
         },
         source.as_ref(),
         cfg.chunk_len,
@@ -193,6 +202,114 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             report.confirmed.len()
         );
     }
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    use pss::coordinator::Coordinator;
+
+    let cfg = load_config(args)?;
+    let epoch_items: u64 = args.get_or("epoch-items", 65_536).map_err(anyhow::Error::msg)?;
+    let interval_ms: u64 = args.get_or("interval-ms", 250).map_err(anyhow::Error::msg)?;
+    let top: usize = args.get_or("top", 5).map_err(anyhow::Error::msg)?;
+    let watch: Option<u64> = match args.get("watch") {
+        Some(v) => Some(v.parse().map_err(|_| anyhow::anyhow!("bad --watch item id"))?),
+        None => None,
+    };
+
+    let source: Box<dyn ItemSource> = if cfg.skew > 0.0 {
+        Box::new(GeneratedSource::zipf_mandelbrot(
+            cfg.n, cfg.universe, cfg.skew, cfg.shift, cfg.seed,
+        ))
+    } else {
+        Box::new(GeneratedSource::uniform(cfg.n, cfg.universe, cfg.seed))
+    };
+    println!(
+        "live query demo: {} items, universe={}, skew={}, {} shards, k={}, epoch={} items",
+        cfg.n, cfg.universe, cfg.skew, cfg.threads, cfg.k, epoch_items
+    );
+
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: cfg.threads,
+        k: cfg.k,
+        k_majority: cfg.k_majority,
+        queue_depth: cfg.queue_depth,
+        routing: Routing::RoundRobin,
+        epoch_items,
+    });
+
+    let t0 = std::time::Instant::now();
+    let result = std::thread::scope(|scope| {
+        let src = source.as_ref();
+        let chunk_len = cfg.chunk_len;
+        let n = src.len();
+        // Writer: stream the whole source through the coordinator.
+        let writer = scope.spawn(move || {
+            let mut pos = 0u64;
+            while pos < n {
+                let take = ((n - pos) as usize).min(chunk_len);
+                coord.push(src.slice(pos, pos + take as u64));
+                pos += take as u64;
+            }
+            coord.finish()
+        });
+
+        // Reader: poll the engine until the writer drains.
+        while !writer.is_finished() {
+            std::thread::sleep(std::time::Duration::from_millis(interval_ms));
+            let snap = engine.snapshot();
+            let stats = engine.stats();
+            let head: Vec<String> = snap
+                .top_k(top)
+                .iter()
+                .map(|c| format!("{}:{}", c.item, c.count))
+                .collect();
+            print!(
+                "[{:6.2}s] n={} ({}% of routed) ε={} top{}=[{}]",
+                t0.elapsed().as_secs_f64(),
+                snap.n(),
+                if stats.items_routed == 0 {
+                    100
+                } else {
+                    snap.n() * 100 / stats.items_routed
+                },
+                snap.epsilon(),
+                top,
+                head.join(" "),
+            );
+            if let Some(item) = watch {
+                let p = snap.point(item);
+                print!("  watch {}: f̂={} (≥{})", item, p.estimate, p.guaranteed);
+            }
+            println!();
+        }
+        writer.join().expect("writer panicked")
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    println!(
+        "drained {} items in {:.3}s ({:.1} M items/s), {} epochs published",
+        result.stats.items,
+        elapsed,
+        result.stats.items as f64 / elapsed / 1e6,
+        result.stats.epochs_published,
+    );
+    let report = engine.frequent();
+    println!(
+        "final k-majority (f̂ > n/{}): {} guaranteed, {} possible, ε={}",
+        cfg.k_majority,
+        report.guaranteed.len(),
+        report.possible.len(),
+        report.epsilon
+    );
+    for c in report.guaranteed.iter().chain(&report.possible).take(20) {
+        println!("  item {:>12}  f̂={:<12} ε≤{}", c.item, c.count, c.err);
+    }
+    let s = engine.stats();
+    println!(
+        "queries served: {} ({}), staleness at exit: {} items",
+        s.queries_served, s.query_latency, s.staleness_items
+    );
     Ok(())
 }
 

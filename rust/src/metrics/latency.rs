@@ -1,0 +1,212 @@
+//! Lock-free latency accounting for the live read path.
+//!
+//! Writers on the ingest path must never block behind readers, and
+//! readers must not serialize on each other — so the query layer records
+//! latencies into a fixed array of power-of-two nanosecond buckets
+//! updated with relaxed atomics. Quantiles come back as the upper edge
+//! of the covering bucket (≤ 2× resolution), which is plenty for the
+//! staleness / latency dashboards this feeds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log₂ buckets: bucket `i` holds durations of `i`-bit
+/// nanosecond values — bucket 0 is exactly 0 ns, bucket `i ≥ 1` covers
+/// `[2^(i-1), 2^i)` ns, and the last bucket is open-ended. 48 buckets
+/// reach ~39 hours.
+const BUCKETS: usize = 48;
+
+/// A concurrent histogram of durations with power-of-two nanosecond
+/// buckets. All methods take `&self`; recording is wait-free.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// New, empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Maximum recorded latency in nanoseconds.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Upper-edge estimate (ns) of the `q`-quantile, `q` in `[0, 1]`.
+    /// Returns 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // Upper edge of bucket i: 2^i (bucket 0 = [0,2)).
+                return 1u64 << i.min(63);
+            }
+        }
+        self.max_ns()
+    }
+
+    /// Compact snapshot for reports.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count(),
+            mean_ns: self.mean_ns(),
+            p50_ns: self.quantile_ns(0.50),
+            p99_ns: self.quantile_ns(0.99),
+            max_ns: self.max_ns(),
+        }
+    }
+}
+
+/// A point-in-time latency digest.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Samples recorded.
+    pub count: u64,
+    /// Mean, nanoseconds.
+    pub mean_ns: f64,
+    /// ~median upper bound, nanoseconds.
+    pub p50_ns: u64,
+    /// ~99th percentile upper bound, nanoseconds.
+    pub p99_ns: u64,
+    /// Maximum, nanoseconds.
+    pub max_ns: u64,
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        fn fmt_ns(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.0}ns")
+            } else if ns < 1e6 {
+                format!("{:.1}µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2}ms", ns / 1e6)
+            } else {
+                format!("{:.2}s", ns / 1e9)
+            }
+        }
+        write!(
+            f,
+            "n={} mean={} p50≤{} p99≤{} max={}",
+            self.count,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns as f64),
+            fmt_ns(self.p99_ns as f64),
+            fmt_ns(self.max_ns as f64),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn buckets_cover_powers_of_two() {
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1), 1);
+        assert_eq!(LatencyHistogram::bucket_of(2), 2);
+        assert_eq!(LatencyHistogram::bucket_of(3), 2);
+        assert_eq!(LatencyHistogram::bucket_of(1024), 11);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn mean_max_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for ns in [100u64, 100, 100, 100_000] {
+            h.record(Duration::from_nanos(ns));
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_ns() - 25_075.0).abs() < 1e-9);
+        assert_eq!(h.max_ns(), 100_000);
+        // p50 falls in the bucket containing 100 ([64,128) → edge 128).
+        assert_eq!(h.quantile_ns(0.5), 128);
+        // p100 falls in the bucket containing 100_000.
+        assert!(h.quantile_ns(1.0) >= 100_000);
+    }
+
+    #[test]
+    fn concurrent_recording_is_consistent() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..1_000u64 {
+                        h.record(Duration::from_nanos(i));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4_000);
+        assert_eq!(h.max_ns(), 999);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(3));
+        let s = h.summary();
+        assert_eq!(s.count, 1);
+        assert!(s.to_string().contains("n=1"), "{s}");
+    }
+}

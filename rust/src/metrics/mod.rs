@@ -3,12 +3,16 @@
 //! * [`accuracy`] — Average Relative Error, precision, recall.
 //! * [`timing`] — phase breakdowns and the paper's *fractional overhead*
 //!   (Figure 3): overhead time / computational time.
+//! * [`latency`] — wait-free log₂-bucket latency histogram for the live
+//!   query path (per-query latency, snapshot staleness).
 //! * [`report`] — paper-style ASCII tables and figure series (+ CSV).
 
 pub mod accuracy;
+pub mod latency;
 pub mod report;
 pub mod timing;
 
 pub use accuracy::{average_relative_error, precision, recall, AccuracyReport};
+pub use latency::{LatencyHistogram, LatencySummary};
 pub use report::{Series, Table};
 pub use timing::{fractional_overhead, PhaseTimes};

@@ -15,5 +15,5 @@ pub mod shared;
 pub mod thread_pool;
 
 pub use partition::block_range;
-pub use reduction::tree_reduce;
+pub use reduction::{tree_reduce, tree_reduce_refs};
 pub use shared::{run_shared, SharedRunResult, SummaryKind};

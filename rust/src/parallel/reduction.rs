@@ -7,6 +7,55 @@ use crate::summary::Summary;
 
 use super::thread_pool::fork_join;
 
+/// Below this leaf count the whole reduction runs inline: spawning a
+/// worker costs more than combining a handful of `k`-counter summaries,
+/// and the query read path ([`crate::query`]) calls this per query.
+const INLINE_LEAVES: usize = 32;
+
+/// [`tree_reduce`] over *borrowed* leaves — the first combine round
+/// reads straight from the borrows (no upfront clone of every input),
+/// so read paths that hold `Arc`-shared epoch snapshots (see
+/// [`crate::query`]) can run the same merge tree without copying the
+/// per-shard summaries they do not own. Only an odd leftover leaf is
+/// cloned. The pairing schedule is identical to [`tree_reduce`]'s (the
+/// exact `f̂` values are tree-shape-sensitive), but small reductions run
+/// entirely inline so a latency-critical query never pays thread-spawn
+/// overhead.
+pub fn tree_reduce_refs(leaves: &[&Summary]) -> Summary {
+    assert!(!leaves.is_empty(), "nothing to reduce");
+    if leaves.len() == 1 {
+        return leaves[0].clone();
+    }
+    let npairs = leaves.len() / 2;
+    let mut first: Vec<Summary> = if npairs > 1 && leaves.len() > INLINE_LEAVES {
+        fork_join(npairs, |w| leaves[2 * w].combine(leaves[2 * w + 1]))
+    } else {
+        (0..npairs).map(|w| leaves[2 * w].combine(leaves[2 * w + 1])).collect()
+    };
+    if leaves.len() % 2 == 1 {
+        first.push((*leaves.last().expect("non-empty")).clone());
+    }
+    if first.len() <= 1 {
+        return first.pop().expect("non-empty");
+    }
+    if first.len() <= INLINE_LEAVES {
+        // Finish inline with the same adjacent-pair schedule.
+        let mut current = first;
+        while current.len() > 1 {
+            let npairs = current.len() / 2;
+            let mut next: Vec<Summary> =
+                (0..npairs).map(|w| current[2 * w].combine(&current[2 * w + 1])).collect();
+            if current.len() % 2 == 1 {
+                next.push(current.pop().expect("odd leftover"));
+            }
+            current = next;
+        }
+        current.pop().expect("non-empty")
+    } else {
+        tree_reduce(first)
+    }
+}
+
 /// Reduce `summaries` to one with a binary combine tree.
 ///
 /// Each round pairs adjacent survivors — on the compacted vector this is
@@ -103,5 +152,24 @@ mod tests {
             (0..7).map(|i| summarize(&vec![i as u64; 10], 4)).collect();
         let r = tree_reduce(blocks);
         assert_eq!(r.n(), 70);
+    }
+
+    #[test]
+    fn refs_variant_matches_owned_tree() {
+        let mut rng = SplitMix64::new(17);
+        for p in [1usize, 2, 3, 5, 8, 9] {
+            let blocks: Vec<Summary> = (0..p)
+                .map(|_| {
+                    let items: Vec<u64> =
+                        (0..2_000).map(|_| rng.next_below(150)).collect();
+                    summarize(&items, 24)
+                })
+                .collect();
+            let want = tree_reduce(blocks.clone());
+            let refs: Vec<&Summary> = blocks.iter().collect();
+            let got = tree_reduce_refs(&refs);
+            assert_eq!(got.counters(), want.counters(), "p={p}");
+            assert_eq!(got.n(), want.n(), "p={p}");
+        }
     }
 }

@@ -1,0 +1,462 @@
+//! The live query engine: merged epoch views and the query API.
+//!
+//! A [`QueryEngine`] is a cheap-to-clone handle over the shared
+//! [`EpochRegistry`]. Every query materializes a [`MergedSnapshot`]: it
+//! collects the latest per-shard `Arc<EpochSnapshot>`s and runs the
+//! paper's combine tree ([`tree_reduce_refs`]) over the *borrowed*
+//! summaries — no copy of the per-shard counter sets, no coordination
+//! with the writers. The merged summary carries the full Space Saving
+//! guarantee for the union of the published prefixes:
+//!
+//! * no under-estimation: `f̂ ≥ f`,
+//! * bounded over-estimation: `f̂ − f ≤ ε` with `ε = n_epoch / k`,
+//! * k-majority recall: every item with `f > n_epoch / k` is monitored,
+//!
+//! where `n_epoch` is the merged snapshot's stream coverage (the sum of
+//! the per-shard published `n`s) — the epoch the answer is *about*.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::parallel::tree_reduce_refs;
+use crate::summary::{Counter, Summary};
+
+use super::epoch::{EpochRegistry, EpochSnapshot};
+
+/// A point-in-time, internally-consistent view over all shards.
+///
+/// Holding one pins the underlying per-shard snapshots (via `Arc`), so
+/// repeated queries against it are answered from identical data even
+/// while ingestion continues.
+#[derive(Debug, Clone)]
+pub struct MergedSnapshot {
+    /// The combine-tree merge of every shard's published summary.
+    merged: Summary,
+    /// The per-shard snapshots this view was built from.
+    parts: Vec<Arc<EpochSnapshot>>,
+    /// When the view was materialized.
+    taken_at: Instant,
+}
+
+/// One shard's contribution to a [`MergedSnapshot`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpochInfo {
+    /// Shard index.
+    pub shard: usize,
+    /// Publication sequence number.
+    pub epoch: u64,
+    /// Items covered by that publication.
+    pub n: u64,
+    /// Final drain-time snapshot?
+    pub finished: bool,
+}
+
+/// A frequency answer for a single item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PointEstimate {
+    /// Queried item.
+    pub item: u64,
+    /// Upper-bound estimate `f̂` (`f ≤ f̂` always). For unmonitored
+    /// items this is the merged summary's minimum count — the tightest
+    /// generic upper bound Space Saving offers.
+    pub estimate: u64,
+    /// Guaranteed lower bound (`f ≥ estimate − err`; 0 if unmonitored).
+    pub guaranteed: u64,
+    /// Whether the item held a counter in the merged summary.
+    pub monitored: bool,
+    /// Stream coverage of the answer (the epoch's `n`).
+    pub n: u64,
+}
+
+/// Result of a threshold / k-majority query, split per the paper into
+/// certainly-frequent and possibly-frequent items.
+#[derive(Debug, Clone)]
+pub struct ThresholdReport {
+    /// The absolute frequency threshold applied (`f̂ > threshold`).
+    pub threshold: u64,
+    /// Items whose *lower bound* clears the threshold — true positives,
+    /// no verification pass needed.
+    pub guaranteed: Vec<Counter>,
+    /// Items whose estimate clears the threshold but whose lower bound
+    /// does not — candidates a replayable stream could verify offline.
+    pub possible: Vec<Counter>,
+    /// Stream coverage of the answer.
+    pub n: u64,
+    /// The ε = n/k bound every estimate in this report honors.
+    pub epsilon: u64,
+}
+
+impl MergedSnapshot {
+    fn build(parts: Vec<Arc<EpochSnapshot>>) -> Self {
+        let leaves: Vec<&Summary> = parts.iter().map(|p| &p.summary).collect();
+        let merged = tree_reduce_refs(&leaves);
+        Self { merged, parts, taken_at: Instant::now() }
+    }
+
+    /// The merged summary itself.
+    pub fn summary(&self) -> &Summary {
+        &self.merged
+    }
+
+    /// Stream coverage: total items represented by this view (sum of
+    /// the per-shard published `n`s).
+    pub fn n(&self) -> u64 {
+        self.merged.n()
+    }
+
+    /// The ε = ⌊n/k⌋ over-estimation bound of this view.
+    pub fn epsilon(&self) -> u64 {
+        self.merged.epsilon()
+    }
+
+    /// Per-shard epochs this view is made of.
+    pub fn epochs(&self) -> Vec<EpochInfo> {
+        self.parts
+            .iter()
+            .map(|p| EpochInfo {
+                shard: p.shard,
+                epoch: p.epoch,
+                n: p.summary.n(),
+                finished: p.finished,
+            })
+            .collect()
+    }
+
+    /// Age of the *oldest* constituent shard snapshot.
+    pub fn staleness(&self) -> Duration {
+        self.parts
+            .iter()
+            .map(|p| self.taken_at.saturating_duration_since(p.published_at))
+            .max()
+            .unwrap_or_default()
+    }
+
+    /// Top-`m` items by estimated frequency, descending.
+    pub fn top_k(&self, m: usize) -> Vec<Counter> {
+        self.merged.top_k(m)
+    }
+
+    /// The prefix of [`MergedSnapshot::top_k`] whose order is certain.
+    pub fn top_k_guaranteed(&self, m: usize) -> Vec<Counter> {
+        self.merged.top_k_guaranteed(m)
+    }
+
+    /// Frequency estimate for one item, with its certainty bounds.
+    pub fn point(&self, item: u64) -> PointEstimate {
+        let n = self.n();
+        match self.merged.counters().iter().find(|c| c.item == item) {
+            Some(c) => PointEstimate {
+                item,
+                estimate: c.count,
+                guaranteed: c.guaranteed(),
+                monitored: true,
+                n,
+            },
+            None => PointEstimate {
+                item,
+                estimate: self.merged.min_count(),
+                guaranteed: 0,
+                monitored: false,
+                n,
+            },
+        }
+    }
+
+    /// Items above a relative threshold `phi` ∈ `[0, 1)`: `f̂ > phi·n`,
+    /// split into guaranteed and possible (`phi = 0` reports every
+    /// monitored item with a non-zero estimate).
+    pub fn threshold(&self, phi: f64) -> ThresholdReport {
+        assert!((0.0..1.0).contains(&phi), "phi must be in [0, 1)");
+        self.threshold_abs((phi * self.n() as f64).floor() as u64)
+    }
+
+    /// The paper's k-majority query: all items with `f̂ > n/k_majority`.
+    pub fn k_majority(&self, k_majority: u64) -> ThresholdReport {
+        assert!(k_majority >= 2, "k_majority must be >= 2");
+        self.threshold_abs(self.n() / k_majority)
+    }
+
+    fn threshold_abs(&self, threshold: u64) -> ThresholdReport {
+        let mut guaranteed = Vec::new();
+        let mut possible = Vec::new();
+        // Counters are ascending; walk from the top so both outputs
+        // come out descending by estimate.
+        for c in self.merged.counters().iter().rev() {
+            if c.count <= threshold {
+                break;
+            }
+            if c.guaranteed() > threshold {
+                guaranteed.push(*c);
+            } else {
+                possible.push(*c);
+            }
+        }
+        ThresholdReport {
+            threshold,
+            guaranteed,
+            possible,
+            n: self.n(),
+            epsilon: self.epsilon(),
+        }
+    }
+}
+
+/// Point-in-time engine statistics (staleness + query accounting).
+#[derive(Debug, Clone)]
+pub struct QueryEngineStats {
+    /// Per-shard epochs of the latest published snapshots.
+    pub epochs: Vec<EpochInfo>,
+    /// Items accepted by the coordinator (ingest watermark).
+    pub items_routed: u64,
+    /// Items covered by the latest published snapshots (query watermark).
+    pub items_published: u64,
+    /// `items_routed − items_published`: how far the read path lags the
+    /// write path, in items.
+    pub staleness_items: u64,
+    /// Snapshots published across all shards since spawn.
+    pub epochs_published: u64,
+    /// Queries served across all engine handles.
+    pub queries_served: u64,
+    /// Latency digest over every query served by this engine's registry.
+    pub query_latency: LatencySummary,
+}
+
+/// Cheap-to-clone handle serving live queries over the shard epochs.
+#[derive(Debug, Clone)]
+pub struct QueryEngine {
+    registry: Arc<EpochRegistry>,
+    latency: Arc<LatencyHistogram>,
+    k_majority: u64,
+}
+
+impl QueryEngine {
+    /// Attach an engine to a registry. `k_majority` parameterizes
+    /// [`QueryEngine::frequent`].
+    pub fn new(registry: Arc<EpochRegistry>, k_majority: u64) -> Self {
+        Self { registry, latency: Arc::new(LatencyHistogram::new()), k_majority }
+    }
+
+    /// The shared registry (for publishers / the coordinator).
+    pub fn registry(&self) -> &Arc<EpochRegistry> {
+        &self.registry
+    }
+
+    /// Materialize a consistent merged view of the latest shard epochs.
+    /// This is the only place merge work happens; all query sugar below
+    /// goes through it.
+    pub fn snapshot(&self) -> MergedSnapshot {
+        let t0 = Instant::now();
+        let snap = MergedSnapshot::build(self.registry.latest());
+        self.latency.record(t0.elapsed());
+        self.registry.count_query();
+        snap
+    }
+
+    /// Top-`m` most frequent items right now, descending.
+    pub fn top_k(&self, m: usize) -> Vec<Counter> {
+        self.snapshot().top_k(m)
+    }
+
+    /// Frequency estimate and bounds for one item right now.
+    pub fn point(&self, item: u64) -> PointEstimate {
+        self.snapshot().point(item)
+    }
+
+    /// Relative-threshold query (`f̂ > phi·n`) right now.
+    pub fn threshold(&self, phi: f64) -> ThresholdReport {
+        self.snapshot().threshold(phi)
+    }
+
+    /// The k-majority query at the engine's configured `k_majority`.
+    pub fn frequent(&self) -> ThresholdReport {
+        self.snapshot().k_majority(self.k_majority)
+    }
+
+    /// Ask all shards to publish fresh snapshots at their next
+    /// opportunity (next chunk or idle poll). Non-blocking; the refresh
+    /// lands asynchronously.
+    pub fn refresh(&self) -> u64 {
+        self.registry.request_refresh()
+    }
+
+    /// Staleness and throughput accounting for dashboards.
+    pub fn stats(&self) -> QueryEngineStats {
+        let parts = self.registry.latest();
+        let items_published: u64 = parts.iter().map(|p| p.summary.n()).sum();
+        let items_routed = self.registry.items_routed();
+        QueryEngineStats {
+            epochs: parts
+                .iter()
+                .map(|p| EpochInfo {
+                    shard: p.shard,
+                    epoch: p.epoch,
+                    n: p.summary.n(),
+                    finished: p.finished,
+                })
+                .collect(),
+            items_routed,
+            items_published,
+            staleness_items: items_routed.saturating_sub(items_published),
+            epochs_published: self.registry.epochs_published(),
+            queries_served: self.registry.queries_served(),
+            query_latency: self.latency.summary(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::{FrequencySummary, SpaceSaving};
+    use std::collections::HashMap;
+
+    fn summary_of(items: &[u64], k: usize) -> Summary {
+        let mut ss = SpaceSaving::new(k);
+        ss.offer_all(items);
+        ss.freeze()
+    }
+
+    fn engine(shards: usize, k: usize) -> QueryEngine {
+        QueryEngine::new(EpochRegistry::new(shards, k), k as u64)
+    }
+
+    #[test]
+    fn empty_engine_answers_empty() {
+        let e = engine(4, 16);
+        assert!(e.top_k(5).is_empty());
+        let p = e.point(42);
+        assert_eq!((p.estimate, p.guaranteed, p.monitored, p.n), (0, 0, false, 0));
+        let t = e.frequent();
+        assert!(t.guaranteed.is_empty() && t.possible.is_empty());
+        assert_eq!(e.stats().queries_served, 3);
+    }
+
+    #[test]
+    fn merged_view_unions_shards() {
+        let e = engine(2, 16);
+        e.registry().publish(0, summary_of(&[1, 1, 1, 2], 16), false);
+        e.registry().publish(1, summary_of(&[1, 3, 3], 16), false);
+
+        let snap = e.snapshot();
+        assert_eq!(snap.n(), 7);
+        // Under-full inputs merge exactly.
+        assert_eq!(snap.point(1).estimate, 4);
+        assert_eq!(snap.point(3).estimate, 2);
+        assert_eq!(snap.point(3).guaranteed, 2);
+        let top = snap.top_k(2);
+        assert_eq!(top[0].item, 1);
+        assert_eq!(
+            snap.epochs(),
+            vec![
+                EpochInfo { shard: 0, epoch: 1, n: 4, finished: false },
+                EpochInfo { shard: 1, epoch: 1, n: 3, finished: false },
+            ]
+        );
+    }
+
+    #[test]
+    fn snapshot_is_pinned_while_ingest_advances() {
+        let e = engine(1, 16);
+        e.registry().publish(0, summary_of(&[5, 5], 16), false);
+        let view = e.snapshot();
+        // A newer epoch lands...
+        e.registry().publish(0, summary_of(&[5, 5, 5, 5], 16), false);
+        // ...the pinned view still answers from its epoch.
+        assert_eq!(view.point(5).estimate, 2);
+        assert_eq!(view.n(), 2);
+        // A fresh snapshot sees the new epoch.
+        assert_eq!(e.snapshot().point(5).estimate, 4);
+    }
+
+    #[test]
+    fn point_reports_min_count_bound_for_unmonitored() {
+        // Overflow a k=2 summary so min_count > 0.
+        let e = engine(1, 2);
+        e.registry()
+            .publish(0, summary_of(&[1, 1, 1, 2, 2, 3], 2), false);
+        let p = e.point(999);
+        assert!(!p.monitored);
+        assert!(p.estimate > 0, "absent items bound by min_count");
+        assert_eq!(p.guaranteed, 0);
+    }
+
+    #[test]
+    fn threshold_splits_guaranteed_and_possible() {
+        let e = engine(1, 4);
+        let counters = vec![
+            Counter { item: 10, count: 50, err: 0 },
+            Counter { item: 20, count: 30, err: 25 },
+            Counter { item: 30, count: 10, err: 0 },
+        ];
+        e.registry()
+            .publish(0, Summary::new(4, 100, counters), false);
+        let t = e.threshold(0.2); // threshold = 20
+        assert_eq!(t.threshold, 20);
+        assert_eq!(t.guaranteed.iter().map(|c| c.item).collect::<Vec<_>>(), vec![10]);
+        assert_eq!(t.possible.iter().map(|c| c.item).collect::<Vec<_>>(), vec![20]);
+        // k-majority form agrees (100/5 = 20).
+        let km = e.snapshot().k_majority(5);
+        assert_eq!(km.threshold, 20);
+        assert_eq!(km.guaranteed.len(), 1);
+        assert_eq!(km.possible.len(), 1);
+    }
+
+    #[test]
+    fn merged_bounds_hold_against_truth() {
+        // 3 shards, skewed streams, k small enough to force evictions.
+        let k = 32;
+        let e = engine(3, k);
+        let mut all: Vec<u64> = Vec::new();
+        let mut rng = crate::util::SplitMix64::new(9);
+        for shard in 0..3 {
+            let items: Vec<u64> = (0..6_000)
+                .map(|_| {
+                    if rng.next_f64() < 0.5 {
+                        rng.next_below(6)
+                    } else {
+                        rng.next_below(2_000)
+                    }
+                })
+                .collect();
+            all.extend_from_slice(&items);
+            e.registry().publish(shard, summary_of(&items, k), false);
+        }
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &i in &all {
+            *truth.entry(i).or_default() += 1;
+        }
+        let snap = e.snapshot();
+        assert_eq!(snap.n(), all.len() as u64);
+        let eps = snap.epsilon();
+        assert_eq!(eps, all.len() as u64 / k as u64);
+        for c in snap.summary().counters() {
+            let f = truth.get(&c.item).copied().unwrap_or(0);
+            assert!(c.count >= f, "under-estimate");
+            assert!(c.count - f <= eps, "epsilon bound broken");
+            assert!(c.count - c.err <= f, "per-counter err bound broken");
+        }
+        // k-majority recall on the union.
+        let monitored: std::collections::HashSet<u64> =
+            snap.summary().counters().iter().map(|c| c.item).collect();
+        for (item, f) in &truth {
+            if *f > eps {
+                assert!(monitored.contains(item), "lost frequent item {item}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_track_staleness_and_latency() {
+        let e = engine(2, 8);
+        e.registry().add_items_routed(100);
+        e.registry().publish(0, summary_of(&[1; 40], 8), false);
+        let s = e.stats();
+        assert_eq!(s.items_routed, 100);
+        assert_eq!(s.items_published, 40);
+        assert_eq!(s.staleness_items, 60);
+        assert_eq!(s.epochs_published, 1);
+        let _ = e.top_k(1);
+        assert_eq!(e.stats().query_latency.count, 1);
+    }
+}

@@ -1,0 +1,255 @@
+//! Epoch snapshots: the immutable per-shard summaries the read path
+//! consumes.
+//!
+//! Each shard worker periodically freezes its live Space Saving
+//! structure into a [`Summary`] and *publishes* it as an
+//! [`EpochSnapshot`] by swapping the `Arc` held in its [`EpochSlot`].
+//! Readers clone the `Arc` (a refcount bump under a briefly-held lock —
+//! never the data) and work on a frozen, internally-consistent summary
+//! while the writer keeps ingesting. This is the QPOPSS-style
+//! co-design: queries never block updates, updates never mutate
+//! anything a reader can observe.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+use crate::summary::Summary;
+
+/// One published, immutable per-shard summary.
+#[derive(Debug, Clone)]
+pub struct EpochSnapshot {
+    /// Shard that published this snapshot.
+    pub shard: usize,
+    /// Per-shard publication sequence number (0 = the empty snapshot
+    /// installed at spawn; the first real publication is 1).
+    pub epoch: u64,
+    /// The frozen summary (counters ascending, `n` = items covered).
+    pub summary: Summary,
+    /// When the snapshot was published.
+    pub published_at: Instant,
+    /// Whether this is the shard's final (drain-time) snapshot.
+    pub finished: bool,
+}
+
+impl EpochSnapshot {
+    /// The initial empty snapshot every slot starts with.
+    fn initial(shard: usize, k: usize) -> Self {
+        Self {
+            shard,
+            epoch: 0,
+            summary: Summary::empty(k),
+            published_at: Instant::now(),
+            finished: false,
+        }
+    }
+}
+
+/// The atomically-swapped per-shard snapshot cell. Writers replace the
+/// `Arc` wholesale; readers clone it. The `RwLock` is held only for the
+/// pointer swap / refcount bump, never across a merge or a scan.
+#[derive(Debug)]
+pub struct EpochSlot {
+    current: RwLock<Arc<EpochSnapshot>>,
+}
+
+impl EpochSlot {
+    fn new(shard: usize, k: usize) -> Self {
+        Self { current: RwLock::new(Arc::new(EpochSnapshot::initial(shard, k))) }
+    }
+
+    /// The latest published snapshot (cheap: refcount bump).
+    pub fn load(&self) -> Arc<EpochSnapshot> {
+        self.current.read().expect("epoch slot poisoned").clone()
+    }
+
+    fn store(&self, snap: Arc<EpochSnapshot>) {
+        *self.current.write().expect("epoch slot poisoned") = snap;
+    }
+}
+
+/// Shared state between the shard workers (publishers), the coordinator
+/// (ingest accounting) and every [`QueryEngine`](super::QueryEngine)
+/// handle (readers).
+#[derive(Debug)]
+pub struct EpochRegistry {
+    slots: Vec<EpochSlot>,
+    /// Monotonic refresh-request clock; shards publish when they observe
+    /// a value newer than their last publication's request watermark.
+    refresh_requests: AtomicU64,
+    /// Total snapshots published across all shards.
+    epochs_published: AtomicU64,
+    /// Items accepted by the coordinator (routed to any shard) — the
+    /// reader-visible ingest watermark used for staleness accounting.
+    items_routed: AtomicU64,
+    /// Queries served through engines attached to this registry.
+    queries_served: AtomicU64,
+}
+
+impl EpochRegistry {
+    /// Registry for `shards` slots, each starting at the empty epoch 0
+    /// with counter budget `k`.
+    pub fn new(shards: usize, k: usize) -> Arc<Self> {
+        assert!(shards >= 1);
+        Arc::new(Self {
+            slots: (0..shards).map(|s| EpochSlot::new(s, k)).collect(),
+            refresh_requests: AtomicU64::new(0),
+            epochs_published: AtomicU64::new(0),
+            items_routed: AtomicU64::new(0),
+            queries_served: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The slot of one shard.
+    pub fn slot(&self, shard: usize) -> &EpochSlot {
+        &self.slots[shard]
+    }
+
+    /// Collect the latest snapshot of every shard. The per-shard arcs
+    /// are each individually consistent; the set is the engine's epoch
+    /// view.
+    pub fn latest(&self) -> Vec<Arc<EpochSnapshot>> {
+        self.slots.iter().map(EpochSlot::load).collect()
+    }
+
+    /// Publisher side: install shard `shard`'s next snapshot.
+    /// `finished` marks the drain-time final publication.
+    pub fn publish(&self, shard: usize, summary: Summary, finished: bool) -> u64 {
+        let slot = &self.slots[shard];
+        let epoch = slot.load().epoch + 1;
+        slot.store(Arc::new(EpochSnapshot {
+            shard,
+            epoch,
+            summary,
+            published_at: Instant::now(),
+            finished,
+        }));
+        self.epochs_published.fetch_add(1, Ordering::Relaxed);
+        epoch
+    }
+
+    /// Reader side: ask every shard to publish a fresh snapshot at its
+    /// next opportunity (chunk boundary or idle poll). Returns the new
+    /// request watermark.
+    pub fn request_refresh(&self) -> u64 {
+        self.refresh_requests.fetch_add(1, Ordering::Release) + 1
+    }
+
+    /// Publisher side: the current refresh watermark (compared against
+    /// the value observed at the shard's last publication).
+    pub fn refresh_watermark(&self) -> u64 {
+        self.refresh_requests.load(Ordering::Acquire)
+    }
+
+    /// Ingest side: account items accepted into shard queues.
+    pub fn add_items_routed(&self, items: u64) {
+        self.items_routed.fetch_add(items, Ordering::Relaxed);
+    }
+
+    /// Items accepted by the coordinator so far.
+    pub fn items_routed(&self) -> u64 {
+        self.items_routed.load(Ordering::Relaxed)
+    }
+
+    /// Total snapshots published across all shards.
+    pub fn epochs_published(&self) -> u64 {
+        self.epochs_published.load(Ordering::Relaxed)
+    }
+
+    /// Count one served query.
+    pub fn count_query(&self) {
+        self.queries_served.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Queries served so far.
+    pub fn queries_served(&self) -> u64 {
+        self.queries_served.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::{FrequencySummary, SpaceSaving};
+
+    fn summary_of(items: &[u64], k: usize) -> Summary {
+        let mut ss = SpaceSaving::new(k);
+        ss.offer_all(items);
+        ss.freeze()
+    }
+
+    #[test]
+    fn slots_start_empty_at_epoch_zero() {
+        let reg = EpochRegistry::new(3, 8);
+        for (i, snap) in reg.latest().iter().enumerate() {
+            assert_eq!(snap.shard, i);
+            assert_eq!(snap.epoch, 0);
+            assert_eq!(snap.summary.n(), 0);
+            assert!(!snap.finished);
+        }
+    }
+
+    #[test]
+    fn publish_bumps_epoch_and_swaps_snapshot() {
+        let reg = EpochRegistry::new(2, 8);
+        let old = reg.slot(1).load();
+        let e1 = reg.publish(1, summary_of(&[7, 7, 9], 8), false);
+        let e2 = reg.publish(1, summary_of(&[7, 7, 9, 9], 8), false);
+        assert_eq!((e1, e2), (1, 2));
+        // The reader's old arc still sees the old epoch (snapshot
+        // isolation); a fresh load sees the new one.
+        assert_eq!(old.epoch, 0);
+        let now = reg.slot(1).load();
+        assert_eq!(now.epoch, 2);
+        assert_eq!(now.summary.estimate(9), Some(2));
+        assert_eq!(reg.epochs_published(), 2);
+        // Shard 0 untouched.
+        assert_eq!(reg.slot(0).load().epoch, 0);
+    }
+
+    #[test]
+    fn refresh_watermark_is_monotonic() {
+        let reg = EpochRegistry::new(1, 4);
+        assert_eq!(reg.refresh_watermark(), 0);
+        assert_eq!(reg.request_refresh(), 1);
+        assert_eq!(reg.request_refresh(), 2);
+        assert_eq!(reg.refresh_watermark(), 2);
+    }
+
+    #[test]
+    fn concurrent_publish_and_load() {
+        let reg = EpochRegistry::new(1, 16);
+        std::thread::scope(|s| {
+            let r = &reg;
+            s.spawn(move || {
+                for round in 1..=200u64 {
+                    let items: Vec<u64> = (0..round).collect();
+                    r.publish(0, summary_of(&items, 16), false);
+                }
+            });
+            s.spawn(move || {
+                let mut last_epoch = 0;
+                for _ in 0..500 {
+                    let snap = r.slot(0).load();
+                    // Epochs never go backwards and n matches the
+                    // published stream prefix exactly.
+                    assert!(snap.epoch >= last_epoch);
+                    assert_eq!(snap.summary.n(), snap.epoch);
+                    last_epoch = snap.epoch;
+                }
+            });
+        });
+        let done = reg.slot(0).load();
+        assert_eq!(done.epoch, 200);
+        // Mass conservation holds on the final snapshot.
+        assert_eq!(
+            done.summary.counters().iter().map(|c| c.count).sum::<u64>(),
+            200
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! The live query layer — epoch-snapshotted concurrent reads over the
+//! streaming Space Saving shards.
+//!
+//! The paper's Algorithm 1 (and the batch [`coordinator`] API built on
+//! it) only answers queries at `finish()`. Production stream mining
+//! needs the opposite: consistent frequent-item answers *while* writers
+//! keep ingesting. Following the QPOPSS co-design (Jarlow et al.) and
+//! leaning on the mergeability of the paper's `combine` operator
+//! (Algorithm 2), the read path is:
+//!
+//! ```text
+//!  shard 0: StreamSummary ──freeze──▶ [Arc<EpochSnapshot>] ─┐ borrow
+//!  shard 1: StreamSummary ──freeze──▶ [Arc<EpochSnapshot>] ─┼─▶ tree_reduce_refs ─▶ MergedSnapshot
+//!  shard s: StreamSummary ──freeze──▶ [Arc<EpochSnapshot>] ─┘      (combine tree)    top_k / point /
+//!                                         ▲ atomic swap                              threshold / stats
+//!  writers keep ingesting ───────────────┘ (every epoch_items, or on refresh())
+//! ```
+//!
+//! * [`epoch`] — [`EpochSnapshot`], the atomically-swapped per-shard
+//!   [`EpochSlot`]s and the shared [`EpochRegistry`].
+//! * [`engine`] — [`QueryEngine`] / [`MergedSnapshot`]: `top_k(m)`,
+//!   `point(item)`, `threshold(phi)` / `k_majority(k)` with the
+//!   guaranteed-vs-possible split, and `stats()` (staleness + latency).
+//!
+//! Guarantees: a merged view over published prefixes totalling
+//! `n_epoch` items satisfies `f ≤ f̂ ≤ f + ε` with `ε = n_epoch/k`, and
+//! reports every item with `f > n_epoch/k` — the Space Saving bound,
+//! preserved by `combine` (paper §3, proof in their ref [25]).
+//! Readers never block writers: publication is an `Arc` swap, queries
+//! run on frozen summaries the writer no longer touches.
+//!
+//! [`coordinator`]: crate::coordinator
+
+pub mod engine;
+pub mod epoch;
+
+pub use engine::{
+    EpochInfo, MergedSnapshot, PointEstimate, QueryEngine, QueryEngineStats, ThresholdReport,
+};
+pub use epoch::{EpochRegistry, EpochSlot, EpochSnapshot};

@@ -14,6 +14,9 @@ use std::path::Path;
 use crate::Result;
 
 use super::artifacts::{ArtifactEntry, Manifest};
+// Offline builds use the API-compatible stub; swap for the real `xla`
+// crate (and delete this line) when the PJRT native runtime is vendored.
+use super::xla_shim as xla;
 
 /// A compiled-program cache over one PJRT CPU client.
 pub struct Runtime {

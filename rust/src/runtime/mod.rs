@@ -14,6 +14,7 @@
 pub mod artifacts;
 pub mod client;
 pub mod verifier;
+pub mod xla_shim;
 
 pub use artifacts::{ArtifactEntry, ArtifactKind, Manifest};
 pub use client::Runtime;

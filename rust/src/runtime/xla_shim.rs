@@ -1,0 +1,118 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) API surface used by
+//! [`client`](super::client).
+//!
+//! The real PJRT native runtime (`xla_extension` shared library + the
+//! `xla` crate) is not vendorable in an offline build, so this shim
+//! mirrors the exact types and signatures the client uses and fails at
+//! the earliest entry point — [`PjRtClient::cpu`] — with an actionable
+//! error. Everything downstream of a client is therefore unreachable,
+//! but still typechecks, keeping `client.rs` byte-for-byte compatible
+//! with the real crate: restoring real PJRT execution is a matter of
+//! adding the `xla` dependency and deleting the `use ... xla_shim as
+//! xla` line.
+
+use crate::Result;
+
+fn unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "PJRT native runtime unavailable: this build uses the offline xla \
+         shim (vendor the `xla` crate and the xla_extension library to \
+         enable artifact execution)"
+    )
+}
+
+/// Stub of `xla::PjRtClient`.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Always fails in the shim — there is no PJRT plugin to load.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Platform name (unreachable behind a failed [`PjRtClient::cpu`]).
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Compile a computation (unreachable in the shim).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text (unreachable in the shim).
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal inputs (unreachable in the shim).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Device-to-host transfer (unreachable in the shim).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal.
+    pub fn vec1<T>(_values: &[T]) -> Self {
+        Literal(())
+    }
+
+    /// Reshape (unreachable in the shim).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Unwrap a 1-tuple result (unreachable in the shim).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a typed vector (unreachable in the shim).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_with_actionable_error() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("PJRT native runtime unavailable"), "{err}");
+    }
+}

@@ -76,6 +76,18 @@ impl Summary {
         self.counters.iter().find(|c| c.item == item).map(|c| c.count)
     }
 
+    /// The Space Saving error bound ε = ⌊n/k⌋: no estimate in this
+    /// summary (or any combine-merge of summaries whose `n` sum to this
+    /// `n`) over-estimates its true frequency by more than this.
+    pub fn epsilon(&self) -> u64 {
+        self.n / self.k as u64
+    }
+
+    /// Whether any counter is occupied.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+    }
+
     /// Serialized size in bytes when shipped between ranks (one record is
     /// item + count + err). Used by the network model.
     pub fn wire_bytes(&self) -> u64 {

@@ -1,0 +1,310 @@
+//! Integration: the live query engine under concurrent ingestion —
+//! readers issue `top_k` / `point` / `threshold` queries against epoch
+//! snapshots while writers keep pushing, and every answer honors the
+//! Space Saving guarantee `f ≤ f̂ ≤ f + ε`, `ε = n_epoch/k`, for the
+//! epoch it covers.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use pss::coordinator::{Coordinator, CoordinatorConfig, PushError, Routing};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::query::MergedSnapshot;
+use pss::util::SplitMix64;
+
+fn truth(items: &[u64]) -> HashMap<u64, u64> {
+    let mut t = HashMap::new();
+    for &i in items {
+        *t.entry(i).or_default() += 1;
+    }
+    t
+}
+
+/// Structural invariants any merged snapshot must satisfy, with or
+/// without ground truth: coverage consistency, ordering, bounds.
+fn check_snapshot_consistency(snap: &MergedSnapshot) {
+    // The view's n is exactly the sum of the per-shard epochs merged —
+    // the answer is "about" a well-defined epoch.
+    let part_sum: u64 = snap.epochs().iter().map(|e| e.n).sum();
+    assert_eq!(snap.n(), part_sum, "n must match the published epochs");
+    // top_k comes back descending with sane bounds.
+    let top = snap.top_k(16);
+    for w in top.windows(2) {
+        assert!(w[0].count >= w[1].count, "top_k not descending");
+    }
+    for c in &top {
+        assert!(c.count <= snap.n(), "estimate above stream coverage");
+        assert!(c.err <= c.count, "guaranteed bound below zero");
+    }
+    // Point queries agree with the snapshot's own counters.
+    if let Some(c) = top.first() {
+        let p = snap.point(c.item);
+        assert!(p.monitored);
+        assert_eq!(p.estimate, c.count);
+        assert_eq!(p.n, snap.n());
+    }
+}
+
+#[test]
+fn queries_run_concurrently_with_ingestion() {
+    let n = 2_000_000u64;
+    let src = GeneratedSource::zipf(n, 100_000, 1.2, 5);
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: 4,
+        k: 256,
+        k_majority: 256,
+        queue_depth: 8,
+        routing: Routing::RoundRobin,
+        epoch_items: 50_000,
+    });
+
+    let done = AtomicBool::new(false);
+    let (result, queries_served, max_n_seen) = std::thread::scope(|scope| {
+        let stream = &src;
+        let done_ref = &done;
+        let writer = scope.spawn(move || {
+            let mut pos = 0u64;
+            while pos < n {
+                let take = (n - pos).min(8_192);
+                coord.push(stream.slice(pos, pos + take));
+                pos += take;
+            }
+            let result = coord.finish();
+            done_ref.store(true, Ordering::Release);
+            result
+        });
+
+        // Reader thread: hammer the engine until the writer drains.
+        let reader = scope.spawn(|| {
+            let mut max_n_seen = 0u64;
+            let mut served = 0u64;
+            while !done.load(Ordering::Acquire) {
+                let snap = engine.snapshot();
+                check_snapshot_consistency(&snap);
+                // Coverage never goes backwards across snapshots.
+                assert!(snap.n() >= max_n_seen, "epoch coverage regressed");
+                max_n_seen = snap.n();
+                served += 1;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            (served, max_n_seen)
+        });
+        let (served, max_n_seen) = reader.join().expect("reader panicked");
+        let result = writer.join().expect("writer panicked");
+        (result, served, max_n_seen)
+    });
+    assert_eq!(result.stats.items, n);
+    assert!(queries_served > 0, "reader must have run during ingestion");
+    assert!(
+        max_n_seen > 0,
+        "mid-ingest snapshots must have observed published epochs"
+    );
+    assert!(result.stats.epochs_published > 4, "cadence epochs expected");
+
+    // After drain the engine covers the whole stream; check the full
+    // guarantee against exact truth.
+    let snap = engine.snapshot();
+    assert_eq!(snap.n(), n);
+    let t = truth(&src.slice(0, n));
+    let eps = snap.epsilon();
+    for c in snap.summary().counters() {
+        let f = t.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f, "under-estimate of {}", c.item);
+        assert!(c.count - f <= eps, "ε bound broken for {}", c.item);
+    }
+    let monitored: HashSet<u64> = snap.summary().counters().iter().map(|c| c.item).collect();
+    for (item, f) in &t {
+        if f * 256 > n {
+            assert!(monitored.contains(item), "lost frequent item {item}");
+        }
+    }
+}
+
+#[test]
+fn mid_ingest_answers_match_published_epoch_prefix() {
+    // Single shard with epoch cadence == chunk size: every published
+    // epoch covers an exact, known stream prefix, so mid-ingest answers
+    // can be checked against ground truth of that prefix.
+    let n = 300_000u64;
+    let chunk = 10_000u64;
+    let src = GeneratedSource::zipf(n, 5_000, 1.3, 11);
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: 1,
+        k: 128,
+        k_majority: 128,
+        queue_depth: 4,
+        routing: Routing::RoundRobin,
+        epoch_items: chunk,
+    });
+
+    std::thread::scope(|scope| {
+        let stream = &src;
+        let writer = scope.spawn(move || {
+            let mut pos = 0u64;
+            while pos < n {
+                coord.push(stream.slice(pos, pos + chunk));
+                pos += chunk;
+            }
+            coord.finish()
+        });
+
+        let mut checked = 0u32;
+        loop {
+            let finished = writer.is_finished();
+            let snap = engine.snapshot();
+            // Publication only happens at chunk boundaries here, so the
+            // answer's n must be a published-epoch coverage, and the
+            // snapshot equals a Space Saving run over that exact prefix.
+            assert_eq!(
+                snap.n() % chunk,
+                0,
+                "answer n={} is not a published epoch",
+                snap.n()
+            );
+            if snap.n() > 0 {
+                let prefix = src.slice(0, snap.n());
+                let t = truth(&prefix);
+                let eps = snap.epsilon();
+                for c in snap.summary().counters() {
+                    let f = t.get(&c.item).copied().unwrap_or(0);
+                    assert!(c.count >= f, "under-estimate at epoch n={}", snap.n());
+                    assert!(c.count - f <= eps, "ε bound broken at epoch n={}", snap.n());
+                    assert!(c.count - c.err <= f, "err bound broken at epoch n={}", snap.n());
+                }
+                checked += 1;
+            }
+            if finished {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(checked > 0, "must have verified at least one live epoch");
+        let result = writer.join().expect("writer panicked");
+        assert_eq!(result.stats.items, n);
+        // Final epoch covers everything.
+        assert_eq!(engine.snapshot().n(), n);
+    });
+}
+
+#[test]
+fn threshold_split_is_sound_on_live_engine() {
+    let n = 500_000u64;
+    let src = GeneratedSource::zipf(n, 50_000, 1.5, 23);
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: 3,
+        k: 64,
+        k_majority: 64,
+        queue_depth: 8,
+        routing: Routing::RoundRobin,
+        epoch_items: 20_000,
+    });
+    let mut pos = 0u64;
+    while pos < n {
+        let take = (n - pos).min(4_096);
+        coord.push(src.slice(pos, pos + take));
+        pos += take;
+    }
+    let result = coord.finish();
+    assert_eq!(result.stats.items, n);
+
+    let t = truth(&src.slice(0, n));
+    let report = engine.frequent();
+    assert_eq!(report.n, n);
+    // Guaranteed items are true positives — no verification needed.
+    for c in &report.guaranteed {
+        let f = t.get(&c.item).copied().unwrap_or(0);
+        assert!(
+            f > report.threshold,
+            "guaranteed item {} is a false positive (f={f})",
+            c.item
+        );
+    }
+    // The split is exhaustive over the engine's own answer set and the
+    // threshold() form at phi = 1/k agrees with k_majority().
+    let alt = engine.threshold(1.0 / 64.0);
+    assert_eq!(alt.threshold, report.threshold);
+    assert_eq!(alt.guaranteed.len(), report.guaranteed.len());
+    assert_eq!(alt.possible.len(), report.possible.len());
+    // Every truly frequent item appears in guaranteed ∪ possible.
+    let answered: HashSet<u64> = report
+        .guaranteed
+        .iter()
+        .chain(&report.possible)
+        .map(|c| c.item)
+        .collect();
+    for (item, f) in &t {
+        if *f > report.threshold {
+            assert!(answered.contains(item), "missed frequent item {item}");
+        }
+    }
+}
+
+#[test]
+fn try_push_load_shedding_keeps_engine_consistent() {
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        k: 64,
+        k_majority: 8,
+        queue_depth: 1,
+        routing: Routing::RoundRobin,
+        epoch_items: 1_000,
+    });
+    let mut rng = SplitMix64::new(3);
+    let mut accepted_items = 0u64;
+    let mut rejected_chunks = 0u64;
+    for _ in 0..3_000 {
+        let chunk: Vec<u64> = (0..200).map(|_| rng.next_below(40)).collect();
+        match coord.try_push(chunk) {
+            Ok(()) => accepted_items += 200,
+            Err(e) => {
+                assert!(matches!(e, PushError::Full { .. }));
+                assert_eq!(e.into_chunk().len(), 200);
+                rejected_chunks += 1;
+            }
+        }
+    }
+    assert_eq!(coord.stats().rejected_chunks, rejected_chunks);
+    let result = coord.finish();
+    // Accepted mass is fully accounted; rejected chunks left no trace.
+    assert_eq!(result.stats.items, accepted_items);
+    assert_eq!(result.summary.n(), accepted_items);
+    assert_eq!(engine.snapshot().n(), accepted_items);
+    assert_eq!(result.stats.rejected_chunks, rejected_chunks);
+}
+
+#[test]
+fn staleness_accounting_tracks_refresh() {
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        k: 32,
+        k_majority: 4,
+        queue_depth: 8,
+        routing: Routing::RoundRobin,
+        epoch_items: 0, // publication only on refresh/drain
+    });
+    for _ in 0..10 {
+        coord.push(vec![1; 100]);
+    }
+    // All routed; with cadence disabled snapshots lag until refreshes
+    // land. A refresh can race a shard mid-queue (publishing a partial
+    // prefix), so keep requesting until staleness drains — the final
+    // refresh is guaranteed to catch quiesced shards on an idle poll.
+    let s = engine.stats();
+    assert_eq!(s.items_routed, 1_000);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        engine.refresh();
+        std::thread::sleep(Duration::from_millis(5));
+        if engine.stats().staleness_items == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "refresh never drained staleness");
+    }
+    let s = engine.stats();
+    assert_eq!(s.items_published, 1_000);
+    assert!(s.epochs_published >= 1);
+    let _ = engine.top_k(1);
+    assert!(engine.stats().queries_served >= 1);
+    coord.finish();
+}

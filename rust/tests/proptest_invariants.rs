@@ -8,7 +8,7 @@ use std::collections::{HashMap, HashSet};
 
 use pss::baselines::Exact;
 use pss::gen::{GeneratedSource, ItemSource};
-use pss::parallel::{block_range, run_shared, tree_reduce, SummaryKind};
+use pss::parallel::{block_range, run_shared, tree_reduce, tree_reduce_refs, SummaryKind};
 use pss::summary::{FrequencySummary, SpaceSaving, StreamSummary, Summary};
 use pss::util::SplitMix64;
 
@@ -255,6 +255,72 @@ fn prop_generated_source_decomposition_independent() {
             rebuilt.extend(src.slice(l, rt));
         }
         assert_eq!(rebuilt, whole, "seed {seed} p {p}");
+    }
+}
+
+/// Property 9 (live query engine): merging per-shard *epoch snapshots*
+/// — frozen mid-stream prefixes, the read path of `pss::query` — never
+/// under-estimates a true count and respects the Space Saving bound
+/// `f̂ − f ≤ ⌊n_epoch/k⌋` with recall 1 on the covered prefix, for any
+/// shard count, any chunk interleaving and any epoch cut point.
+#[test]
+fn prop_epoch_snapshot_merge_bounds() {
+    for seed in 700..700 + TRIALS / 3 {
+        let mut rng = SplitMix64::new(seed);
+        let stream = random_stream(&mut rng);
+        let shards = 1 + rng.next_below(6) as usize;
+        let k = 8 + rng.next_below(100) as usize;
+        // A random epoch cut: shards have ingested exactly this prefix.
+        let cut = 1 + rng.next_below(stream.len() as u64) as usize;
+        let chunk = 1 + rng.next_below(512) as usize;
+
+        // Deal chunks round-robin to the shard summaries (the
+        // coordinator's routing), then freeze each shard — exactly what
+        // epoch publication does.
+        let mut workers: Vec<StreamSummary> =
+            (0..shards).map(|_| StreamSummary::new(k)).collect();
+        for (i, block) in stream[..cut].chunks(chunk).enumerate() {
+            workers[i % shards].offer_all(block);
+        }
+        let snapshots: Vec<Summary> = workers.iter().map(|w| w.freeze()).collect();
+        let leaves: Vec<&Summary> = snapshots.iter().collect();
+        let merged = tree_reduce_refs(&leaves);
+
+        let n_epoch = cut as u64;
+        assert_eq!(merged.n(), n_epoch, "seed {seed}: coverage mismatch");
+        let eps = n_epoch / k as u64;
+        assert_eq!(merged.epsilon(), eps, "seed {seed}");
+
+        let t = truth(&stream[..cut]);
+        for c in merged.counters() {
+            let f = t.get(&c.item).copied().unwrap_or(0);
+            assert!(
+                c.count >= f,
+                "seed {seed}: epoch merge under-estimates item {}",
+                c.item
+            );
+            assert!(
+                c.count - f <= eps,
+                "seed {seed}: ε=n/k bound broken: item {} f̂={} f={f} ε={eps}",
+                c.item,
+                c.count
+            );
+            assert!(
+                c.count - c.err <= f,
+                "seed {seed}: per-counter err bound broken on item {}",
+                c.item
+            );
+        }
+        // Recall over the epoch: anything with f > n_epoch/k is present.
+        let monitored: HashSet<u64> = merged.counters().iter().map(|c| c.item).collect();
+        for (item, f) in &t {
+            if *f * k as u64 > n_epoch {
+                assert!(
+                    monitored.contains(item),
+                    "seed {seed}: lost frequent item {item} (f={f})"
+                );
+            }
+        }
     }
 }
 

@@ -1,0 +1,194 @@
+//! Minimal vendored shim of the `anyhow` error-handling API.
+//!
+//! The build must work fully offline (no crates.io access), so instead
+//! of the real crate this shim provides exactly the surface `pss` uses:
+//!
+//! * [`Error`] — an opaque boxed error with source-chain `Display`,
+//! * [`Result`] — `Result<T, Error>` with a default type parameter,
+//! * [`Error::msg`] — build an error from any `Display` value,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros,
+//! * `impl From<E> for Error` for every `std::error::Error` type, so
+//!   `?` works unchanged.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` itself — that is what makes the blanket `From`
+//! possible. Swapping the real `anyhow` back in is a one-line change in
+//! the workspace manifest.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a boxed `std::error::Error` with ergonomic
+/// construction and a chain-printing `Debug`.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Adapter that turns any `Display` message into a `std::error::Error`.
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Create an error from a printable message (the `anyhow::Error::msg`
+    /// entry point used with `map_err`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { inner: Box::new(error) }
+    }
+
+    /// The lowest-level cause in the source chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = self.inner.as_ref();
+        while let Some(src) = cur.source() {
+            cur = src;
+        }
+        cur
+    }
+
+    /// Iterate the source chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self.inner.as_ref()) }
+    }
+}
+
+/// Iterator over an error's source chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures work
+/// because the literal token originates at the call site).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `$cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u64> {
+            let r: std::result::Result<u64, std::io::Error> = Err(io_err());
+            let v = r?;
+            Ok(v)
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn msg_and_macros() {
+        let x = 3;
+        let e = anyhow!("bad value {x} at {}", 7);
+        assert_eq!(e.to_string(), "bad value 3 at 7");
+        assert_eq!(Error::msg("plain").to_string(), "plain");
+
+        fn g(ok: bool) -> Result<u32> {
+            ensure!(ok, "flag was {ok}");
+            bail!("unreachable {}", 1);
+        }
+        assert_eq!(g(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(g(true).unwrap_err().to_string(), "unreachable 1");
+    }
+
+    #[test]
+    fn debug_prints_chain() {
+        let e = Error::new(io_err());
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("disk on fire"));
+    }
+}
