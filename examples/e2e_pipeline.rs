@@ -69,9 +69,12 @@ fn main() -> anyhow::Result<()> {
             routing: Routing::RoundRobin,
             // Batch session (queried only at finish): no epoch publication.
             epoch_items: 0,
+            batch_ingest: true,
         },
         &file_src,
-        65_536,
+        // L2-resident chunks for the batched scratch map (16384 at the
+        // default 1 MiB L2 assumption).
+        pss::parallel::batch_chunk_len_default(),
     );
     let ingest_s = t1.elapsed().as_secs_f64();
     println!(

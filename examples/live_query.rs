@@ -25,6 +25,7 @@ fn main() {
         queue_depth: 8,
         routing: Routing::RoundRobin,
         epoch_items: 100_000, // publish a snapshot every 100k items/shard
+        batch_ingest: true,   // pre-aggregate chunks into weighted runs
     });
     println!("live query demo: n={n}, {shards} shards, k={k}");
 

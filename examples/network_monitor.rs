@@ -39,6 +39,9 @@ fn main() {
         routing: Routing::LeastLoaded,
         // Batch session (queried only at finish): no epoch publication.
         epoch_items: 0,
+        // NIC batches are heavily duplicated (elephant flows): the
+        // batched path collapses each drain into per-flow runs.
+        batch_ingest: true,
     };
     let mut monitor = Coordinator::start(cfg);
 

@@ -21,12 +21,17 @@ fn config(shards: usize, epoch_items: u64) -> CoordinatorConfig {
         queue_depth: 8,
         routing: Routing::RoundRobin,
         epoch_items,
+        batch_ingest: true,
     }
 }
 
 /// One full ingest session; returns the result and the live engine.
 fn session(shards: usize, epoch_items: u64, src: &GeneratedSource) -> (QueryResult, QueryEngine) {
-    let (mut c, q) = Coordinator::spawn(config(shards, epoch_items));
+    session_cfg(config(shards, epoch_items), src)
+}
+
+fn session_cfg(cfg: CoordinatorConfig, src: &GeneratedSource) -> (QueryResult, QueryEngine) {
+    let (mut c, q) = Coordinator::spawn(cfg);
     let n = src.len();
     let mut pos = 0u64;
     while pos < n {
@@ -52,6 +57,21 @@ fn main() {
             Some(N as f64),
             || {
                 black_box(session(shards, 65_536, &src).0.stats.items);
+            },
+        );
+    }
+
+    // 1b. Ingest throughput: batched pre-aggregation vs per-item
+    //     updates, with live epoch publication on (see bench_ingest for
+    //     the full workload sweep).
+    for &batch in &[false, true] {
+        let label = if batch { "batched" } else { "per-item" };
+        run(
+            &format!("ingest/epochs-65536/4-shards/{label}"),
+            Some(N as f64),
+            || {
+                let cfg = CoordinatorConfig { batch_ingest: batch, ..config(4, 65_536) };
+                black_box(session_cfg(cfg, &src).0.stats.items);
             },
         );
     }

@@ -29,6 +29,10 @@ pub struct RunConfig {
     pub chunk_len: usize,
     /// Bounded queue depth (chunks) per shard.
     pub queue_depth: usize,
+    /// Route chunks through the batched ingest fast path (per-chunk
+    /// pre-aggregation + weighted updates). Same error guarantees as
+    /// per-item ingestion; off reproduces exact per-item sequences.
+    pub batch_ingest: bool,
     /// Run the PJRT offline verification afterwards.
     pub verify: bool,
 }
@@ -44,8 +48,11 @@ impl Default for RunConfig {
             k: 2000,
             k_majority: 2000,
             threads: 4,
-            chunk_len: 65_536,
+            // Sized so the batched-ingest scratch map stays L2-resident
+            // (see parallel::batch_chunk_len).
+            chunk_len: crate::parallel::batch_chunk_len_default(),
             queue_depth: 8,
+            batch_ingest: true,
             verify: false,
         }
     }
@@ -69,6 +76,7 @@ impl RunConfig {
         if let Some(v) = get_u("threads") { c.threads = v as usize; }
         if let Some(v) = get_u("chunk_len") { c.chunk_len = v as usize; }
         if let Some(v) = get_u("queue_depth") { c.queue_depth = v as usize; }
+        if let Some(v) = j.get("batch_ingest").and_then(|v| v.as_bool()) { c.batch_ingest = v; }
         if let Some(v) = j.get("verify").and_then(|v| v.as_bool()) { c.verify = v; }
         c.validate()?;
         Ok(c)
@@ -91,9 +99,10 @@ impl RunConfig {
         format!(
             "{{\"n\": {}, \"universe\": {}, \"skew\": {}, \"shift\": {}, \"seed\": {},\n \
               \"k\": {}, \"k_majority\": {}, \"threads\": {}, \"chunk_len\": {},\n \
-              \"queue_depth\": {}, \"verify\": {}}}",
+              \"queue_depth\": {}, \"batch_ingest\": {}, \"verify\": {}}}",
             self.n, self.universe, self.skew, self.shift, self.seed, self.k,
-            self.k_majority, self.threads, self.chunk_len, self.queue_depth, self.verify
+            self.k_majority, self.threads, self.chunk_len, self.queue_depth,
+            self.batch_ingest, self.verify
         )
     }
 }
@@ -150,6 +159,19 @@ mod tests {
         assert_eq!(c.n, 5000);
         assert_eq!(c.skew, 1.8);
         assert_eq!(c.k, RunConfig::default().k);
+    }
+
+    #[test]
+    fn batch_ingest_defaults_on_and_parses() {
+        assert!(RunConfig::default().batch_ingest);
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        std::fs::write(&p, r#"{"batch_ingest": false}"#).unwrap();
+        let c = RunConfig::from_json_file(&p).unwrap();
+        assert!(!c.batch_ingest);
+        // And it survives the serialize/parse roundtrip.
+        std::fs::write(&p, c.to_json()).unwrap();
+        assert!(!RunConfig::from_json_file(&p).unwrap().batch_ingest);
     }
 
     #[test]

@@ -13,6 +13,12 @@
 //!  finish() ──────────────── join ─▶ tree_reduce(combine) ─▶ prune
 //! ```
 //!
+//! With [`CoordinatorConfig::batch_ingest`] on (the default) each shard
+//! first collapses an incoming chunk into `(item, weight)` runs with a
+//! reusable scratch map and applies weighted Space Saving updates — one
+//! summary touch per distinct item instead of per occurrence (see
+//! [`crate::summary::batch`]).
+//!
 //! Queues are `std::sync::mpsc::sync_channel`s of `queue_depth` chunks;
 //! a full queue blocks the producer (backpressure), and every such stall
 //! is counted in [`IngestStats::backpressure_events`]. The non-blocking
@@ -32,6 +38,7 @@ use std::time::Duration;
 use crate::gen::ItemSource;
 use crate::parallel::reduction::tree_reduce;
 use crate::query::{EpochRegistry, QueryEngine};
+use crate::summary::batch::{offer_batched, ChunkAggregator};
 use crate::summary::{Counter, FrequencySummary, StreamSummary, Summary};
 
 use super::router::{Router, Routing};
@@ -57,6 +64,15 @@ pub struct CoordinatorConfig {
     /// publication. 0 disables count-triggered publication (snapshots
     /// then only happen on [`QueryEngine::refresh`] and at drain).
     pub epoch_items: u64,
+    /// Route chunks through the batched ingest fast path (default on):
+    /// each shard pre-aggregates a chunk into `(item, weight)` runs
+    /// with a reusable [`ChunkAggregator`] and applies one weighted
+    /// Space Saving update per *distinct* item instead of one per
+    /// occurrence. Identical error guarantees (`f ≤ f̂ ≤ f + n/k`,
+    /// full recall above `n/k`) — individual estimates may differ
+    /// within those bounds from per-item ingestion. Turn off to
+    /// reproduce exact per-item update sequences.
+    pub batch_ingest: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -68,6 +84,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 8,
             routing: Routing::RoundRobin,
             epoch_items: 65_536,
+            batch_ingest: true,
         }
     }
 }
@@ -176,19 +193,26 @@ impl Coordinator {
             let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
             let k = cfg.k;
             let epoch_items = cfg.epoch_items;
+            let batch_ingest = cfg.batch_ingest;
             let loads = router.loads.clone();
             let registry = registry.clone();
             handles.push(std::thread::spawn(move || {
                 // Bucket-list Space Saving: O(1) amortized and ~30% faster
                 // on the eviction-heavy paths (see EXPERIMENTS.md §Perf).
                 let mut ss = StreamSummary::new(k);
+                // Scratch for the batched fast path, reused across chunks
+                // so the steady state allocates nothing.
+                let mut scratch = batch_ingest.then(ChunkAggregator::new);
                 let mut items = 0u64;
                 let mut since_publish = 0u64;
                 let mut refresh_seen = 0u64;
                 loop {
                     match rx.recv_timeout(IDLE_POLL) {
                         Ok(Msg::Chunk(chunk)) => {
-                            ss.offer_all(&chunk);
+                            match scratch.as_mut() {
+                                Some(agg) => offer_batched(&mut ss, agg, &chunk),
+                                None => ss.offer_all(&chunk),
+                            }
                             items += chunk.len() as u64;
                             since_publish += chunk.len() as u64;
                             Router::drained(&loads, shard, chunk.len());
@@ -373,7 +397,15 @@ mod tests {
     #[test]
     fn coordinator_matches_batch_guarantees() {
         let src = GeneratedSource::zipf(120_000, 4_000, 1.1, 33);
-        let cfg = CoordinatorConfig { shards: 4, k: 256, k_majority: 256, ..Default::default() };
+        // Per-item path: seed-exact behavior (the batched path has its
+        // own guarantee test below).
+        let cfg = CoordinatorConfig {
+            shards: 4,
+            k: 256,
+            k_majority: 256,
+            batch_ingest: false,
+            ..Default::default()
+        };
         let out = run_source(cfg, &src, 4096);
         assert_eq!(out.stats.items, 120_000);
 
@@ -545,6 +577,50 @@ mod tests {
         assert_eq!(out.stats.items + rejected_items, 5_000 * 64);
         // Accepted mass is fully accounted by the shard summaries.
         assert_eq!(out.summary.n(), accepted);
+    }
+
+    #[test]
+    fn batched_and_per_item_paths_account_identically() {
+        // Same stream through both write paths: identical item/chunk
+        // accounting, identical total mass, and both honor the
+        // guarantee (recall 1 against exact truth).
+        let src = GeneratedSource::zipf(80_000, 2_000, 1.3, 9);
+        let mut exact = Exact::new();
+        exact.offer_all(&src.slice(0, 80_000));
+        for batch_ingest in [false, true] {
+            let cfg = CoordinatorConfig {
+                shards: 3,
+                k: 128,
+                k_majority: 128,
+                batch_ingest,
+                ..Default::default()
+            };
+            let out = run_source(cfg, &src, 4096);
+            assert_eq!(out.stats.items, 80_000, "batch={batch_ingest}");
+            assert_eq!(out.summary.n(), 80_000, "batch={batch_ingest}");
+            let acc = AccuracyReport::evaluate(&out.frequent, &exact, 128);
+            assert_eq!(acc.recall, 1.0, "batch={batch_ingest}");
+        }
+    }
+
+    #[test]
+    fn batched_ingest_single_heavy_item_is_exact() {
+        // A chunk of one repeated item is the best case for the batch
+        // path: one run, one weighted update, exact count.
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            k: 16,
+            k_majority: 4,
+            ..Default::default()
+        });
+        assert!(c.config().batch_ingest, "batched path is the default");
+        for _ in 0..200 {
+            c.push(vec![11; 64]);
+        }
+        let out = c.finish();
+        assert_eq!(out.stats.items, 200 * 64);
+        assert_eq!(q.point(11).estimate, 200 * 64);
+        assert_eq!(q.point(11).guaranteed, 200 * 64);
     }
 
     #[test]

@@ -34,9 +34,11 @@ USAGE:
   pss generate --out <file.pssd> [--n N] [--universe U] [--skew R] [--seed S]
   pss run      [--input <file.pssd> | --n N --skew R] [--k K] [--threads T]
                [--chunk-len C] [--queue-depth Q] [--routing rr|ll]
-               [--config cfg.json] [--verify] [--artifacts DIR]
+               [--batch-ingest true|false] [--config cfg.json]
+               [--verify] [--artifacts DIR]
   pss query    [--n N] [--universe U] [--skew R] [--k K] [--threads T]
-               [--chunk-len C] [--epoch-items E] [--interval-ms I]
+               [--chunk-len C] [--batch-ingest true|false]
+               [--epoch-items E] [--interval-ms I]
                [--top M] [--watch ITEM]
   pss repro    --exp <id> [--scale D] [--seed S] [--out DIR]   (or --list)
   pss verify   --input <file.pssd> [--k K] [--artifacts DIR]
@@ -117,6 +119,7 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
     if let Some(v) = args.get("threads") { cfg.threads = v.parse()?; }
     if let Some(v) = args.get("chunk-len") { cfg.chunk_len = v.parse()?; }
     if let Some(v) = args.get("queue-depth") { cfg.queue_depth = v.parse()?; }
+    if let Some(v) = args.get("batch-ingest") { cfg.batch_ingest = v.parse()?; }
     if args.has("verify") { cfg.verify = true; }
     cfg.validate()?;
     Ok(cfg)
@@ -164,6 +167,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             routing,
             // Batch session: no live readers, skip epoch publication.
             epoch_items: 0,
+            batch_ingest: cfg.batch_ingest,
         },
         source.as_ref(),
         cfg.chunk_len,
@@ -171,11 +175,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let elapsed = t0.elapsed().as_secs_f64();
 
     println!(
-        "processed {} items in {:.3}s ({:.1} M items/s) over {} shards ({} backpressure stalls)",
+        "processed {} items in {:.3}s ({:.1} M items/s) over {} shards, {} ingest ({} backpressure stalls)",
         result.stats.items,
         elapsed,
         result.stats.items as f64 / elapsed / 1e6,
         cfg.threads,
+        if cfg.batch_ingest { "batched" } else { "per-item" },
         result.stats.backpressure_events,
     );
     println!(
@@ -236,6 +241,7 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         queue_depth: cfg.queue_depth,
         routing: Routing::RoundRobin,
         epoch_items,
+        batch_ingest: cfg.batch_ingest,
     });
 
     let t0 = std::time::Instant::now();

@@ -6,6 +6,40 @@
 //! updated with relaxed atomics. Quantiles come back as the upper edge
 //! of the covering bucket (≤ 2× resolution), which is plenty for the
 //! staleness / latency dashboards this feeds.
+//!
+//! Two lag signals matter on the live read path, and they are reported
+//! separately:
+//!
+//! * **query latency** — wall time to materialize a merged snapshot and
+//!   answer; every [`QueryEngine::snapshot`] records one sample into
+//!   the engine's [`LatencyHistogram`], digested as
+//!   [`QueryEngineStats::query_latency`] ([`LatencySummary`]).
+//! * **staleness** — how far the answers trail ingestion:
+//!   `staleness_items` (items routed minus items covered by published
+//!   epochs) and [`MergedSnapshot::staleness`] (age of the oldest
+//!   constituent shard snapshot). Staleness is epoch-protocol lag and
+//!   shrinks with `epoch_items` / `refresh()`, not with faster queries.
+//!
+//! Recording is wait-free (a handful of relaxed atomic adds), so the
+//! histogram can sit on any hot path; `mean`/`max` are exact while
+//! quantiles are bucket-resolution, e.g.:
+//!
+//! ```
+//! use pss::metrics::LatencyHistogram;
+//! use std::time::Duration;
+//!
+//! let h = LatencyHistogram::new();
+//! h.record(Duration::from_micros(3));
+//! h.record(Duration::from_micros(90));
+//! let s = h.summary();
+//! assert_eq!(s.count, 2);
+//! assert_eq!(s.max_ns, 90_000);
+//! assert!(s.p99_ns >= 90_000, "quantiles report a covering upper edge");
+//! ```
+//!
+//! [`QueryEngine::snapshot`]: crate::query::QueryEngine::snapshot
+//! [`MergedSnapshot::staleness`]: crate::query::MergedSnapshot::staleness
+//! [`QueryEngineStats::query_latency`]: crate::query::QueryEngineStats
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;

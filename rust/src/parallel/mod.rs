@@ -1,7 +1,8 @@
 //! The shared-memory ("OpenMP") Parallel Space Saving algorithm —
 //! paper **Algorithm 1** with the user-defined reduction of §3.
 //!
-//! * [`partition`] — the block domain decomposition (lines 3–4).
+//! * [`partition`] — the block domain decomposition (lines 3–4) and the
+//!   batched-ingest chunk-size heuristic.
 //! * [`thread_pool`] — scoped-thread fork/join, the stand-in for an
 //!   OpenMP parallel region.
 //! * [`reduction`] — pairwise tree reduction with the `combine` operator,
@@ -14,6 +15,6 @@ pub mod reduction;
 pub mod shared;
 pub mod thread_pool;
 
-pub use partition::block_range;
+pub use partition::{batch_chunk_len, batch_chunk_len_default, block_range};
 pub use reduction::{tree_reduce, tree_reduce_refs};
 pub use shared::{run_shared, SharedRunResult, SummaryKind};

@@ -1,6 +1,43 @@
 //! Block domain decomposition — paper Algorithm 1 lines 3–4:
 //! `left = ⌊r·n/p⌋`, `right = ⌊(r+1)·n/p⌋ − 1`, so every worker holds
-//! either `⌊n/p⌋` or `⌈n/p⌉` elements.
+//! either `⌊n/p⌋` or `⌈n/p⌉` elements — plus the chunk-size heuristic
+//! for the batched ingest path ([`batch_chunk_len`]).
+
+/// Bytes per scratch-map entry: `FastMap` stores a `u64` key plus a
+/// `u32` value per slot.
+const SCRATCH_ENTRY_BYTES: usize = 12;
+
+/// L2 size assumed when the caller has no better number (1 MiB — the
+/// low end of current server cores; Skylake-SP onward ship 1–2 MiB).
+const DEFAULT_L2_BYTES: usize = 1 << 20;
+
+/// Chunk length tuned for the batched-ingest scratch map
+/// ([`ChunkAggregator`]): the largest power-of-two chunk whose
+/// worst-case (all-distinct) scratch footprint stays within *half* an
+/// L2 of `l2_bytes` — the other half is left for the summary's own
+/// counters and the streamed chunk itself.
+///
+/// The scratch map keeps a ≤50% load factor, so a chunk of `c` items
+/// allocates `2·c` slots of 12 bytes; solving `24·c ≤ l2/2` and
+/// rounding down to a power of two gives 16384 for the 1 MiB default.
+/// Larger chunks would still be *correct* (the scratch grows on
+/// demand) but start missing L2 on high-entropy streams, which is
+/// exactly where the pre-aggregation pass must stay cheap.
+///
+/// [`ChunkAggregator`]: crate::summary::ChunkAggregator
+pub fn batch_chunk_len(l2_bytes: usize) -> usize {
+    let budget = (l2_bytes / 2).max(128 * SCRATCH_ENTRY_BYTES);
+    // Largest len with 2·len slots fitting the budget.
+    let max_len = budget / (2 * SCRATCH_ENTRY_BYTES);
+    let floor_pow2 = (max_len + 1).next_power_of_two() / 2;
+    floor_pow2.max(64)
+}
+
+/// [`batch_chunk_len`] at the default L2 assumption: the chunk length
+/// `CoordinatorConfig`/`RunConfig` default to when batched ingest is on.
+pub fn batch_chunk_len_default() -> usize {
+    batch_chunk_len(DEFAULT_L2_BYTES)
+}
 
 /// Half-open range `[left, right)` of worker `r` among `p` over `n` items.
 ///
@@ -47,6 +84,28 @@ mod tests {
             assert!(max - min <= 1);
             assert_eq!(min, n / p);
         }
+    }
+
+    #[test]
+    fn batch_chunk_len_fits_budget_and_is_pow2() {
+        for &l2 in &[1usize << 18, 1 << 19, 1 << 20, 1 << 21, 2_500_000] {
+            let len = batch_chunk_len(l2);
+            assert!(len.is_power_of_two(), "l2={l2}: len {len} not a power of two");
+            // Worst-case scratch footprint (2·len slots, 12 B each) fits
+            // the half-L2 budget.
+            assert!(
+                len * 2 * SCRATCH_ENTRY_BYTES <= (l2 / 2).max(128 * SCRATCH_ENTRY_BYTES),
+                "l2={l2}: len {len} blows the scratch budget"
+            );
+            // Doubling would not fit (the heuristic is maximal).
+            assert!(
+                len * 4 * SCRATCH_ENTRY_BYTES > l2 / 2 || len == 64,
+                "l2={l2}: len {len} is not maximal"
+            );
+        }
+        // Degenerate tiny "L2" still yields a usable floor.
+        assert!(batch_chunk_len(0) >= 64);
+        assert_eq!(batch_chunk_len_default(), batch_chunk_len(1 << 20));
     }
 
     #[test]

@@ -254,6 +254,32 @@ impl QueryEngine {
     }
 
     /// Top-`m` most frequent items right now, descending.
+    ///
+    /// Convenience for `self.snapshot().top_k(m)`; take an explicit
+    /// [`QueryEngine::snapshot`] instead when several queries must see
+    /// the same epoch.
+    ///
+    /// # Example
+    ///
+    /// Publish one shard epoch by hand and query it (the coordinator
+    /// normally does the publishing — see [`crate::coordinator::Coordinator::spawn`]):
+    ///
+    /// ```
+    /// use pss::query::{EpochRegistry, QueryEngine};
+    /// use pss::summary::{FrequencySummary, SpaceSaving};
+    ///
+    /// let registry = EpochRegistry::new(1, 8);
+    /// let engine = QueryEngine::new(registry.clone(), 8);
+    ///
+    /// let mut shard = SpaceSaving::new(8);
+    /// shard.offer_all(&[7, 7, 7, 2, 2, 5]);
+    /// registry.publish(0, shard.freeze(), false);
+    ///
+    /// let top = engine.top_k(2);
+    /// assert_eq!(top[0].item, 7);
+    /// assert_eq!(top[0].count, 3);
+    /// assert_eq!(top[1].item, 2);
+    /// ```
     pub fn top_k(&self, m: usize) -> Vec<Counter> {
         self.snapshot().top_k(m)
     }

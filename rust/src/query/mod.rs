@@ -22,12 +22,28 @@
 //!   `point(item)`, `threshold(phi)` / `k_majority(k)` with the
 //!   guaranteed-vs-possible split, and `stats()` (staleness + latency).
 //!
+//! The epoch-snapshot protocol, writer side then reader side:
+//!
+//! 1. every shard owns a private live summary no reader ever touches;
+//! 2. after `epoch_items` ingested items — or when it observes a
+//!    [`QueryEngine::refresh`] watermark newer than its last
+//!    publication, or at drain — the shard freezes the summary
+//!    (`freeze()`: sort + copy of ≤ k counters) and swaps the resulting
+//!    immutable `Arc<EpochSnapshot>` into its [`EpochSlot`];
+//! 3. a query clones the latest `Arc` of every slot (refcount bumps,
+//!    no data copies) and combine-merges the borrowed summaries into a
+//!    [`MergedSnapshot`] — a pinned, internally-consistent view that
+//!    stays valid however far ingestion advances.
+//!
 //! Guarantees: a merged view over published prefixes totalling
 //! `n_epoch` items satisfies `f ≤ f̂ ≤ f + ε` with `ε = n_epoch/k`, and
 //! reports every item with `f > n_epoch/k` — the Space Saving bound,
 //! preserved by `combine` (paper §3, proof in their ref [25]).
 //! Readers never block writers: publication is an `Arc` swap, queries
-//! run on frozen summaries the writer no longer touches.
+//! run on frozen summaries the writer no longer touches. Answers trail
+//! ingestion by at most the unpublished tails (`staleness_items` in
+//! [`QueryEngineStats`]); query cost itself is tracked by the wait-free
+//! histograms in [`crate::metrics::latency`].
 //!
 //! [`coordinator`]: crate::coordinator
 

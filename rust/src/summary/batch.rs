@@ -1,0 +1,275 @@
+//! Batched ingest fast path: collapse each incoming chunk into
+//! `(item, weight)` runs with a small open-addressing scratch map, then
+//! apply weighted Space Saving updates — **one summary touch per
+//! distinct item** in the chunk instead of one per occurrence.
+//!
+//! Motivation (QPOPSS, arXiv:2409.01749): on skewed streams most of a
+//! chunk is duplicates of a few hot items, and the per-item update loop
+//! pays the summary's hash probe plus heap/bucket maintenance for every
+//! one of them. Counting duplicates locally first turns a run of `w`
+//! occurrences into a single [`FrequencySummary::offer_weighted`] call:
+//!
+//! * monitored item — one counter bump of `+w` (one probe, one
+//!   heap/bucket fix-up) instead of `w`;
+//! * unmonitored item — one min-eviction amortized across the whole run
+//!   instead of an eviction followed by `w − 1` increments.
+//!
+//! The scratch probe is a single multiply-shift hash into an
+//! L2-resident table ([`FastMap`]), far cheaper than a summary update,
+//! so the pass pays for itself at even modest duplication. Chunk sizes
+//! should keep the scratch map cache-resident — see
+//! [`batch_chunk_len`](crate::parallel::partition::batch_chunk_len).
+//!
+//! Error bounds are preserved: each weighted update grows the summary
+//! mass by exactly `w`, adoption inherits `err = min` exactly as the
+//! per-item rule does, and `f̂ − err` counts only real occurrences.
+//! Batched and per-item ingestion of the same stream therefore yield
+//! summaries honoring the same `f ≤ f̂ ≤ f + n/k` guarantee (the
+//! `prop_batched_ingest_guarantees_match_per_item` property test drives
+//! both paths over identical random streams); the individual estimates
+//! may differ within those bounds, since a run moves its whole weight
+//! through one eviction decision.
+
+use super::traits::FrequencySummary;
+use crate::util::FastMap;
+
+/// Reusable per-chunk pre-aggregation scratch: an open-addressing
+/// `item -> run index` map plus the `(item, weight)` run list, both
+/// recycled across chunks so the steady state allocates nothing.
+///
+/// Sizing: [`FastMap`] keeps a ≤50% load factor, so the scratch is
+/// provisioned for the worst case of an all-distinct chunk. A chunk
+/// larger than the current capacity triggers a one-time rebuild at the
+/// next power of two; once chunks get small again the scratch shrinks
+/// back (never below the configured floor), keeping the per-chunk
+/// reset cost proportional to the chunks actually flowing, not the
+/// largest one ever seen.
+#[derive(Debug)]
+pub struct ChunkAggregator {
+    /// item -> index into `runs` (cleared per chunk).
+    index: FastMap,
+    /// `(item, weight)` runs in first-occurrence order.
+    runs: Vec<(u64, u64)>,
+    /// Distinct-entry budget `index` is sized for.
+    capacity: usize,
+    /// Configured floor: the scratch never shrinks below this.
+    min_capacity: usize,
+}
+
+impl Default for ChunkAggregator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChunkAggregator {
+    /// Scratch sized for moderate chunks; grows on demand.
+    pub fn new() -> Self {
+        Self::with_capacity(1024)
+    }
+
+    /// Scratch sized for chunks of up to `chunk_len` items without a
+    /// rebuild (also the floor it never shrinks below).
+    pub fn with_capacity(chunk_len: usize) -> Self {
+        let capacity = chunk_len.max(16);
+        Self {
+            index: FastMap::with_capacity(capacity),
+            runs: Vec::with_capacity(capacity),
+            capacity,
+            min_capacity: capacity,
+        }
+    }
+
+    /// Distinct-item budget the scratch map is currently sized for.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Collapse `chunk` into `(item, weight)` runs, preserving
+    /// first-occurrence order. The returned slice is valid until the
+    /// next call; weights always sum to `chunk.len()`.
+    pub fn aggregate(&mut self, chunk: &[u64]) -> &[(u64, u64)] {
+        self.runs.clear();
+        // Clearing refills the map's whole slot array, so the reset cost
+        // tracks `capacity`, not the chunk at hand: grow for oversized
+        // chunks, but also shrink back (with 8× hysteresis, never below
+        // the configured floor) so one huge chunk does not tax every
+        // later one with a full clear of a grossly over-provisioned map.
+        let fit = chunk.len().max(self.min_capacity).next_power_of_two();
+        if chunk.len() > self.capacity {
+            // Worst case is all-distinct; rebuild once at the next power
+            // of two rather than rehashing incrementally mid-chunk.
+            self.capacity = fit;
+            self.index = FastMap::with_capacity(self.capacity);
+        } else if self.capacity > fit.saturating_mul(8) {
+            self.capacity = fit;
+            self.index = FastMap::with_capacity(self.capacity);
+            self.runs.shrink_to(self.capacity);
+        } else if !self.index.is_empty() {
+            self.index.clear();
+        }
+        // Software pipelining as in `offer_all`: hash a few items ahead
+        // so the probe line is in L1 by the time `get` needs it.
+        const AHEAD: usize = 8;
+        for i in 0..chunk.len() {
+            if let Some(&next) = chunk.get(i + AHEAD) {
+                self.index.prefetch(next);
+            }
+            let item = chunk[i];
+            match self.index.get(item) {
+                Some(r) => self.runs[r as usize].1 += 1,
+                None => {
+                    self.index.insert(item, self.runs.len() as u32);
+                    self.runs.push((item, 1));
+                }
+            }
+        }
+        &self.runs
+    }
+}
+
+/// Ingest one chunk through the batched fast path: pre-aggregate into
+/// runs with `scratch`, then apply one weighted update per distinct
+/// item. Equivalent in guarantees (not in exact estimates) to
+/// `summary.offer_all(chunk)`; `summary.processed()` advances by
+/// exactly `chunk.len()`.
+pub fn offer_batched<S: FrequencySummary>(
+    summary: &mut S,
+    scratch: &mut ChunkAggregator,
+    chunk: &[u64],
+) {
+    for &(item, weight) in scratch.aggregate(chunk) {
+        summary.offer_weighted(item, weight);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::{SpaceSaving, StreamSummary};
+    use crate::util::SplitMix64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn runs_match_exact_counts_in_first_occurrence_order() {
+        let chunk = [5u64, 1, 5, 2, 1, 5, 9];
+        let mut agg = ChunkAggregator::new();
+        let runs = agg.aggregate(&chunk);
+        assert_eq!(runs, &[(5, 3), (1, 2), (2, 1), (9, 1)]);
+    }
+
+    #[test]
+    fn weights_sum_to_chunk_len_on_random_chunks() {
+        let mut rng = SplitMix64::new(41);
+        let mut agg = ChunkAggregator::with_capacity(64);
+        for trial in 0..200 {
+            let len = rng.next_below(3_000) as usize;
+            let universe = 1 + rng.next_below(500);
+            let chunk: Vec<u64> = (0..len).map(|_| rng.next_below(universe)).collect();
+            let mut oracle: HashMap<u64, u64> = HashMap::new();
+            for &it in &chunk {
+                *oracle.entry(it).or_default() += 1;
+            }
+            let runs = agg.aggregate(&chunk);
+            assert_eq!(runs.len(), oracle.len(), "trial {trial}: distinct count");
+            let total: u64 = runs.iter().map(|&(_, w)| w).sum();
+            assert_eq!(total, len as u64, "trial {trial}: mass");
+            for &(item, w) in runs {
+                assert_eq!(oracle.get(&item), Some(&w), "trial {trial}: item {item}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_grows_then_shrinks_back_to_floor() {
+        let mut agg = ChunkAggregator::with_capacity(16);
+        assert!(agg.capacity() >= 16);
+        // All-distinct chunk far beyond the initial budget forces growth.
+        let big: Vec<u64> = (0..10_000).collect();
+        assert_eq!(agg.aggregate(&big).len(), 10_000);
+        assert!(agg.capacity() >= 10_000);
+        // A small follow-up chunk shrinks the scratch back toward the
+        // floor — one oversized chunk must not tax every later reset.
+        assert_eq!(agg.aggregate(&[3, 3, 3]), &[(3, 3)]);
+        assert!(agg.capacity() < 10_000);
+        assert!(agg.capacity() >= 16);
+        assert_eq!(agg.aggregate(&[]), &[] as &[(u64, u64)]);
+        // A scratch provisioned for big chunks honors its floor: small
+        // chunks never shrink it below the configured capacity.
+        let mut wide = ChunkAggregator::with_capacity(8_192);
+        wide.aggregate(&big);
+        wide.aggregate(&[1, 2, 1]);
+        assert!(wide.capacity() >= 8_192);
+        assert_eq!(wide.aggregate(&big).len(), 10_000, "still correct after resizes");
+    }
+
+    #[test]
+    fn batched_is_exact_while_under_capacity() {
+        // With spare counters throughout, batched and per-item are both
+        // exact, so their estimates agree exactly.
+        let mut rng = SplitMix64::new(42);
+        let items: Vec<u64> = (0..5_000).map(|_| rng.next_below(50)).collect();
+        let mut per_item = SpaceSaving::new(64);
+        per_item.offer_all(&items);
+        let mut batched = SpaceSaving::new(64);
+        let mut agg = ChunkAggregator::new();
+        for chunk in items.chunks(333) {
+            offer_batched(&mut batched, &mut agg, chunk);
+        }
+        assert_eq!(batched.processed(), per_item.processed());
+        for item in 0..50u64 {
+            assert_eq!(batched.estimate(item), per_item.estimate(item), "item {item}");
+        }
+    }
+
+    #[test]
+    fn batched_preserves_invariants_under_eviction_churn() {
+        // Overflowing both structures: check the full Space Saving
+        // guarantee for the batched path against exact truth.
+        let mut rng = SplitMix64::new(43);
+        let items: Vec<u64> = (0..40_000)
+            .map(|_| {
+                if rng.next_f64() < 0.7 {
+                    rng.next_below(10)
+                } else {
+                    100 + rng.next_below(30_000)
+                }
+            })
+            .collect();
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &it in &items {
+            *truth.entry(it).or_default() += 1;
+        }
+        let k = 64usize;
+        let n = items.len() as u64;
+
+        let mut heap = SpaceSaving::new(k);
+        let mut bucket = StreamSummary::new(k);
+        let mut agg = ChunkAggregator::with_capacity(1000);
+        for chunk in items.chunks(1000) {
+            offer_batched(&mut heap, &mut agg, chunk);
+            offer_batched(&mut bucket, &mut agg, chunk);
+        }
+        for (label, counters, processed) in [
+            ("heap", heap.counters(), heap.processed()),
+            ("bucket", bucket.counters(), bucket.processed()),
+        ] {
+            assert_eq!(processed, n, "{label}: n");
+            let total: u64 = counters.iter().map(|c| c.count).sum();
+            assert_eq!(total, n, "{label}: mass");
+            for c in &counters {
+                let f = truth.get(&c.item).copied().unwrap_or(0);
+                assert!(c.count >= f, "{label}: under-estimate of {}", c.item);
+                assert!(c.count - c.err <= f, "{label}: err bound of {}", c.item);
+            }
+            let thresh = n / k as u64;
+            let monitored: std::collections::HashSet<u64> =
+                counters.iter().map(|c| c.item).collect();
+            for (item, f) in &truth {
+                if *f > thresh {
+                    assert!(monitored.contains(item), "{label}: lost {item} (f={f})");
+                }
+            }
+        }
+    }
+}

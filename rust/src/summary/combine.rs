@@ -79,6 +79,21 @@ impl Summary {
     /// The Space Saving error bound ε = ⌊n/k⌋: no estimate in this
     /// summary (or any combine-merge of summaries whose `n` sum to this
     /// `n`) over-estimates its true frequency by more than this.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use pss::summary::{FrequencySummary, SpaceSaving};
+    ///
+    /// // 100 items through k = 10 counters: ε = ⌊100/10⌋ = 10, so for
+    /// // every monitored item  f ≤ f̂ ≤ f + 10.
+    /// let mut ss = SpaceSaving::new(10);
+    /// let items: Vec<u64> = (0..100).map(|i| i % 25).collect();
+    /// ss.offer_all(&items);
+    /// let summary = ss.freeze();
+    /// assert_eq!(summary.epsilon(), 10);
+    /// assert!(summary.counters().iter().all(|c| c.err <= summary.epsilon()));
+    /// ```
     pub fn epsilon(&self) -> u64 {
         self.n / self.k as u64
     }

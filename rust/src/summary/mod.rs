@@ -7,16 +7,22 @@
 //!   amortized per item. Ablation target (`bench_space_saving`).
 //! * [`Summary`] — the frozen, frequency-sorted summary value that ranks
 //!   and threads exchange; [`Summary::combine`] is paper Algorithm 2.
+//! * [`batch`] — the batched ingest fast path: [`ChunkAggregator`]
+//!   collapses a chunk into `(item, weight)` runs and [`offer_batched`]
+//!   applies them as weighted updates, one summary touch per distinct
+//!   item.
 //!
 //! Both live implementations share the [`FrequencySummary`] trait so the
 //! parallel layers are generic over the structure used per worker.
 
+pub mod batch;
 pub mod combine;
 pub mod counter;
 pub mod space_saving;
 pub mod stream_summary;
 pub mod traits;
 
+pub use batch::{offer_batched, ChunkAggregator};
 pub use combine::Summary;
 pub use counter::Counter;
 pub use space_saving::SpaceSaving;

@@ -111,26 +111,35 @@ impl FrequencySummary for SpaceSaving {
 
     #[inline]
     fn offer(&mut self, item: u64) {
-        self.n += 1;
+        self.offer_weighted(item, 1);
+    }
+
+    #[inline]
+    fn offer_weighted(&mut self, item: u64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        self.n += weight;
         if let Some(slot) = self.map.get(item) {
-            // Monitored: increment and re-heapify downward.
-            self.slots[slot as usize].count += 1;
+            // Monitored: add the whole run and re-heapify downward.
+            self.slots[slot as usize].count += weight;
             self.sift_down(self.pos[slot as usize] as usize);
         } else if self.slots.len() < self.k {
-            // Spare counter available: adopt with f̂ = 1.
+            // Spare counter available: adopt with f̂ = weight exactly.
             let slot = self.slots.len() as u32;
-            self.slots.push(Counter { item, count: 1, err: 0 });
+            self.slots.push(Counter { item, count: weight, err: 0 });
             self.heap.push(slot);
             self.pos.push((self.heap.len() - 1) as u32);
             self.map.insert(item, slot);
             self.sift_up(self.heap.len() - 1);
         } else {
-            // Evict the minimum: new item inherits min+1 with err = min.
+            // One eviction amortized over the run: the new item inherits
+            // min+weight with err = min.
             let slot = self.heap[0];
             let c = &mut self.slots[slot as usize];
             let evicted = c.item;
             c.err = c.count;
-            c.count += 1;
+            c.count += weight;
             c.item = item;
             self.map.remove(evicted);
             self.map.insert(item, slot);
@@ -245,6 +254,43 @@ mod tests {
         assert_eq!(ss.min_count(), 1);
         ss.offer_all(&[3, 3]);
         assert_eq!(ss.min_count(), 2);
+    }
+
+    #[test]
+    fn weighted_updates_match_replayed_offers_when_monitored() {
+        // While an item stays monitored (or capacity is spare), a
+        // weighted update is exactly `weight` replayed offers.
+        let mut a = SpaceSaving::new(8);
+        let mut b = SpaceSaving::new(8);
+        for (item, w) in [(1u64, 5u64), (2, 3), (1, 4), (3, 1)] {
+            a.offer_weighted(item, w);
+            for _ in 0..w {
+                b.offer(item);
+            }
+        }
+        assert_eq!(a.processed(), b.processed());
+        for item in [1u64, 2, 3] {
+            assert_eq!(a.estimate(item), b.estimate(item), "item {item}");
+        }
+        // Zero weight is a no-op.
+        a.offer_weighted(9, 0);
+        assert_eq!(a.processed(), 13);
+        assert_eq!(a.estimate(9), None);
+    }
+
+    #[test]
+    fn weighted_eviction_inherits_min_and_conserves_mass() {
+        let mut ss = SpaceSaving::new(2);
+        ss.offer_weighted(1, 4);
+        ss.offer_weighted(2, 3);
+        // Full: a run of 5 × item 3 evicts the min (2, count 3).
+        ss.offer_weighted(3, 5);
+        assert_eq!(ss.estimate(2), None);
+        let c = ss.counters().into_iter().find(|c| c.item == 3).unwrap();
+        assert_eq!(c.count, 8); // min 3 + weight 5
+        assert_eq!(c.err, 3); // inherited min
+        let total: u64 = ss.counters().iter().map(|c| c.count).sum();
+        assert_eq!(total, ss.processed());
     }
 
     #[test]

@@ -143,21 +143,27 @@ impl StreamSummary {
         self.free_buckets.push(b);
     }
 
-    /// Move counter `c` from its bucket to the bucket for `count+1`.
-    fn increment(&mut self, c: u32) {
+    /// Move counter `c` from its bucket to the bucket for `count + w`
+    /// (`w >= 1`). For `w == 1` (the per-item [`offer`] path) the walk
+    /// degenerates to looking at the immediate successor bucket only;
+    /// weighted runs from the batched ingest path may hop several
+    /// buckets, still amortized by the run length they replace.
+    ///
+    /// [`offer`]: FrequencySummary::offer
+    fn increment_by(&mut self, c: u32, w: u64) {
         let b = self.counters[c as usize].bucket;
-        let new_count = self.buckets[b as usize].count + 1;
+        let new_count = self.buckets[b as usize].count + w;
 
-        // Fast path: `c` is its bucket's only member and the successor
-        // bucket is not `count+1` — bump the bucket in place instead of
-        // detach/attach/alloc/release. This is the steady state for a
+        // Fast path: `c` is its bucket's only member and no successor
+        // bucket is passed or matched — bump the bucket in place instead
+        // of detach/attach/alloc/release. This is the steady state for a
         // dominant hot item (its singleton bucket rides far above the
         // rest), cutting the per-hit cost to two stores.
         {
             let node = &self.counters[c as usize];
             if node.prev == NIL && node.next == NIL {
                 let next = self.buckets[b as usize].next;
-                if next == NIL || self.buckets[next as usize].count != new_count {
+                if next == NIL || self.buckets[next as usize].count > new_count {
                     self.buckets[b as usize].count = new_count;
                     self.counters[c as usize].count = new_count;
                     return;
@@ -166,14 +172,21 @@ impl StreamSummary {
         }
 
         self.detach(c);
-        let next = self.buckets[b as usize].next;
+        // Walk to the insertion point: the last bucket below `new_count`
+        // (for w == 1 this loop body never runs).
+        let mut prev = b;
+        let mut next = self.buckets[b as usize].next;
+        while next != NIL && self.buckets[next as usize].count < new_count {
+            prev = next;
+            next = self.buckets[next as usize].next;
+        }
 
         let target = if next != NIL && self.buckets[next as usize].count == new_count {
             next
         } else {
-            // Insert a fresh bucket between b and next.
-            let nb = self.alloc_bucket(new_count, NIL, b, next);
-            self.buckets[b as usize].next = nb;
+            // Insert a fresh bucket between prev and next.
+            let nb = self.alloc_bucket(new_count, NIL, prev, next);
+            self.buckets[prev as usize].next = nb;
             if next != NIL {
                 self.buckets[next as usize].prev = nb;
             }
@@ -187,28 +200,40 @@ impl StreamSummary {
         }
     }
 
-    /// Insert a brand-new item with count 1 (requires spare capacity).
-    fn insert_fresh(&mut self, item: u64) {
-        debug_assert!(self.counters.len() < self.k);
+    /// Insert a brand-new item with `count` (requires spare capacity).
+    /// Per-item ingestion always inserts at `count == 1` (the list
+    /// head); weighted runs may land anywhere, found by walking from the
+    /// minimum bucket.
+    fn insert_fresh(&mut self, item: u64, count: u64) {
+        debug_assert!(self.counters.len() < self.k && count >= 1);
         let c = self.counters.len() as u32;
         self.counters.push(CNode {
             item,
-            count: 1,
+            count,
             err: 0,
             prev: NIL,
             next: NIL,
             bucket: NIL,
         });
-        let target = if self.min_bucket != NIL
-            && self.buckets[self.min_bucket as usize].count == 1
-        {
-            self.min_bucket
+        // Walk to the insertion point (zero steps for count == 1).
+        let mut prev = NIL;
+        let mut cur = self.min_bucket;
+        while cur != NIL && self.buckets[cur as usize].count < count {
+            prev = cur;
+            cur = self.buckets[cur as usize].next;
+        }
+        let target = if cur != NIL && self.buckets[cur as usize].count == count {
+            cur
         } else {
-            let nb = self.alloc_bucket(1, NIL, NIL, self.min_bucket);
-            if self.min_bucket != NIL {
-                self.buckets[self.min_bucket as usize].prev = nb;
+            let nb = self.alloc_bucket(count, NIL, prev, cur);
+            if prev != NIL {
+                self.buckets[prev as usize].next = nb;
+            } else {
+                self.min_bucket = nb;
             }
-            self.min_bucket = nb;
+            if cur != NIL {
+                self.buckets[cur as usize].prev = nb;
+            }
             nb
         };
         self.attach(c, target);
@@ -223,13 +248,22 @@ impl FrequencySummary for StreamSummary {
 
     #[inline]
     fn offer(&mut self, item: u64) {
-        self.n += 1;
+        self.offer_weighted(item, 1);
+    }
+
+    #[inline]
+    fn offer_weighted(&mut self, item: u64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        self.n += weight;
         if let Some(c) = self.map.get(item) {
-            self.increment(c);
+            self.increment_by(c, weight);
         } else if self.counters.len() < self.k {
-            self.insert_fresh(item);
+            self.insert_fresh(item, weight);
         } else {
-            // Evict the head counter of the minimum bucket.
+            // Evict the head counter of the minimum bucket; the whole
+            // run rides on this one eviction (err = old min).
             let c = self.buckets[self.min_bucket as usize].head;
             let node = &mut self.counters[c as usize];
             let evicted = node.item;
@@ -237,7 +271,7 @@ impl FrequencySummary for StreamSummary {
             node.item = item;
             self.map.remove(evicted);
             self.map.insert(item, c);
-            self.increment(c);
+            self.increment_by(c, weight);
         }
     }
 
@@ -355,6 +389,81 @@ mod tests {
         let c = ss.counters()[0];
         assert_eq!(c.item, 9);
         assert_eq!(c.count, 4);
+    }
+
+    /// Walk the bucket list and assert it is sorted, consistent, and
+    /// covers every counter (shared by the weighted-update tests).
+    fn assert_bucket_list_consistent(ss: &StreamSummary) {
+        let mut b = ss.min_bucket;
+        let mut last = 0u64;
+        let mut seen = 0;
+        while b != NIL {
+            let bn = &ss.buckets[b as usize];
+            assert!(bn.count > last || (last == 0 && bn.count >= 1), "unsorted buckets");
+            assert_ne!(bn.head, NIL, "empty bucket in list");
+            last = bn.count;
+            let mut c = bn.head;
+            while c != NIL {
+                let cn = &ss.counters[c as usize];
+                assert_eq!(cn.bucket, b);
+                assert_eq!(cn.count, bn.count);
+                seen += 1;
+                c = cn.next;
+            }
+            b = bn.next;
+        }
+        assert_eq!(seen, ss.counters.len());
+    }
+
+    #[test]
+    fn weighted_updates_keep_bucket_list_sorted() {
+        // Weighted runs hop buckets (unlike +1 increments); hammer the
+        // structure with random runs and check the full invariant.
+        let mut ss = StreamSummary::new(16);
+        let mut rng = SplitMix64::new(9);
+        let mut mass = 0u64;
+        for _ in 0..5_000 {
+            let item = rng.next_below(60);
+            let w = 1 + rng.next_below(12);
+            ss.offer_weighted(item, w);
+            mass += w;
+            assert_bucket_list_consistent(&ss);
+        }
+        assert_eq!(ss.processed(), mass);
+        let total: u64 = ss.counters().iter().map(|c| c.count).sum();
+        assert_eq!(total, mass, "weighted updates must conserve mass");
+    }
+
+    #[test]
+    fn weighted_matches_replayed_offers_when_monitored() {
+        let mut a = StreamSummary::new(8);
+        let mut b = StreamSummary::new(8);
+        for (item, w) in [(1u64, 7u64), (2, 2), (1, 3), (3, 9), (2, 1)] {
+            a.offer_weighted(item, w);
+            for _ in 0..w {
+                b.offer(item);
+            }
+        }
+        assert_eq!(a.processed(), b.processed());
+        for item in [1u64, 2, 3] {
+            assert_eq!(a.estimate(item), b.estimate(item), "item {item}");
+        }
+        a.offer_weighted(5, 0); // no-op
+        assert_eq!(a.processed(), 22);
+        assert_eq!(a.estimate(5), None);
+    }
+
+    #[test]
+    fn weighted_eviction_inherits_min() {
+        let mut ss = StreamSummary::new(2);
+        ss.offer_weighted(1, 6);
+        ss.offer_weighted(2, 4);
+        ss.offer_weighted(3, 10); // evicts 2 (min 4)
+        assert_eq!(ss.estimate(2), None);
+        assert_eq!(ss.estimate(3), Some(14)); // 4 + 10
+        let c3 = ss.counters().into_iter().find(|c| c.item == 3).unwrap();
+        assert_eq!(c3.err, 4);
+        assert_bucket_list_consistent(&ss);
     }
 
     #[test]

@@ -21,6 +21,27 @@ pub trait FrequencySummary {
     /// Estimated frequency of `item`, if monitored.
     fn estimate(&self, item: u64) -> Option<u64>;
 
+    /// Process `weight` occurrences of `item` in a single update — the
+    /// weighted Space Saving rule the batched ingest path relies on
+    /// ([`batch`](super::batch)):
+    ///
+    /// * monitored item — its counter gains `weight`;
+    /// * spare capacity — adopt with `f̂ = weight`, `err = 0`;
+    /// * otherwise — one min-eviction charges the whole run: the new
+    ///   item inherits `f̂ = min + weight`, `err = min`.
+    ///
+    /// Each case increases the summary's total mass by exactly `weight`,
+    /// `err` stays a bound on the pre-adoption history, and `f̂ − err`
+    /// counts only real occurrences — so `f ≤ f̂ ≤ f + n/k` holds after
+    /// any interleaving of weighted and unit updates. `weight == 0` is a
+    /// no-op. The default replays [`FrequencySummary::offer`];
+    /// implementations override it with an `O(1)`-per-run version.
+    fn offer_weighted(&mut self, item: u64, weight: u64) {
+        for _ in 0..weight {
+            self.offer(item);
+        }
+    }
+
     /// Process a slice of items.
     fn offer_all(&mut self, items: &[u64]) {
         for &it in items {

@@ -3,7 +3,7 @@
 //! composition with the PJRT verification path.
 
 use pss::baselines::Exact;
-use pss::coordinator::{run_source, Coordinator, CoordinatorConfig, Routing};
+use pss::coordinator::{run_source, Coordinator, CoordinatorConfig, PushError, Routing};
 use pss::gen::{GeneratedSource, ItemSource};
 use pss::metrics::AccuracyReport;
 use pss::summary::FrequencySummary;
@@ -18,6 +18,7 @@ fn bursty_producer_with_backpressure() {
         queue_depth: 2,
         routing: Routing::RoundRobin,
         epoch_items: 65_536,
+        batch_ingest: true,
     };
     let mut c = Coordinator::start(cfg);
     let mut rng = SplitMix64::new(77);
@@ -44,6 +45,9 @@ fn routing_policies_agree_on_results() {
         queue_depth: 8,
         routing,
         epoch_items: 65_536,
+        // Seed-exact accuracy expectations: per-item path (the batched
+        // path is covered by batched_ingest_meets_guarantees below).
+        batch_ingest: false,
     };
     let rr = run_source(mk(Routing::RoundRobin), &src, 4096);
     let ll = run_source(mk(Routing::LeastLoaded), &src, 4096);
@@ -69,6 +73,10 @@ fn single_shard_equals_sequential_space_saving() {
             queue_depth: 4,
             routing: Routing::RoundRobin,
             epoch_items: 65_536,
+            // Exact equality with a sequential per-item run only holds
+            // on the per-item path; batching moves whole runs through
+            // single eviction decisions (same bounds, different f̂).
+            batch_ingest: false,
         },
         &src,
         1000,
@@ -97,6 +105,7 @@ fn coordinator_then_pjrt_verification() {
             queue_depth: 8,
             routing: Routing::RoundRobin,
             epoch_items: 65_536,
+            batch_ingest: true,
         },
         &src,
         8192,
@@ -114,6 +123,87 @@ fn coordinator_then_pjrt_verification() {
 }
 
 #[test]
+fn batched_ingest_meets_guarantees() {
+    // The default (batched) write path under the same accuracy check as
+    // the per-item tests above: full recall against exact truth and the
+    // per-counter error bounds on a skewed multi-shard run.
+    let n = 250_000u64;
+    let src = GeneratedSource::zipf(n, 10_000, 1.2, 13);
+    let out = run_source(
+        CoordinatorConfig {
+            shards: 4,
+            k: 256,
+            k_majority: 256,
+            queue_depth: 8,
+            routing: Routing::RoundRobin,
+            epoch_items: 65_536,
+            batch_ingest: true,
+        },
+        &src,
+        4096,
+    );
+    assert_eq!(out.stats.items, n);
+    assert_eq!(out.summary.n(), n);
+
+    let mut exact = Exact::new();
+    exact.offer_all(&src.slice(0, n));
+    let acc = AccuracyReport::evaluate(&out.frequent, &exact, 256);
+    assert_eq!(acc.recall, 1.0, "batched path must keep recall 1");
+    // Per-counter Space Saving bounds hold on the merged summary.
+    for c in out.summary.counters() {
+        let f = exact.count(c.item);
+        assert!(c.count >= f, "under-estimate of {}", c.item);
+        assert!(c.count - c.err <= f, "err bound broken for {}", c.item);
+    }
+}
+
+#[test]
+fn try_push_rejection_returns_chunk_intact_and_counts_once() {
+    // Satellite of the batched-ingest PR: rejection accounting. Flood a
+    // depth-1 single-shard queue with identifiable chunks; every
+    // rejection must hand the exact chunk back and bump
+    // `rejected_chunks` exactly once.
+    let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+        shards: 1,
+        k: 32,
+        k_majority: 4,
+        queue_depth: 1,
+        routing: Routing::RoundRobin,
+        epoch_items: 0,
+        batch_ingest: true,
+    });
+    let mut expected_rejections = 0u64;
+    let mut accepted_items = 0u64;
+    for i in 0..4_000u64 {
+        // Chunk content encodes its sequence number so a returned chunk
+        // can be checked byte-for-byte.
+        let chunk: Vec<u64> = (0..50).map(|j| i * 100 + j % 7).collect();
+        match c.try_push(chunk.clone()) {
+            Ok(()) => accepted_items += chunk.len() as u64,
+            Err(err) => {
+                expected_rejections += 1;
+                let (shard, returned) = match err {
+                    PushError::Full { shard, chunk } => (shard, chunk),
+                    PushError::Disconnected { shard, chunk } => {
+                        panic!("shard {shard} died ({} items)", chunk.len())
+                    }
+                };
+                assert_eq!(shard, 0, "single-shard session");
+                assert_eq!(returned, chunk, "rejected chunk must come back intact");
+                // Exactly one increment per rejection, visible immediately.
+                assert_eq!(c.stats().rejected_chunks, expected_rejections);
+            }
+        }
+    }
+    assert!(expected_rejections > 0, "depth-1 queue must reject under flood");
+    let out = c.finish();
+    assert_eq!(out.stats.rejected_chunks, expected_rejections);
+    // Rejected chunks left no trace in the accepted accounting.
+    assert_eq!(out.stats.items, accepted_items);
+    assert_eq!(out.summary.n(), accepted_items);
+}
+
+#[test]
 fn many_shards_few_items() {
     let src = GeneratedSource::uniform(100, 10, 5);
     let out = run_source(
@@ -124,6 +214,7 @@ fn many_shards_few_items() {
             queue_depth: 2,
             routing: Routing::RoundRobin,
             epoch_items: 65_536,
+            batch_ingest: true,
         },
         &src,
         3,

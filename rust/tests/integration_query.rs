@@ -57,6 +57,7 @@ fn queries_run_concurrently_with_ingestion() {
         queue_depth: 8,
         routing: Routing::RoundRobin,
         epoch_items: 50_000,
+        batch_ingest: true,
     });
 
     let done = AtomicBool::new(false);
@@ -136,6 +137,7 @@ fn mid_ingest_answers_match_published_epoch_prefix() {
         queue_depth: 4,
         routing: Routing::RoundRobin,
         epoch_items: chunk,
+        batch_ingest: true,
     });
 
     std::thread::scope(|scope| {
@@ -198,6 +200,7 @@ fn threshold_split_is_sound_on_live_engine() {
         queue_depth: 8,
         routing: Routing::RoundRobin,
         epoch_items: 20_000,
+        batch_ingest: true,
     });
     let mut pos = 0u64;
     while pos < n {
@@ -249,6 +252,7 @@ fn try_push_load_shedding_keeps_engine_consistent() {
         queue_depth: 1,
         routing: Routing::RoundRobin,
         epoch_items: 1_000,
+        batch_ingest: true,
     });
     let mut rng = SplitMix64::new(3);
     let mut accepted_items = 0u64;
@@ -282,6 +286,7 @@ fn staleness_accounting_tracks_refresh() {
         queue_depth: 8,
         routing: Routing::RoundRobin,
         epoch_items: 0, // publication only on refresh/drain
+        batch_ingest: true,
     });
     for _ in 0..10 {
         coord.push(vec![1; 100]);

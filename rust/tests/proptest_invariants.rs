@@ -324,6 +324,69 @@ fn prop_epoch_snapshot_merge_bounds() {
     }
 }
 
+/// Property 10 (batched ingest): chunked batched ingestion (per-chunk
+/// pre-aggregation + weighted updates) and per-item ingestion of the
+/// *same* stream yield summaries with identical Space Saving
+/// guarantees — same `n`, mass conservation, `f ≤ f̂ ≤ f + n/k` and
+/// full recall above `n/k` — for any chunking, either summary
+/// structure, and any `k`. (The exact per-counter estimates may differ
+/// within those bounds: a run moves its whole weight through one
+/// eviction decision.)
+#[test]
+fn prop_batched_ingest_guarantees_match_per_item() {
+    use pss::summary::{offer_batched, ChunkAggregator};
+    for seed in 800..800 + TRIALS / 2 {
+        let mut rng = SplitMix64::new(seed);
+        let items = random_stream(&mut rng);
+        let k = 1 + rng.next_below(200) as usize;
+        let chunk = 1 + rng.next_below(900) as usize;
+        let n = items.len() as u64;
+        let t = truth(&items);
+        let thresh = n / k as u64;
+        let eps = n / k as u64;
+
+        let check = |label: &str, processed: u64, counters: &[pss::summary::Counter]| {
+            assert_eq!(processed, n, "seed {seed} {label}: n");
+            assert!(counters.len() <= k, "seed {seed} {label}: budget");
+            let mass: u64 = counters.iter().map(|c| c.count).sum();
+            assert_eq!(mass, n, "seed {seed} {label}: mass");
+            let monitored: HashSet<u64> = counters.iter().map(|c| c.item).collect();
+            for c in counters {
+                let f = t.get(&c.item).copied().unwrap_or(0);
+                assert!(c.count >= f, "seed {seed} {label}: under-estimate");
+                assert!(c.count - f <= eps, "seed {seed} {label}: ε=n/k bound");
+                assert!(c.count - c.err <= f, "seed {seed} {label}: err bound");
+            }
+            for (item, f) in &t {
+                if *f > thresh {
+                    assert!(monitored.contains(item), "seed {seed} {label}: lost {item}");
+                }
+            }
+        };
+
+        // Bucket-list structure (the coordinator's shard summary).
+        let mut per_item = StreamSummary::new(k);
+        per_item.offer_all(&items);
+        let mut batched = StreamSummary::new(k);
+        let mut agg = ChunkAggregator::with_capacity(chunk);
+        for block in items.chunks(chunk) {
+            offer_batched(&mut batched, &mut agg, block);
+        }
+        check("bucket/per-item", per_item.processed(), &per_item.counters());
+        check("bucket/batched", batched.processed(), &batched.counters());
+
+        // Heap structure through the same paths.
+        let mut per_item = SpaceSaving::new(k);
+        per_item.offer_all(&items);
+        let mut batched = SpaceSaving::new(k);
+        for block in items.chunks(chunk) {
+            offer_batched(&mut batched, &mut agg, block);
+        }
+        check("heap/per-item", per_item.processed(), &per_item.counters());
+        check("heap/batched", batched.processed(), &batched.counters());
+    }
+}
+
 /// Property 8 (distsim sanity): simulated time is monotone — more cores
 /// never slower at fixed work; more counters never faster reduction.
 #[test]
