@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
             // Batch session (queried only at finish): no epoch publication.
             epoch_items: 0,
             batch_ingest: true,
+            ..Default::default()
         },
         &file_src,
         // L2-resident chunks for the batched scratch map (16384 at the

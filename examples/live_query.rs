@@ -26,6 +26,7 @@ fn main() {
         routing: Routing::RoundRobin,
         epoch_items: 100_000, // publish a snapshot every 100k items/shard
         batch_ingest: true,   // pre-aggregate chunks into weighted runs
+        ..Default::default()
     });
     println!("live query demo: n={n}, {shards} shards, k={k}");
 

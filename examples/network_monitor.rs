@@ -42,6 +42,7 @@ fn main() {
         // NIC batches are heavily duplicated (elephant flows): the
         // batched path collapses each drain into per-flow runs.
         batch_ingest: true,
+        ..Default::default()
     };
     let mut monitor = Coordinator::start(cfg);
 

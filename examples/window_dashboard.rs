@@ -1,0 +1,136 @@
+//! Sliding-window dashboard: a *drifting* workload streams through the
+//! coordinator while this thread prints the landmark top-k next to the
+//! windowed top-k. The hot set changes every phase — the windowed view
+//! tracks the drift within a few epochs, while the landmark view keeps
+//! averaging over everything since startup.
+//!
+//! ```text
+//! cargo run --release --example window_dashboard
+//! ```
+
+use std::time::{Duration, Instant};
+
+use pss::coordinator::{Coordinator, CoordinatorConfig, Routing};
+use pss::util::SplitMix64;
+
+/// Phases of the drifting workload: each phase has its own hot items
+/// (`phase * 1000 + rank`), drawn with 60% probability over a uniform
+/// background.
+const PHASES: u64 = 5;
+const CHUNKS_PER_PHASE: u64 = 80;
+const CHUNK: usize = 16_384;
+
+fn main() {
+    let shards = std::thread::available_parallelism().map_or(4, |p| p.get().min(8));
+    let k = 256usize;
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards,
+        k,
+        k_majority: k as u64,
+        queue_depth: 8,
+        routing: Routing::RoundRobin,
+        epoch_items: 50_000, // delta cadence == snapshot cadence
+        batch_ingest: true,
+        delta_ring: 16, // keep the last 16 epoch deltas per shard
+        window_epochs: 4, // "recent" = the last 4 epochs per shard
+    });
+    let windows = coord.windows().expect("delta ring on");
+    let n = PHASES * CHUNKS_PER_PHASE * CHUNK as u64;
+    println!(
+        "window dashboard: {n} items over {PHASES} drift phases, {shards} shards, k={k}"
+    );
+    println!("hot set of phase p = items p*1000 .. p*1000+3\n");
+
+    let t0 = Instant::now();
+    let result = std::thread::scope(|scope| {
+        // Writer: the drifting workload.
+        let writer = scope.spawn(move || {
+            let mut rng = SplitMix64::new(42);
+            for phase in 0..PHASES {
+                for _ in 0..CHUNKS_PER_PHASE {
+                    let chunk: Vec<u64> = (0..CHUNK)
+                        .map(|_| {
+                            if rng.next_f64() < 0.6 {
+                                phase * 1000 + rng.next_below(4)
+                            } else {
+                                10_000 + rng.next_below(1 << 20)
+                            }
+                        })
+                        .collect();
+                    coord.push(chunk);
+                }
+            }
+            coord.finish()
+        });
+
+        // Reader: landmark vs windowed top-3, side by side.
+        while !writer.is_finished() {
+            std::thread::sleep(Duration::from_millis(150));
+            let snap = engine.snapshot();
+            let win = windows.latest();
+            let fmt = |cs: &[pss::summary::Counter]| {
+                cs.iter()
+                    .map(|c| format!("{}:{}", c.item, c.count))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            println!(
+                "[{:5.2}s] landmark n={:>9} top3=[{}]  |  window(4) W={:>8} top3=[{}]",
+                t0.elapsed().as_secs_f64(),
+                snap.n(),
+                fmt(&snap.top_k(3)),
+                win.n(),
+                fmt(&win.top_k(3)),
+            );
+        }
+        writer.join().expect("writer panicked")
+    });
+
+    println!(
+        "\ndrained {} items in {:.2}s; {} epochs, {} deltas published",
+        result.stats.items,
+        t0.elapsed().as_secs_f64(),
+        result.stats.epochs_published,
+        result.stats.deltas_published,
+    );
+
+    // Post-drain: the landmark view still averages over all phases; the
+    // window only remembers the last one.
+    let final_win = windows.latest();
+    let last_hot = (PHASES - 1) * 1000;
+    println!(
+        "final landmark top3: [{}]",
+        engine
+            .top_k(3)
+            .iter()
+            .map(|c| format!("{}:{}", c.item, c.count))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!(
+        "final window(4) top3: [{}]  (expected hot set ≥ {last_hot})",
+        final_win
+            .top_k(3)
+            .iter()
+            .map(|c| format!("{}:{}", c.item, c.count))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    let rep = final_win.k_majority(k as u64);
+    println!(
+        "windowed k-majority over W={} items: {} guaranteed + {} possible, ε={}",
+        rep.n,
+        rep.guaranteed.len(),
+        rep.possible.len(),
+        rep.epsilon
+    );
+    assert!(
+        final_win.top_k(3).iter().all(|c| c.item >= last_hot && c.item < last_hot + 4),
+        "the windowed top must come from the final drift phase"
+    );
+    let ws = windows.window_stats();
+    println!(
+        "served {} windowed queries ({})",
+        ws.queries_served, ws.query_latency
+    );
+}

@@ -84,6 +84,7 @@ fn main() {
                     routing: Routing::RoundRobin,
                     epoch_items: 0,
                     batch_ingest: batch,
+                    ..Default::default()
                 };
                 black_box(run_source(cfg, src, chunk).stats.items);
             });

@@ -22,6 +22,7 @@ fn config(shards: usize, epoch_items: u64) -> CoordinatorConfig {
         routing: Routing::RoundRobin,
         epoch_items,
         batch_ingest: true,
+        ..Default::default()
     }
 }
 

@@ -1,0 +1,109 @@
+//! The sliding-window read path (`pss::window`): what delta publication
+//! costs the writers (ring on vs off — the acceptance target is ≤ ~10%
+//! on the zipf-1.1 workload) and what windowed queries cost the readers
+//! vs the landmark path.
+
+use pss::coordinator::{Coordinator, CoordinatorConfig, QueryResult};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::query::QueryEngine;
+use pss::util::benchkit::{black_box, run};
+use pss::window::{DeltaBuilder, WindowedQueryEngine};
+
+const N: u64 = 1_000_000;
+const K: usize = 2000;
+const CHUNK: usize = 8_192;
+const EPOCH: u64 = 65_536;
+
+fn config(shards: usize, delta_ring: usize, batch_ingest: bool) -> CoordinatorConfig {
+    CoordinatorConfig {
+        shards,
+        k: K,
+        k_majority: K as u64,
+        epoch_items: EPOCH,
+        batch_ingest,
+        delta_ring,
+        window_epochs: 8,
+        ..Default::default()
+    }
+}
+
+/// One full ingest session; returns the result and the live handles.
+fn session(
+    cfg: CoordinatorConfig,
+    src: &GeneratedSource,
+) -> (QueryResult, QueryEngine, Option<WindowedQueryEngine>) {
+    let (mut c, q) = Coordinator::spawn(cfg);
+    let w = c.windows();
+    let n = src.len();
+    let mut pos = 0u64;
+    while pos < n {
+        let take = ((n - pos) as usize).min(CHUNK);
+        c.push(src.slice(pos, pos + take as u64));
+        pos += take as u64;
+    }
+    (c.finish(), q, w)
+}
+
+fn main() {
+    println!("# bench_window — sliding-window deltas: ingest overhead + query latency");
+    let src = GeneratedSource::zipf(N, 1 << 20, 1.1, 7);
+
+    // 1. Ingest overhead of delta publication (zipf-1.1): ring off vs
+    //    on, batched path. The delta between the two lines is the whole
+    //    write-path cost of serving windows.
+    for &shards in &[1usize, 4] {
+        run(&format!("ingest/ring-off/shards={shards}"), Some(N as f64), || {
+            black_box(session(config(shards, 0, true), &src).0.stats.items);
+        });
+        run(&format!("ingest/ring-16/shards={shards}"), Some(N as f64), || {
+            black_box(session(config(shards, 16, true), &src).0.stats.items);
+        });
+    }
+
+    // 1b. Same comparison on the per-item write path (absorb_items
+    //     instead of reused runs): the worst case for the window side.
+    run("ingest/ring-off/4-shards/per-item", Some(N as f64), || {
+        black_box(session(config(4, 0, false), &src).0.stats.items);
+    });
+    run("ingest/ring-16/4-shards/per-item", Some(N as f64), || {
+        black_box(session(config(4, 16, false), &src).0.stats.items);
+    });
+
+    // 2. The delta cut in isolation: absorb one epoch of items, then
+    //    freeze + reset — what a shard pays per epoch on top of the
+    //    cumulative freeze.
+    let epoch_items: Vec<u64> = src.slice(0, EPOCH);
+    let mut db = DeltaBuilder::new();
+    run(&format!("delta/absorb+cut/epoch={EPOCH}/k={K}"), Some(EPOCH as f64), || {
+        db.absorb_items(&epoch_items);
+        black_box(db.cut(K).n());
+    });
+
+    // 3. Query latency: landmark vs windowed top-k, and the windowed
+    //    k-majority, against a fully-published 4-shard session.
+    let (result, q, w) = session(config(4, 32, true), &src);
+    let w = w.expect("delta ring on");
+    run("query/landmark-top10/shards=4", None, || {
+        black_box(q.top_k(10));
+    });
+    for &win in &[1usize, 4, 16] {
+        run(&format!("query/window-top10/w={win}/shards=4"), None, || {
+            black_box(w.top_k_window(win, 10));
+        });
+    }
+    run("query/window-k-majority/w=8/shards=4", None, || {
+        black_box(w.frequent_window());
+    });
+    run("query/window-point/w=8/shards=4", None, || {
+        black_box(w.point_in_window(8, 1));
+    });
+    let stats = w.window_stats();
+    println!(
+        "#   deltas: {} published, {} retired (ring {}/shard); window(8) mass = {} of {} ingested",
+        stats.deltas_published,
+        stats.deltas_retired,
+        stats.ring_capacity,
+        w.window(8).n(),
+        result.stats.items,
+    );
+}

@@ -33,6 +33,12 @@ pub struct RunConfig {
     /// pre-aggregation + weighted updates). Same error guarantees as
     /// per-item ingestion; off reproduces exact per-item sequences.
     pub batch_ingest: bool,
+    /// Sliding-window read path: delta-ring capacity, in epoch deltas
+    /// retained per shard. 0 (default) disables delta publication and
+    /// windowed queries.
+    pub delta_ring: usize,
+    /// Default windowed-query width, in epochs (`pss query --window`).
+    pub window_epochs: usize,
     /// Run the PJRT offline verification afterwards.
     pub verify: bool,
 }
@@ -53,6 +59,8 @@ impl Default for RunConfig {
             chunk_len: crate::parallel::batch_chunk_len_default(),
             queue_depth: 8,
             batch_ingest: true,
+            delta_ring: 0,
+            window_epochs: 8,
             verify: false,
         }
     }
@@ -77,6 +85,8 @@ impl RunConfig {
         if let Some(v) = get_u("chunk_len") { c.chunk_len = v as usize; }
         if let Some(v) = get_u("queue_depth") { c.queue_depth = v as usize; }
         if let Some(v) = j.get("batch_ingest").and_then(|v| v.as_bool()) { c.batch_ingest = v; }
+        if let Some(v) = get_u("delta_ring") { c.delta_ring = v as usize; }
+        if let Some(v) = get_u("window_epochs") { c.window_epochs = v as usize; }
         if let Some(v) = j.get("verify").and_then(|v| v.as_bool()) { c.verify = v; }
         c.validate()?;
         Ok(c)
@@ -91,6 +101,7 @@ impl RunConfig {
         anyhow::ensure!(self.k_majority >= 2, "k_majority must be >= 2");
         anyhow::ensure!(self.threads >= 1, "threads must be positive");
         anyhow::ensure!(self.chunk_len >= 1, "chunk_len must be positive");
+        anyhow::ensure!(self.window_epochs >= 1, "window_epochs must be positive");
         Ok(())
     }
 
@@ -99,10 +110,11 @@ impl RunConfig {
         format!(
             "{{\"n\": {}, \"universe\": {}, \"skew\": {}, \"shift\": {}, \"seed\": {},\n \
               \"k\": {}, \"k_majority\": {}, \"threads\": {}, \"chunk_len\": {},\n \
-              \"queue_depth\": {}, \"batch_ingest\": {}, \"verify\": {}}}",
+              \"queue_depth\": {}, \"batch_ingest\": {}, \"delta_ring\": {},\n \
+              \"window_epochs\": {}, \"verify\": {}}}",
             self.n, self.universe, self.skew, self.shift, self.seed, self.k,
             self.k_majority, self.threads, self.chunk_len, self.queue_depth,
-            self.batch_ingest, self.verify
+            self.batch_ingest, self.delta_ring, self.window_epochs, self.verify
         )
     }
 }
@@ -172,6 +184,25 @@ mod tests {
         // And it survives the serialize/parse roundtrip.
         std::fs::write(&p, c.to_json()).unwrap();
         assert!(!RunConfig::from_json_file(&p).unwrap().batch_ingest);
+    }
+
+    #[test]
+    fn window_fields_default_and_roundtrip() {
+        let c = RunConfig::default();
+        assert_eq!(c.delta_ring, 0, "windows are opt-in");
+        assert_eq!(c.window_epochs, 8);
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        std::fs::write(&p, r#"{"delta_ring": 16, "window_epochs": 4}"#).unwrap();
+        let c = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c.delta_ring, 16);
+        assert_eq!(c.window_epochs, 4);
+        std::fs::write(&p, c.to_json()).unwrap();
+        let c2 = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c, c2);
+        // window_epochs must be positive.
+        std::fs::write(&p, r#"{"window_epochs": 0}"#).unwrap();
+        assert!(RunConfig::from_json_file(&p).is_err());
     }
 
     #[test]

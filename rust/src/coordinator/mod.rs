@@ -14,7 +14,11 @@
 //! publish epoch snapshots (every
 //! [`epoch_items`](service::CoordinatorConfig::epoch_items) items, on
 //! demand, and at drain) that the engine merges to serve live `top_k` /
-//! `point` / `threshold` queries without blocking ingestion.
+//! `point` / `threshold` queries without blocking ingestion. With
+//! [`delta_ring`](service::CoordinatorConfig::delta_ring) > 0 each
+//! publication also cuts a per-epoch delta into the sliding-window
+//! rings (see [`crate::window`]), adding time-scoped `top_k_window` /
+//! `k_majority_window` answers.
 //!
 //! The offline verification pass (PJRT `verify_counts` artifact, see
 //! [`crate::runtime`]) plugs in after `finish()` to discard false

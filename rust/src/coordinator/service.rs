@@ -29,6 +29,15 @@
 //! summary and swaps it into the shared [`EpochRegistry`], so
 //! [`QueryEngine`] handles returned by [`Coordinator::spawn`] serve
 //! `top_k` / `point` / `threshold` queries concurrently with ingestion.
+//!
+//! With [`CoordinatorConfig::delta_ring`] > 0 each publication also
+//! cuts a per-epoch *delta summary* (the Space Saving state of just
+//! that epoch's items, accumulated by a [`DeltaBuilder`] from the same
+//! runs the batched path already aggregates) into a bounded
+//! [`WindowStore`] ring, enabling sliding-window queries
+//! (`top_k_window`, `k_majority_window`, …) through the
+//! [`WindowedQueryEngine`] handle from [`Coordinator::windows`] — see
+//! [`crate::window`].
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, RecvTimeoutError, SyncSender, TrySendError};
@@ -38,8 +47,9 @@ use std::time::Duration;
 use crate::gen::ItemSource;
 use crate::parallel::reduction::tree_reduce;
 use crate::query::{EpochRegistry, QueryEngine};
-use crate::summary::batch::{offer_batched, ChunkAggregator};
+use crate::summary::batch::{offer_runs, ChunkAggregator};
 use crate::summary::{Counter, FrequencySummary, StreamSummary, Summary};
+use crate::window::{DeltaBuilder, WindowStore, WindowedQueryEngine};
 
 use super::router::{Router, Routing};
 
@@ -73,6 +83,21 @@ pub struct CoordinatorConfig {
     /// within those bounds from per-item ingestion. Turn off to
     /// reproduce exact per-item update sequences.
     pub batch_ingest: bool,
+    /// Sliding-window read path: ring capacity, in epoch *deltas*
+    /// retained per shard. When > 0 every epoch publication also cuts a
+    /// delta summary — the Space Saving state of just that epoch's
+    /// items — into the shard's bounded [`WindowStore`] ring, and
+    /// [`Coordinator::windows`] hands out a [`WindowedQueryEngine`]
+    /// serving `top_k_window` / `point_in_window` / `k_majority_window`
+    /// under the windowed bound `f ≤ f̂ ≤ f + W/k` (`W` = window mass).
+    /// 0 (the default) disables delta publication entirely: zero
+    /// write-path overhead, windowed queries unavailable.
+    pub delta_ring: usize,
+    /// Default windowed-query width, in epochs, for the engine handed
+    /// back by [`Coordinator::spawn`] (only meaningful with
+    /// `delta_ring > 0`; explicit widths can always be passed per
+    /// query).
+    pub window_epochs: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -85,6 +110,8 @@ impl Default for CoordinatorConfig {
             routing: Routing::RoundRobin,
             epoch_items: 65_536,
             batch_ingest: true,
+            delta_ring: 0,
+            window_epochs: 8,
         }
     }
 }
@@ -102,6 +129,11 @@ pub struct IngestStats {
     pub rejected_chunks: u64,
     /// Epoch snapshots published by the shards (filled at `finish`).
     pub epochs_published: u64,
+    /// Epoch deltas published into the window rings (filled at
+    /// `finish`; 0 when [`CoordinatorConfig::delta_ring`] is 0). Their
+    /// masses partition the accepted items exactly: every ingested item
+    /// lands in exactly one delta.
+    pub deltas_published: u64,
     /// Items processed per shard.
     pub per_shard_items: Vec<u64>,
 }
@@ -166,14 +198,28 @@ enum Msg {
     Finish,
 }
 
+/// What one shard worker hands back at drain.
+struct ShardOutcome {
+    /// The shard's final cumulative summary.
+    summary: Summary,
+    /// Items the shard processed.
+    items: u64,
+    /// Total mass of the deltas the shard published (must equal
+    /// `items` when the delta ring is on — every item lands in exactly
+    /// one delta).
+    delta_mass: u64,
+}
+
 /// A running coordinator session.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     senders: Vec<SyncSender<Msg>>,
-    handles: Vec<JoinHandle<(Summary, u64)>>,
+    handles: Vec<JoinHandle<ShardOutcome>>,
     router: Router,
     stats: IngestStats,
     engine: QueryEngine,
+    /// Sliding-window query handle; `Some` iff `delta_ring > 0`.
+    windows: Option<WindowedQueryEngine>,
 }
 
 impl Coordinator {
@@ -186,6 +232,14 @@ impl Coordinator {
         assert!(cfg.shards >= 1 && cfg.queue_depth >= 1);
         let router = Router::new(cfg.routing, cfg.shards);
         let registry = EpochRegistry::new(cfg.shards, cfg.k);
+        // Windowed read path: a bounded delta ring per shard, served by
+        // a WindowedQueryEngine the coordinator hands out (the landmark
+        // QueryEngine stays independent of the window layer).
+        let store = (cfg.delta_ring > 0)
+            .then(|| WindowStore::new(cfg.shards, cfg.delta_ring, cfg.k));
+        let windows = store
+            .as_ref()
+            .map(|s| WindowedQueryEngine::new(s.clone(), cfg.window_epochs, cfg.k_majority));
         let engine = QueryEngine::new(registry.clone(), cfg.k_majority);
         let mut senders = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
@@ -196,6 +250,7 @@ impl Coordinator {
             let batch_ingest = cfg.batch_ingest;
             let loads = router.loads.clone();
             let registry = registry.clone();
+            let window = store.clone();
             handles.push(std::thread::spawn(move || {
                 // Bucket-list Space Saving: O(1) amortized and ~30% faster
                 // on the eviction-heavy paths (see EXPERIMENTS.md §Perf).
@@ -203,6 +258,10 @@ impl Coordinator {
                 // Scratch for the batched fast path, reused across chunks
                 // so the steady state allocates nothing.
                 let mut scratch = batch_ingest.then(ChunkAggregator::new);
+                // Window side: accumulate this epoch's exact (item,
+                // weight) runs; cut into a delta at each publication.
+                let mut delta = window.as_ref().map(|_| DeltaBuilder::new());
+                let mut delta_mass = 0u64;
                 let mut items = 0u64;
                 let mut since_publish = 0u64;
                 let mut refresh_seen = 0u64;
@@ -210,8 +269,23 @@ impl Coordinator {
                     match rx.recv_timeout(IDLE_POLL) {
                         Ok(Msg::Chunk(chunk)) => {
                             match scratch.as_mut() {
-                                Some(agg) => offer_batched(&mut ss, agg, &chunk),
-                                None => ss.offer_all(&chunk),
+                                Some(agg) => {
+                                    // Aggregate once, apply twice: the
+                                    // runs feed the cumulative summary
+                                    // and (one map probe per distinct
+                                    // item) the pending delta.
+                                    let runs = agg.aggregate(&chunk);
+                                    offer_runs(&mut ss, runs);
+                                    if let Some(db) = delta.as_mut() {
+                                        db.absorb_runs(runs);
+                                    }
+                                }
+                                None => {
+                                    ss.offer_all(&chunk);
+                                    if let Some(db) = delta.as_mut() {
+                                        db.absorb_items(&chunk);
+                                    }
+                                }
                             }
                             items += chunk.len() as u64;
                             since_publish += chunk.len() as u64;
@@ -219,6 +293,17 @@ impl Coordinator {
                             let watermark = registry.refresh_watermark();
                             let due = epoch_items > 0 && since_publish >= epoch_items;
                             if due || watermark > refresh_seen {
+                                // Delta first, cumulative snapshot second:
+                                // a reader that observes the new landmark
+                                // epoch (e.g. staleness reaching 0) is then
+                                // guaranteed the matching window delta is
+                                // already in the ring.
+                                if let (Some(db), Some(ws)) = (delta.as_mut(), window.as_ref()) {
+                                    if !db.is_empty() {
+                                        delta_mass += db.mass();
+                                        ws.publish(shard, db.cut(k), false);
+                                    }
+                                }
                                 registry.publish(shard, ss.freeze(), false);
                                 since_publish = 0;
                                 refresh_seen = watermark;
@@ -230,6 +315,12 @@ impl Coordinator {
                             // readers are not stuck behind a quiet shard.
                             let watermark = registry.refresh_watermark();
                             if watermark > refresh_seen {
+                                if let (Some(db), Some(ws)) = (delta.as_mut(), window.as_ref()) {
+                                    if !db.is_empty() {
+                                        delta_mass += db.mass();
+                                        ws.publish(shard, db.cut(k), false);
+                                    }
+                                }
                                 registry.publish(shard, ss.freeze(), false);
                                 since_publish = 0;
                                 refresh_seen = watermark;
@@ -239,9 +330,21 @@ impl Coordinator {
                     }
                 }
                 // Drain: the final epoch covers everything this shard saw.
+                // The last partial epoch must reach the window ring too —
+                // before the final landmark snapshot, as above — or items
+                // since the final cadence cut would be visible to landmark
+                // queries but silently missing from windowed ones.
                 let summary = ss.freeze();
+                if let (Some(db), Some(ws)) = (delta.as_mut(), window.as_ref()) {
+                    if db.is_empty() {
+                        ws.finish_shard(shard);
+                    } else {
+                        delta_mass += db.mass();
+                        ws.publish(shard, db.cut(k), true);
+                    }
+                }
                 registry.publish(shard, summary.clone(), true);
-                (summary, items)
+                ShardOutcome { summary, items, delta_mass }
             }));
             senders.push(tx);
         }
@@ -252,6 +355,7 @@ impl Coordinator {
             handles,
             router,
             engine: engine.clone(),
+            windows,
         };
         (coordinator, engine)
     }
@@ -270,6 +374,14 @@ impl Coordinator {
     /// registry as the handle returned by [`Coordinator::spawn`]).
     pub fn queries(&self) -> QueryEngine {
         self.engine.clone()
+    }
+
+    /// The sliding-window query handle, when this session publishes
+    /// epoch deltas ([`CoordinatorConfig::delta_ring`] > 0). Cheap to
+    /// clone; stays valid (serving the final drain-time deltas) after
+    /// [`Coordinator::finish`].
+    pub fn windows(&self) -> Option<WindowedQueryEngine> {
+        self.windows.clone()
     }
 
     /// Ingestion statistics so far (`epochs_published` is finalized by
@@ -357,13 +469,26 @@ impl Coordinator {
         let mut summaries = Vec::with_capacity(self.handles.len());
         let mut stats = self.stats;
         for (shard, h) in self.handles.into_iter().enumerate() {
-            let (summary, items) = h.join().expect("shard panicked");
-            debug_assert_eq!(items, stats.per_shard_items[shard]);
-            summaries.push(summary);
+            let out = h.join().expect("shard panicked");
+            debug_assert_eq!(out.items, stats.per_shard_items[shard]);
+            if self.windows.is_some() {
+                // Delta accounting balance: the published deltas of a
+                // shard partition exactly the items it ingested (the
+                // drain path publishes the last partial epoch).
+                debug_assert_eq!(
+                    out.delta_mass, out.items,
+                    "shard {shard}: delta mass must cover every ingested item"
+                );
+            }
+            summaries.push(out.summary);
         }
         let summary = tree_reduce(summaries);
         let frequent = summary.prune(stats.items, self.cfg.k_majority);
         stats.epochs_published = self.engine.registry().epochs_published();
+        stats.deltas_published = self
+            .windows
+            .as_ref()
+            .map_or(0, |w| w.store().deltas_published());
         stats.per_shard_items.shrink_to_fit();
         QueryResult { summary, frequent, stats }
     }
@@ -621,6 +746,47 @@ mod tests {
         assert_eq!(out.stats.items, 200 * 64);
         assert_eq!(q.point(11).estimate, 200 * 64);
         assert_eq!(q.point(11).guaranteed, 200 * 64);
+    }
+
+    #[test]
+    fn delta_ring_default_off_and_balances_when_on() {
+        // Off by default: no deltas, no window handle, write path
+        // untouched.
+        let (c, _q) = Coordinator::spawn(CoordinatorConfig::default());
+        assert_eq!(c.config().delta_ring, 0);
+        assert!(c.windows().is_none());
+        let out = c.finish();
+        assert_eq!(out.stats.deltas_published, 0);
+
+        // On: every ingested item lands in exactly one delta, so the
+        // window over the full ring covers the entire stream — including
+        // the drain-time partial epoch.
+        let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            k: 32,
+            k_majority: 8,
+            epoch_items: 500,
+            delta_ring: 64,
+            window_epochs: 4,
+            ..Default::default()
+        });
+        let w = c.windows().expect("delta ring on");
+        // 43 chunks: both shards end on a partial epoch (130-item chunks
+        // against a 500-item cadence), exercising the drain delta.
+        for _ in 0..43 {
+            c.push(vec![5; 130]);
+        }
+        let out = c.finish();
+        assert_eq!(out.stats.items, 5_590);
+        assert!(out.stats.deltas_published >= 2, "cadence + drain deltas");
+        let snap = w.window(64);
+        assert_eq!(snap.n(), 5_590, "full-ring window covers the whole stream");
+        assert_eq!(snap.point(5).estimate, 5_590);
+        assert!(snap.deltas().iter().any(|d| d.finished), "drain delta published");
+        assert_eq!(
+            out.stats.deltas_published,
+            w.window_stats().deltas_published
+        );
     }
 
     #[test]

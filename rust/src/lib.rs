@@ -1,3 +1,8 @@
+// Clippy (CI runs `clippy --all-targets -D warnings`): the streaming
+// hot loops index with a computed prefetch lookahead (`items.get(i +
+// AHEAD)` next to `items[i]`), which reads better as a range loop.
+#![allow(clippy::needless_range_loop)]
+
 //! # pss — Parallel Space Saving
 //!
 //! A full reproduction of *Parallel Space Saving on Multi and Many-Core
@@ -31,6 +36,11 @@
 //!   behind atomically-swapped `Arc`s; the [`query::QueryEngine`]
 //!   merges them with the combine tree and serves `top_k` / `point` /
 //!   `threshold` / `stats` concurrently with ingestion.
+//! * [`window`] — the sliding-window read path: shards additionally
+//!   publish per-epoch *delta* summaries into bounded rings; the
+//!   [`window::WindowedQueryEngine`] merges the last `w` deltas and
+//!   serves time-scoped `top_k_window` / `point_in_window` /
+//!   `k_majority_window` under the windowed bound `f ≤ f̂ ≤ f + W/k`.
 //! * [`config`] — TOML experiment configuration and paper presets.
 //! * [`bench_harness`] — one driver per paper table/figure.
 
@@ -49,6 +59,7 @@ pub mod query;
 pub mod runtime;
 pub mod summary;
 pub mod util;
+pub mod window;
 
 pub use summary::{Counter, FrequencySummary, SpaceSaving, StreamSummary};
 

@@ -8,7 +8,11 @@
 //!   candidates through the PJRT artifacts.
 //! * `query` — live-query demo: writers stream a synthetic workload
 //!   through the coordinator while this thread issues `top_k` / `point`
-//!   / `threshold` queries against the epoch snapshots.
+//!   / `threshold` queries against the epoch snapshots; `--window N`
+//!   additionally serves sliding-window answers from the delta rings.
+//! * `bench` — machine-readable perf record (ingest overhead of the
+//!   delta ring, landmark vs windowed query latency); `--json` emits a
+//!   `BENCH_window.json`-style record.
 //! * `repro` — regenerate a paper table/figure on the calibrated
 //!   cluster simulator (`--list` shows all experiment ids).
 //! * `verify` — offline exact verification of a run's candidates via
@@ -39,7 +43,10 @@ USAGE:
   pss query    [--n N] [--universe U] [--skew R] [--k K] [--threads T]
                [--chunk-len C] [--batch-ingest true|false]
                [--epoch-items E] [--interval-ms I]
+               [--window W] [--delta-ring R]
                [--top M] [--watch ITEM]
+  pss bench    [--n N] [--k K] [--threads T] [--window W] [--delta-ring R]
+               [--epoch-items E] [--repeat R] [--json] [--out FILE]
   pss repro    --exp <id> [--scale D] [--seed S] [--out DIR]   (or --list)
   pss verify   --input <file.pssd> [--k K] [--artifacts DIR]
   pss profile  --input <file.pssd> [--artifacts DIR]
@@ -58,6 +65,7 @@ fn main() {
         "generate" => cmd_generate(&args),
         "run" => cmd_run(&args),
         "query" => cmd_query(&args),
+        "bench" => cmd_bench(&args),
         "repro" => cmd_repro(&args),
         "verify" => cmd_verify(&args),
         "profile" => cmd_profile(&args),
@@ -120,6 +128,13 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
     if let Some(v) = args.get("chunk-len") { cfg.chunk_len = v.parse()?; }
     if let Some(v) = args.get("queue-depth") { cfg.queue_depth = v.parse()?; }
     if let Some(v) = args.get("batch-ingest") { cfg.batch_ingest = v.parse()?; }
+    if let Some(v) = args.get("window") {
+        cfg.window_epochs = v.parse()?;
+        // A usable ring must hold at least one full window; default to
+        // 2x for history unless --delta-ring overrides below.
+        cfg.delta_ring = cfg.delta_ring.max(cfg.window_epochs.saturating_mul(2));
+    }
+    if let Some(v) = args.get("delta-ring") { cfg.delta_ring = v.parse()?; }
     if args.has("verify") { cfg.verify = true; }
     cfg.validate()?;
     Ok(cfg)
@@ -165,9 +180,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             k_majority: cfg.k_majority,
             queue_depth: cfg.queue_depth,
             routing,
-            // Batch session: no live readers, skip epoch publication.
+            // Batch session: no live readers, skip epoch publication
+            // (and with it, delta publication).
             epoch_items: 0,
             batch_ingest: cfg.batch_ingest,
+            ..Default::default()
         },
         source.as_ref(),
         cfg.chunk_len,
@@ -233,6 +250,12 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "live query demo: {} items, universe={}, skew={}, {} shards, k={}, epoch={} items",
         cfg.n, cfg.universe, cfg.skew, cfg.threads, cfg.k, epoch_items
     );
+    if cfg.delta_ring > 0 {
+        println!(
+            "sliding window: last {} epochs per query, ring of {} deltas/shard",
+            cfg.window_epochs, cfg.delta_ring
+        );
+    }
 
     let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
         shards: cfg.threads,
@@ -242,7 +265,10 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         routing: Routing::RoundRobin,
         epoch_items,
         batch_ingest: cfg.batch_ingest,
+        delta_ring: cfg.delta_ring,
+        window_epochs: cfg.window_epochs,
     });
+    let windows = coord.windows();
 
     let t0 = std::time::Instant::now();
     let result = std::thread::scope(|scope| {
@@ -283,6 +309,21 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
                 top,
                 head.join(" "),
             );
+            if let Some(weng) = windows.as_ref() {
+                let win = weng.latest();
+                let whead: Vec<String> = win
+                    .top_k(top)
+                    .iter()
+                    .map(|c| format!("{}:{}", c.item, c.count))
+                    .collect();
+                print!(
+                    "  win{}[W={} ε={}]=[{}]",
+                    weng.default_window(),
+                    win.n(),
+                    win.epsilon(),
+                    whead.join(" "),
+                );
+            }
             if let Some(item) = watch {
                 let p = snap.point(item);
                 print!("  watch {}: f̂={} (≥{})", item, p.estimate, p.guaranteed);
@@ -311,11 +352,156 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     for c in report.guaranteed.iter().chain(&report.possible).take(20) {
         println!("  item {:>12}  f̂={:<12} ε≤{}", c.item, c.count, c.err);
     }
+    if let Some(weng) = windows.as_ref() {
+        let win = weng.latest();
+        let rep = win.k_majority(cfg.k_majority);
+        println!(
+            "windowed k-majority over last {} epochs (W={}, f̂ > W/{}): {} guaranteed, {} possible, ε={}",
+            weng.default_window(),
+            win.n(),
+            cfg.k_majority,
+            rep.guaranteed.len(),
+            rep.possible.len(),
+            rep.epsilon
+        );
+        let ws = weng.window_stats();
+        println!(
+            "deltas: {} published, {} retired (ring {}/shard); windowed queries: {} ({})",
+            ws.deltas_published,
+            ws.deltas_retired,
+            ws.ring_capacity,
+            ws.queries_served,
+            ws.query_latency
+        );
+    }
     let s = engine.stats();
     println!(
         "queries served: {} ({}), staleness at exit: {} items",
         s.queries_served, s.query_latency, s.staleness_items
     );
+    Ok(())
+}
+
+/// `pss bench` — a machine-readable perf record for the repo's bench
+/// trajectory: ingest throughput with the delta ring off vs on (the
+/// write-path cost of serving windows) and landmark vs windowed query
+/// latency. `--json` prints the record to stdout; `--out FILE` also
+/// writes it (e.g. `BENCH_window.json`).
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    use pss::coordinator::Coordinator;
+    use pss::util::benchkit;
+
+    let n: u64 = args.get_or("n", 2_000_000).map_err(anyhow::Error::msg)?;
+    let k: usize = args.get_or("k", 2_000).map_err(anyhow::Error::msg)?;
+    let threads: usize = args.get_or("threads", 4).map_err(anyhow::Error::msg)?;
+    let window: usize = args.get_or("window", 8).map_err(anyhow::Error::msg)?;
+    let delta_ring: usize = args.get_or("delta-ring", 16).map_err(anyhow::Error::msg)?;
+    let epoch_items: u64 = args.get_or("epoch-items", 65_536).map_err(anyhow::Error::msg)?;
+    let repeat: usize = args.get_or("repeat", 3).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(window >= 1, "--window must be >= 1");
+    anyhow::ensure!(delta_ring >= 1, "--delta-ring must be >= 1");
+    // The record reports windowed numbers for `window` epochs, so the
+    // ring must retain at least that many — otherwise the emitted
+    // window_mass/latency would silently describe a smaller window
+    // than the record claims (same clamp cmd_query applies).
+    let delta_ring = delta_ring.max(window);
+    let json = args.has("json");
+    let chunk_len = pss::parallel::batch_chunk_len_default();
+
+    // The acceptance workload: zipf-1.1 (the paper's default skew).
+    let src = GeneratedSource::zipf(n, 1 << 20, 1.1, 7);
+    let session = |ring: usize| {
+        let (mut c, q) = Coordinator::spawn(pss::coordinator::CoordinatorConfig {
+            shards: threads,
+            k,
+            k_majority: k as u64,
+            epoch_items,
+            delta_ring: ring,
+            window_epochs: window,
+            ..Default::default()
+        });
+        let w = c.windows();
+        let t0 = std::time::Instant::now();
+        let mut pos = 0u64;
+        while pos < n {
+            let take = ((n - pos) as usize).min(chunk_len);
+            c.push(src.slice(pos, pos + take as u64));
+            pos += take as u64;
+        }
+        let result = c.finish();
+        (t0.elapsed().as_secs_f64(), result, q, w)
+    };
+
+    // Best-of-`repeat` ingest wall time, ring off then on.
+    let mut best_off = f64::INFINITY;
+    for _ in 0..repeat.max(1) {
+        best_off = best_off.min(session(0).0);
+    }
+    let mut best_on = f64::INFINITY;
+    let mut last_on = None;
+    for _ in 0..repeat.max(1) {
+        let (t, result, q, w) = session(delta_ring);
+        best_on = best_on.min(t);
+        last_on = Some((result, q, w));
+    }
+    let (result, engine, windows) = last_on.expect("repeat >= 1");
+    let windows = windows.expect("delta ring on");
+    let overhead_pct = (best_on / best_off - 1.0) * 100.0;
+
+    // Query latency over the drained engines (benchkit auto-calibrates;
+    // keep the budget small — this is a record, not a microbench sweep).
+    let landmark_ns = benchkit::bench("landmark/top10", 0.3, None, || {
+        benchkit::black_box(engine.top_k(10));
+    })
+    .mean_ns;
+    let windowed_ns = benchkit::bench("window/top10", 0.3, None, || {
+        benchkit::black_box(windows.top_k_window(window, 10));
+    })
+    .mean_ns;
+    let win = windows.window(window);
+
+    let record = format!(
+        "{{\"bench\": \"window\", \"n\": {n}, \"k\": {k}, \"shards\": {threads}, \"skew\": 1.1,\n \
+          \"epoch_items\": {epoch_items}, \"delta_ring\": {delta_ring}, \"window_epochs\": {window},\n \
+          \"ingest_s_ring_off\": {best_off:.6}, \"ingest_s_ring_on\": {best_on:.6},\n \
+          \"ingest_mitems_per_s_ring_off\": {:.3}, \"ingest_mitems_per_s_ring_on\": {:.3},\n \
+          \"delta_overhead_pct\": {overhead_pct:.2},\n \
+          \"landmark_top10_ns\": {landmark_ns:.0}, \"window_top10_ns\": {windowed_ns:.0},\n \
+          \"window_mass\": {}, \"deltas_published\": {}}}",
+        n as f64 / best_off / 1e6,
+        n as f64 / best_on / 1e6,
+        win.n(),
+        result.stats.deltas_published,
+    );
+    if json {
+        println!("{record}");
+    } else {
+        println!(
+            "ingest {n} zipf-1.1 items over {threads} shards (k={k}, epoch={epoch_items}):"
+        );
+        println!(
+            "  ring off: {best_off:.3}s ({:.1} M items/s)",
+            n as f64 / best_off / 1e6
+        );
+        println!(
+            "  ring {delta_ring:>3}: {best_on:.3}s ({:.1} M items/s)  — delta overhead {overhead_pct:+.1}%",
+            n as f64 / best_on / 1e6
+        );
+        println!(
+            "query latency: landmark top10 {:.1} µs, window({window}) top10 {:.1} µs",
+            landmark_ns / 1e3,
+            windowed_ns / 1e3
+        );
+        println!(
+            "window mass {} over {} deltas published",
+            win.n(),
+            result.stats.deltas_published
+        );
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{record}\n"))?;
+        println!("[record written to {path}]");
+    }
     Ok(())
 }
 

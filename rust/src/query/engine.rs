@@ -144,23 +144,7 @@ impl MergedSnapshot {
 
     /// Frequency estimate for one item, with its certainty bounds.
     pub fn point(&self, item: u64) -> PointEstimate {
-        let n = self.n();
-        match self.merged.counters().iter().find(|c| c.item == item) {
-            Some(c) => PointEstimate {
-                item,
-                estimate: c.count,
-                guaranteed: c.guaranteed(),
-                monitored: true,
-                n,
-            },
-            None => PointEstimate {
-                item,
-                estimate: self.merged.min_count(),
-                guaranteed: 0,
-                monitored: false,
-                n,
-            },
-        }
+        point_estimate(&self.merged, item)
     }
 
     /// Items above a relative threshold `phi` ∈ `[0, 1)`: `f̂ > phi·n`,
@@ -178,27 +162,56 @@ impl MergedSnapshot {
     }
 
     fn threshold_abs(&self, threshold: u64) -> ThresholdReport {
-        let mut guaranteed = Vec::new();
-        let mut possible = Vec::new();
-        // Counters are ascending; walk from the top so both outputs
-        // come out descending by estimate.
-        for c in self.merged.counters().iter().rev() {
-            if c.count <= threshold {
-                break;
-            }
-            if c.guaranteed() > threshold {
-                guaranteed.push(*c);
-            } else {
-                possible.push(*c);
-            }
+        threshold_split(&self.merged, threshold)
+    }
+}
+
+/// Point query over any merged summary — shared by the landmark
+/// ([`MergedSnapshot`]) and windowed
+/// ([`WindowSnapshot`](crate::window::WindowSnapshot)) read paths.
+pub(crate) fn point_estimate(summary: &Summary, item: u64) -> PointEstimate {
+    let n = summary.n();
+    match summary.counters().iter().find(|c| c.item == item) {
+        Some(c) => PointEstimate {
+            item,
+            estimate: c.count,
+            guaranteed: c.guaranteed(),
+            monitored: true,
+            n,
+        },
+        None => PointEstimate {
+            item,
+            estimate: summary.min_count(),
+            guaranteed: 0,
+            monitored: false,
+            n,
+        },
+    }
+}
+
+/// Threshold query with the guaranteed-vs-possible split, over any
+/// merged summary — shared by the landmark and windowed read paths.
+pub(crate) fn threshold_split(summary: &Summary, threshold: u64) -> ThresholdReport {
+    let mut guaranteed = Vec::new();
+    let mut possible = Vec::new();
+    // Counters are ascending; walk from the top so both outputs
+    // come out descending by estimate.
+    for c in summary.counters().iter().rev() {
+        if c.count <= threshold {
+            break;
         }
-        ThresholdReport {
-            threshold,
-            guaranteed,
-            possible,
-            n: self.n(),
-            epsilon: self.epsilon(),
+        if c.guaranteed() > threshold {
+            guaranteed.push(*c);
+        } else {
+            possible.push(*c);
         }
+    }
+    ThresholdReport {
+        threshold,
+        guaranteed,
+        possible,
+        n: summary.n(),
+        epsilon: summary.epsilon(),
     }
 }
 
@@ -223,6 +236,11 @@ pub struct QueryEngineStats {
 }
 
 /// Cheap-to-clone handle serving live queries over the shard epochs.
+///
+/// Landmark answers only (everything since startup); the sliding-window
+/// sibling handle is handed out by
+/// [`Coordinator::windows`](crate::coordinator::Coordinator::windows)
+/// for sessions with a delta ring.
 #[derive(Debug, Clone)]
 pub struct QueryEngine {
     registry: Arc<EpochRegistry>,

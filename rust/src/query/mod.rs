@@ -22,6 +22,15 @@
 //!   `point(item)`, `threshold(phi)` / `k_majority(k)` with the
 //!   guaranteed-vs-possible split, and `stats()` (staleness + latency).
 //!
+//! These are *landmark* answers (everything since startup). The sibling
+//! [`crate::window`] layer rides the same epoch cadence to serve
+//! *sliding-window* answers from per-epoch delta summaries; sessions
+//! with [`CoordinatorConfig::delta_ring`] > 0 hand out that engine via
+//! [`Coordinator::windows`].
+//!
+//! [`CoordinatorConfig::delta_ring`]: crate::coordinator::CoordinatorConfig::delta_ring
+//! [`Coordinator::windows`]: crate::coordinator::Coordinator::windows
+//!
 //! The epoch-snapshot protocol, writer side then reader side:
 //!
 //! 1. every shard owns a private live summary no reader ever touches;

@@ -128,6 +128,18 @@ impl ChunkAggregator {
     }
 }
 
+/// Apply pre-aggregated `(item, weight)` runs to a summary, one
+/// weighted update per run. Split out of [`offer_batched`] so callers
+/// that need the runs for more than one consumer — the shard workers
+/// feed the same runs to the cumulative summary *and* the window
+/// [`DeltaBuilder`](crate::window::DeltaBuilder) — aggregate once and
+/// apply everywhere.
+pub fn offer_runs<S: FrequencySummary>(summary: &mut S, runs: &[(u64, u64)]) {
+    for &(item, weight) in runs {
+        summary.offer_weighted(item, weight);
+    }
+}
+
 /// Ingest one chunk through the batched fast path: pre-aggregate into
 /// runs with `scratch`, then apply one weighted update per distinct
 /// item. Equivalent in guarantees (not in exact estimates) to
@@ -138,9 +150,7 @@ pub fn offer_batched<S: FrequencySummary>(
     scratch: &mut ChunkAggregator,
     chunk: &[u64],
 ) {
-    for &(item, weight) in scratch.aggregate(chunk) {
-        summary.offer_weighted(item, weight);
-    }
+    offer_runs(summary, scratch.aggregate(chunk));
 }
 
 #[cfg(test)]

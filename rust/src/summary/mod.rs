@@ -22,7 +22,7 @@ pub mod space_saving;
 pub mod stream_summary;
 pub mod traits;
 
-pub use batch::{offer_batched, ChunkAggregator};
+pub use batch::{offer_batched, offer_runs, ChunkAggregator};
 pub use combine::Summary;
 pub use counter::Counter;
 pub use space_saving::SpaceSaving;

@@ -239,6 +239,48 @@ impl StreamSummary {
         self.attach(c, target);
         self.map.insert(item, c);
     }
+
+    /// Walk the whole structure and panic on any broken invariant:
+    /// bucket counts strictly ascending, no empty bucket in the list,
+    /// doubly-linked prev/next consistency on both lists, counter
+    /// back-pointers and counts matching their bucket, every counter
+    /// reachable, and the item map in sync. `O(k)`.
+    ///
+    /// Test/debug aid — the weighted-update property suite
+    /// (`prop_weighted_bucket_list_invariants`) calls this after every
+    /// update; it is not on any hot path.
+    pub fn check_consistency(&self) {
+        let mut b = self.min_bucket;
+        let mut last = None::<u64>;
+        let mut prev_b = NIL;
+        let mut seen = 0usize;
+        while b != NIL {
+            let bn = &self.buckets[b as usize];
+            assert!(bn.count >= 1, "zero-count bucket");
+            if let Some(last) = last {
+                assert!(bn.count > last, "buckets not strictly ascending");
+            }
+            assert_eq!(bn.prev, prev_b, "bucket prev link broken");
+            assert_ne!(bn.head, NIL, "empty bucket in list");
+            let mut c = bn.head;
+            let mut prev_c = NIL;
+            while c != NIL {
+                let cn = &self.counters[c as usize];
+                assert_eq!(cn.bucket, b, "counter bucket back-pointer wrong");
+                assert_eq!(cn.count, bn.count, "counter count != bucket count");
+                assert_eq!(cn.prev, prev_c, "counter prev link broken");
+                assert_eq!(self.map.get(cn.item), Some(c), "item map out of sync");
+                prev_c = c;
+                seen += 1;
+                c = cn.next;
+            }
+            last = Some(bn.count);
+            prev_b = b;
+            b = bn.next;
+        }
+        assert_eq!(seen, self.counters.len(), "counter outside the bucket list");
+        assert_eq!(self.map.len(), self.counters.len(), "map size mismatch");
+    }
 }
 
 impl FrequencySummary for StreamSummary {
@@ -317,27 +359,7 @@ mod tests {
         let mut rng = SplitMix64::new(5);
         for _ in 0..10_000 {
             ss.offer(rng.next_below(40));
-            // Walk the bucket list: counts strictly ascending, every
-            // counter's bucket back-pointer correct, non-empty buckets.
-            let mut b = ss.min_bucket;
-            let mut last = 0u64;
-            let mut seen = 0;
-            while b != NIL {
-                let bn = &ss.buckets[b as usize];
-                assert!(bn.count > last || (last == 0 && bn.count >= 1));
-                assert_ne!(bn.head, NIL, "empty bucket in list");
-                last = bn.count;
-                let mut c = bn.head;
-                while c != NIL {
-                    let cn = &ss.counters[c as usize];
-                    assert_eq!(cn.bucket, b);
-                    assert_eq!(cn.count, bn.count);
-                    seen += 1;
-                    c = cn.next;
-                }
-                b = bn.next;
-            }
-            assert_eq!(seen, ss.counters.len());
+            ss.check_consistency();
         }
     }
 
@@ -391,30 +413,6 @@ mod tests {
         assert_eq!(c.count, 4);
     }
 
-    /// Walk the bucket list and assert it is sorted, consistent, and
-    /// covers every counter (shared by the weighted-update tests).
-    fn assert_bucket_list_consistent(ss: &StreamSummary) {
-        let mut b = ss.min_bucket;
-        let mut last = 0u64;
-        let mut seen = 0;
-        while b != NIL {
-            let bn = &ss.buckets[b as usize];
-            assert!(bn.count > last || (last == 0 && bn.count >= 1), "unsorted buckets");
-            assert_ne!(bn.head, NIL, "empty bucket in list");
-            last = bn.count;
-            let mut c = bn.head;
-            while c != NIL {
-                let cn = &ss.counters[c as usize];
-                assert_eq!(cn.bucket, b);
-                assert_eq!(cn.count, bn.count);
-                seen += 1;
-                c = cn.next;
-            }
-            b = bn.next;
-        }
-        assert_eq!(seen, ss.counters.len());
-    }
-
     #[test]
     fn weighted_updates_keep_bucket_list_sorted() {
         // Weighted runs hop buckets (unlike +1 increments); hammer the
@@ -427,7 +425,7 @@ mod tests {
             let w = 1 + rng.next_below(12);
             ss.offer_weighted(item, w);
             mass += w;
-            assert_bucket_list_consistent(&ss);
+            ss.check_consistency();
         }
         assert_eq!(ss.processed(), mass);
         let total: u64 = ss.counters().iter().map(|c| c.count).sum();
@@ -463,7 +461,7 @@ mod tests {
         assert_eq!(ss.estimate(3), Some(14)); // 4 + 10
         let c3 = ss.counters().into_iter().find(|c| c.item == 3).unwrap();
         assert_eq!(c3.err, 4);
-        assert_bucket_list_consistent(&ss);
+        ss.check_consistency();
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! `DeltaBuilder` — the write-side accumulator that turns one epoch's
+//! items into a *delta summary*: the Space Saving state of just that
+//! epoch.
+//!
+//! The builder is the epoch-lifetime sibling of
+//! [`ChunkAggregator`](crate::summary::ChunkAggregator): the same
+//! open-addressing scratch (`FastMap` item → run index plus an
+//! `(item, weight)` run list), but accumulated *across* chunks instead
+//! of cleared per chunk. On the batched ingest path the shard worker
+//! already collapses each chunk into runs for the cumulative summary,
+//! so feeding the window side costs one cheap map probe per *distinct*
+//! item in the chunk ([`DeltaBuilder::absorb_runs`]) — not one summary
+//! update per occurrence. The per-item path uses
+//! [`DeltaBuilder::absorb_items`], one probe per occurrence.
+//!
+//! At each epoch boundary [`DeltaBuilder::cut`] freezes the epoch into
+//! a [`Summary`] with counter budget `k` and resets the builder:
+//!
+//! * up to `k` distinct items — the delta is **exact** (`err = 0` on
+//!   every counter): an aggregation, not a sketch;
+//! * more than `k` — the `k` heaviest runs are kept exactly and the
+//!   tail is pruned. Because every dropped run's count is at most the
+//!   `k`-th heaviest (which is at most `n_delta/k`), this is a valid
+//!   ε-deficient Space Saving state of the epoch: `f ≤ f̂ ≤
+//!   f + n_delta/k`, full recall above `n_delta/k`, and its
+//!   `min_count` bounds every unmonitored item — exactly what
+//!   Algorithm 2's `combine` assumes of its inputs. (Cheaper than
+//!   replaying the runs through a live summary, and the kept counters
+//!   stay exact.)
+//!
+//! Either way the delta is a mergeable summary, so a window of deltas
+//! combined by the paper's Algorithm 2 tree carries the windowed bound
+//! `f ≤ f̂ ≤ f + W/k` (`W` = total window mass) — see
+//! [`crate::window::WindowSnapshot`].
+
+use crate::summary::{Counter, Summary};
+use crate::util::FastMap;
+
+/// Epoch-lifetime `(item, weight)` accumulator feeding the delta ring.
+///
+/// Scratch is recycled across epochs: [`DeltaBuilder::cut`] clears the
+/// run list and index but keeps the allocation, shrinking back (with
+/// 8× hysteresis, never below the construction floor) after an
+/// unusually wide epoch so one burst does not tax every later reset.
+#[derive(Debug)]
+pub struct DeltaBuilder {
+    /// item -> index into `runs` (cleared per epoch).
+    index: FastMap,
+    /// `(item, weight)` runs in first-occurrence order; weights are the
+    /// item's **exact** count within the current epoch.
+    runs: Vec<(u64, u64)>,
+    /// Distinct-entry budget `index` is sized for.
+    capacity: usize,
+    /// Configured floor: the scratch never shrinks below this.
+    min_capacity: usize,
+    /// Total items absorbed since the last cut.
+    mass: u64,
+}
+
+impl Default for DeltaBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeltaBuilder {
+    /// Builder sized for epochs of moderate width; grows on demand.
+    pub fn new() -> Self {
+        Self::with_capacity(1024)
+    }
+
+    /// Builder sized for epochs of up to `distinct` distinct items
+    /// without a rebuild (also the floor it never shrinks below).
+    pub fn with_capacity(distinct: usize) -> Self {
+        let capacity = distinct.max(16);
+        Self {
+            index: FastMap::with_capacity(capacity),
+            runs: Vec::with_capacity(capacity),
+            capacity,
+            min_capacity: capacity,
+            mass: 0,
+        }
+    }
+
+    /// Items absorbed since the last cut (the pending delta's `n`).
+    pub fn mass(&self) -> u64 {
+        self.mass
+    }
+
+    /// Distinct items absorbed since the last cut.
+    pub fn distinct(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// True if nothing was absorbed since the last cut.
+    pub fn is_empty(&self) -> bool {
+        self.mass == 0
+    }
+
+    /// Distinct-item budget the scratch map is currently sized for.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Double the index when the run list hits its budget (rebuild +
+    /// reinsert; amortized O(1) per distinct item).
+    fn grow_if_full(&mut self) {
+        if self.runs.len() < self.capacity {
+            return;
+        }
+        self.capacity *= 2;
+        self.index = FastMap::with_capacity(self.capacity);
+        for (i, &(item, _)) in self.runs.iter().enumerate() {
+            self.index.insert(item, i as u32);
+        }
+    }
+
+    /// Absorb `weight` occurrences of `item` into the pending epoch.
+    #[inline]
+    pub fn add(&mut self, item: u64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        self.mass += weight;
+        match self.index.get(item) {
+            Some(r) => self.runs[r as usize].1 += weight,
+            None => {
+                self.grow_if_full();
+                self.index.insert(item, self.runs.len() as u32);
+                self.runs.push((item, weight));
+            }
+        }
+    }
+
+    /// Absorb pre-aggregated `(item, weight)` runs — the output of
+    /// [`ChunkAggregator::aggregate`](crate::summary::ChunkAggregator::aggregate)
+    /// the batched ingest path already computed for the cumulative
+    /// summary, reused here at one probe per distinct item.
+    pub fn absorb_runs(&mut self, runs: &[(u64, u64)]) {
+        for &(item, weight) in runs {
+            self.add(item, weight);
+        }
+    }
+
+    /// Absorb raw items (the per-item ingest path), with the same
+    /// prefetch pipelining as the summary hot loops.
+    pub fn absorb_items(&mut self, items: &[u64]) {
+        const AHEAD: usize = 8;
+        for (i, &item) in items.iter().enumerate() {
+            if let Some(&next) = items.get(i + AHEAD) {
+                self.index.prefetch(next);
+            }
+            self.add(item, 1);
+        }
+    }
+
+    /// Freeze the pending epoch into a delta [`Summary`] with counter
+    /// budget `k` and reset the builder for the next epoch.
+    ///
+    /// With at most `k` distinct items the delta is exact (`err = 0`
+    /// everywhere). Beyond that, the `k` heaviest runs are kept exactly
+    /// and the tail pruned: every dropped run weighs at most the
+    /// summary's `min_count ≤ n_delta/k`, so the result is a valid
+    /// ε-deficient Space Saving state of the epoch (`f ≤ f̂ ≤
+    /// f + n_delta/k`, full recall above `n_delta/k`) with `n` set to
+    /// the full epoch mass `n_delta`.
+    pub fn cut(&mut self, k: usize) -> Summary {
+        assert!(k >= 1, "k must be at least 1");
+        let distinct = self.runs.len();
+        if self.runs.len() > k {
+            // Keep the k heaviest runs. An item with in-epoch count
+            // above the k-th weight is necessarily among them, so
+            // recall survives the prune.
+            self.runs.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            self.runs.truncate(k);
+        }
+        let counters: Vec<Counter> = self
+            .runs
+            .iter()
+            .map(|&(item, count)| Counter { item, count, err: 0 })
+            .collect();
+        let summary = Summary::new(k, self.mass, counters);
+        // Reset, shrinking with hysteresis after an unusually wide epoch
+        // (mirrors ChunkAggregator's policy).
+        let fit = distinct.max(self.min_capacity).next_power_of_two();
+        self.runs.clear();
+        self.mass = 0;
+        if self.capacity > fit.saturating_mul(8) {
+            self.capacity = fit;
+            self.index = FastMap::with_capacity(self.capacity);
+            self.runs.shrink_to(self.capacity);
+        } else if !self.index.is_empty() {
+            self.index.clear();
+        }
+        summary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn exact_delta_under_budget() {
+        let mut db = DeltaBuilder::new();
+        db.absorb_items(&[5, 1, 5, 2, 1, 5]);
+        assert_eq!(db.mass(), 6);
+        assert_eq!(db.distinct(), 3);
+        let delta = db.cut(8);
+        assert_eq!(delta.n(), 6);
+        assert_eq!(delta.estimate(5), Some(3));
+        assert_eq!(delta.estimate(1), Some(2));
+        assert_eq!(delta.estimate(2), Some(1));
+        assert!(delta.counters().iter().all(|c| c.err == 0), "exact delta");
+        // The builder is reset for the next epoch.
+        assert!(db.is_empty());
+        let next = db.cut(8);
+        assert!(next.is_empty());
+        assert_eq!(next.n(), 0);
+    }
+
+    #[test]
+    fn runs_and_items_paths_agree() {
+        let chunk = [7u64, 7, 9, 7, 3, 9];
+        let mut agg = crate::summary::ChunkAggregator::new();
+        let mut by_runs = DeltaBuilder::new();
+        by_runs.absorb_runs(agg.aggregate(&chunk));
+        by_runs.absorb_runs(agg.aggregate(&chunk[..3]));
+        let mut by_items = DeltaBuilder::new();
+        by_items.absorb_items(&chunk);
+        by_items.absorb_items(&chunk[..3]);
+        assert_eq!(by_runs.mass(), by_items.mass());
+        let (a, b) = (by_runs.cut(16), by_items.cut(16));
+        assert_eq!(a.counters(), b.counters());
+        assert_eq!(a.n(), 9);
+    }
+
+    #[test]
+    fn overfull_delta_keeps_space_saving_guarantees() {
+        let mut rng = SplitMix64::new(31);
+        for trial in 0..30 {
+            let n = 500 + rng.next_below(4_000) as usize;
+            let k = 1 + rng.next_below(48) as usize;
+            let universe = 2 + rng.next_below(600);
+            let items: Vec<u64> = (0..n).map(|_| rng.next_below(universe)).collect();
+            let mut truth: HashMap<u64, u64> = HashMap::new();
+            for &it in &items {
+                *truth.entry(it).or_default() += 1;
+            }
+            let mut db = DeltaBuilder::with_capacity(64);
+            for block in items.chunks(97) {
+                db.absorb_items(block);
+            }
+            let delta = db.cut(k);
+            assert_eq!(delta.n(), n as u64, "trial {trial}: mass");
+            assert!(delta.counters().len() <= k, "trial {trial}: budget");
+            let eps = delta.epsilon();
+            for c in delta.counters() {
+                let f = truth.get(&c.item).copied().unwrap_or(0);
+                assert!(c.count >= f, "trial {trial}: under-estimate");
+                assert!(c.count - f <= eps, "trial {trial}: ε bound");
+                assert!(c.count - c.err <= f, "trial {trial}: err bound");
+            }
+            let thresh = n as u64 / k as u64;
+            let monitored: std::collections::HashSet<u64> =
+                delta.counters().iter().map(|c| c.item).collect();
+            for (item, f) in &truth {
+                if *f > thresh {
+                    assert!(monitored.contains(item), "trial {trial}: lost {item}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grows_past_capacity_then_shrinks_back() {
+        let mut db = DeltaBuilder::with_capacity(16);
+        let wide: Vec<u64> = (0..10_000).collect();
+        db.absorb_items(&wide);
+        assert_eq!(db.distinct(), 10_000);
+        assert!(db.capacity() >= 10_000);
+        let delta = db.cut(128);
+        assert_eq!(delta.n(), 10_000);
+        // A narrow follow-up epoch shrinks the scratch back toward the floor.
+        db.absorb_items(&[1, 1, 2]);
+        let _ = db.cut(128);
+        assert!(db.capacity() < 10_000);
+        assert!(db.capacity() >= 16);
+        // Still correct after the resize dance.
+        db.absorb_items(&wide);
+        assert_eq!(db.cut(128).n(), 10_000);
+    }
+
+    #[test]
+    fn zero_weight_is_a_noop() {
+        let mut db = DeltaBuilder::new();
+        db.add(9, 0);
+        assert!(db.is_empty());
+        db.add(9, 3);
+        assert_eq!(db.mass(), 3);
+    }
+}

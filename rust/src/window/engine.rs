@@ -1,0 +1,416 @@
+//! `WindowedQueryEngine` / `WindowSnapshot` — the windowed query API
+//! over the delta rings.
+//!
+//! A windowed query materializes a [`WindowSnapshot`]: it clones the
+//! in-window `Arc<DeltaSummary>`s out of the [`WindowStore`] (refcount
+//! bumps, never data) and runs the paper's combine tree
+//! ([`tree_reduce_refs`]) over the *borrowed* delta summaries — exactly
+//! the machinery the landmark read path uses, pointed at the last `w`
+//! epochs instead of the cumulative snapshots.
+//!
+//! ## The windowed error bound
+//!
+//! Every delta is a valid Space Saving summary of its epoch (see
+//! [`DeltaBuilder`](super::DeltaBuilder)), and Algorithm 2's `combine`
+//! preserves the bound additively, so a merged window whose deltas
+//! total `W` items (the *window mass*, [`WindowSnapshot::n`]) carries
+//! for every item, with `f` its true count **within the covered
+//! window**:
+//!
+//! * no under-estimation: `f ≤ f̂`,
+//! * bounded over-estimation: `f̂ ≤ f + ⌊W/k⌋`,
+//! * windowed k-majority recall: every item with `f > W/k` holds a
+//!   counter in the merged summary.
+//!
+//! "Covered window" is exact, not approximate: the snapshot reports the
+//! precise delta set it merged ([`WindowSnapshot::deltas`]), so the
+//! answer is always *about* a well-defined slice of the stream — the
+//! property-tested contract (`prop_windowed_bounds`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::parallel::tree_reduce_refs;
+use crate::query::engine::{point_estimate, threshold_split};
+use crate::query::{PointEstimate, ThresholdReport};
+use crate::summary::{Counter, Summary};
+
+use super::store::{DeltaSummary, WindowStore};
+
+/// A point-in-time, internally-consistent view over one window of
+/// epoch deltas across all shards.
+///
+/// Holding one pins the underlying deltas (via `Arc`), so repeated
+/// queries against it are answered from identical data even as the
+/// rings keep turning over.
+#[derive(Debug, Clone)]
+pub struct WindowSnapshot {
+    /// The combine-tree merge of every in-window delta.
+    merged: Summary,
+    /// The deltas this view was built from.
+    parts: Vec<Arc<DeltaSummary>>,
+    /// When the view was materialized.
+    taken_at: Instant,
+}
+
+/// One delta's contribution to a [`WindowSnapshot`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeltaInfo {
+    /// Shard index.
+    pub shard: usize,
+    /// Per-shard delta sequence number.
+    pub seq: u64,
+    /// Items covered by that delta (its epoch mass).
+    pub n: u64,
+    /// Drain-time final partial delta?
+    pub finished: bool,
+}
+
+impl WindowSnapshot {
+    fn build(parts: Vec<Arc<DeltaSummary>>, k: usize) -> Self {
+        let merged = if parts.is_empty() {
+            Summary::empty(k)
+        } else {
+            let leaves: Vec<&Summary> = parts.iter().map(|p| &p.summary).collect();
+            tree_reduce_refs(&leaves)
+        };
+        Self { merged, parts, taken_at: Instant::now() }
+    }
+
+    /// The merged window summary itself.
+    pub fn summary(&self) -> &Summary {
+        &self.merged
+    }
+
+    /// Window mass `W`: total items covered by the merged deltas.
+    pub fn n(&self) -> u64 {
+        self.merged.n()
+    }
+
+    /// The ε = ⌊W/k⌋ over-estimation bound of this window.
+    pub fn epsilon(&self) -> u64 {
+        self.merged.epsilon()
+    }
+
+    /// True when the window covers no published delta.
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    /// The exact delta set this view merged (per shard: contiguous
+    /// sequence numbers, oldest → newest).
+    pub fn deltas(&self) -> Vec<DeltaInfo> {
+        self.parts
+            .iter()
+            .map(|p| DeltaInfo {
+                shard: p.shard,
+                seq: p.seq,
+                n: p.summary.n(),
+                finished: p.finished,
+            })
+            .collect()
+    }
+
+    /// Age of the *oldest* merged delta — how far back the window
+    /// reaches in wall-clock terms.
+    pub fn span(&self) -> Duration {
+        self.parts
+            .iter()
+            .map(|p| self.taken_at.saturating_duration_since(p.published_at))
+            .max()
+            .unwrap_or_default()
+    }
+
+    /// Age of the *newest* merged delta — how far the window trails the
+    /// write path.
+    pub fn staleness(&self) -> Duration {
+        self.parts
+            .iter()
+            .map(|p| self.taken_at.saturating_duration_since(p.published_at))
+            .min()
+            .unwrap_or_default()
+    }
+
+    /// Top-`m` items of the window by estimated frequency, descending.
+    pub fn top_k(&self, m: usize) -> Vec<Counter> {
+        self.merged.top_k(m)
+    }
+
+    /// The prefix of [`WindowSnapshot::top_k`] whose order is certain.
+    pub fn top_k_guaranteed(&self, m: usize) -> Vec<Counter> {
+        self.merged.top_k_guaranteed(m)
+    }
+
+    /// Frequency estimate for one item within the window, with bounds
+    /// (`n` in the result is the window mass `W`).
+    pub fn point(&self, item: u64) -> PointEstimate {
+        point_estimate(&self.merged, item)
+    }
+
+    /// Items above a relative threshold `phi` ∈ `[0, 1)` of the window
+    /// mass (`f̂ > phi·W`), split into guaranteed and possible.
+    pub fn threshold(&self, phi: f64) -> ThresholdReport {
+        assert!((0.0..1.0).contains(&phi), "phi must be in [0, 1)");
+        threshold_split(&self.merged, (phi * self.n() as f64).floor() as u64)
+    }
+
+    /// The windowed k-majority query: all items with `f̂ > W/k_majority`
+    /// in the covered window.
+    pub fn k_majority(&self, k_majority: u64) -> ThresholdReport {
+        assert!(k_majority >= 2, "k_majority must be >= 2");
+        threshold_split(&self.merged, self.n() / k_majority)
+    }
+}
+
+/// Point-in-time window-layer statistics.
+#[derive(Debug, Clone)]
+pub struct WindowStats {
+    /// Shard count.
+    pub shards: usize,
+    /// Ring capacity (deltas retained per shard).
+    pub ring_capacity: usize,
+    /// Default window width, in epochs.
+    pub window_epochs: usize,
+    /// Deltas published across all shards since spawn.
+    pub deltas_published: u64,
+    /// Deltas retired (pushed out of a full ring).
+    pub deltas_retired: u64,
+    /// Deltas currently retained, per shard.
+    pub per_shard_available: Vec<usize>,
+    /// Newest published sequence number, per shard (0 = none yet).
+    pub per_shard_seq: Vec<u64>,
+    /// Windowed queries served across all engine handles.
+    pub queries_served: u64,
+    /// Latency digest over this engine's windowed queries.
+    pub query_latency: LatencySummary,
+}
+
+/// Cheap-to-clone handle serving sliding-window queries over the delta
+/// rings.
+#[derive(Debug, Clone)]
+pub struct WindowedQueryEngine {
+    store: Arc<WindowStore>,
+    latency: Arc<LatencyHistogram>,
+    /// Default window width (epochs) for the no-argument sugar.
+    window_epochs: usize,
+    /// k-majority parameter for [`WindowedQueryEngine::frequent_window`].
+    k_majority: u64,
+}
+
+impl WindowedQueryEngine {
+    /// Attach an engine to a store. `window_epochs` is the default
+    /// window width; `k_majority` parameterizes
+    /// [`WindowedQueryEngine::frequent_window`].
+    pub fn new(store: Arc<WindowStore>, window_epochs: usize, k_majority: u64) -> Self {
+        Self {
+            store,
+            latency: Arc::new(LatencyHistogram::new()),
+            window_epochs: window_epochs.max(1),
+            k_majority,
+        }
+    }
+
+    /// The shared delta store (for publishers / the coordinator).
+    pub fn store(&self) -> &Arc<WindowStore> {
+        &self.store
+    }
+
+    /// The default window width, in epochs.
+    pub fn default_window(&self) -> usize {
+        self.window_epochs
+    }
+
+    /// Materialize a consistent merged view over the last `epochs`
+    /// published deltas of every shard (fewer where a shard has not
+    /// published — or no longer retains — that many). This is the only
+    /// place window merge work happens; the query sugar below goes
+    /// through it.
+    pub fn window(&self, epochs: usize) -> WindowSnapshot {
+        self.snapshot_of(self.store.window(epochs.max(1)))
+    }
+
+    /// Coarse time-based window: merge every retained delta published
+    /// within the last `max_age` (granularity = one epoch).
+    pub fn window_by_age(&self, max_age: Duration) -> WindowSnapshot {
+        self.snapshot_of(self.store.window_by_age(max_age))
+    }
+
+    /// The default-width window (`window_epochs` epochs).
+    pub fn latest(&self) -> WindowSnapshot {
+        self.window(self.window_epochs)
+    }
+
+    fn snapshot_of(&self, parts: Vec<Arc<DeltaSummary>>) -> WindowSnapshot {
+        let t0 = Instant::now();
+        let snap = WindowSnapshot::build(parts, self.store.k());
+        self.latency.record(t0.elapsed());
+        self.store.count_query();
+        snap
+    }
+
+    /// Top-`m` items over the last `epochs` epochs, descending.
+    ///
+    /// Convenience for `self.window(epochs).top_k(m)`; take an explicit
+    /// [`WindowedQueryEngine::window`] when several queries must see the
+    /// same delta set.
+    pub fn top_k_window(&self, epochs: usize, m: usize) -> Vec<Counter> {
+        self.window(epochs).top_k(m)
+    }
+
+    /// Frequency estimate for one item over the last `epochs` epochs.
+    pub fn point_in_window(&self, epochs: usize, item: u64) -> PointEstimate {
+        self.window(epochs).point(item)
+    }
+
+    /// k-majority over the last `epochs` epochs: items with
+    /// `f̂ > W/k_majority`, split guaranteed vs possible.
+    pub fn k_majority_window(&self, epochs: usize, k_majority: u64) -> ThresholdReport {
+        self.window(epochs).k_majority(k_majority)
+    }
+
+    /// The windowed k-majority at the engine's configured defaults.
+    pub fn frequent_window(&self) -> ThresholdReport {
+        self.k_majority_window(self.window_epochs, self.k_majority)
+    }
+
+    /// Ring occupancy, publication counters and query latency.
+    pub fn window_stats(&self) -> WindowStats {
+        let shards = self.store.shards();
+        WindowStats {
+            shards,
+            ring_capacity: self.store.capacity(),
+            window_epochs: self.window_epochs,
+            deltas_published: self.store.deltas_published(),
+            deltas_retired: self.store.deltas_retired(),
+            per_shard_available: (0..shards).map(|s| self.store.available(s)).collect(),
+            per_shard_seq: (0..shards).map(|s| self.store.last_seq(s)).collect(),
+            queries_served: self.store.queries_served(),
+            query_latency: self.latency.summary(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::{FrequencySummary, SpaceSaving};
+    use std::collections::HashMap;
+
+    fn summary_of(items: &[u64], k: usize) -> Summary {
+        let mut ss = SpaceSaving::new(k);
+        ss.offer_all(items);
+        ss.freeze()
+    }
+
+    #[test]
+    fn empty_window_answers_empty() {
+        let engine = WindowedQueryEngine::new(WindowStore::new(2, 4, 16), 4, 16);
+        let snap = engine.window(4);
+        assert!(snap.is_empty());
+        assert_eq!(snap.n(), 0);
+        assert!(snap.top_k(5).is_empty());
+        let p = snap.point(42);
+        assert_eq!((p.estimate, p.guaranteed, p.monitored), (0, 0, false));
+        let rep = engine.frequent_window();
+        assert!(rep.guaranteed.is_empty() && rep.possible.is_empty());
+        assert_eq!(engine.window_stats().queries_served, 2);
+    }
+
+    #[test]
+    fn window_merges_only_requested_epochs() {
+        let store = WindowStore::new(1, 8, 16);
+        let engine = WindowedQueryEngine::new(store.clone(), 2, 16);
+        store.publish(0, summary_of(&[1, 1, 1], 16), false); // seq 1
+        store.publish(0, summary_of(&[2, 2], 16), false); // seq 2
+        store.publish(0, summary_of(&[3], 16), false); // seq 3
+
+        // Window of 2 = seqs {2, 3}: item 1 is outside.
+        let snap = engine.window(2);
+        assert_eq!(snap.n(), 3);
+        assert_eq!(
+            snap.deltas(),
+            vec![
+                DeltaInfo { shard: 0, seq: 2, n: 2, finished: false },
+                DeltaInfo { shard: 0, seq: 3, n: 1, finished: false },
+            ]
+        );
+        assert_eq!(snap.point(2).estimate, 2);
+        assert!(!snap.point(1).monitored, "expired epoch must not leak in");
+        // The full window still sees everything retained.
+        assert_eq!(engine.window(8).n(), 6);
+        // A pinned snapshot survives ring turnover.
+        for round in 0..10 {
+            store.publish(0, summary_of(&[round], 16), false);
+        }
+        assert_eq!(snap.n(), 3, "pinned view unchanged");
+    }
+
+    #[test]
+    fn windowed_bounds_hold_across_shards() {
+        let k = 32;
+        let store = WindowStore::new(3, 4, k);
+        let engine = WindowedQueryEngine::new(store.clone(), 4, k as u64);
+        let mut rng = crate::util::SplitMix64::new(13);
+        let mut in_window: Vec<u64> = Vec::new();
+        for shard in 0..3usize {
+            for _epoch in 0..2 {
+                let items: Vec<u64> = (0..3_000)
+                    .map(|_| {
+                        if rng.next_f64() < 0.5 {
+                            rng.next_below(5)
+                        } else {
+                            rng.next_below(1_500)
+                        }
+                    })
+                    .collect();
+                in_window.extend_from_slice(&items);
+                store.publish(shard, summary_of(&items, k), false);
+            }
+        }
+        let snap = engine.window(2);
+        assert_eq!(snap.n(), in_window.len() as u64);
+        let mut truth: HashMap<u64, u64> = HashMap::new();
+        for &i in &in_window {
+            *truth.entry(i).or_default() += 1;
+        }
+        let eps = snap.epsilon();
+        for c in snap.summary().counters() {
+            let f = truth.get(&c.item).copied().unwrap_or(0);
+            assert!(c.count >= f, "window under-estimate");
+            assert!(c.count - f <= eps, "window ε bound broken");
+        }
+        let monitored: std::collections::HashSet<u64> =
+            snap.summary().counters().iter().map(|c| c.item).collect();
+        for (item, f) in &truth {
+            if *f > eps {
+                assert!(monitored.contains(item), "lost windowed heavy hitter {item}");
+            }
+        }
+        // Guaranteed windowed k-majority items are true positives.
+        let rep = snap.k_majority(k as u64);
+        for c in &rep.guaranteed {
+            let f = truth.get(&c.item).copied().unwrap_or(0);
+            assert!(f > rep.threshold, "guaranteed false positive {}", c.item);
+        }
+    }
+
+    #[test]
+    fn stats_reflect_rings() {
+        let store = WindowStore::new(2, 2, 8);
+        let engine = WindowedQueryEngine::new(store.clone(), 3, 8);
+        assert_eq!(engine.default_window(), 3);
+        for _ in 0..3 {
+            store.publish(0, summary_of(&[1], 8), false);
+        }
+        let s = engine.window_stats();
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.ring_capacity, 2);
+        assert_eq!(s.deltas_published, 3);
+        assert_eq!(s.deltas_retired, 1);
+        assert_eq!(s.per_shard_available, vec![2, 0]);
+        assert_eq!(s.per_shard_seq, vec![3, 0]);
+        let _ = engine.top_k_window(2, 1);
+        assert_eq!(engine.window_stats().query_latency.count, 1);
+    }
+}

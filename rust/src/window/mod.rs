@@ -1,0 +1,54 @@
+//! The sliding-window layer — time-scoped frequent items over the
+//! streaming shards.
+//!
+//! The landmark read path ([`crate::query`]) answers "top-k since
+//! startup". Production stream mining usually wants "top-k over the
+//! last W items / last few minutes" — the query-window gap QPOPSS
+//! (Jarlow et al., arXiv:2409.01749) identifies for query-heavy Space
+//! Saving deployments. Because the paper's `combine` (Algorithm 2)
+//! makes summaries mergeable, windows fall out of *deltas*: publish
+//! the Space Saving state of each epoch separately, keep a bounded
+//! ring of recent deltas, and merge exactly the in-window ones on
+//! demand.
+//!
+//! ```text
+//!  shard worker (per epoch_items, refresh(), drain):
+//!    chunk ─▶ ChunkAggregator runs ─▶ cumulative StreamSummary ─▶ EpochRegistry (landmark)
+//!                      └──────────▶ DeltaBuilder ──cut()──▶ WindowStore ring  (window)
+//!                                                           [Δ₁ Δ₂ … Δᵣ] oldest retired
+//!  windowed query:
+//!    last w deltas × shards ──borrow──▶ tree_reduce_refs(combine) ─▶ WindowSnapshot
+//!                                        top_k / point / k_majority / stats
+//! ```
+//!
+//! * [`delta`] — [`DeltaBuilder`]: epoch-lifetime `(item, weight)`
+//!   accumulation (reusing the batched-ingest run aggregation) and the
+//!   `cut()` that freezes an epoch into a delta [`Summary`].
+//! * [`store`] — [`DeltaSummary`] and the [`WindowStore`]: bounded
+//!   per-shard delta rings with inline retirement, writers never
+//!   blocked by readers.
+//! * [`engine`] — [`WindowedQueryEngine`] / [`WindowSnapshot`]:
+//!   `top_k_window`, `point_in_window`, `k_majority_window`,
+//!   `window_by_age`, `window_stats`.
+//!
+//! Guarantee: a window covering deltas of total mass `W` (with counter
+//! budget `k`) satisfies `f ≤ f̂ ≤ f + W/k` for every item's true count
+//! `f` within the covered window, and monitors every item with
+//! `f > W/k` — the Space Saving bound, re-scoped from the whole stream
+//! to the window (`prop_windowed_bounds` drives this across shard
+//! counts and window widths). The coordinator wires the layer up when
+//! [`CoordinatorConfig::delta_ring`] > 0; every delta publication is
+//! accounted so window mass balances ingest
+//! ([`IngestStats::deltas_published`]).
+//!
+//! [`Summary`]: crate::summary::Summary
+//! [`CoordinatorConfig::delta_ring`]: crate::coordinator::CoordinatorConfig::delta_ring
+//! [`IngestStats::deltas_published`]: crate::coordinator::IngestStats::deltas_published
+
+pub mod delta;
+pub mod engine;
+pub mod store;
+
+pub use delta::DeltaBuilder;
+pub use engine::{DeltaInfo, WindowSnapshot, WindowStats, WindowedQueryEngine};
+pub use store::{DeltaSummary, WindowStore};

@@ -1,0 +1,318 @@
+//! `WindowStore` — bounded per-shard rings of published epoch deltas,
+//! the shared state between the shard workers (delta publishers) and
+//! every [`WindowedQueryEngine`](super::WindowedQueryEngine) handle.
+//!
+//! Each shard owns one delta ring: a `VecDeque` of the last
+//! `capacity` `Arc<DeltaSummary>`s. Publication pushes the new delta
+//! and retires the oldest in the same briefly-held write lock — both
+//! are pointer moves, never data copies, so expiry happens inline on
+//! the write path without a sweeper thread and without ever blocking
+//! on a reader's merge (readers only hold the read lock long enough to
+//! clone `Arc`s; the summaries themselves are immutable). This is the
+//! same isolation discipline as [`crate::query::EpochSlot`], extended
+//! from "latest snapshot" to "last R deltas".
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::summary::Summary;
+
+/// One published, immutable per-shard epoch delta: the Space Saving
+/// state of just that epoch's items (`summary.n()` = the epoch's mass).
+#[derive(Debug, Clone)]
+pub struct DeltaSummary {
+    /// Shard that published this delta.
+    pub shard: usize,
+    /// Per-shard delta sequence number (the first published delta is 1).
+    pub seq: u64,
+    /// The frozen delta summary (counters ascending, `n` = epoch mass).
+    pub summary: Summary,
+    /// When the delta was published (the basis of time-based windows).
+    pub published_at: Instant,
+    /// Whether this is the shard's final (drain-time) partial delta.
+    pub finished: bool,
+}
+
+/// One shard's bounded delta ring.
+#[derive(Debug)]
+struct DeltaRing {
+    /// Oldest → newest. The lock is held only for push/pop/`Arc` clones.
+    deltas: RwLock<VecDeque<Arc<DeltaSummary>>>,
+    /// Last published sequence number (0 = nothing published yet).
+    seq: AtomicU64,
+    /// Set at drain, whether or not a final delta was published.
+    finished: AtomicBool,
+}
+
+/// Shared delta-ring state: `shards` rings of `capacity` deltas each.
+#[derive(Debug)]
+pub struct WindowStore {
+    rings: Vec<DeltaRing>,
+    capacity: usize,
+    /// Counter budget every published delta was cut with.
+    k: usize,
+    deltas_published: AtomicU64,
+    deltas_retired: AtomicU64,
+    queries_served: AtomicU64,
+}
+
+impl WindowStore {
+    /// Store for `shards` rings holding `capacity` deltas each, all cut
+    /// with counter budget `k`.
+    pub fn new(shards: usize, capacity: usize, k: usize) -> Arc<Self> {
+        assert!(shards >= 1 && capacity >= 1 && k >= 1);
+        Arc::new(Self {
+            rings: (0..shards)
+                .map(|_| DeltaRing {
+                    deltas: RwLock::new(VecDeque::with_capacity(capacity + 1)),
+                    seq: AtomicU64::new(0),
+                    finished: AtomicBool::new(false),
+                })
+                .collect(),
+            capacity,
+            k,
+            deltas_published: AtomicU64::new(0),
+            deltas_retired: AtomicU64::new(0),
+            queries_served: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Ring capacity (deltas retained per shard).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Counter budget of the published deltas.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Publisher side: append shard `shard`'s next epoch delta, retiring
+    /// the oldest one if the ring is full. Returns the delta's per-shard
+    /// sequence number. `finished` marks the drain-time final delta.
+    pub fn publish(&self, shard: usize, summary: Summary, finished: bool) -> u64 {
+        let ring = &self.rings[shard];
+        // Single publisher per shard: load+store needs no RMW.
+        let seq = ring.seq.load(Ordering::Relaxed) + 1;
+        let delta = Arc::new(DeltaSummary {
+            shard,
+            seq,
+            summary,
+            published_at: Instant::now(),
+            finished,
+        });
+        {
+            let mut q = ring.deltas.write().expect("delta ring poisoned");
+            q.push_back(delta);
+            if q.len() > self.capacity {
+                q.pop_front();
+                self.deltas_retired.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        ring.seq.store(seq, Ordering::Release);
+        if finished {
+            ring.finished.store(true, Ordering::Release);
+        }
+        self.deltas_published.fetch_add(1, Ordering::Relaxed);
+        seq
+    }
+
+    /// Publisher side: mark a shard drained when its final partial
+    /// epoch was empty (no delta to publish).
+    pub fn finish_shard(&self, shard: usize) {
+        self.rings[shard].finished.store(true, Ordering::Release);
+    }
+
+    /// Whether shard `shard` has published its drain-time state.
+    pub fn shard_finished(&self, shard: usize) -> bool {
+        self.rings[shard].finished.load(Ordering::Acquire)
+    }
+
+    /// Last sequence number shard `shard` published (0 = none yet).
+    pub fn last_seq(&self, shard: usize) -> u64 {
+        self.rings[shard].seq.load(Ordering::Acquire)
+    }
+
+    /// Deltas currently held for shard `shard` (≤ `capacity`).
+    pub fn available(&self, shard: usize) -> usize {
+        self.rings[shard].deltas.read().expect("delta ring poisoned").len()
+    }
+
+    /// Reader side: the newest `take` deltas of one shard, oldest →
+    /// newest (fewer if the shard has not published that many).
+    pub fn latest(&self, shard: usize, take: usize) -> Vec<Arc<DeltaSummary>> {
+        let q = self.rings[shard].deltas.read().expect("delta ring poisoned");
+        let skip = q.len().saturating_sub(take);
+        q.iter().skip(skip).cloned().collect()
+    }
+
+    /// Reader side: the count-based window — the newest `epochs` deltas
+    /// of **every** shard, concatenated (each shard's run oldest →
+    /// newest).
+    pub fn window(&self, epochs: usize) -> Vec<Arc<DeltaSummary>> {
+        let mut parts = Vec::with_capacity(self.rings.len() * epochs.min(self.capacity));
+        for shard in 0..self.rings.len() {
+            parts.extend(self.latest(shard, epochs));
+        }
+        parts
+    }
+
+    /// Reader side: the coarse time-based window — every retained delta
+    /// published within the last `max_age` (granularity = one epoch; a
+    /// delta is in or out by its publication instant).
+    pub fn window_by_age(&self, max_age: Duration) -> Vec<Arc<DeltaSummary>> {
+        let now = Instant::now();
+        let mut parts = Vec::new();
+        for ring in &self.rings {
+            let q = ring.deltas.read().expect("delta ring poisoned");
+            parts.extend(
+                q.iter()
+                    .filter(|d| now.saturating_duration_since(d.published_at) <= max_age)
+                    .cloned(),
+            );
+        }
+        parts
+    }
+
+    /// Total deltas published across all shards.
+    pub fn deltas_published(&self) -> u64 {
+        self.deltas_published.load(Ordering::Relaxed)
+    }
+
+    /// Total deltas retired (pushed out of a full ring).
+    pub fn deltas_retired(&self) -> u64 {
+        self.deltas_retired.load(Ordering::Relaxed)
+    }
+
+    /// Count one served windowed query.
+    pub fn count_query(&self) {
+        self.queries_served.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Windowed queries served so far.
+    pub fn queries_served(&self) -> u64 {
+        self.queries_served.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::{FrequencySummary, SpaceSaving};
+
+    fn summary_of(items: &[u64], k: usize) -> Summary {
+        let mut ss = SpaceSaving::new(k);
+        ss.offer_all(items);
+        ss.freeze()
+    }
+
+    #[test]
+    fn publish_sequences_and_ring_bound() {
+        let store = WindowStore::new(2, 3, 8);
+        for round in 1..=5u64 {
+            let seq = store.publish(0, summary_of(&[round], 8), false);
+            assert_eq!(seq, round);
+        }
+        assert_eq!(store.last_seq(0), 5);
+        assert_eq!(store.last_seq(1), 0);
+        assert_eq!(store.available(0), 3, "ring keeps only the newest 3");
+        assert_eq!(store.deltas_published(), 5);
+        assert_eq!(store.deltas_retired(), 2);
+        // Oldest → newest, and only the surviving sequences.
+        let seqs: Vec<u64> = store.latest(0, 10).iter().map(|d| d.seq).collect();
+        assert_eq!(seqs, vec![3, 4, 5]);
+        let newest: Vec<u64> = store.latest(0, 2).iter().map(|d| d.seq).collect();
+        assert_eq!(newest, vec![4, 5]);
+    }
+
+    #[test]
+    fn window_spans_all_shards() {
+        let store = WindowStore::new(3, 4, 8);
+        store.publish(0, summary_of(&[1, 1], 8), false);
+        store.publish(2, summary_of(&[2], 8), false);
+        store.publish(2, summary_of(&[3], 8), false);
+        let parts = store.window(2);
+        let mut got: Vec<(usize, u64)> = parts.iter().map(|d| (d.shard, d.seq)).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 1), (2, 1), (2, 2)]);
+    }
+
+    #[test]
+    fn readers_pin_deltas_past_retirement() {
+        let store = WindowStore::new(1, 1, 4);
+        store.publish(0, summary_of(&[7, 7], 4), false);
+        let pinned = store.latest(0, 1);
+        // The ring retires seq 1, but the reader's Arc keeps it alive.
+        store.publish(0, summary_of(&[9], 4), false);
+        assert_eq!(pinned[0].seq, 1);
+        assert_eq!(pinned[0].summary.estimate(7), Some(2));
+        assert_eq!(store.latest(0, 1)[0].seq, 2);
+    }
+
+    #[test]
+    fn finished_marks_drain() {
+        let store = WindowStore::new(2, 2, 4);
+        assert!(!store.shard_finished(0));
+        store.publish(0, summary_of(&[1], 4), true);
+        assert!(store.shard_finished(0));
+        assert!(store.latest(0, 1)[0].finished);
+        // Empty final epoch: no delta, still marked drained.
+        store.finish_shard(1);
+        assert!(store.shard_finished(1));
+        assert_eq!(store.available(1), 0);
+    }
+
+    #[test]
+    fn age_window_filters_old_deltas() {
+        let store = WindowStore::new(1, 8, 4);
+        store.publish(0, summary_of(&[1], 4), false);
+        std::thread::sleep(Duration::from_millis(200));
+        store.publish(0, summary_of(&[2], 4), false);
+        // Generous cut between the two publication instants.
+        let recent = store.window_by_age(Duration::from_millis(100));
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].seq, 2);
+        let all = store.window_by_age(Duration::from_secs(3600));
+        assert_eq!(all.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_publish_and_read() {
+        let store = WindowStore::new(1, 4, 16);
+        std::thread::scope(|s| {
+            let st = &store;
+            s.spawn(move || {
+                for round in 1..=300u64 {
+                    st.publish(0, summary_of(&vec![round; round as usize], 16), false);
+                }
+            });
+            s.spawn(move || {
+                let mut last_newest = 0u64;
+                for _ in 0..500 {
+                    let parts = st.latest(0, 4);
+                    // Sequences are contiguous oldest → newest and never
+                    // go backwards across reads.
+                    for w in parts.windows(2) {
+                        assert_eq!(w[1].seq, w[0].seq + 1, "gap in ring");
+                    }
+                    if let Some(newest) = parts.last() {
+                        assert!(newest.seq >= last_newest);
+                        last_newest = newest.seq;
+                        // Each delta is internally consistent.
+                        assert_eq!(newest.summary.n(), newest.seq);
+                    }
+                }
+            });
+        });
+        assert_eq!(store.last_seq(0), 300);
+        assert_eq!(store.deltas_published(), 300);
+        assert_eq!(store.deltas_retired(), 296);
+    }
+}

@@ -19,6 +19,7 @@ fn bursty_producer_with_backpressure() {
         routing: Routing::RoundRobin,
         epoch_items: 65_536,
         batch_ingest: true,
+        ..Default::default()
     };
     let mut c = Coordinator::start(cfg);
     let mut rng = SplitMix64::new(77);
@@ -48,6 +49,7 @@ fn routing_policies_agree_on_results() {
         // Seed-exact accuracy expectations: per-item path (the batched
         // path is covered by batched_ingest_meets_guarantees below).
         batch_ingest: false,
+        ..Default::default()
     };
     let rr = run_source(mk(Routing::RoundRobin), &src, 4096);
     let ll = run_source(mk(Routing::LeastLoaded), &src, 4096);
@@ -77,6 +79,7 @@ fn single_shard_equals_sequential_space_saving() {
             // on the per-item path; batching moves whole runs through
             // single eviction decisions (same bounds, different f̂).
             batch_ingest: false,
+            ..Default::default()
         },
         &src,
         1000,
@@ -106,6 +109,7 @@ fn coordinator_then_pjrt_verification() {
             routing: Routing::RoundRobin,
             epoch_items: 65_536,
             batch_ingest: true,
+            ..Default::default()
         },
         &src,
         8192,
@@ -138,6 +142,7 @@ fn batched_ingest_meets_guarantees() {
             routing: Routing::RoundRobin,
             epoch_items: 65_536,
             batch_ingest: true,
+            ..Default::default()
         },
         &src,
         4096,
@@ -171,6 +176,7 @@ fn try_push_rejection_returns_chunk_intact_and_counts_once() {
         routing: Routing::RoundRobin,
         epoch_items: 0,
         batch_ingest: true,
+        ..Default::default()
     });
     let mut expected_rejections = 0u64;
     let mut accepted_items = 0u64;
@@ -215,6 +221,7 @@ fn many_shards_few_items() {
             routing: Routing::RoundRobin,
             epoch_items: 65_536,
             batch_ingest: true,
+            ..Default::default()
         },
         &src,
         3,

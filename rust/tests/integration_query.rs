@@ -58,6 +58,7 @@ fn queries_run_concurrently_with_ingestion() {
         routing: Routing::RoundRobin,
         epoch_items: 50_000,
         batch_ingest: true,
+        ..Default::default()
     });
 
     let done = AtomicBool::new(false);
@@ -138,6 +139,7 @@ fn mid_ingest_answers_match_published_epoch_prefix() {
         routing: Routing::RoundRobin,
         epoch_items: chunk,
         batch_ingest: true,
+        ..Default::default()
     });
 
     std::thread::scope(|scope| {
@@ -201,6 +203,7 @@ fn threshold_split_is_sound_on_live_engine() {
         routing: Routing::RoundRobin,
         epoch_items: 20_000,
         batch_ingest: true,
+        ..Default::default()
     });
     let mut pos = 0u64;
     while pos < n {
@@ -253,6 +256,7 @@ fn try_push_load_shedding_keeps_engine_consistent() {
         routing: Routing::RoundRobin,
         epoch_items: 1_000,
         batch_ingest: true,
+        ..Default::default()
     });
     let mut rng = SplitMix64::new(3);
     let mut accepted_items = 0u64;
@@ -287,6 +291,7 @@ fn staleness_accounting_tracks_refresh() {
         routing: Routing::RoundRobin,
         epoch_items: 0, // publication only on refresh/drain
         batch_ingest: true,
+        ..Default::default()
     });
     for _ in 0..10 {
         coord.push(vec![1; 100]);

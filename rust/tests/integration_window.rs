@@ -1,0 +1,289 @@
+//! Integration: the sliding-window read path — windowed queries under
+//! (and after) concurrent ingestion answer about an *exact* delta set,
+//! and every answer honors the windowed Space Saving guarantee
+//! `f ≤ f̂ ≤ f + W/k` (`W` = window mass) for the covered window.
+//!
+//! The tests pin `epoch_items` to the push chunk length, so with
+//! round-robin routing every delta `(shard, seq)` covers exactly chunk
+//! `(seq − 1) · shards + shard` of the source — the oracle for any
+//! window is reconstructible from the snapshot's own delta list, even
+//! mid-ingest.
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+use pss::coordinator::{Coordinator, CoordinatorConfig};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::window::WindowSnapshot;
+
+fn truth_of_chunks(src: &GeneratedSource, chunk: u64, covered: &[u64]) -> HashMap<u64, u64> {
+    let mut t = HashMap::new();
+    for &ci in covered {
+        for it in src.slice(ci * chunk, (ci + 1) * chunk) {
+            *t.entry(it).or_default() += 1;
+        }
+    }
+    t
+}
+
+/// Reconstruct the covered chunk ids from the snapshot's delta list
+/// (valid when `epoch_items` == push chunk length and routing is
+/// round-robin) and check the full windowed guarantee against the
+/// exact truth of those chunks.
+fn check_window_against_oracle(
+    snap: &WindowSnapshot,
+    src: &GeneratedSource,
+    chunk: u64,
+    shards: usize,
+    k: usize,
+) {
+    let covered: Vec<u64> = snap
+        .deltas()
+        .iter()
+        .map(|d| (d.seq - 1) * shards as u64 + d.shard as u64)
+        .collect();
+    let t = truth_of_chunks(src, chunk, &covered);
+    assert_eq!(
+        snap.n(),
+        chunk * covered.len() as u64,
+        "window mass must equal the covered chunks"
+    );
+    let eps = snap.epsilon();
+    assert_eq!(eps, snap.n() / k as u64);
+    let monitored: HashSet<u64> = snap.summary().counters().iter().map(|c| c.item).collect();
+    for c in snap.summary().counters() {
+        let f = t.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f, "window under-estimates item {}", c.item);
+        assert!(c.count - f <= eps, "W/k bound broken for item {}", c.item);
+        assert!(c.count - c.err <= f, "err bound broken for item {}", c.item);
+    }
+    // Windowed k-majority: full recall above W/k...
+    for (item, f) in &t {
+        if *f > eps {
+            assert!(monitored.contains(item), "lost windowed heavy hitter {item}");
+        }
+    }
+    // ...and the guaranteed split never reports a false positive.
+    let rep = snap.k_majority(k as u64);
+    for c in &rep.guaranteed {
+        let f = t.get(&c.item).copied().unwrap_or(0);
+        assert!(f > rep.threshold, "guaranteed windowed false positive {}", c.item);
+    }
+    // Everything truly above the threshold is answered.
+    let answered: HashSet<u64> = rep
+        .guaranteed
+        .iter()
+        .chain(&rep.possible)
+        .map(|c| c.item)
+        .collect();
+    for (item, f) in &t {
+        if *f > rep.threshold {
+            assert!(answered.contains(item), "missed windowed frequent item {item}");
+        }
+    }
+}
+
+#[test]
+fn windowed_answers_cover_exact_recent_epochs() {
+    const CHUNK: u64 = 5_000;
+    const CHUNKS: u64 = 24;
+    let n = CHUNK * CHUNKS;
+    for shards in [1usize, 3] {
+        let src = GeneratedSource::zipf(n, 2_000, 1.2, 7);
+        let k = 64;
+        let (mut coord, _engine) = Coordinator::spawn(CoordinatorConfig {
+            shards,
+            k,
+            k_majority: k as u64,
+            epoch_items: CHUNK,
+            delta_ring: 32,
+            window_epochs: 4,
+            ..Default::default()
+        });
+        let windows = coord.windows().expect("delta ring on");
+        for i in 0..CHUNKS {
+            coord.push(src.slice(i * CHUNK, (i + 1) * CHUNK));
+        }
+        let result = coord.finish();
+        assert_eq!(result.stats.items, n, "shards={shards}");
+        // Every chunk cut exactly one delta; no partial epoch remained.
+        assert_eq!(result.stats.deltas_published, CHUNKS, "shards={shards}");
+
+        for w in [1usize, 2, 4, 7] {
+            let snap = windows.window(w);
+            // Per shard: exactly min(w, chunks-per-shard) newest deltas.
+            let per_shard = (CHUNKS / shards as u64).min(w as u64) as usize;
+            assert_eq!(snap.deltas().len(), per_shard * shards, "shards={shards} w={w}");
+            check_window_against_oracle(&snap, &src, CHUNK, shards, k);
+        }
+    }
+}
+
+#[test]
+fn windowed_k_majority_correct_under_concurrent_ingest() {
+    const CHUNK: u64 = 8_192;
+    const CHUNKS: u64 = 120;
+    let n = CHUNK * CHUNKS;
+    let shards = 2usize;
+    let k = 128usize;
+    let src = GeneratedSource::zipf(n, 50_000, 1.3, 19);
+    let (mut coord, _engine) = Coordinator::spawn(CoordinatorConfig {
+        shards,
+        k,
+        k_majority: k as u64,
+        epoch_items: CHUNK,
+        // Large enough that nothing retires mid-test: the seq → chunk
+        // mapping stays reconstructible for every window.
+        delta_ring: 64,
+        window_epochs: 6,
+        ..Default::default()
+    });
+    let windows = coord.windows().expect("delta ring on");
+
+    let (result, checked) = std::thread::scope(|scope| {
+        let stream = &src;
+        let writer = scope.spawn(move || {
+            for i in 0..CHUNKS {
+                coord.push(stream.slice(i * CHUNK, (i + 1) * CHUNK));
+            }
+            coord.finish()
+        });
+
+        // Reader: windowed queries against whatever delta set is
+        // published right now, each verified against the exact truth of
+        // the chunks it claims to cover.
+        let mut checked = 0u32;
+        loop {
+            let finished = writer.is_finished();
+            let snap = windows.window(6);
+            if !snap.is_empty() {
+                // Sequences never regress and are contiguous per shard.
+                let mut per_shard_last: HashMap<usize, u64> = HashMap::new();
+                for d in snap.deltas() {
+                    if let Some(prev) = per_shard_last.insert(d.shard, d.seq) {
+                        assert_eq!(d.seq, prev + 1, "gap in windowed delta run");
+                    }
+                }
+                check_window_against_oracle(&snap, stream, CHUNK, shards, k);
+                checked += 1;
+            }
+            if finished {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        (writer.join().expect("writer panicked"), checked)
+    });
+    assert_eq!(result.stats.items, n);
+    assert_eq!(result.stats.deltas_published, CHUNKS);
+    assert!(checked > 0, "must have verified at least one live window");
+    // Post-drain: the full-width window is deterministic — the newest 6
+    // deltas per shard are the last 6 chunks each shard ingested.
+    check_window_against_oracle(&windows.window(6), &src, CHUNK, shards, k);
+}
+
+#[test]
+fn drain_publishes_final_partial_delta_and_mass_balances() {
+    // 7 chunks of 3000 against a 10k cadence: shard 0 (4 chunks,
+    // 12000 items) cuts one cadence delta and drains empty; shard 1
+    // (3 chunks, 9000 items) never reaches the cadence — without the
+    // drain-time delta its whole tail would be invisible to windows.
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        k: 32,
+        k_majority: 8,
+        epoch_items: 10_000,
+        delta_ring: 8,
+        window_epochs: 8,
+        ..Default::default()
+    });
+    let windows = coord.windows().expect("delta ring on");
+    for i in 0..7u64 {
+        coord.push(vec![i % 3; 3_000]);
+    }
+    let result = coord.finish();
+    assert_eq!(result.stats.items, 21_000);
+    assert_eq!(result.stats.deltas_published, 2);
+
+    let snap = windows.window(8);
+    // Accounting balance, observed end-to-end: the deltas partition the
+    // ingested items exactly.
+    assert_eq!(snap.n(), 21_000, "windowed coverage == ingested items");
+    let delta_mass: u64 = snap.deltas().iter().map(|d| d.n).sum();
+    assert_eq!(delta_mass, result.stats.items);
+    // The shard that drained mid-epoch published a finished delta; the
+    // other shard is finished without one.
+    assert!(snap.deltas().iter().any(|d| d.finished));
+    assert!(windows.store().shard_finished(0));
+    assert!(windows.store().shard_finished(1));
+    // Landmark and windowed views agree when the window covers all.
+    let landmark = engine.snapshot();
+    assert_eq!(landmark.n(), snap.n());
+    for item in 0..3u64 {
+        assert_eq!(landmark.point(item).estimate, snap.point(item).estimate, "item {item}");
+    }
+}
+
+#[test]
+fn ring_retires_oldest_deltas() {
+    const CHUNK: u64 = 1_000;
+    let src = GeneratedSource::zipf(10 * CHUNK, 500, 1.1, 5);
+    let (mut coord, _engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: 1,
+        k: 32,
+        k_majority: 8,
+        epoch_items: CHUNK,
+        delta_ring: 3,
+        window_epochs: 3,
+        ..Default::default()
+    });
+    let windows = coord.windows().expect("delta ring on");
+    for i in 0..10 {
+        coord.push(src.slice(i * CHUNK, (i + 1) * CHUNK));
+    }
+    let result = coord.finish();
+    assert_eq!(result.stats.deltas_published, 10);
+
+    let stats = windows.window_stats();
+    assert_eq!(stats.per_shard_available, vec![3]);
+    assert_eq!(stats.per_shard_seq, vec![10]);
+    assert_eq!(stats.deltas_retired, 7);
+    // Asking for more than the ring holds yields just the retained tail.
+    let snap = windows.window(10);
+    assert_eq!(snap.n(), 3 * CHUNK);
+    let seqs: Vec<u64> = snap.deltas().iter().map(|d| d.seq).collect();
+    assert_eq!(seqs, vec![8, 9, 10]);
+    check_window_against_oracle(&snap, &src, CHUNK, 1, 32);
+}
+
+#[test]
+fn refresh_cuts_partial_delta_for_windows() {
+    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        k: 16,
+        k_majority: 4,
+        epoch_items: 0, // publication only on refresh/drain
+        delta_ring: 4,
+        window_epochs: 2,
+        ..Default::default()
+    });
+    let windows = coord.windows().expect("delta ring on");
+    coord.push(vec![9; 250]);
+    coord.push(vec![9; 250]);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        engine.refresh();
+        std::thread::sleep(Duration::from_millis(5));
+        if engine.stats().staleness_items == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "refresh never drained staleness");
+    }
+    // The refresh-cut deltas cover everything pushed so far (the worker
+    // publishes each delta *before* the landmark snapshot, so zero
+    // staleness implies the window is complete).
+    let snap = windows.window(4);
+    assert_eq!(snap.n(), 500, "refresh must cut partial deltas");
+    assert_eq!(snap.point(9).estimate, 500);
+    coord.finish();
+}

@@ -387,6 +387,136 @@ fn prop_batched_ingest_guarantees_match_per_item() {
     }
 }
 
+/// Property 11 (sliding windows): for random streams, chunkings, shard
+/// counts, epoch cadences and ring capacities, a windowed query over
+/// any window width answers exactly about the delta set it reports,
+/// and satisfies the windowed Space Saving bound `f ≤ f̂ ≤ f + W/k`
+/// (`W` = window mass) with full recall of every item whose in-window
+/// count exceeds `W/k` — for both the batched (run-absorbing) and
+/// per-item delta build paths.
+#[test]
+fn prop_windowed_bounds() {
+    use pss::summary::ChunkAggregator;
+    use pss::window::{DeltaBuilder, WindowStore, WindowedQueryEngine};
+
+    for seed in 900..900 + TRIALS / 3 {
+        let mut rng = SplitMix64::new(seed);
+        let stream = random_stream(&mut rng);
+        let shards = 1 + rng.next_below(4) as usize;
+        let k = 8 + rng.next_below(96) as usize;
+        let cadence = 100 + rng.next_below(2_000);
+        let chunk = 1 + rng.next_below(400) as usize;
+        let ring = 1 + rng.next_below(8) as usize;
+        let batched = rng.next_f64() < 0.5;
+
+        // Emulate the shard workers' delta publication deterministically:
+        // round-robin chunks, cut a delta once a shard's pending epoch
+        // reaches the cadence, final partial delta at drain — recording
+        // for every published (shard, seq) exactly which items it covers.
+        let store = WindowStore::new(shards, ring, k);
+        let mut builders: Vec<DeltaBuilder> = (0..shards).map(|_| DeltaBuilder::new()).collect();
+        let mut pending: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        let mut covered: HashMap<(usize, u64), Vec<u64>> = HashMap::new();
+        let mut agg = ChunkAggregator::new();
+        for (i, block) in stream.chunks(chunk).enumerate() {
+            let s = i % shards;
+            if batched {
+                builders[s].absorb_runs(agg.aggregate(block));
+            } else {
+                builders[s].absorb_items(block);
+            }
+            pending[s].extend_from_slice(block);
+            if pending[s].len() as u64 >= cadence {
+                let delta = builders[s].cut(k);
+                assert_eq!(delta.n(), pending[s].len() as u64, "seed {seed}: delta mass");
+                let seq = store.publish(s, delta, false);
+                covered.insert((s, seq), std::mem::take(&mut pending[s]));
+            }
+        }
+        for s in 0..shards {
+            if !builders[s].is_empty() {
+                let seq = store.publish(s, builders[s].cut(k), true);
+                covered.insert((s, seq), std::mem::take(&mut pending[s]));
+            }
+        }
+        // Every item landed in exactly one delta (mass balance).
+        let published_mass: u64 = covered.values().map(|v| v.len() as u64).sum();
+        assert_eq!(published_mass, stream.len() as u64, "seed {seed}: balance");
+
+        let engine = WindowedQueryEngine::new(store, 2, k.max(2) as u64);
+        let widths = [1usize, 2, 1 + rng.next_below(ring as u64 + 2) as usize];
+        for w in widths {
+            let snap = engine.window(w);
+            let mut t: HashMap<u64, u64> = HashMap::new();
+            let mut mass = 0u64;
+            for d in snap.deltas() {
+                let items = &covered[&(d.shard, d.seq)];
+                assert_eq!(d.n, items.len() as u64, "seed {seed} w={w}: delta n");
+                for &it in items {
+                    *t.entry(it).or_default() += 1;
+                }
+                mass += items.len() as u64;
+            }
+            assert_eq!(snap.n(), mass, "seed {seed} w={w}: window mass");
+            let eps = snap.epsilon();
+            assert_eq!(eps, mass / k as u64, "seed {seed} w={w}");
+            let monitored: HashSet<u64> =
+                snap.summary().counters().iter().map(|c| c.item).collect();
+            for c in snap.summary().counters() {
+                let f = t.get(&c.item).copied().unwrap_or(0);
+                assert!(c.count >= f, "seed {seed} w={w}: window under-estimate");
+                assert!(c.count - f <= eps, "seed {seed} w={w}: W/k bound broken");
+                assert!(c.count - c.err <= f, "seed {seed} w={w}: err bound broken");
+            }
+            for (item, f) in &t {
+                if *f > eps {
+                    assert!(
+                        monitored.contains(item),
+                        "seed {seed} w={w}: lost windowed heavy hitter {item}"
+                    );
+                }
+            }
+            // Guaranteed windowed k-majority items are true positives.
+            let rep = snap.k_majority(k.max(2) as u64);
+            for c in &rep.guaranteed {
+                let f = t.get(&c.item).copied().unwrap_or(0);
+                assert!(f > rep.threshold, "seed {seed} w={w}: guaranteed false positive");
+            }
+        }
+    }
+}
+
+/// Property 12 (weighted bucket-list invariants): `StreamSummary`'s
+/// bucket list stays structurally sound — bucket counts strictly
+/// ascending, no empty bucket, links and item map consistent, mass
+/// conserved — under arbitrary interleavings of unit and weighted
+/// updates with arbitrary `k` (the generalization the window deltas
+/// and the batched ingest path lean on).
+#[test]
+fn prop_weighted_bucket_list_invariants() {
+    for seed in 1100..1100 + TRIALS {
+        let mut rng = SplitMix64::new(seed);
+        let k = 1 + rng.next_below(64) as usize;
+        let universe = 1 + rng.next_below(300);
+        let max_w = 1 + rng.next_below(60);
+        let steps = 200 + rng.next_below(1_200);
+        let mut ss = StreamSummary::new(k);
+        let mut mass = 0u64;
+        for _ in 0..steps {
+            let item = rng.next_below(universe);
+            let w = if rng.next_f64() < 0.3 { 1 } else { 1 + rng.next_below(max_w) };
+            ss.offer_weighted(item, w);
+            mass += w;
+            ss.check_consistency();
+        }
+        assert_eq!(ss.processed(), mass, "seed {seed}: n");
+        let counters = ss.counters();
+        assert!(counters.len() <= k, "seed {seed}: budget");
+        let total: u64 = counters.iter().map(|c| c.count).sum();
+        assert_eq!(total, mass, "seed {seed}: mass conservation");
+    }
+}
+
 /// Property 8 (distsim sanity): simulated time is monotone — more cores
 /// never slower at fixed work; more counters never faster reduction.
 #[test]
