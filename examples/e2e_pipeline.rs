@@ -59,19 +59,21 @@ fn main() -> anyhow::Result<()> {
     // ---- 2. ingest through the coordinator -----------------------------
     let (hdr, file_src) = DatasetReader::open(&path)?;
     assert_eq!(hdr, header);
+    let cfg = CoordinatorConfig {
+        shards: 4,
+        k,
+        k_majority: k as u64,
+        queue_depth: 8,
+        routing: Routing::RoundRobin,
+        // Batch session (queried only at finish): no epoch publication.
+        epoch_items: 0,
+        batch_ingest: true,
+        ..Default::default()
+    };
+    let (routing, transport) = (cfg.routing, cfg.transport);
     let t1 = Instant::now();
     let result = run_source(
-        CoordinatorConfig {
-            shards: 4,
-            k,
-            k_majority: k as u64,
-            queue_depth: 8,
-            routing: Routing::RoundRobin,
-            // Batch session (queried only at finish): no epoch publication.
-            epoch_items: 0,
-            batch_ingest: true,
-            ..Default::default()
-        },
+        cfg,
         &file_src,
         // L2-resident chunks for the batched scratch map (16384 at the
         // default 1 MiB L2 assumption).
@@ -85,6 +87,16 @@ fn main() -> anyhow::Result<()> {
         result.stats.items as f64 / ingest_s / 1e6,
         result.frequent.len(),
         result.stats.backpressure_events
+    );
+    // Effective transport/routing + counters: the example doubles as a
+    // smoke test for the SPSC ring write path and its buffer recycling.
+    println!(
+        "      routing={routing} transport={transport}: {} transport retries, {} buffers recycled",
+        result.stats.transport_retries, result.stats.buffers_recycled
+    );
+    assert!(
+        result.stats.buffers_recycled > 0,
+        "ring transport must recycle chunk buffers through run_source"
     );
 
     // ---- 3. PJRT offline verification ----------------------------------

@@ -36,7 +36,11 @@ fn main() {
         k: 1024,
         k_majority: 50, // report flows with > 2% of packets
         queue_depth: 16,
-        routing: Routing::LeastLoaded,
+        // Keyed routing: each flow id hashes to one home shard, so the
+        // per-shard summaries are flow-disjoint and the merged error
+        // bound is the max-per-shard one — per-flow counts come from
+        // exactly one worker, as a per-flow NIC steering would do.
+        routing: Routing::Keyed,
         // Batch session (queried only at finish): no epoch publication.
         epoch_items: 0,
         // NIC batches are heavily duplicated (elephant flows): the
@@ -44,14 +48,17 @@ fn main() {
         batch_ingest: true,
         ..Default::default()
     };
+    let (routing, transport) = (cfg.routing, cfg.transport);
     let mut monitor = Coordinator::start(cfg);
 
-    // 1.5M packets in 1500-packet batches (a NIC ring buffer drain).
+    // 1.5M packets in 1500-packet batches (a NIC ring buffer drain),
+    // the drain buffers recycled through the coordinator's free rings.
     let total = 1_500_000usize;
     let batch = 1_500usize;
     let mut truth = std::collections::HashMap::<u64, u64>::new();
     for _ in 0..total / batch {
-        let mut pkts = Vec::with_capacity(batch);
+        let mut pkts = monitor.take_buffer();
+        pkts.reserve(batch);
         for _ in 0..batch {
             let flow = if rng.next_f64() < 0.24 {
                 elephants[rng.next_below(3) as usize]
@@ -72,6 +79,12 @@ fn main() {
         report.stats.per_shard_items.len(),
         report.stats.backpressure_events,
         report.stats.per_shard_items
+    );
+    // Effective transport/routing + counters: the example doubles as a
+    // smoke test for the keyed SPSC write path.
+    println!(
+        "routing={routing} transport={transport}: {} transport retries, {} buffers recycled",
+        report.stats.transport_retries, report.stats.buffers_recycled
     );
 
     println!("\nheavy flows (>{} packets):", report.stats.items / 50);

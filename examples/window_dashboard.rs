@@ -33,6 +33,7 @@ fn main() {
         batch_ingest: true,
         delta_ring: 16, // keep the last 16 epoch deltas per shard
         window_epochs: 4, // "recent" = the last 4 epochs per shard
+        ..Default::default()
     });
     let windows = coord.windows().expect("delta ring on");
     let n = PHASES * CHUNKS_PER_PHASE * CHUNK as u64;

@@ -1,0 +1,160 @@
+//! The ingest transport (`pss::parallel::spsc` + coordinator wiring):
+//! raw ring vs `sync_channel` handoff cost, the end-to-end transport ×
+//! routing sweep (the acceptance target is ring ≥ 1.5× the mpsc
+//! chunk-handoff throughput at 4 shards on zipf-1.1), and the
+//! chunk-buffer recycling ablation.
+
+use pss::coordinator::{Coordinator, CoordinatorConfig, QueryResult, Routing, Transport};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::parallel::spsc::{self, TryPopError};
+use pss::util::benchkit::{black_box, run};
+
+const N: u64 = 1_000_000;
+const K: usize = 2000;
+const CHUNK: usize = 8_192;
+const HANDOFFS: u64 = 100_000;
+
+/// One full ingest session (pure write path: no epoch publication),
+/// producer reusing recycled buffers via `take_buffer`.
+fn session(transport: Transport, routing: Routing, shards: usize) -> QueryResult {
+    let src = GeneratedSource::zipf(N, 1 << 20, 1.1, 7);
+    let mut c = Coordinator::start(CoordinatorConfig {
+        shards,
+        k: K,
+        k_majority: K as u64,
+        routing,
+        transport,
+        epoch_items: 0,
+        ..Default::default()
+    });
+    let n = src.len();
+    let mut pos = 0u64;
+    while pos < n {
+        let take = ((n - pos) as usize).min(CHUNK);
+        let mut buf = c.take_buffer();
+        buf.resize(take, 0);
+        src.fill(pos, &mut buf);
+        c.push(buf);
+        pos += take as u64;
+    }
+    c.finish()
+}
+
+/// Raw handoff cost: stream `HANDOFFS` messages through one
+/// producer/consumer pair, ring vs sync_channel.
+fn raw_ring() -> u64 {
+    let (mut tx, mut rx) = spsc::ring::<u64>(8);
+    let mut received = 0u64;
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            for v in 0..HANDOFFS {
+                tx.push(v).unwrap();
+            }
+        });
+        received = {
+            let mut count = 0u64;
+            loop {
+                match rx.try_pop() {
+                    Ok(v) => {
+                        black_box(v);
+                        count += 1;
+                    }
+                    Err(TryPopError::Empty) => std::hint::spin_loop(),
+                    Err(TryPopError::Closed) => break,
+                }
+            }
+            count
+        };
+    });
+    received
+}
+
+fn raw_mpsc() -> u64 {
+    let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(8);
+    let mut received = 0u64;
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            for v in 0..HANDOFFS {
+                tx.send(v).unwrap();
+            }
+        });
+        for v in rx.iter() {
+            black_box(v);
+            received += 1;
+        }
+    });
+    received
+}
+
+fn main() {
+    println!("# bench_transport — SPSC ring vs mpsc baseline, chunks vs keyed routing");
+
+    // 1. Raw per-message handoff cost (u64 payloads, depth-8 queue).
+    run("raw/ring/handoff", Some(HANDOFFS as f64), || {
+        assert_eq!(raw_ring(), HANDOFFS);
+    });
+    run("raw/mpsc/handoff", Some(HANDOFFS as f64), || {
+        assert_eq!(raw_mpsc(), HANDOFFS);
+    });
+
+    // 2. End-to-end ingest: transport × routing at 1 and 4 shards on
+    //    zipf-1.1 — the acceptance sweep (`pss bench --suite transport`
+    //    emits the same cells as JSON).
+    for &shards in &[1usize, 4] {
+        for (label, transport, routing) in [
+            ("mpsc/chunks", Transport::Mpsc, Routing::RoundRobin),
+            ("ring/chunks", Transport::Ring, Routing::RoundRobin),
+            ("mpsc/keyed", Transport::Mpsc, Routing::Keyed),
+            ("ring/keyed", Transport::Ring, Routing::Keyed),
+        ] {
+            run(&format!("ingest/{label}/shards={shards}"), Some(N as f64), || {
+                black_box(session(transport, routing, shards).stats.items);
+            });
+        }
+    }
+
+    // 3. Recycling ablation: identical ring session with the producer
+    //    allocating a fresh Vec per chunk instead of reusing the free
+    //    ring — the allocation cost `take_buffer` removes.
+    run("ingest/ring/no-recycle/shards=4", Some(N as f64), || {
+        let src = GeneratedSource::zipf(N, 1 << 20, 1.1, 7);
+        let mut c = Coordinator::start(CoordinatorConfig {
+            shards: 4,
+            k: K,
+            k_majority: K as u64,
+            epoch_items: 0,
+            ..Default::default()
+        });
+        let n = src.len();
+        let mut pos = 0u64;
+        while pos < n {
+            let take = ((n - pos) as usize).min(CHUNK);
+            let mut buf = vec![0u64; take];
+            src.fill(pos, &mut buf);
+            c.push(buf);
+            pos += take as u64;
+        }
+        black_box(c.finish().stats.items);
+    });
+
+    // 4. Bound quality: what keyed routing buys on the reported ε
+    //    (summed vs max-per-shard) — printed, not timed.
+    let rr = session(Transport::Ring, Routing::RoundRobin, 4);
+    let keyed = session(Transport::Ring, Routing::Keyed, 4);
+    println!(
+        "#   reported ε at 4 shards: chunks(summed)={} keyed(max-per-shard)={} — {} items, k={K}",
+        rr.summary.epsilon(),
+        keyed
+            .stats
+            .per_shard_items
+            .iter()
+            .map(|&i| i / K as u64)
+            .max()
+            .unwrap_or(0),
+        rr.stats.items,
+    );
+    println!(
+        "#   transport counters (ring/keyed, 4 shards): {} retries, {} buffers recycled",
+        keyed.stats.transport_retries, keyed.stats.buffers_recycled,
+    );
+}

@@ -3,6 +3,7 @@
 
 use std::path::Path;
 
+use crate::coordinator::{Routing, Transport};
 use crate::util::Json;
 use crate::Result;
 
@@ -29,6 +30,14 @@ pub struct RunConfig {
     pub chunk_len: usize,
     /// Bounded queue depth (chunks) per shard.
     pub queue_depth: usize,
+    /// Chunk routing policy: `rr` (round-robin, default), `ll`
+    /// (least-loaded), or `keyed` (mix64 hash-partition items to their
+    /// home shard — key-disjoint shard summaries, max-per-shard error
+    /// bound).
+    pub routing: Routing,
+    /// Producer→shard transport: `ring` (lock-free SPSC, default) or
+    /// `mpsc` (the sync_channel benchmark baseline).
+    pub transport: Transport,
     /// Route chunks through the batched ingest fast path (per-chunk
     /// pre-aggregation + weighted updates). Same error guarantees as
     /// per-item ingestion; off reproduces exact per-item sequences.
@@ -58,6 +67,8 @@ impl Default for RunConfig {
             // (see parallel::batch_chunk_len).
             chunk_len: crate::parallel::batch_chunk_len_default(),
             queue_depth: 8,
+            routing: Routing::RoundRobin,
+            transport: Transport::Ring,
             batch_ingest: true,
             delta_ring: 0,
             window_epochs: 8,
@@ -84,6 +95,12 @@ impl RunConfig {
         if let Some(v) = get_u("threads") { c.threads = v as usize; }
         if let Some(v) = get_u("chunk_len") { c.chunk_len = v as usize; }
         if let Some(v) = get_u("queue_depth") { c.queue_depth = v as usize; }
+        if let Some(v) = j.get("routing").and_then(|v| v.as_str()) {
+            c.routing = v.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(v) = j.get("transport").and_then(|v| v.as_str()) {
+            c.transport = v.parse().map_err(anyhow::Error::msg)?;
+        }
         if let Some(v) = j.get("batch_ingest").and_then(|v| v.as_bool()) { c.batch_ingest = v; }
         if let Some(v) = get_u("delta_ring") { c.delta_ring = v as usize; }
         if let Some(v) = get_u("window_epochs") { c.window_epochs = v as usize; }
@@ -110,10 +127,12 @@ impl RunConfig {
         format!(
             "{{\"n\": {}, \"universe\": {}, \"skew\": {}, \"shift\": {}, \"seed\": {},\n \
               \"k\": {}, \"k_majority\": {}, \"threads\": {}, \"chunk_len\": {},\n \
-              \"queue_depth\": {}, \"batch_ingest\": {}, \"delta_ring\": {},\n \
+              \"queue_depth\": {}, \"routing\": \"{}\", \"transport\": \"{}\",\n \
+              \"batch_ingest\": {}, \"delta_ring\": {},\n \
               \"window_epochs\": {}, \"verify\": {}}}",
             self.n, self.universe, self.skew, self.shift, self.seed, self.k,
             self.k_majority, self.threads, self.chunk_len, self.queue_depth,
+            self.routing, self.transport,
             self.batch_ingest, self.delta_ring, self.window_epochs, self.verify
         )
     }
@@ -202,6 +221,27 @@ mod tests {
         assert_eq!(c, c2);
         // window_epochs must be positive.
         std::fs::write(&p, r#"{"window_epochs": 0}"#).unwrap();
+        assert!(RunConfig::from_json_file(&p).is_err());
+    }
+
+    #[test]
+    fn routing_and_transport_default_and_roundtrip() {
+        let c = RunConfig::default();
+        assert_eq!(c.routing, Routing::RoundRobin);
+        assert_eq!(c.transport, Transport::Ring);
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        std::fs::write(&p, r#"{"routing": "keyed", "transport": "mpsc"}"#).unwrap();
+        let c = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c.routing, Routing::Keyed);
+        assert_eq!(c.transport, Transport::Mpsc);
+        std::fs::write(&p, c.to_json()).unwrap();
+        let c2 = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c, c2);
+        // Unknown values are rejected, not silently defaulted.
+        std::fs::write(&p, r#"{"routing": "teleport"}"#).unwrap();
+        assert!(RunConfig::from_json_file(&p).is_err());
+        std::fs::write(&p, r#"{"transport": "carrier-pigeon"}"#).unwrap();
         assert!(RunConfig::from_json_file(&p).is_err());
     }
 

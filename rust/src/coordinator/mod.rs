@@ -5,9 +5,13 @@
 //! (block-partitioned sequential Space Saving + combine-tree reduction)
 //! in a sharded, backpressured ingestion service:
 //!
-//! * [`router`] — chunk routing (round-robin / least-loaded).
-//! * [`service`] — shard workers over bounded queues, `push`/`try_push`
-//!   /`finish` API, epoch snapshot publication, ingestion statistics.
+//! * [`router`] — chunk routing (round-robin / least-loaded / keyed
+//!   hash-partition; keyed shards are key-disjoint and merge under the
+//!   tighter max-per-shard bound).
+//! * [`service`] — shard workers over bounded lock-free SPSC rings
+//!   (with a reverse chunk-buffer free list; mpsc kept as the bench
+//!   baseline), `push`/`try_push`/`finish` API, epoch snapshot
+//!   publication, ingestion statistics.
 //!
 //! [`Coordinator::spawn`](service::Coordinator::spawn) additionally
 //! returns a [`QueryEngine`](crate::query::QueryEngine) handle: shards
@@ -29,7 +33,7 @@ pub mod router;
 pub mod service;
 
 pub use profiler::{ChunkProfile, SkewProfiler, StreamProfile};
-pub use router::{Router, Routing};
+pub use router::{shard_of, Router, Routing};
 pub use service::{
-    run_source, Coordinator, CoordinatorConfig, IngestStats, PushError, QueryResult,
+    run_source, Coordinator, CoordinatorConfig, IngestStats, PushError, QueryResult, Transport,
 };

@@ -3,17 +3,60 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// How incoming chunks are assigned to shard workers.
+pub use crate::util::shard_of;
+
+/// How incoming items are assigned to shard workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Routing {
-    /// Cycle through shards — the block decomposition of Algorithm 1 in
-    /// streaming form (every shard sees an interleaved 1/s of the
-    /// stream, which is still a valid partition for the combine merge).
+    /// Cycle whole chunks through shards — the block decomposition of
+    /// Algorithm 1 in streaming form (every shard sees an interleaved
+    /// 1/s of the stream, which is still a valid partition for the
+    /// combine merge). The default.
     RoundRobin,
     /// Send each chunk to the shard with the least queued items —
     /// adaptive balancing for heterogeneous shards (the coordinator
     /// analogue of the paper's ⌊n/p⌋/⌈n/p⌉ balance guarantee).
     LeastLoaded,
+    /// Hash-partition *items* to shards with [`shard_of`] (the same
+    /// mix64 family as `FastMap`), the streaming analogue of the pure
+    /// MPI formulation's hash decomposition (arXiv 1401.0702): every
+    /// occurrence of an item lands on one home shard, so per-shard
+    /// summaries are **key-disjoint** and merge by concatenation
+    /// (`summary::merge_disjoint`) under the tighter max-per-shard
+    /// error bound `maxᵢ ⌊nᵢ/k⌋` instead of the additive `⌊n/k⌋`.
+    Keyed,
+}
+
+impl Routing {
+    /// Whether this policy yields key-disjoint per-shard summaries
+    /// (and therefore the disjoint merge + max-per-shard bound).
+    pub fn is_disjoint(&self) -> bool {
+        matches!(self, Routing::Keyed)
+    }
+}
+
+impl std::fmt::Display for Routing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Routing::RoundRobin => "rr",
+            Routing::LeastLoaded => "ll",
+            Routing::Keyed => "keyed",
+        })
+    }
+}
+
+impl std::str::FromStr for Routing {
+    type Err = String;
+
+    /// `rr`/`chunks` (round-robin), `ll`/`least-loaded`, `keyed`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rr" | "chunks" | "round-robin" => Ok(Routing::RoundRobin),
+            "ll" | "least-loaded" => Ok(Routing::LeastLoaded),
+            "keyed" | "hash" => Ok(Routing::Keyed),
+            other => Err(format!("unknown routing '{other}' (rr|ll|keyed)")),
+        }
+    }
 }
 
 /// Shared routing state (load counters are updated by both the router
@@ -37,7 +80,15 @@ impl Router {
         }
     }
 
-    /// Choose the shard for a chunk of `len` items and account its load.
+    /// The policy in use.
+    pub fn routing(&self) -> Routing {
+        self.routing
+    }
+
+    /// Choose the shard for a whole chunk of `len` items and account
+    /// its load. Chunk-granular policies only — in [`Routing::Keyed`]
+    /// mode the coordinator scatters per item with [`shard_of`] and
+    /// accounts loads via [`Router::enqueued`].
     pub fn route(&mut self, len: usize) -> usize {
         let shard = match self.routing {
             Routing::RoundRobin => {
@@ -52,9 +103,18 @@ impl Router {
                 .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
                 .map(|(i, _)| i)
                 .expect("at least one shard"),
+            Routing::Keyed => {
+                unreachable!("keyed routing scatters per item in the coordinator")
+            }
         };
         self.loads[shard].fetch_add(len as u64, Ordering::Relaxed);
         shard
+    }
+
+    /// Producer-side: account `len` items enqueued to `shard` (the
+    /// keyed scatter path, where [`Router::route`] is not used).
+    pub fn enqueued(&self, shard: usize, len: usize) {
+        self.loads[shard].fetch_add(len as u64, Ordering::Relaxed);
     }
 
     /// Worker-side: mark `len` items drained from `shard`.
@@ -86,5 +146,33 @@ mod tests {
         // Drain shard 0 fully; it becomes the least loaded.
         Router::drained(&r.loads, 0, 100);
         assert_eq!(r.route(1), 0);
+    }
+
+    #[test]
+    fn routing_parses_and_roundtrips() {
+        for (s, want) in [
+            ("rr", Routing::RoundRobin),
+            ("chunks", Routing::RoundRobin),
+            ("ll", Routing::LeastLoaded),
+            ("keyed", Routing::Keyed),
+        ] {
+            assert_eq!(s.parse::<Routing>().unwrap(), want, "{s}");
+        }
+        assert!("bogus".parse::<Routing>().is_err());
+        for r in [Routing::RoundRobin, Routing::LeastLoaded, Routing::Keyed] {
+            assert_eq!(r.to_string().parse::<Routing>().unwrap(), r);
+        }
+        assert!(Routing::Keyed.is_disjoint());
+        assert!(!Routing::RoundRobin.is_disjoint());
+    }
+
+    #[test]
+    fn keyed_scatter_accounting_via_enqueued() {
+        let r = Router::new(Routing::Keyed, 4);
+        assert!(r.routing().is_disjoint());
+        r.enqueued(2, 30);
+        r.enqueued(2, 10);
+        Router::drained(&r.loads, 2, 25);
+        assert_eq!(r.loads[2].load(Ordering::Relaxed), 15);
     }
 }

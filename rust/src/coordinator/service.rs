@@ -1,29 +1,53 @@
-//! The streaming coordinator: sharded ingestion with bounded queues
-//! (backpressure), per-shard Space Saving, epoch snapshot publication
-//! for the live read path, and a final combine-tree merge — Parallel
-//! Space Saving as a long-running service rather than a one-shot batch
-//! job.
+//! The streaming coordinator: sharded ingestion over lock-free SPSC
+//! rings (backpressure), per-shard Space Saving, epoch snapshot
+//! publication for the live read path, and a final combine-tree merge —
+//! Parallel Space Saving as a long-running service rather than a
+//! one-shot batch job.
 //!
 //! Topology:
 //!
 //! ```text
-//!  push(chunk) ─▶ router ─▶ [bounded queue]─▶ shard 0: SpaceSaving ──▶ epoch Arc ─┐
-//!                        ─▶ [bounded queue]─▶ shard 1: SpaceSaving ──▶ epoch Arc ─┼▶ QueryEngine
-//!                        ─▶      ...      ─▶ shard s: SpaceSaving ──▶ epoch Arc ─┘  (live reads)
+//!  push(chunk) ─▶ router ─▶ [SPSC ring]─▶ shard 0: SpaceSaving ──▶ epoch Arc ─┐
+//!                        ─▶ [SPSC ring]─▶ shard 1: SpaceSaving ──▶ epoch Arc ─┼▶ QueryEngine
+//!                        ─▶    ...     ─▶ shard s: SpaceSaving ──▶ epoch Arc ─┘  (live reads)
+//!       ◀─────────────────[free ring]── consumed chunk buffers flow back
 //!  finish() ──────────────── join ─▶ tree_reduce(combine) ─▶ prune
 //! ```
+//!
+//! **Transport.** Each shard is fed through a bounded, cache-line-padded
+//! lock-free SPSC ring ([`crate::parallel::spsc`]) — a couple of plain
+//! stores per chunk handoff instead of `sync_channel`'s mutex+condvar
+//! handshake. A full ring back-pressures the producer through a
+//! spin-then-park [`Backoff`] (stalls counted in
+//! [`IngestStats::backpressure_events`], retry rounds in
+//! [`IngestStats::transport_retries`]); the non-blocking
+//! [`Coordinator::try_push`] instead returns the chunk in a typed
+//! [`PushError`] and counts the rejection. The old mpsc transport is
+//! kept behind [`Transport::Mpsc`] purely as the benchmark baseline
+//! (`pss bench --suite transport`, `bench_transport`).
+//!
+//! **Chunk recycling.** In ring mode each shard also owns a reverse
+//! *free ring*: consumed chunk `Vec`s are cleared and handed back to
+//! the producer side, where [`Coordinator::take_buffer`] (used by
+//! [`run_source`] and the keyed scatter path) reuses them — steady-state
+//! ingest allocates nothing. Reuses are counted in
+//! [`IngestStats::buffers_recycled`].
+//!
+//! **Routing.** [`Routing::RoundRobin`] (default) and
+//! [`Routing::LeastLoaded`] assign whole chunks to shards; every shard
+//! then observes the full key space and merged bounds add across
+//! shards. [`Routing::Keyed`] hash-partitions *items* to their home
+//! shard ([`crate::util::shard_of`], the same mix64 family as
+//! `FastMap`), making per-shard summaries key-disjoint: the drain and
+//! the query engines then merge by concatenation
+//! ([`crate::summary::merge_disjoint`]) under the tighter
+//! max-per-shard bound `maxᵢ ⌊nᵢ/k⌋`.
 //!
 //! With [`CoordinatorConfig::batch_ingest`] on (the default) each shard
 //! first collapses an incoming chunk into `(item, weight)` runs with a
 //! reusable scratch map and applies weighted Space Saving updates — one
 //! summary touch per distinct item instead of per occurrence (see
 //! [`crate::summary::batch`]).
-//!
-//! Queues are `std::sync::mpsc::sync_channel`s of `queue_depth` chunks;
-//! a full queue blocks the producer (backpressure), and every such stall
-//! is counted in [`IngestStats::backpressure_events`]. The non-blocking
-//! [`Coordinator::try_push`] instead returns the chunk in a typed
-//! [`PushError`] and counts the rejection.
 //!
 //! Every `epoch_items` items (and at drain), each shard freezes its
 //! summary and swaps it into the shared [`EpochRegistry`], so
@@ -40,21 +64,57 @@
 //! [`crate::window`].
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::gen::ItemSource;
 use crate::parallel::reduction::tree_reduce;
+use crate::parallel::spsc::{self, Backoff, PopTimeoutError, TryPushError};
 use crate::query::{EpochRegistry, QueryEngine};
 use crate::summary::batch::{offer_runs, ChunkAggregator};
-use crate::summary::{Counter, FrequencySummary, StreamSummary, Summary};
+use crate::summary::{merge_disjoint, Counter, FrequencySummary, StreamSummary, Summary};
+use crate::util::shard_of;
 use crate::window::{DeltaBuilder, WindowStore, WindowedQueryEngine};
 
 use super::router::{Router, Routing};
 
 /// How long an idle shard sleeps between checks for refresh requests.
 const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// Producer→shard chunk transport.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// Bounded lock-free SPSC ring with chunk-buffer recycling
+    /// ([`crate::parallel::spsc`]). The default.
+    Ring,
+    /// `std::sync::mpsc::sync_channel` — one mutex+condvar handshake
+    /// per chunk, no recycling. Kept as the measurable baseline the
+    /// ring is judged against (`bench_transport`); not recommended
+    /// for production sessions.
+    Mpsc,
+}
+
+impl std::fmt::Display for Transport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Transport::Ring => "ring",
+            Transport::Mpsc => "mpsc",
+        })
+    }
+}
+
+impl std::str::FromStr for Transport {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "ring" | "spsc" => Ok(Transport::Ring),
+            "mpsc" | "channel" => Ok(Transport::Mpsc),
+            other => Err(format!("unknown transport '{other}' (ring|mpsc)")),
+        }
+    }
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -65,10 +125,16 @@ pub struct CoordinatorConfig {
     pub k: usize,
     /// k-majority parameter for the final prune.
     pub k_majority: u64,
-    /// Bounded queue depth, in chunks, per shard.
+    /// Bounded queue depth, in chunks, per shard (ring transport
+    /// rounds it up to the next power of two).
     pub queue_depth: usize,
-    /// Chunk routing policy.
+    /// Chunk routing policy. [`Routing::Keyed`] hash-partitions items
+    /// to shards, making shard summaries key-disjoint and the merged
+    /// error bound max-per-shard instead of additive.
     pub routing: Routing,
+    /// Producer→shard transport ([`Transport::Ring`] by default;
+    /// [`Transport::Mpsc`] is the benchmark baseline).
+    pub transport: Transport,
     /// Per-shard epoch snapshot cadence, in items: a shard republishes
     /// its summary after processing this many items since its last
     /// publication. 0 disables count-triggered publication (snapshots
@@ -108,6 +174,7 @@ impl Default for CoordinatorConfig {
             k_majority: 2000,
             queue_depth: 8,
             routing: Routing::RoundRobin,
+            transport: Transport::Ring,
             epoch_items: 65_536,
             batch_ingest: true,
             delta_ring: 0,
@@ -119,12 +186,26 @@ impl Default for CoordinatorConfig {
 /// Ingestion statistics.
 #[derive(Debug, Clone, Default)]
 pub struct IngestStats {
-    /// Chunks accepted.
+    /// Caller chunks fully accepted. A keyed chunk counts once even
+    /// though it scatters into per-shard sub-chunks; a keyed
+    /// `try_push` that is only *partially* accepted does not count —
+    /// the re-offered remainder's fully-accepting push does (so a
+    /// retried chunk still counts exactly once). Partial item mass is
+    /// always reflected in [`IngestStats::items`].
     pub chunks: u64,
     /// Items accepted.
     pub items: u64,
-    /// Producer stalls on a full shard queue (blocking `push`).
+    /// Producer stalls on a full shard queue (blocking `push`; counted
+    /// once per stalled chunk).
     pub backpressure_events: u64,
+    /// Failed ring-push attempts during blocking `push` (one per
+    /// backoff round while stalled; 0 on the mpsc baseline, which
+    /// blocks inside the channel instead of retrying).
+    pub transport_retries: u64,
+    /// Chunk buffers reused from the recycling path (free rings +
+    /// spare pool) by [`Coordinator::take_buffer`] and the keyed
+    /// scatter, instead of freshly allocated.
+    pub buffers_recycled: u64,
     /// Chunks rejected by the non-blocking `try_push`.
     pub rejected_chunks: u64,
     /// Epoch snapshots published by the shards (filled at `finish`).
@@ -140,6 +221,11 @@ pub struct IngestStats {
 
 /// Typed rejection from [`Coordinator::try_push`]: the chunk comes back
 /// so the caller can retry, reroute or drop it deliberately.
+///
+/// Under [`Routing::Keyed`] a chunk scatters into per-shard sub-chunks
+/// and may be *partially* accepted: the error then carries only the
+/// unrouted remainder (re-pushing it is sound — items re-hash to the
+/// same shards), with `shard` naming the first shard that rejected.
 #[derive(Debug)]
 pub enum PushError {
     /// The routed shard's queue was full.
@@ -185,7 +271,8 @@ impl std::error::Error for PushError {}
 /// Final result of a coordinator session.
 #[derive(Debug, Clone)]
 pub struct QueryResult {
-    /// Merged global summary.
+    /// Merged global summary (combine tree, or disjoint concatenation
+    /// under keyed routing).
     pub summary: Summary,
     /// k-majority candidates (`f̂ > n/k_majority`), descending.
     pub frequent: Vec<Counter>,
@@ -193,9 +280,71 @@ pub struct QueryResult {
     pub stats: IngestStats,
 }
 
-enum Msg {
+/// Why a try-send failed (transport-agnostic).
+enum SendFailure {
+    Full,
+    Disconnected,
+}
+
+/// Producer-side chunk sender, one per shard.
+enum ChunkTx {
+    Ring(spsc::Producer<Vec<u64>>),
+    Mpsc(SyncSender<Vec<u64>>),
+}
+
+impl ChunkTx {
+    fn try_send(&mut self, chunk: Vec<u64>) -> Result<(), (Vec<u64>, SendFailure)> {
+        match self {
+            ChunkTx::Ring(tx) => match tx.try_push(chunk) {
+                Ok(()) => Ok(()),
+                Err(TryPushError::Full(c)) => Err((c, SendFailure::Full)),
+                Err(TryPushError::Closed(c)) => Err((c, SendFailure::Disconnected)),
+            },
+            ChunkTx::Mpsc(tx) => match tx.try_send(chunk) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(c)) => Err((c, SendFailure::Full)),
+                Err(TrySendError::Disconnected(c)) => Err((c, SendFailure::Disconnected)),
+            },
+        }
+    }
+}
+
+/// Worker-side chunk receiver.
+enum ChunkRx {
+    Ring(spsc::Consumer<Vec<u64>>),
+    Mpsc(Receiver<Vec<u64>>),
+}
+
+/// Unified receive outcome across transports.
+enum Recv {
     Chunk(Vec<u64>),
-    Finish,
+    Timeout,
+    /// Producer gone *and* queue drained: time to finish.
+    Closed,
+}
+
+impl ChunkRx {
+    fn recv_timeout(&mut self, timeout: Duration) -> Recv {
+        match self {
+            ChunkRx::Ring(rx) => match rx.pop_timeout(timeout) {
+                Ok(c) => Recv::Chunk(c),
+                Err(PopTimeoutError::Timeout) => Recv::Timeout,
+                Err(PopTimeoutError::Closed) => Recv::Closed,
+            },
+            ChunkRx::Mpsc(rx) => match rx.recv_timeout(timeout) {
+                Ok(c) => Recv::Chunk(c),
+                Err(RecvTimeoutError::Timeout) => Recv::Timeout,
+                Err(RecvTimeoutError::Disconnected) => Recv::Closed,
+            },
+        }
+    }
+}
+
+/// The producer's handles to one shard: the chunk sender and (ring
+/// transport only) the consumer end of the shard's buffer free ring.
+struct ShardLink {
+    tx: ChunkTx,
+    free: Option<spsc::Consumer<Vec<u64>>>,
 }
 
 /// What one shard worker hands back at drain.
@@ -213,13 +362,21 @@ struct ShardOutcome {
 /// A running coordinator session.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
-    senders: Vec<SyncSender<Msg>>,
+    links: Vec<ShardLink>,
     handles: Vec<JoinHandle<ShardOutcome>>,
     router: Router,
     stats: IngestStats,
     engine: QueryEngine,
     /// Sliding-window query handle; `Some` iff `delta_ring > 0`.
     windows: Option<WindowedQueryEngine>,
+    /// Recycled chunk buffers awaiting reuse (keyed scatter returns,
+    /// rejected sub-chunks, caller chunks after scatter).
+    spare: Vec<Vec<u64>>,
+    /// Next shard whose free ring [`Coordinator::take_buffer`] polls.
+    reclaim_next: usize,
+    /// Keyed-routing scatter buffers, one per shard (empty between
+    /// pushes).
+    scatter: Vec<Vec<u64>>,
 }
 
 impl Coordinator {
@@ -237,14 +394,43 @@ impl Coordinator {
         // QueryEngine stays independent of the window layer).
         let store = (cfg.delta_ring > 0)
             .then(|| WindowStore::new(cfg.shards, cfg.delta_ring, cfg.k));
+        // Keyed routing ⇒ per-shard summaries are key-disjoint: tell
+        // both read paths before any worker publishes, so every merge
+        // uses the concatenation path and the max-per-shard bound.
+        if cfg.routing.is_disjoint() {
+            registry.set_disjoint(true);
+            if let Some(s) = store.as_ref() {
+                s.set_disjoint(true);
+            }
+        }
         let windows = store
             .as_ref()
             .map(|s| WindowedQueryEngine::new(s.clone(), cfg.window_epochs, cfg.k_majority));
         let engine = QueryEngine::new(registry.clone(), cfg.k_majority);
-        let mut senders = Vec::with_capacity(cfg.shards);
+        let mut links = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
         for shard in 0..cfg.shards {
-            let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth);
+            let (tx, mut rx) = match cfg.transport {
+                Transport::Ring => {
+                    let (p, c) = spsc::ring::<Vec<u64>>(cfg.queue_depth);
+                    (ChunkTx::Ring(p), ChunkRx::Ring(c))
+                }
+                Transport::Mpsc => {
+                    let (p, c) = sync_channel::<Vec<u64>>(cfg.queue_depth);
+                    (ChunkTx::Mpsc(p), ChunkRx::Mpsc(c))
+                }
+            };
+            // The reverse free ring: consumed chunk buffers flow back
+            // to the producer. Sized past the chunk ring so a burst of
+            // consumed buffers never forces a drop while the producer
+            // is slow to reclaim.
+            let (mut free_tx, free_rx) = match cfg.transport {
+                Transport::Ring => {
+                    let (p, c) = spsc::ring::<Vec<u64>>(cfg.queue_depth + 2);
+                    (Some(p), Some(c))
+                }
+                Transport::Mpsc => (None, None),
+            };
             let k = cfg.k;
             let epoch_items = cfg.epoch_items;
             let batch_ingest = cfg.batch_ingest;
@@ -267,7 +453,7 @@ impl Coordinator {
                 let mut refresh_seen = 0u64;
                 loop {
                     match rx.recv_timeout(IDLE_POLL) {
-                        Ok(Msg::Chunk(chunk)) => {
+                        Recv::Chunk(mut chunk) => {
                             match scratch.as_mut() {
                                 Some(agg) => {
                                     // Aggregate once, apply twice: the
@@ -287,9 +473,17 @@ impl Coordinator {
                                     }
                                 }
                             }
-                            items += chunk.len() as u64;
-                            since_publish += chunk.len() as u64;
-                            Router::drained(&loads, shard, chunk.len());
+                            let len = chunk.len();
+                            items += len as u64;
+                            since_publish += len as u64;
+                            Router::drained(&loads, shard, len);
+                            // Hand the emptied buffer back to the
+                            // producer (ring transport); a full or
+                            // abandoned free ring just drops it.
+                            if let Some(free) = free_tx.as_mut() {
+                                chunk.clear();
+                                let _ = free.try_push(chunk);
+                            }
                             let watermark = registry.refresh_watermark();
                             let due = epoch_items > 0 && since_publish >= epoch_items;
                             if due || watermark > refresh_seen {
@@ -309,8 +503,7 @@ impl Coordinator {
                                 refresh_seen = watermark;
                             }
                         }
-                        Ok(Msg::Finish) => break,
-                        Err(RecvTimeoutError::Timeout) => {
+                        Recv::Timeout => {
                             // Idle: honor on-demand refresh requests so
                             // readers are not stuck behind a quiet shard.
                             let watermark = registry.refresh_watermark();
@@ -326,7 +519,7 @@ impl Coordinator {
                                 refresh_seen = watermark;
                             }
                         }
-                        Err(RecvTimeoutError::Disconnected) => break,
+                        Recv::Closed => break,
                     }
                 }
                 // Drain: the final epoch covers everything this shard saw.
@@ -346,16 +539,19 @@ impl Coordinator {
                 registry.publish(shard, summary.clone(), true);
                 ShardOutcome { summary, items, delta_mass }
             }));
-            senders.push(tx);
+            links.push(ShardLink { tx, free: free_rx });
         }
         let coordinator = Self {
             stats: IngestStats { per_shard_items: vec![0; cfg.shards], ..Default::default() },
+            scatter: (0..cfg.shards).map(|_| Vec::new()).collect(),
             cfg,
-            senders,
+            links,
             handles,
             router,
             engine: engine.clone(),
             windows,
+            spare: Vec::new(),
+            reclaim_next: 0,
         };
         (coordinator, engine)
     }
@@ -390,60 +586,204 @@ impl Coordinator {
         &self.stats
     }
 
-    fn account(&mut self, shard: usize, len: usize) {
-        self.stats.chunks += 1;
+    /// A cleared chunk buffer recycled from the shard workers' free
+    /// rings (or the spare pool), falling back to a fresh allocation
+    /// when nothing is waiting. Fill it and hand it to
+    /// [`Coordinator::push`]/[`Coordinator::try_push`]: with the ring
+    /// transport, steady-state ingest then allocates nothing
+    /// ([`run_source`] does exactly this).
+    pub fn take_buffer(&mut self) -> Vec<u64> {
+        if let Some(buf) = self.spare.pop() {
+            self.stats.buffers_recycled += 1;
+            return buf;
+        }
+        let shards = self.links.len();
+        for i in 0..shards {
+            let s = (self.reclaim_next + i) % shards;
+            if let Some(free) = self.links[s].free.as_mut() {
+                if let Ok(buf) = free.try_pop() {
+                    self.reclaim_next = (s + 1) % shards;
+                    self.stats.buffers_recycled += 1;
+                    debug_assert!(buf.is_empty(), "free-ring buffers come back cleared");
+                    return buf;
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    /// Park a no-longer-needed buffer in the spare pool (bounded; the
+    /// overflow is simply dropped).
+    fn recycle(&mut self, mut buf: Vec<u64>) {
+        if buf.capacity() > 0 && self.spare.len() < 2 * self.links.len() + 4 {
+            buf.clear();
+            self.spare.push(buf);
+        }
+    }
+
+    fn account_items(&mut self, shard: usize, len: usize) {
         self.stats.items += len as u64;
         self.stats.per_shard_items[shard] += len as u64;
         self.engine.registry().add_items_routed(len as u64);
     }
 
+    /// Blocking transport send: mpsc blocks in the channel; the ring
+    /// spins-then-parks, counting retry rounds.
+    fn send_blocking(&mut self, shard: usize, chunk: Vec<u64>) {
+        match &mut self.links[shard].tx {
+            ChunkTx::Mpsc(tx) => match tx.try_send(chunk) {
+                Ok(()) => {}
+                Err(TrySendError::Full(msg)) => {
+                    self.stats.backpressure_events += 1;
+                    // Block until the shard drains — backpressure, not drop.
+                    tx.send(msg).expect("shard died");
+                }
+                Err(TrySendError::Disconnected(_)) => panic!("shard died"),
+            },
+            ChunkTx::Ring(tx) => {
+                let mut pending = chunk;
+                let mut backoff = Backoff::new();
+                let mut stalled = false;
+                loop {
+                    match tx.try_push(pending) {
+                        Ok(()) => break,
+                        Err(TryPushError::Full(m)) => {
+                            if !stalled {
+                                self.stats.backpressure_events += 1;
+                                stalled = true;
+                            }
+                            self.stats.transport_retries += 1;
+                            pending = m;
+                            backoff.snooze();
+                        }
+                        Err(TryPushError::Closed(_)) => panic!("shard died"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scatter a chunk into the per-shard buffers by home shard.
+    fn scatter_chunk(&mut self, chunk: &[u64]) {
+        let shards = self.links.len();
+        for &item in chunk {
+            self.scatter[shard_of(item, shards)].push(item);
+        }
+    }
+
     /// Ingest one chunk. Blocks when the target shard's queue is full
-    /// (counted as a backpressure event).
+    /// (counted as a backpressure event). Under [`Routing::Keyed`] the
+    /// chunk is hash-scattered and each non-empty sub-chunk pushed to
+    /// its home shard.
     pub fn push(&mut self, chunk: Vec<u64>) {
         if chunk.is_empty() {
             return;
         }
+        if self.cfg.routing == Routing::Keyed {
+            self.push_keyed(chunk);
+            return;
+        }
         let len = chunk.len();
         let shard = self.router.route(len);
-        match self.senders[shard].try_send(Msg::Chunk(chunk)) {
-            Ok(()) => {}
-            Err(TrySendError::Full(msg)) => {
-                self.stats.backpressure_events += 1;
-                // Block until the shard drains — backpressure, not drop.
-                self.senders[shard].send(msg).expect("shard died");
+        self.send_blocking(shard, chunk);
+        self.stats.chunks += 1;
+        self.account_items(shard, len);
+    }
+
+    fn push_keyed(&mut self, chunk: Vec<u64>) {
+        self.scatter_chunk(&chunk);
+        self.recycle(chunk);
+        self.stats.chunks += 1;
+        for shard in 0..self.links.len() {
+            if self.scatter[shard].is_empty() {
+                continue;
             }
-            Err(TrySendError::Disconnected(_)) => panic!("shard died"),
+            let replacement = self.take_buffer();
+            let sub = std::mem::replace(&mut self.scatter[shard], replacement);
+            let len = sub.len();
+            self.router.enqueued(shard, len);
+            self.send_blocking(shard, sub);
+            self.account_items(shard, len);
         }
-        self.account(shard, len);
     }
 
     /// Non-blocking ingest: route the chunk and enqueue it if the shard
     /// has room, otherwise hand it straight back as a typed
     /// [`PushError`] (counted in [`IngestStats::rejected_chunks`]).
     /// Load-shedding callers can drop the chunk; latency-tolerant ones
-    /// retry or fall back to the blocking [`Coordinator::push`].
+    /// retry or fall back to the blocking [`Coordinator::push`]. Keyed
+    /// chunks may be partially accepted — see [`PushError`].
     pub fn try_push(&mut self, chunk: Vec<u64>) -> Result<(), PushError> {
         if chunk.is_empty() {
             return Ok(());
         }
+        if self.cfg.routing == Routing::Keyed {
+            return self.try_push_keyed(chunk);
+        }
         let len = chunk.len();
         let shard = self.router.route(len);
-        match self.senders[shard].try_send(Msg::Chunk(chunk)) {
+        match self.links[shard].tx.try_send(chunk) {
             Ok(()) => {
-                self.account(shard, len);
+                self.stats.chunks += 1;
+                self.account_items(shard, len);
                 Ok(())
             }
-            Err(err) => {
+            Err((chunk, failure)) => {
                 // Undo the router's load accounting for the queued-items
                 // gauge; the chunk never reached the shard.
                 Router::drained(&self.router.loads, shard, len);
                 self.stats.rejected_chunks += 1;
-                Err(match err {
-                    TrySendError::Full(Msg::Chunk(chunk)) => PushError::Full { shard, chunk },
-                    TrySendError::Disconnected(Msg::Chunk(chunk)) => {
-                        PushError::Disconnected { shard, chunk }
-                    }
-                    _ => unreachable!("only chunks are try-sent"),
+                Err(match failure {
+                    SendFailure::Full => PushError::Full { shard, chunk },
+                    SendFailure::Disconnected => PushError::Disconnected { shard, chunk },
+                })
+            }
+        }
+    }
+
+    fn try_push_keyed(&mut self, chunk: Vec<u64>) -> Result<(), PushError> {
+        self.scatter_chunk(&chunk);
+        self.recycle(chunk);
+        let mut rejected: Option<(usize, SendFailure, Vec<u64>)> = None;
+        for shard in 0..self.links.len() {
+            if self.scatter[shard].is_empty() {
+                continue;
+            }
+            let replacement = self.take_buffer();
+            let sub = std::mem::replace(&mut self.scatter[shard], replacement);
+            let len = sub.len();
+            self.router.enqueued(shard, len);
+            match self.links[shard].tx.try_send(sub) {
+                Ok(()) => {
+                    self.account_items(shard, len);
+                }
+                Err((sub, failure)) => {
+                    Router::drained(&self.router.loads, shard, len);
+                    rejected = match rejected.take() {
+                        None => Some((shard, failure, sub)),
+                        Some((first_shard, first_failure, mut remainder)) => {
+                            remainder.extend_from_slice(&sub);
+                            self.recycle(sub);
+                            Some((first_shard, first_failure, remainder))
+                        }
+                    };
+                }
+            }
+        }
+        // A caller chunk counts once, on the attempt that accepts its
+        // last item — a partially-accepted chunk whose remainder the
+        // caller re-offers is counted by that later, fully-accepting
+        // push, never twice.
+        match rejected {
+            None => {
+                self.stats.chunks += 1;
+                Ok(())
+            }
+            Some((shard, failure, chunk)) => {
+                self.stats.rejected_chunks += 1;
+                Err(match failure {
+                    SendFailure::Full => PushError::Full { shard, chunk },
+                    SendFailure::Disconnected => PushError::Disconnected { shard, chunk },
                 })
             }
         }
@@ -462,10 +802,11 @@ impl Coordinator {
     /// [`QueryEngine`] handle) survives with each shard's final
     /// snapshot published.
     pub fn finish(self) -> QueryResult {
-        for tx in &self.senders {
-            let _ = tx.send(Msg::Finish);
-        }
-        drop(self.senders);
+        // Dropping the producer halves closes every ring / channel:
+        // the workers drain what is buffered, publish their final
+        // snapshots, and exit — the transports' close protocol *is*
+        // the finish message.
+        drop(self.links);
         let mut summaries = Vec::with_capacity(self.handles.len());
         let mut stats = self.stats;
         for (shard, h) in self.handles.into_iter().enumerate() {
@@ -482,7 +823,14 @@ impl Coordinator {
             }
             summaries.push(out.summary);
         }
-        let summary = tree_reduce(summaries);
+        let summary = if self.cfg.routing.is_disjoint() {
+            // Keyed routing: shard summaries are key-disjoint —
+            // concatenate instead of cross-charging mins.
+            let refs: Vec<&Summary> = summaries.iter().collect();
+            merge_disjoint(&refs)
+        } else {
+            tree_reduce(summaries)
+        };
         let frequent = summary.prune(stats.items, self.cfg.k_majority);
         stats.epochs_published = self.engine.registry().epochs_published();
         stats.deltas_published = self
@@ -495,7 +843,9 @@ impl Coordinator {
 }
 
 /// Convenience: stream an [`ItemSource`] through a coordinator in
-/// `chunk_len`-item chunks.
+/// `chunk_len`-item chunks, reusing recycled chunk buffers
+/// ([`Coordinator::take_buffer`]) so ring-transport sessions are
+/// allocation-free in the steady state.
 pub fn run_source(
     cfg: CoordinatorConfig,
     source: &dyn ItemSource,
@@ -506,7 +856,10 @@ pub fn run_source(
     let mut pos = 0u64;
     while pos < n {
         let take = ((n - pos) as usize).min(chunk_len);
-        c.push(source.slice(pos, pos + take as u64));
+        let mut buf = c.take_buffer();
+        buf.resize(take, 0);
+        source.fill(pos, &mut buf);
+        c.push(buf);
         pos += take as u64;
     }
     c.finish()
@@ -581,6 +934,8 @@ mod tests {
             out.stats.backpressure_events > 0,
             "expected stalls with a depth-1 queue and 782 chunks"
         );
+        // Ring transport: every stall spends at least one retry round.
+        assert!(out.stats.transport_retries >= out.stats.backpressure_events);
         assert_eq!(out.stats.items, 200_000);
     }
 
@@ -796,5 +1151,160 @@ mod tests {
         let out = c.finish();
         assert_eq!(out.stats.items, 0);
         assert_eq!(out.stats.rejected_chunks, 0);
+    }
+
+    #[test]
+    fn mpsc_baseline_matches_ring_accounting() {
+        let src = GeneratedSource::zipf(60_000, 1_500, 1.2, 21);
+        let mut exact = Exact::new();
+        exact.offer_all(&src.slice(0, 60_000));
+        for transport in [Transport::Ring, Transport::Mpsc] {
+            let out = run_source(
+                CoordinatorConfig {
+                    shards: 3,
+                    k: 128,
+                    k_majority: 128,
+                    transport,
+                    ..Default::default()
+                },
+                &src,
+                2048,
+            );
+            assert_eq!(out.stats.items, 60_000, "{transport}");
+            assert_eq!(out.summary.n(), 60_000, "{transport}");
+            let acc = AccuracyReport::evaluate(&out.frequent, &exact, 128);
+            assert_eq!(acc.recall, 1.0, "{transport}");
+            if transport == Transport::Mpsc {
+                // The baseline neither retries nor recycles.
+                assert_eq!(out.stats.transport_retries, 0);
+                assert_eq!(out.stats.buffers_recycled, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_transport_recycles_buffers() {
+        let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 1,
+            k: 16,
+            k_majority: 4,
+            epoch_items: 0,
+            ..Default::default()
+        });
+        for _ in 0..8 {
+            let mut buf = c.take_buffer();
+            buf.resize(100, 9);
+            c.push(buf);
+        }
+        // The worker clears consumed buffers into the free ring; poll
+        // until one comes back (capacity > 0 marks a real recycle).
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let buf = c.take_buffer();
+            if buf.capacity() > 0 {
+                assert!(buf.is_empty(), "recycled buffers come back cleared");
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "no buffer recycled: {:?}",
+                c.stats()
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(c.stats().buffers_recycled > 0);
+        let out = c.finish();
+        assert_eq!(out.stats.items, 800);
+        assert_eq!(out.summary.n(), 800);
+    }
+
+    #[test]
+    fn keyed_routing_is_key_disjoint_end_to_end() {
+        let src = GeneratedSource::zipf(120_000, 3_000, 1.2, 17);
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 4,
+            k: 256,
+            k_majority: 256,
+            routing: Routing::Keyed,
+            epoch_items: 10_000,
+            ..Default::default()
+        });
+        let n = src.len();
+        let mut pos = 0u64;
+        while pos < n {
+            let take = ((n - pos) as usize).min(4096);
+            let mut buf = c.take_buffer();
+            buf.resize(take, 0);
+            src.fill(pos, &mut buf);
+            c.push(buf);
+            pos += take as u64;
+        }
+        let out = c.finish();
+        assert_eq!(out.stats.items, 120_000);
+        assert_eq!(out.summary.n(), 120_000);
+        // Per-shard items follow the hash partition, not round-robin:
+        // every shard saw something on this universe.
+        assert!(out.stats.per_shard_items.iter().all(|&i| i > 0));
+
+        // Final drain snapshots are pairwise key-disjoint, and every
+        // monitored item lives on its home shard.
+        let parts = q.registry().latest();
+        let mut seen = std::collections::HashSet::new();
+        for p in &parts {
+            for ctr in p.summary.counters() {
+                assert!(seen.insert(ctr.item), "item {} on two shards", ctr.item);
+                assert_eq!(shard_of(ctr.item, 4), p.shard, "item off home shard");
+            }
+        }
+
+        // The merged view reports the tighter max-per-shard bound and
+        // still honors the guarantee against exact truth.
+        let snap = q.snapshot();
+        assert!(snap.is_disjoint());
+        let eps_max = parts.iter().map(|p| p.summary.epsilon()).max().unwrap();
+        assert_eq!(snap.epsilon(), eps_max);
+        assert!(eps_max <= 120_000 / 256, "never looser than the summed bound");
+        let mut exact = Exact::new();
+        exact.offer_all(&src.slice(0, 120_000));
+        let acc = AccuracyReport::evaluate(&out.frequent, &exact, 256);
+        assert_eq!(acc.recall, 1.0);
+        for ctr in snap.summary().counters() {
+            let f = exact.count(ctr.item);
+            assert!(ctr.count >= f, "under-estimate");
+            assert!(ctr.count - f <= eps_max, "max-per-shard bound broken");
+        }
+    }
+
+    #[test]
+    fn keyed_try_push_accounts_partial_acceptance() {
+        let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            k: 32,
+            k_majority: 8,
+            queue_depth: 1,
+            routing: Routing::Keyed,
+            epoch_items: 0,
+            ..Default::default()
+        });
+        let mut sent = 0u64;
+        let mut returned = 0u64;
+        for round in 0..3_000u64 {
+            let chunk: Vec<u64> = (0..64).map(|j| round * 64 + j).collect();
+            sent += 64;
+            if let Err(e) = c.try_push(chunk) {
+                let remainder = e.into_chunk();
+                assert!(!remainder.is_empty());
+                // Remainder items still hash to real shards.
+                for &it in &remainder {
+                    assert!(shard_of(it, 2) < 2);
+                }
+                returned += remainder.len() as u64;
+            }
+        }
+        assert!(returned > 0, "depth-1 rings flooded must reject something");
+        let out = c.finish();
+        // Everything not returned was accepted and fully accounted.
+        assert_eq!(out.stats.items, sent - returned);
+        assert_eq!(out.summary.n(), sent - returned);
     }
 }

@@ -37,16 +37,18 @@ pss — Parallel Space Saving on multi- and many-core processors
 USAGE:
   pss generate --out <file.pssd> [--n N] [--universe U] [--skew R] [--seed S]
   pss run      [--input <file.pssd> | --n N --skew R] [--k K] [--threads T]
-               [--chunk-len C] [--queue-depth Q] [--routing rr|ll]
-               [--batch-ingest true|false] [--config cfg.json]
-               [--verify] [--artifacts DIR]
+               [--chunk-len C] [--queue-depth Q] [--routing rr|ll|keyed]
+               [--transport ring|mpsc] [--batch-ingest true|false]
+               [--config cfg.json] [--verify] [--artifacts DIR]
   pss query    [--n N] [--universe U] [--skew R] [--k K] [--threads T]
-               [--chunk-len C] [--batch-ingest true|false]
+               [--chunk-len C] [--routing rr|ll|keyed] [--transport ring|mpsc]
+               [--batch-ingest true|false]
                [--epoch-items E] [--interval-ms I]
                [--window W] [--delta-ring R]
                [--top M] [--watch ITEM]
-  pss bench    [--n N] [--k K] [--threads T] [--window W] [--delta-ring R]
-               [--epoch-items E] [--repeat R] [--json] [--out FILE]
+  pss bench    [--suite window|transport] [--n N] [--k K] [--threads T]
+               [--window W] [--delta-ring R] [--epoch-items E] [--repeat R]
+               [--json] [--out FILE]
   pss repro    --exp <id> [--scale D] [--seed S] [--out DIR]   (or --list)
   pss verify   --input <file.pssd> [--k K] [--artifacts DIR]
   pss profile  --input <file.pssd> [--artifacts DIR]
@@ -127,6 +129,12 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
     if let Some(v) = args.get("threads") { cfg.threads = v.parse()?; }
     if let Some(v) = args.get("chunk-len") { cfg.chunk_len = v.parse()?; }
     if let Some(v) = args.get("queue-depth") { cfg.queue_depth = v.parse()?; }
+    if let Some(v) = args.get("routing") {
+        cfg.routing = v.parse().map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = args.get("transport") {
+        cfg.transport = v.parse().map_err(anyhow::Error::msg)?;
+    }
     if let Some(v) = args.get("batch-ingest") { cfg.batch_ingest = v.parse()?; }
     if let Some(v) = args.get("window") {
         cfg.window_epochs = v.parse()?;
@@ -142,11 +150,6 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
-    let routing = match args.get("routing").unwrap_or("rr") {
-        "rr" => Routing::RoundRobin,
-        "ll" => Routing::LeastLoaded,
-        other => anyhow::bail!("unknown routing '{other}' (rr|ll)"),
-    };
 
     let source: Box<dyn ItemSource> = match args.get("input") {
         Some(path) => {
@@ -179,7 +182,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             k: cfg.k,
             k_majority: cfg.k_majority,
             queue_depth: cfg.queue_depth,
-            routing,
+            routing: cfg.routing,
+            transport: cfg.transport,
             // Batch session: no live readers, skip epoch publication
             // (and with it, delta publication).
             epoch_items: 0,
@@ -199,6 +203,13 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         cfg.threads,
         if cfg.batch_ingest { "batched" } else { "per-item" },
         result.stats.backpressure_events,
+    );
+    println!(
+        "routing={} transport={}: {} transport retries, {} buffers recycled",
+        cfg.routing,
+        cfg.transport,
+        result.stats.transport_retries,
+        result.stats.buffers_recycled,
     );
     println!(
         "k-majority candidates (f̂ > n/{}): {}",
@@ -247,9 +258,14 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         Box::new(GeneratedSource::uniform(cfg.n, cfg.universe, cfg.seed))
     };
     println!(
-        "live query demo: {} items, universe={}, skew={}, {} shards, k={}, epoch={} items",
-        cfg.n, cfg.universe, cfg.skew, cfg.threads, cfg.k, epoch_items
+        "live query demo: {} items, universe={}, skew={}, {} shards, k={}, epoch={} items, routing={}, transport={}",
+        cfg.n, cfg.universe, cfg.skew, cfg.threads, cfg.k, epoch_items, cfg.routing, cfg.transport
     );
+    if cfg.routing == Routing::Keyed {
+        println!(
+            "keyed routing: shards are key-disjoint — reported ε is the max-per-shard bound"
+        );
+    }
     if cfg.delta_ring > 0 {
         println!(
             "sliding window: last {} epochs per query, ring of {} deltas/shard",
@@ -262,7 +278,8 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         k: cfg.k,
         k_majority: cfg.k_majority,
         queue_depth: cfg.queue_depth,
-        routing: Routing::RoundRobin,
+        routing: cfg.routing,
+        transport: cfg.transport,
         epoch_items,
         batch_ingest: cfg.batch_ingest,
         delta_ring: cfg.delta_ring,
@@ -275,12 +292,17 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         let src = source.as_ref();
         let chunk_len = cfg.chunk_len;
         let n = src.len();
-        // Writer: stream the whole source through the coordinator.
+        // Writer: stream the whole source through the coordinator,
+        // reusing recycled chunk buffers (allocation-free steady state
+        // on the ring transport).
         let writer = scope.spawn(move || {
             let mut pos = 0u64;
             while pos < n {
                 let take = ((n - pos) as usize).min(chunk_len);
-                coord.push(src.slice(pos, pos + take as u64));
+                let mut buf = coord.take_buffer();
+                buf.resize(take, 0);
+                src.fill(pos, &mut buf);
+                coord.push(buf);
                 pos += take as u64;
             }
             coord.finish()
@@ -341,6 +363,12 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         result.stats.items as f64 / elapsed / 1e6,
         result.stats.epochs_published,
     );
+    println!(
+        "transport: {} stalls, {} retries, {} buffers recycled",
+        result.stats.backpressure_events,
+        result.stats.transport_retries,
+        result.stats.buffers_recycled,
+    );
     let report = engine.frequent();
     println!(
         "final k-majority (f̂ > n/{}): {} guaranteed, {} possible, ε={}",
@@ -382,14 +410,22 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `pss bench` — a machine-readable perf record for the repo's bench
-/// trajectory: ingest throughput with the delta ring off vs on (the
-/// write-path cost of serving windows) and landmark vs windowed query
-/// latency. `--json` prints the record to stdout; `--out FILE` also
-/// writes it (e.g. `BENCH_window.json`).
+/// `pss bench` — machine-readable perf records for the repo's bench
+/// trajectory. `--suite window` (default): ingest throughput with the
+/// delta ring off vs on and landmark vs windowed query latency
+/// (`BENCH_window.json`). `--suite transport`: the write-path sweep of
+/// transport (mpsc baseline vs SPSC ring) × routing (chunks vs keyed)
+/// (`BENCH_transport.json`). `--json` prints the record to stdout;
+/// `--out FILE` also writes it.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use pss::coordinator::Coordinator;
     use pss::util::benchkit;
+
+    match args.get("suite").unwrap_or("window") {
+        "window" => {}
+        "transport" => return cmd_bench_transport(args),
+        other => anyhow::bail!("unknown bench suite '{other}' (window|transport)"),
+    }
 
     let n: u64 = args.get_or("n", 2_000_000).map_err(anyhow::Error::msg)?;
     let k: usize = args.get_or("k", 2_000).map_err(anyhow::Error::msg)?;
@@ -496,6 +532,117 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             "window mass {} over {} deltas published",
             win.n(),
             result.stats.deltas_published
+        );
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{record}\n"))?;
+        println!("[record written to {path}]");
+    }
+    Ok(())
+}
+
+/// `pss bench --suite transport` — the write-path acceptance sweep:
+/// transport (`mpsc` sync_channel baseline vs lock-free SPSC `ring`) ×
+/// routing (`chunks` round-robin vs `keyed` hash-partition) on the
+/// zipf-1.1 workload, pure ingest (no epoch publication). Emits
+/// best-of-`--repeat` wall times, throughputs, the ring-vs-mpsc
+/// speedups, transport counters, and the summed vs max-per-shard error
+/// bounds keyed routing buys.
+fn cmd_bench_transport(args: &Args) -> anyhow::Result<()> {
+    use pss::coordinator::{Coordinator, Transport};
+
+    let n: u64 = args.get_or("n", 2_000_000).map_err(anyhow::Error::msg)?;
+    let k: usize = args.get_or("k", 2_000).map_err(anyhow::Error::msg)?;
+    let threads: usize = args.get_or("threads", 4).map_err(anyhow::Error::msg)?;
+    let queue_depth: usize = args.get_or("queue-depth", 8).map_err(anyhow::Error::msg)?;
+    let repeat: usize = args.get_or("repeat", 3).map_err(anyhow::Error::msg)?;
+    let json = args.has("json");
+    let chunk_len = pss::parallel::batch_chunk_len_default();
+
+    // The acceptance workload: zipf-1.1 (the paper's default skew).
+    let src = GeneratedSource::zipf(n, 1 << 20, 1.1, 7);
+    if !json {
+        println!(
+            "transport × routing sweep: {n} zipf-1.1 items, {threads} shards, k={k}, queue depth {queue_depth}"
+        );
+    }
+    let session = |transport: Transport, routing: Routing| {
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: threads,
+            k,
+            k_majority: k as u64,
+            queue_depth,
+            routing,
+            transport,
+            epoch_items: 0, // pure write path
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        let mut pos = 0u64;
+        while pos < n {
+            let take = ((n - pos) as usize).min(chunk_len);
+            let mut buf = c.take_buffer();
+            buf.resize(take, 0);
+            src.fill(pos, &mut buf);
+            c.push(buf);
+            pos += take as u64;
+        }
+        let result = c.finish();
+        (t0.elapsed().as_secs_f64(), result, q)
+    };
+
+    let cells = [
+        ("mpsc_chunks", Transport::Mpsc, Routing::RoundRobin),
+        ("mpsc_keyed", Transport::Mpsc, Routing::Keyed),
+        ("ring_chunks", Transport::Ring, Routing::RoundRobin),
+        ("ring_keyed", Transport::Ring, Routing::Keyed),
+    ];
+    let mut fields = String::new();
+    let mut best = std::collections::BTreeMap::new();
+    for (label, transport, routing) in cells {
+        let mut best_s = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..repeat.max(1) {
+            let (t, result, q) = session(transport, routing);
+            best_s = best_s.min(t);
+            last = Some((result, q));
+        }
+        let (result, q) = last.expect("repeat >= 1");
+        best.insert(label, best_s);
+        let snap = q.snapshot();
+        fields.push_str(&format!(
+            " \"ingest_s_{label}\": {best_s:.6}, \"mitems_per_s_{label}\": {:.3},\n \
+              \"transport_retries_{label}\": {}, \"buffers_recycled_{label}\": {},\n \
+              \"epsilon_{label}\": {},\n",
+            n as f64 / best_s / 1e6,
+            result.stats.transport_retries,
+            result.stats.buffers_recycled,
+            snap.epsilon(),
+        ));
+        if !json {
+            println!(
+                "  {label:<12} {best_s:.3}s ({:.1} M items/s)  retries={} recycled={} ε={}",
+                n as f64 / best_s / 1e6,
+                result.stats.transport_retries,
+                result.stats.buffers_recycled,
+                snap.epsilon(),
+            );
+        }
+    }
+    let speedup_chunks = best["mpsc_chunks"] / best["ring_chunks"];
+    let speedup_keyed = best["mpsc_keyed"] / best["ring_keyed"];
+    let record = format!(
+        "{{\"bench\": \"transport\", \"n\": {n}, \"k\": {k}, \"shards\": {threads}, \"skew\": 1.1,\n \
+          \"queue_depth\": {queue_depth}, \"chunk_len\": {chunk_len}, \"repeat\": {repeat},\n\
+          {fields} \
+          \"ring_vs_mpsc_speedup_chunks\": {speedup_chunks:.3},\n \
+          \"ring_vs_mpsc_speedup_keyed\": {speedup_keyed:.3}}}"
+    );
+    if json {
+        println!("{record}");
+    } else {
+        println!(
+            "ring vs mpsc speedup: {speedup_chunks:.2}x (chunks), {speedup_keyed:.2}x (keyed) — target ≥ 1.5x at {threads} shards"
         );
     }
     if let Some(path) = args.get("out") {

@@ -9,10 +9,14 @@
 //!   the stand-in for OpenMP v4's user-defined reduction.
 //! * [`shared`] — the end-to-end driver: decompose → local Space Saving
 //!   scans → tree reduce → prune, with per-phase timing.
+//! * [`spsc`] — the bounded lock-free SPSC ring the streaming
+//!   coordinator uses for producer→shard chunk handoff and the
+//!   reverse chunk-buffer free list.
 
 pub mod partition;
 pub mod reduction;
 pub mod shared;
+pub mod spsc;
 pub mod thread_pool;
 
 pub use partition::{batch_chunk_len, batch_chunk_len_default, block_range};

@@ -14,13 +14,23 @@
 //!
 //! where `n_epoch` is the merged snapshot's stream coverage (the sum of
 //! the per-shard published `n`s) — the epoch the answer is *about*.
+//!
+//! Under **keyed routing** (`Routing::Keyed`) the per-shard snapshots
+//! are key-disjoint, so the engine switches to the concatenation merge
+//! ([`merge_disjoint`]) and the bound tightens from the additive
+//! `⌊n_epoch/k⌋` to the **max-per-shard** `ε = maxᵢ ⌊nᵢ/k⌋ ≤
+//! ⌊n_epoch/k⌋`: every estimate is its home shard's estimate, inflated
+//! by nothing. Point queries for unmonitored items likewise bound by
+//! the *home shard's* minimum count ([`crate::util::shard_of`]) rather
+//! than the global one.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::metrics::{LatencyHistogram, LatencySummary};
 use crate::parallel::tree_reduce_refs;
-use crate::summary::{Counter, Summary};
+use crate::summary::{merge_disjoint, Counter, Summary};
+use crate::util::shard_of;
 
 use super::epoch::{EpochRegistry, EpochSnapshot};
 
@@ -31,10 +41,16 @@ use super::epoch::{EpochRegistry, EpochSnapshot};
 /// while ingestion continues.
 #[derive(Debug, Clone)]
 pub struct MergedSnapshot {
-    /// The combine-tree merge of every shard's published summary.
+    /// The merge of every shard's published summary (combine tree, or
+    /// concatenation when the shards are key-disjoint).
     merged: Summary,
     /// The per-shard snapshots this view was built from.
     parts: Vec<Arc<EpochSnapshot>>,
+    /// Key-disjoint shards (keyed routing)?
+    disjoint: bool,
+    /// The reported over-estimation bound: `⌊n/k⌋` of the merge, or
+    /// the tighter `maxᵢ ⌊nᵢ/k⌋` in disjoint mode.
+    epsilon: u64,
     /// When the view was materialized.
     taken_at: Instant,
 }
@@ -83,15 +99,26 @@ pub struct ThresholdReport {
     pub possible: Vec<Counter>,
     /// Stream coverage of the answer.
     pub n: u64,
-    /// The ε = n/k bound every estimate in this report honors.
+    /// The bound every estimate in this report honors: ε = n/k, or the
+    /// tighter max-per-shard bound under keyed routing.
     pub epsilon: u64,
 }
 
 impl MergedSnapshot {
-    fn build(parts: Vec<Arc<EpochSnapshot>>) -> Self {
+    fn build(parts: Vec<Arc<EpochSnapshot>>, disjoint: bool) -> Self {
         let leaves: Vec<&Summary> = parts.iter().map(|p| &p.summary).collect();
-        let merged = tree_reduce_refs(&leaves);
-        Self { merged, parts, taken_at: Instant::now() }
+        let (merged, epsilon) = if disjoint {
+            // Key-disjoint shards: concatenate, and report the
+            // max-per-shard bound (see the module docs).
+            let merged = merge_disjoint(&leaves);
+            let epsilon = leaves.iter().map(|s| s.epsilon()).max().unwrap_or(0);
+            (merged, epsilon)
+        } else {
+            let merged = tree_reduce_refs(&leaves);
+            let epsilon = merged.epsilon();
+            (merged, epsilon)
+        };
+        Self { merged, parts, disjoint, epsilon, taken_at: Instant::now() }
     }
 
     /// The merged summary itself.
@@ -105,9 +132,16 @@ impl MergedSnapshot {
         self.merged.n()
     }
 
-    /// The ε = ⌊n/k⌋ over-estimation bound of this view.
+    /// The over-estimation bound of this view: `ε = ⌊n/k⌋`, or the
+    /// tighter max-per-shard `maxᵢ ⌊nᵢ/k⌋` under keyed routing.
     pub fn epsilon(&self) -> u64 {
-        self.merged.epsilon()
+        self.epsilon
+    }
+
+    /// Whether this view merged key-disjoint shards (keyed routing) —
+    /// and therefore reports the max-per-shard bound.
+    pub fn is_disjoint(&self) -> bool {
+        self.disjoint
     }
 
     /// Per-shard epochs this view is made of.
@@ -143,8 +177,27 @@ impl MergedSnapshot {
     }
 
     /// Frequency estimate for one item, with its certainty bounds.
+    ///
+    /// Under keyed routing the answer comes from the item's *home
+    /// shard*: identical for monitored items (the disjoint merge keeps
+    /// home counters intact), and a tighter, correct upper bound for
+    /// unmonitored ones (the home shard's minimum count — the
+    /// concatenation's global minimum would be wrong there).
     pub fn point(&self, item: u64) -> PointEstimate {
-        point_estimate(&self.merged, item)
+        if self.disjoint {
+            let home = shard_of(item, self.parts.len());
+            let part = self
+                .parts
+                .iter()
+                .find(|p| p.shard == home)
+                .map(|p| &p.summary)
+                .expect("one snapshot per shard");
+            let mut p = point_estimate(part, item);
+            p.n = self.n(); // the answer is about the merged coverage
+            p
+        } else {
+            point_estimate(&self.merged, item)
+        }
     }
 
     /// Items above a relative threshold `phi` ∈ `[0, 1)`: `f̂ > phi·n`,
@@ -162,7 +215,7 @@ impl MergedSnapshot {
     }
 
     fn threshold_abs(&self, threshold: u64) -> ThresholdReport {
-        threshold_split(&self.merged, threshold)
+        threshold_split(&self.merged, threshold, self.epsilon)
     }
 }
 
@@ -191,7 +244,13 @@ pub(crate) fn point_estimate(summary: &Summary, item: u64) -> PointEstimate {
 
 /// Threshold query with the guaranteed-vs-possible split, over any
 /// merged summary — shared by the landmark and windowed read paths.
-pub(crate) fn threshold_split(summary: &Summary, threshold: u64) -> ThresholdReport {
+/// `epsilon` is the bound the caller's view honors (`⌊n/k⌋`, or the
+/// max-per-shard bound for disjoint merges).
+pub(crate) fn threshold_split(
+    summary: &Summary,
+    threshold: u64,
+    epsilon: u64,
+) -> ThresholdReport {
     let mut guaranteed = Vec::new();
     let mut possible = Vec::new();
     // Counters are ascending; walk from the top so both outputs
@@ -211,7 +270,7 @@ pub(crate) fn threshold_split(summary: &Summary, threshold: u64) -> ThresholdRep
         guaranteed,
         possible,
         n: summary.n(),
-        epsilon: summary.epsilon(),
+        epsilon,
     }
 }
 
@@ -265,7 +324,8 @@ impl QueryEngine {
     /// goes through it.
     pub fn snapshot(&self) -> MergedSnapshot {
         let t0 = Instant::now();
-        let snap = MergedSnapshot::build(self.registry.latest());
+        let snap =
+            MergedSnapshot::build(self.registry.latest(), self.registry.disjoint());
         self.latency.record(t0.elapsed());
         self.registry.count_query();
         snap
@@ -488,6 +548,53 @@ mod tests {
                 assert!(monitored.contains(item), "lost frequent item {item}");
             }
         }
+    }
+
+    #[test]
+    fn disjoint_mode_uses_home_shard_bounds() {
+        use crate::util::shard_of;
+        // Keyed-style split: every item fed only to its home shard,
+        // shard masses deliberately imbalanced so the max-per-shard
+        // bound differs from the additive one.
+        let k = 8;
+        let registry = EpochRegistry::new(2, k);
+        registry.set_disjoint(true);
+        let e = QueryEngine::new(registry, k as u64);
+        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); 2];
+        for item in 0..400u64 {
+            let copies = if item < 5 { 50 } else { 1 };
+            let home = shard_of(item, 2);
+            per_shard[home].extend(std::iter::repeat(item).take(copies));
+        }
+        let frozen: Vec<Summary> =
+            per_shard.iter().map(|v| summary_of(v, k)).collect();
+        for (s, f) in frozen.iter().enumerate() {
+            e.registry().publish(s, f.clone(), false);
+        }
+        let snap = e.snapshot();
+        assert!(snap.is_disjoint());
+        let total: u64 = frozen.iter().map(|f| f.n()).sum();
+        assert_eq!(snap.n(), total);
+        let eps_max = frozen.iter().map(|f| f.epsilon()).max().unwrap();
+        assert_eq!(snap.epsilon(), eps_max, "max-per-shard bound");
+        assert!(snap.epsilon() <= total / k as u64, "tighter than summed");
+        // Monitored point estimates are the home counters, untouched.
+        for c in snap.summary().counters() {
+            let home = &frozen[shard_of(c.item, 2)];
+            assert_eq!(home.estimate(c.item), Some(c.count));
+            let p = snap.point(c.item);
+            assert_eq!(p.estimate, c.count);
+            assert_eq!(p.n, total);
+        }
+        // Unmonitored items bound by their home shard's min count.
+        let absent = (0u64..400)
+            .find(|&i| shard_of(i, 2) == 0 && frozen[0].estimate(i).is_none())
+            .unwrap();
+        let p = snap.point(absent);
+        assert!(!p.monitored);
+        assert_eq!(p.estimate, frozen[0].min_count());
+        // The k-majority report carries the tightened epsilon.
+        assert_eq!(snap.k_majority(k as u64).epsilon, eps_max);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! co-design: queries never block updates, updates never mutate
 //! anything a reader can observe.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
@@ -84,6 +84,10 @@ pub struct EpochRegistry {
     items_routed: AtomicU64,
     /// Queries served through engines attached to this registry.
     queries_served: AtomicU64,
+    /// Whether the per-shard snapshots are key-disjoint (keyed
+    /// routing): the engine then merges by concatenation and reports
+    /// the max-per-shard error bound. Set once before ingestion starts.
+    disjoint: AtomicBool,
 }
 
 impl EpochRegistry {
@@ -97,7 +101,21 @@ impl EpochRegistry {
             epochs_published: AtomicU64::new(0),
             items_routed: AtomicU64::new(0),
             queries_served: AtomicU64::new(0),
+            disjoint: AtomicBool::new(false),
         })
+    }
+
+    /// Declare the per-shard snapshots key-disjoint (the coordinator
+    /// calls this when spawned with keyed routing, before any worker
+    /// publishes). Engines then use the disjoint merge and the
+    /// max-per-shard error bound.
+    pub fn set_disjoint(&self, disjoint: bool) {
+        self.disjoint.store(disjoint, Ordering::Release);
+    }
+
+    /// Whether snapshots are key-disjoint (keyed routing).
+    pub fn disjoint(&self) -> bool {
+        self.disjoint.load(Ordering::Acquire)
     }
 
     /// Number of shards.

@@ -194,6 +194,34 @@ impl Summary {
         Summary { k, n: self.n + other.n, counters: merged }
     }
 
+    /// Merge with a **key-disjoint** summary: concatenate the counter
+    /// sets without Algorithm 2's `m₁`/`m₂` cross-charges.
+    ///
+    /// Valid only when the two summaries observed substreams with no
+    /// item in common — the coordinator's keyed routing
+    /// (`Routing::Keyed`, [`crate::util::shard_of`]) guarantees this by
+    /// hashing every occurrence of an item to one home shard. An item
+    /// absent from the *other* substream truly has frequency 0 there,
+    /// so its estimate needs no `m` inflation; each counter keeps its
+    /// home summary's exact `(count, err)`, and the merged per-counter
+    /// bound is the **home shard's** `εᵢ = ⌊nᵢ/k⌋`, not the additive
+    /// `⌊(n₁+n₂)/k⌋` of [`Summary::combine`].
+    ///
+    /// The result's budget is `k₁ + k₂` and no counter is pruned, so
+    /// recall is preserved shard-locally: every item with
+    /// `f > n_home/k_home` stays monitored. Two derived quantities are
+    /// intentionally *not* meaningful on a disjoint-merged summary and
+    /// must be taken from the per-shard parts instead (the query and
+    /// window engines do):
+    ///
+    /// * [`Summary::epsilon`] (`n/(k₁+k₂)`) can understate the true
+    ///   bound `maxᵢ ⌊nᵢ/k⌋` when shard masses are imbalanced;
+    /// * [`Summary::min_count`] (the unmonitored-item upper bound) must
+    ///   be the *home shard's* min count, not the concatenation's.
+    pub fn combine_disjoint(&self, other: &Summary) -> Summary {
+        merge_disjoint(&[self, other])
+    }
+
     /// Final output filter (Algorithm 1 line 9, `PRUNED`): keep items
     /// whose estimate clears the k-majority threshold `⌊n/k⌋ + 1`, i.e.
     /// `f̂ > n/k`, reported descending by frequency.
@@ -254,6 +282,34 @@ impl Summary {
         out.reverse();
         out
     }
+}
+
+/// N-way [`Summary::combine_disjoint`]: merge summaries of pairwise
+/// key-disjoint substreams (one per keyed-routing shard) by
+/// concatenation — `n = Σnᵢ`, budget `Σkᵢ`, every counter kept with its
+/// home `(count, err)` intact. See [`Summary::combine_disjoint`] for
+/// the bound semantics (and the derived quantities the caller must take
+/// per-shard instead). Debug builds assert the disjointness
+/// precondition.
+pub fn merge_disjoint(parts: &[&Summary]) -> Summary {
+    assert!(!parts.is_empty(), "nothing to merge");
+    #[cfg(debug_assertions)]
+    {
+        let mut seen = std::collections::HashSet::new();
+        for p in parts {
+            for c in p.counters() {
+                assert!(seen.insert(c.item), "item {} in two disjoint parts", c.item);
+            }
+        }
+    }
+    let k = parts.iter().map(|p| p.k()).sum();
+    let n = parts.iter().map(|p| p.n()).sum();
+    let mut counters =
+        Vec::with_capacity(parts.iter().map(|p| p.counters().len()).sum());
+    for p in parts {
+        counters.extend_from_slice(p.counters());
+    }
+    Summary::new(k, n, counters)
 }
 
 #[cfg(test)]
@@ -461,5 +517,82 @@ mod tests {
     fn wire_bytes_scales_with_len() {
         let s = summarize(&[1, 2, 3, 4], 8);
         assert_eq!(s.wire_bytes(), 4 * 24 + 16);
+    }
+
+    #[test]
+    fn disjoint_merge_keeps_exact_per_shard_estimates() {
+        // Keyed-style split: evens to shard A, odds to shard B. Both
+        // overflow their budget, so Algorithm 2 would inflate the
+        // other side's estimates by m; the disjoint merge must not.
+        let mut rng = SplitMix64::new(5);
+        let items: Vec<u64> = (0..20_000)
+            .map(|_| {
+                if rng.next_f64() < 0.5 {
+                    rng.next_below(6)
+                } else {
+                    rng.next_below(3_000)
+                }
+            })
+            .collect();
+        let (mut a, mut b) = (SpaceSaving::new(32), SpaceSaving::new(32));
+        for &it in &items {
+            if it % 2 == 0 {
+                a.offer(it);
+            } else {
+                b.offer(it);
+            }
+        }
+        let (fa, fb) = (a.freeze(), b.freeze());
+        let merged = fa.combine_disjoint(&fb);
+        assert_eq!(merged.n(), items.len() as u64);
+        assert_eq!(merged.k(), 64);
+        assert_eq!(
+            merged.counters().len(),
+            fa.counters().len() + fb.counters().len()
+        );
+        // Every merged counter is bit-identical to its home counter.
+        for c in merged.counters() {
+            let home = if c.item % 2 == 0 { &fa } else { &fb };
+            let orig = home
+                .counters()
+                .iter()
+                .find(|h| h.item == c.item)
+                .copied()
+                .expect("counter kept");
+            assert_eq!(*c, orig);
+        }
+        // The per-shard bound holds against truth — strictly tighter
+        // than the additive combine bound when both shards are full.
+        let t = truth(&items);
+        for c in merged.counters() {
+            let home_eps = if c.item % 2 == 0 { fa.epsilon() } else { fb.epsilon() };
+            let f = t.get(&c.item).copied().unwrap_or(0);
+            assert!(c.count >= f && c.count - f <= home_eps);
+        }
+    }
+
+    #[test]
+    fn merge_disjoint_many_parts_orders_and_sums() {
+        let parts: Vec<Summary> = (0..5u64)
+            .map(|s| summarize(&vec![s; (s + 1) as usize], 4))
+            .collect();
+        let refs: Vec<&Summary> = parts.iter().collect();
+        let m = merge_disjoint(&refs);
+        assert_eq!(m.n(), 1 + 2 + 3 + 4 + 5);
+        assert_eq!(m.k(), 20);
+        // Ascending by count after the concat sort.
+        assert!(m.counters().windows(2).all(|w| w[0].count <= w[1].count));
+        for s in 0..5u64 {
+            assert_eq!(m.estimate(s), Some(s + 1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "in two disjoint parts")]
+    #[cfg(debug_assertions)]
+    fn merge_disjoint_rejects_overlap_in_debug() {
+        let a = summarize(&[1, 1], 4);
+        let b = summarize(&[1, 2], 4);
+        let _ = merge_disjoint(&[&a, &b]);
     }
 }

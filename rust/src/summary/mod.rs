@@ -6,7 +6,9 @@
 //! * [`StreamSummary`] — Metwally's bucket-list structure, `O(1)`
 //!   amortized per item. Ablation target (`bench_space_saving`).
 //! * [`Summary`] — the frozen, frequency-sorted summary value that ranks
-//!   and threads exchange; [`Summary::combine`] is paper Algorithm 2.
+//!   and threads exchange; [`Summary::combine`] is paper Algorithm 2,
+//!   [`merge_disjoint`] the cheaper concatenation merge for
+//!   key-disjoint (keyed-routed) substreams.
 //! * [`batch`] — the batched ingest fast path: [`ChunkAggregator`]
 //!   collapses a chunk into `(item, weight)` runs and [`offer_batched`]
 //!   applies them as weighted updates, one summary touch per distinct
@@ -23,7 +25,7 @@ pub mod stream_summary;
 pub mod traits;
 
 pub use batch::{offer_batched, offer_runs, ChunkAggregator};
-pub use combine::Summary;
+pub use combine::{merge_disjoint, Summary};
 pub use counter::Counter;
 pub use space_saving::SpaceSaving;
 pub use stream_summary::StreamSummary;

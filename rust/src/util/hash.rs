@@ -37,6 +37,21 @@ pub fn row_hash(x: u64, row: u64) -> u64 {
     mix64(x ^ row.wrapping_mul(0xA24B_AED4_963E_E407))
 }
 
+/// Keyed shard partition: the home shard of `item` among `shards`
+/// workers — same [`mix64`] family as [`crate::util::FastMap`]'s slot
+/// hash, range-reduced by the bias-free multiply-shift
+/// `⌊mix64(item)·shards / 2^64⌋` (one multiply, no modulo).
+///
+/// Every occurrence of an item maps to the same shard, so summaries of
+/// keyed-routed substreams are **key-disjoint** — the property the
+/// coordinator's `Routing::Keyed` mode and the disjoint merge
+/// (`summary::merge_disjoint`) rest on.
+#[inline]
+pub fn shard_of(item: u64, shards: usize) -> usize {
+    debug_assert!(shards >= 1);
+    (((mix64(item) as u128) * (shards as u128)) >> 64) as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +98,31 @@ mod tests {
         let x = 42u64;
         assert_ne!(row_hash(x, 0), row_hash(x, 1));
         assert_ne!(row_hash(x, 1), row_hash(x, 2));
+    }
+
+    #[test]
+    fn shard_of_in_range_and_roughly_balanced() {
+        for shards in [1usize, 2, 3, 5, 8, 13] {
+            let mut hist = vec![0u64; shards];
+            for item in 0..50_000u64 {
+                let s = shard_of(item, shards);
+                assert!(s < shards, "item {item} → shard {s} of {shards}");
+                hist[s] += 1;
+            }
+            let expect = 50_000 / shards as u64;
+            for (s, &c) in hist.iter().enumerate() {
+                assert!(
+                    c > expect / 2 && c < expect * 2,
+                    "shard {s}/{shards} got {c} of ~{expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_is_stable_per_item() {
+        for item in (0..10_000u64).step_by(97) {
+            assert_eq!(shard_of(item, 7), shard_of(item, 7));
+        }
     }
 }

@@ -26,6 +26,14 @@
 //! precise delta set it merged ([`WindowSnapshot::deltas`]), so the
 //! answer is always *about* a well-defined slice of the stream — the
 //! property-tested contract (`prop_windowed_bounds`).
+//!
+//! Under **keyed routing** the shards' substreams are key-disjoint, so
+//! the window merge combines each shard's in-window deltas with the
+//! regular combine tree (same-shard deltas overlap over time) and then
+//! *concatenates* across shards ([`merge_disjoint`]): the windowed
+//! bound tightens from `⌊W/k⌋` to the max-per-shard `maxᵢ ⌊Wᵢ/k⌋`
+//! (`Wᵢ` = shard `i`'s in-window mass), and unmonitored point queries
+//! bound by the item's home-shard window instead of the global one.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,7 +42,8 @@ use crate::metrics::{LatencyHistogram, LatencySummary};
 use crate::parallel::tree_reduce_refs;
 use crate::query::engine::{point_estimate, threshold_split};
 use crate::query::{PointEstimate, ThresholdReport};
-use crate::summary::{Counter, Summary};
+use crate::summary::{merge_disjoint, Counter, Summary};
+use crate::util::shard_of;
 
 use super::store::{DeltaSummary, WindowStore};
 
@@ -46,10 +55,20 @@ use super::store::{DeltaSummary, WindowStore};
 /// rings keep turning over.
 #[derive(Debug, Clone)]
 pub struct WindowSnapshot {
-    /// The combine-tree merge of every in-window delta.
+    /// The merge of every in-window delta (combine tree; per-shard
+    /// combine + cross-shard concatenation in disjoint mode).
     merged: Summary,
     /// The deltas this view was built from.
     parts: Vec<Arc<DeltaSummary>>,
+    /// Disjoint mode only: each covered shard's merged window summary,
+    /// for home-shard point bounds. Empty otherwise.
+    shard_merged: Vec<(usize, Summary)>,
+    /// Key-disjoint shards (keyed routing)?
+    disjoint: bool,
+    /// Shard count of the owning store (home-shard hashing).
+    shards: usize,
+    /// The reported bound: `⌊W/k⌋`, or `maxᵢ ⌊Wᵢ/k⌋` in disjoint mode.
+    epsilon: u64,
     /// When the view was materialized.
     taken_at: Instant,
 }
@@ -68,14 +87,44 @@ pub struct DeltaInfo {
 }
 
 impl WindowSnapshot {
-    fn build(parts: Vec<Arc<DeltaSummary>>, k: usize) -> Self {
-        let merged = if parts.is_empty() {
-            Summary::empty(k)
+    fn build(parts: Vec<Arc<DeltaSummary>>, k: usize, disjoint: bool, shards: usize) -> Self {
+        let mut shard_merged: Vec<(usize, Summary)> = Vec::new();
+        let (merged, epsilon) = if parts.is_empty() {
+            (Summary::empty(k), 0)
+        } else if disjoint {
+            // Same-shard deltas overlap over time: combine each
+            // shard's run first, then concatenate the key-disjoint
+            // per-shard results.
+            for shard in 0..shards {
+                let leaves: Vec<&Summary> = parts
+                    .iter()
+                    .filter(|p| p.shard == shard)
+                    .map(|p| &p.summary)
+                    .collect();
+                if !leaves.is_empty() {
+                    shard_merged.push((shard, tree_reduce_refs(&leaves)));
+                }
+            }
+            let per_shard: Vec<&Summary> =
+                shard_merged.iter().map(|(_, s)| s).collect();
+            let merged = merge_disjoint(&per_shard);
+            let epsilon = per_shard.iter().map(|s| s.epsilon()).max().unwrap_or(0);
+            (merged, epsilon)
         } else {
             let leaves: Vec<&Summary> = parts.iter().map(|p| &p.summary).collect();
-            tree_reduce_refs(&leaves)
+            let merged = tree_reduce_refs(&leaves);
+            let epsilon = merged.epsilon();
+            (merged, epsilon)
         };
-        Self { merged, parts, taken_at: Instant::now() }
+        Self {
+            merged,
+            parts,
+            shard_merged,
+            disjoint,
+            shards,
+            epsilon,
+            taken_at: Instant::now(),
+        }
     }
 
     /// The merged window summary itself.
@@ -88,9 +137,16 @@ impl WindowSnapshot {
         self.merged.n()
     }
 
-    /// The ε = ⌊W/k⌋ over-estimation bound of this window.
+    /// The over-estimation bound of this window: `ε = ⌊W/k⌋`, or the
+    /// tighter max-per-shard `maxᵢ ⌊Wᵢ/k⌋` under keyed routing.
     pub fn epsilon(&self) -> u64 {
-        self.merged.epsilon()
+        self.epsilon
+    }
+
+    /// Whether this window merged key-disjoint shards (keyed routing)
+    /// — and therefore reports the max-per-shard bound.
+    pub fn is_disjoint(&self) -> bool {
+        self.disjoint
     }
 
     /// True when the window covers no published delta.
@@ -144,22 +200,48 @@ impl WindowSnapshot {
 
     /// Frequency estimate for one item within the window, with bounds
     /// (`n` in the result is the window mass `W`).
+    ///
+    /// Under keyed routing, unmonitored items are bounded by their
+    /// *home shard's* merged window (its min count) — a shard whose
+    /// window covers none of the item's substream bounds it at 0.
     pub fn point(&self, item: u64) -> PointEstimate {
-        point_estimate(&self.merged, item)
+        if self.disjoint {
+            let home = shard_of(item, self.shards);
+            let mut p = match self.shard_merged.iter().find(|(s, _)| *s == home) {
+                Some((_, summary)) => point_estimate(summary, item),
+                // No home-shard delta in the window: the covered
+                // window contains none of this item's occurrences.
+                None => PointEstimate {
+                    item,
+                    estimate: 0,
+                    guaranteed: 0,
+                    monitored: false,
+                    n: 0,
+                },
+            };
+            p.n = self.n(); // the answer is about the whole window mass
+            p
+        } else {
+            point_estimate(&self.merged, item)
+        }
     }
 
     /// Items above a relative threshold `phi` ∈ `[0, 1)` of the window
     /// mass (`f̂ > phi·W`), split into guaranteed and possible.
     pub fn threshold(&self, phi: f64) -> ThresholdReport {
         assert!((0.0..1.0).contains(&phi), "phi must be in [0, 1)");
-        threshold_split(&self.merged, (phi * self.n() as f64).floor() as u64)
+        threshold_split(
+            &self.merged,
+            (phi * self.n() as f64).floor() as u64,
+            self.epsilon,
+        )
     }
 
     /// The windowed k-majority query: all items with `f̂ > W/k_majority`
     /// in the covered window.
     pub fn k_majority(&self, k_majority: u64) -> ThresholdReport {
         assert!(k_majority >= 2, "k_majority must be >= 2");
-        threshold_split(&self.merged, self.n() / k_majority)
+        threshold_split(&self.merged, self.n() / k_majority, self.epsilon)
     }
 }
 
@@ -243,7 +325,12 @@ impl WindowedQueryEngine {
 
     fn snapshot_of(&self, parts: Vec<Arc<DeltaSummary>>) -> WindowSnapshot {
         let t0 = Instant::now();
-        let snap = WindowSnapshot::build(parts, self.store.k());
+        let snap = WindowSnapshot::build(
+            parts,
+            self.store.k(),
+            self.store.disjoint(),
+            self.store.shards(),
+        );
         self.latency.record(t0.elapsed());
         self.store.count_query();
         snap
@@ -393,6 +480,57 @@ mod tests {
             let f = truth.get(&c.item).copied().unwrap_or(0);
             assert!(f > rep.threshold, "guaranteed false positive {}", c.item);
         }
+    }
+
+    #[test]
+    fn disjoint_window_combines_within_shard_then_concatenates() {
+        use crate::util::shard_of;
+        let k = 8;
+        let store = WindowStore::new(2, 4, k);
+        store.set_disjoint(true);
+        let engine = WindowedQueryEngine::new(store.clone(), 2, k as u64);
+        // Two epochs per shard, keyed split, imbalanced masses.
+        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); 2];
+        for item in 0..300u64 {
+            let copies = if item < 4 { 40 } else { 1 };
+            per_shard[shard_of(item, 2)].extend(std::iter::repeat(item).take(copies));
+        }
+        let mut shard_window_mass = [0u64; 2];
+        for (s, items) in per_shard.iter().enumerate() {
+            let mid = items.len() / 2;
+            store.publish(s, summary_of(&items[..mid], k), false);
+            store.publish(s, summary_of(&items[mid..], k), false);
+            shard_window_mass[s] = items.len() as u64;
+        }
+        let snap = engine.window(2);
+        assert!(snap.is_disjoint());
+        let total: u64 = shard_window_mass.iter().sum();
+        assert_eq!(snap.n(), total);
+        // Max-per-shard windowed bound, tighter than the summed one.
+        let eps_max = shard_window_mass.iter().map(|&w| w / k as u64).max().unwrap();
+        assert_eq!(snap.epsilon(), eps_max);
+        assert!(snap.epsilon() <= total / k as u64);
+        // Same-shard epochs combined: heavy items keep exact counts
+        // (each epoch summary is exact for them, and combine sums).
+        for item in 0..4u64 {
+            let p = snap.point(item);
+            assert_eq!(p.n, total);
+            assert!(p.estimate >= 40, "heavy item {item} lost mass");
+        }
+        // The report epsilon carries the tightened bound too.
+        assert_eq!(snap.k_majority(k as u64).epsilon, eps_max);
+        // A window with no home-shard coverage bounds an item at 0:
+        // publish only shard 0, fresh store.
+        let store2 = WindowStore::new(2, 4, k);
+        store2.set_disjoint(true);
+        let engine2 = WindowedQueryEngine::new(store2.clone(), 2, k as u64);
+        store2.publish(0, summary_of(&per_shard[0], k), false);
+        let snap2 = engine2.window(2);
+        let other = (0u64..300)
+            .find(|&i| shard_of(i, 2) == 1)
+            .expect("some item homes on shard 1");
+        let p = snap2.point(other);
+        assert_eq!((p.estimate, p.guaranteed, p.monitored), (0, 0, false));
     }
 
     #[test]

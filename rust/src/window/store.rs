@@ -56,6 +56,11 @@ pub struct WindowStore {
     deltas_published: AtomicU64,
     deltas_retired: AtomicU64,
     queries_served: AtomicU64,
+    /// Whether deltas of *different shards* are key-disjoint (keyed
+    /// routing). Deltas of the same shard always overlap (same
+    /// substream over time), so the windowed disjoint merge combines
+    /// within a shard first, then concatenates across shards.
+    disjoint: AtomicBool,
 }
 
 impl WindowStore {
@@ -76,7 +81,21 @@ impl WindowStore {
             deltas_published: AtomicU64::new(0),
             deltas_retired: AtomicU64::new(0),
             queries_served: AtomicU64::new(0),
+            disjoint: AtomicBool::new(false),
         })
+    }
+
+    /// Declare the shards' substreams key-disjoint (keyed routing; the
+    /// coordinator calls this before any delta is published). Windowed
+    /// engines then combine within each shard and concatenate across
+    /// shards, reporting the max-per-shard bound.
+    pub fn set_disjoint(&self, disjoint: bool) {
+        self.disjoint.store(disjoint, Ordering::Release);
+    }
+
+    /// Whether shard substreams are key-disjoint (keyed routing).
+    pub fn disjoint(&self) -> bool {
+        self.disjoint.load(Ordering::Acquire)
     }
 
     /// Number of shards.

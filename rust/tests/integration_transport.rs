@@ -1,0 +1,276 @@
+//! Integration: the lock-free ingest transport under stress — the SPSC
+//! ring's delivery/close guarantees at multi-million-message volume
+//! with randomized backoff on both sides — and the keyed-routing write
+//! path end to end (key-disjoint shards, tighter bound, recycling).
+
+use std::time::Duration;
+
+use pss::baselines::Exact;
+use pss::coordinator::{
+    shard_of, Coordinator, CoordinatorConfig, Routing, Transport,
+};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::metrics::AccuracyReport;
+use pss::parallel::spsc::{self, Backoff, TryPopError, TryPushError};
+use pss::summary::FrequencySummary;
+use pss::util::SplitMix64;
+
+/// Multi-million-message producer/consumer stress with randomized
+/// backoff injected on both sides: every message arrives exactly once,
+/// in order, across a tiny ring that forces constant full/empty edges.
+#[test]
+fn spsc_stress_multi_million_messages() {
+    const MESSAGES: u64 = 3_000_000;
+    let (mut tx, mut rx) = spsc::ring::<u64>(4);
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut rng = SplitMix64::new(101);
+            let mut backoff = Backoff::new();
+            let mut next = 0u64;
+            while next < MESSAGES {
+                // Randomized stalls: sometimes yield mid-stream so the
+                // consumer drains the ring dry.
+                if rng.next_below(1024) == 0 {
+                    std::thread::yield_now();
+                }
+                match tx.try_push(next) {
+                    Ok(()) => {
+                        next += 1;
+                        backoff.reset();
+                    }
+                    Err(TryPushError::Full(_)) => backoff.snooze(),
+                    Err(TryPushError::Closed(_)) => panic!("consumer died early"),
+                }
+            }
+        });
+        s.spawn(move || {
+            let mut rng = SplitMix64::new(202);
+            let mut backoff = Backoff::new();
+            let mut expected = 0u64;
+            loop {
+                if rng.next_below(1024) == 0 {
+                    std::thread::yield_now();
+                }
+                match rx.try_pop() {
+                    Ok(v) => {
+                        assert_eq!(v, expected, "out-of-order or duplicated message");
+                        expected += 1;
+                        backoff.reset();
+                    }
+                    Err(TryPopError::Empty) => backoff.snooze(),
+                    Err(TryPopError::Closed) => break,
+                }
+            }
+            assert_eq!(expected, MESSAGES, "messages lost at close");
+        });
+    });
+}
+
+/// Close-while-full: a producer that fills the ring and closes must
+/// still have every buffered message delivered, in order, before the
+/// consumer observes Closed.
+#[test]
+fn spsc_close_while_full_drains_in_order() {
+    for cap in [1usize, 2, 7, 64] {
+        let (mut tx, mut rx) = spsc::ring::<u64>(cap);
+        let mut pushed = 0u64;
+        while let Ok(()) = tx.try_push(pushed) {
+            pushed += 1;
+        }
+        assert_eq!(pushed as usize, tx.capacity(), "filled to capacity");
+        tx.close();
+        for want in 0..pushed {
+            assert_eq!(rx.try_pop().unwrap(), want, "cap {cap}");
+        }
+        assert_eq!(rx.try_pop(), Err(TryPopError::Closed), "cap {cap}");
+    }
+}
+
+/// Close-while-empty: consumers waiting on an empty ring observe the
+/// close promptly (bounded by the backoff park, not the poll timeout).
+#[test]
+fn spsc_close_while_empty_wakes_waiter() {
+    let (tx, mut rx) = spsc::ring::<u64>(8);
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            drop(tx);
+        });
+        let out = rx.pop_timeout(Duration::from_secs(30));
+        assert_eq!(out, Err(spsc::PopTimeoutError::Closed));
+    });
+}
+
+/// The full coordinator under keyed routing + ring transport against
+/// exact truth, with the mpsc baseline as a control: identical
+/// accounting, recall 1, key-disjoint shards, tighter reported bound.
+#[test]
+fn keyed_ring_session_matches_oracle_and_tightens_bound() {
+    let n = 200_000u64;
+    let src = GeneratedSource::zipf(n, 5_000, 1.3, 29);
+    let mut exact = Exact::new();
+    exact.offer_all(&src.slice(0, n));
+
+    let mut epsilons = Vec::new();
+    for (transport, routing) in [
+        (Transport::Mpsc, Routing::RoundRobin),
+        (Transport::Ring, Routing::RoundRobin),
+        (Transport::Ring, Routing::Keyed),
+    ] {
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 4,
+            k: 512,
+            k_majority: 512,
+            routing,
+            transport,
+            epoch_items: 20_000,
+            ..Default::default()
+        });
+        let mut pos = 0u64;
+        while pos < n {
+            let take = ((n - pos) as usize).min(4096);
+            let mut buf = c.take_buffer();
+            buf.resize(take, 0);
+            src.fill(pos, &mut buf);
+            c.push(buf);
+            pos += take as u64;
+        }
+        let out = c.finish();
+        assert_eq!(out.stats.items, n, "{transport}/{routing}");
+        assert_eq!(out.summary.n(), n, "{transport}/{routing}");
+        let acc = AccuracyReport::evaluate(&out.frequent, &exact, 512);
+        assert_eq!(acc.recall, 1.0, "{transport}/{routing}");
+
+        let snap = q.snapshot();
+        assert_eq!(snap.is_disjoint(), routing == Routing::Keyed);
+        epsilons.push(snap.epsilon());
+        if routing == Routing::Keyed {
+            // Every monitored item sits on its home shard, disjointly.
+            let mut seen = std::collections::HashSet::new();
+            for p in q.registry().latest() {
+                for ctr in p.summary.counters() {
+                    assert!(seen.insert(ctr.item), "item on two shards");
+                    assert_eq!(shard_of(ctr.item, 4), p.shard);
+                }
+            }
+            // And the merged estimates honor the max-per-shard bound.
+            for ctr in snap.summary().counters() {
+                let f = exact.count(ctr.item);
+                assert!(ctr.count >= f);
+                assert!(ctr.count - f <= snap.epsilon(), "bound broken");
+            }
+        }
+    }
+    // Keyed ε is never looser than the summed (chunk-routed) ε.
+    let (rr_eps, keyed_eps) = (epsilons[1], epsilons[2]);
+    assert!(keyed_eps <= rr_eps, "keyed {keyed_eps} vs summed {rr_eps}");
+}
+
+/// Windowed queries under keyed routing: the delta rings inherit the
+/// disjoint merge and the max-per-shard windowed bound.
+#[test]
+fn keyed_windows_report_disjoint_bound() {
+    let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+        shards: 3,
+        k: 64,
+        k_majority: 64,
+        routing: Routing::Keyed,
+        epoch_items: 2_000,
+        delta_ring: 64,
+        window_epochs: 8,
+        ..Default::default()
+    });
+    let w = c.windows().expect("delta ring on");
+    let src = GeneratedSource::zipf(30_000, 1_000, 1.2, 11);
+    let mut pos = 0u64;
+    while pos < 30_000 {
+        let take = ((30_000 - pos) as usize).min(1_000);
+        c.push(src.slice(pos, pos + take as u64));
+        pos += take as u64;
+    }
+    let out = c.finish();
+    assert_eq!(out.stats.items, 30_000);
+    let snap = w.window(64);
+    assert!(snap.is_disjoint());
+    assert_eq!(snap.n(), 30_000, "full-ring window covers the stream");
+    // Deltas of different shards never share an item.
+    let mut per_shard_mass = std::collections::HashMap::new();
+    for d in snap.deltas() {
+        *per_shard_mass.entry(d.shard).or_insert(0u64) += d.n;
+    }
+    let eps_max = per_shard_mass.values().map(|&m| m / 64).max().unwrap();
+    assert_eq!(snap.epsilon(), eps_max);
+    assert!(snap.epsilon() <= snap.n() / 64, "never looser than W/k");
+    // Windowed answers still cover the whole stream's heavy hitters.
+    let mut exact = Exact::new();
+    exact.offer_all(&src.slice(0, 30_000));
+    let top = snap.top_k(5);
+    assert!(!top.is_empty());
+    for c in &top {
+        assert!(c.count >= exact.count(c.item), "window under-estimate");
+    }
+}
+
+/// Rejected keyed try_push remainders are re-pushable: re-offering the
+/// remainder eventually lands every item, with exact accounting.
+#[test]
+fn keyed_try_push_remainder_retry_loses_nothing() {
+    let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        k: 64,
+        k_majority: 8,
+        queue_depth: 1,
+        routing: Routing::Keyed,
+        epoch_items: 0,
+        ..Default::default()
+    });
+    let mut rng = SplitMix64::new(7);
+    let total = 200_000u64;
+    let mut offered = 0u64;
+    while offered < total {
+        let take = (total - offered).min(512);
+        let mut chunk: Vec<u64> = (0..take).map(|_| rng.next_below(1_000)).collect();
+        offered += take;
+        // Retry the remainder until it fully lands (blocking-push
+        // semantics built from try_push pieces).
+        loop {
+            match c.try_push(chunk) {
+                Ok(()) => break,
+                Err(e) => {
+                    chunk = e.into_chunk();
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+    let out = c.finish();
+    assert_eq!(out.stats.items, total);
+    assert_eq!(out.summary.n(), total);
+    assert!(out.stats.rejected_chunks > 0, "depth-1 rings must reject");
+}
+
+/// Buffer recycling keeps working across a whole session: with the
+/// producer using take_buffer, a long ring session reuses buffers.
+#[test]
+fn ring_session_recycles_buffers_steadily() {
+    let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+        shards: 2,
+        k: 32,
+        k_majority: 8,
+        epoch_items: 0,
+        ..Default::default()
+    });
+    assert_eq!(c.config().transport, Transport::Ring);
+    for round in 0..2_000u64 {
+        let mut buf = c.take_buffer();
+        buf.resize(256, round);
+        c.push(buf);
+    }
+    let recycled = c.stats().buffers_recycled;
+    let out = c.finish();
+    assert_eq!(out.stats.items, 2_000 * 256);
+    assert!(
+        recycled > 100,
+        "steady-state reuse expected, got {recycled} recycles"
+    );
+}

@@ -517,6 +517,120 @@ fn prop_weighted_bucket_list_invariants() {
     }
 }
 
+/// Property 13 (keyed routing): hash-partitioning a stream to home
+/// shards ([`pss::util::shard_of`]) yields **key-disjoint** shard
+/// summaries — no item monitored on two shards, every counter on its
+/// home shard — whose disjoint merge ([`pss::summary::merge_disjoint`])
+/// satisfies the *tighter* max-per-shard bound
+/// `f ≤ f̂ ≤ f + maxᵢ ⌊nᵢ/k⌋` (never looser than the chunk-routed
+/// additive `⌊n/k⌋`) with full recall above each item's home-shard
+/// threshold — for any stream, shard count, `k`, chunking, and either
+/// write path (per-item or batched).
+#[test]
+fn prop_keyed_routing_bounds() {
+    use pss::summary::{merge_disjoint, offer_batched, ChunkAggregator};
+    use pss::util::shard_of;
+
+    for seed in 1300..1300 + TRIALS / 2 {
+        let mut rng = SplitMix64::new(seed);
+        let items = random_stream(&mut rng);
+        let shards = 1 + rng.next_below(6) as usize;
+        let k = 4 + rng.next_below(128) as usize;
+        let chunk = 1 + rng.next_below(700) as usize;
+        let batched = rng.next_f64() < 0.5;
+
+        // Deterministic emulation of the keyed write path: scatter each
+        // chunk by home shard, feed each shard's sub-chunk through the
+        // same ingest path the coordinator workers use.
+        let mut workers: Vec<StreamSummary> =
+            (0..shards).map(|_| StreamSummary::new(k)).collect();
+        let mut agg = ChunkAggregator::new();
+        let mut per_shard_n = vec![0u64; shards];
+        let mut scatter: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        for block in items.chunks(chunk) {
+            for &it in block {
+                scatter[shard_of(it, shards)].push(it);
+            }
+            for (s, sub) in scatter.iter_mut().enumerate() {
+                if sub.is_empty() {
+                    continue;
+                }
+                per_shard_n[s] += sub.len() as u64;
+                if batched {
+                    offer_batched(&mut workers[s], &mut agg, sub);
+                } else {
+                    workers[s].offer_all(sub);
+                }
+                sub.clear();
+            }
+        }
+        let snapshots: Vec<Summary> = workers.iter().map(|w| w.freeze()).collect();
+
+        // Exact key-disjointness: every counter on its home shard, no
+        // item on two shards.
+        let mut seen = HashSet::new();
+        for (s, snap) in snapshots.iter().enumerate() {
+            assert_eq!(snap.n(), per_shard_n[s], "seed {seed}: shard coverage");
+            for c in snap.counters() {
+                assert!(
+                    seen.insert(c.item),
+                    "seed {seed}: item {} on two shards",
+                    c.item
+                );
+                assert_eq!(shard_of(c.item, shards), s, "seed {seed}: off home shard");
+            }
+        }
+
+        let refs: Vec<&Summary> = snapshots.iter().collect();
+        let merged = merge_disjoint(&refs);
+        let n = items.len() as u64;
+        assert_eq!(merged.n(), n, "seed {seed}: merged coverage");
+        let mass: u64 = merged.counters().iter().map(|c| c.count).sum();
+        assert_eq!(mass, n, "seed {seed}: mass conservation through the merge");
+
+        // The tighter max-per-shard bound: never looser than the
+        // additive chunk-routing bound, and actually honored.
+        let eps_max = snapshots.iter().map(|s| s.epsilon()).max().unwrap();
+        assert!(
+            eps_max <= n / k as u64,
+            "seed {seed}: max-per-shard {eps_max} looser than summed {}",
+            n / k as u64
+        );
+        let t = truth(&items);
+        for c in merged.counters() {
+            let f = t.get(&c.item).copied().unwrap_or(0);
+            assert!(c.count >= f, "seed {seed}: under-estimate of {}", c.item);
+            assert!(
+                c.count - f <= eps_max,
+                "seed {seed}: max-per-shard bound broken on {} (f̂={} f={f} ε={eps_max})",
+                c.item,
+                c.count
+            );
+            assert!(c.count - c.err <= f, "seed {seed}: err bound of {}", c.item);
+            // The per-counter bound is even tighter: the home shard's ε.
+            let home_eps = snapshots[shard_of(c.item, shards)].epsilon();
+            assert!(
+                c.count - f <= home_eps,
+                "seed {seed}: home-shard bound broken on {}",
+                c.item
+            );
+        }
+        // Recall at the home-shard threshold (stronger than global):
+        // every item with f > n_home/k holds its home shard's counter,
+        // and the disjoint merge never prunes.
+        let monitored: HashSet<u64> = merged.counters().iter().map(|c| c.item).collect();
+        for (item, f) in &t {
+            let home = shard_of(*item, shards);
+            if *f > per_shard_n[home] / k as u64 {
+                assert!(
+                    monitored.contains(item),
+                    "seed {seed}: lost item {item} (f={f} > home threshold)"
+                );
+            }
+        }
+    }
+}
+
 /// Property 8 (distsim sanity): simulated time is monotone — more cores
 /// never slower at fixed work; more counters never faster reduction.
 #[test]
