@@ -65,6 +65,9 @@ fn main() -> anyhow::Result<()> {
         k_majority: k as u64,
         queue_depth: 8,
         routing: Routing::RoundRobin,
+        // The cache-conscious SoA summary core (same guarantees as the
+        // default bucket list; see bench_summary_core for the numbers).
+        structure: pss::summary::SummaryKind::Compact,
         // Batch session (queried only at finish): no epoch publication.
         epoch_items: 0,
         batch_ingest: true,

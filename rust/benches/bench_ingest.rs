@@ -13,7 +13,9 @@
 use pss::coordinator::{run_source, CoordinatorConfig, Routing};
 use pss::gen::{GeneratedSource, ItemSource};
 use pss::parallel::batch_chunk_len_default;
-use pss::summary::{offer_batched, ChunkAggregator, FrequencySummary, SpaceSaving, StreamSummary};
+use pss::summary::{
+    offer_batched, ChunkAggregator, CompactSummary, FrequencySummary, SpaceSaving, StreamSummary,
+};
 use pss::util::benchkit::{black_box, run};
 
 const N: u64 = 1_000_000;
@@ -46,6 +48,22 @@ fn bench_summary_paths(name: &str, items: &[u64], chunk: usize) {
     });
     run(&format!("{name}/heap/batched"), Some(items.len() as f64), || {
         let mut ss = SpaceSaving::new(K);
+        let mut agg = ChunkAggregator::with_capacity(chunk);
+        for c in items.chunks(chunk) {
+            offer_batched(&mut ss, &mut agg, c);
+        }
+        black_box(ss.processed());
+    });
+    // Compact SoA structure (full structure matrix in bench_summary_core).
+    run(&format!("{name}/compact/per-item"), Some(items.len() as f64), || {
+        let mut ss = CompactSummary::new(K);
+        for c in items.chunks(chunk) {
+            ss.offer_all(c);
+        }
+        black_box(ss.processed());
+    });
+    run(&format!("{name}/compact/batched"), Some(items.len() as f64), || {
+        let mut ss = CompactSummary::new(K);
         let mut agg = ChunkAggregator::with_capacity(chunk);
         for c in items.chunks(chunk) {
             offer_batched(&mut ss, &mut agg, c);

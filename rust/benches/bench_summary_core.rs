@@ -1,0 +1,102 @@
+//! Summary-core throughput: the three Space Saving structures (`heap`
+//! slot-indexed min-heap, `bucket` Metwally list, `compact` SoA
+//! block-min) head to head on the per-item and batched write paths.
+//!
+//! What to look for:
+//!
+//! * zipf-1.1 (the paper's default) — the acceptance workload; compact
+//!   should lead on both paths (two cachelines per monitored hit, no
+//!   sift/list traffic).
+//! * uniform over a large universe — the eviction-heavy floor; this is
+//!   where block-min amortization vs `O(log k)` sifts vs bucket-list
+//!   splicing separates the structures.
+//! * the k-sweep — heap degrades with `log k`, bucket with pointer
+//!   locality, compact with the `k/64` block-min sweep only.
+//! * `rotation` — round-robin over exactly k+1 items: every update is
+//!   an eviction, the worst case for min maintenance.
+//!
+//! The machine-readable record for the repo's bench trajectory comes
+//! from `pss bench --suite summary --json` (BENCH_summary.json).
+
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::parallel::batch_chunk_len_default;
+use pss::summary::{offer_batched, ChunkAggregator, FrequencySummary, SummaryKind};
+use pss::util::benchkit::{black_box, run};
+
+const N: u64 = 1_000_000;
+const K: usize = 8_192;
+
+const STRUCTURES: [SummaryKind; 3] =
+    [SummaryKind::Heap, SummaryKind::BucketList, SummaryKind::Compact];
+
+fn bench_structures(name: &str, items: &[u64], chunk: usize, k: usize) {
+    for structure in STRUCTURES {
+        run(&format!("{name}/{structure}/per-item"), Some(items.len() as f64), || {
+            let mut s = structure.build(k);
+            for c in items.chunks(chunk) {
+                s.offer_all(c);
+            }
+            black_box(s.processed());
+        });
+        run(&format!("{name}/{structure}/batched"), Some(items.len() as f64), || {
+            let mut s = structure.build(k);
+            let mut agg = ChunkAggregator::with_capacity(chunk);
+            for c in items.chunks(chunk) {
+                offer_batched(&mut s, &mut agg, c);
+            }
+            black_box(s.processed());
+        });
+    }
+}
+
+fn main() {
+    let chunk = batch_chunk_len_default();
+    println!("# bench_summary_core — heap vs bucket vs compact (chunk={chunk}, k={K})");
+
+    // Workload sweep at the acceptance k.
+    let workloads: Vec<(&str, GeneratedSource)> = vec![
+        ("zipf-1.1", GeneratedSource::zipf(N, 1 << 20, 1.1, 7)),
+        ("zipf-1.8", GeneratedSource::zipf(N, 1 << 20, 1.8, 7)),
+        ("uniform", GeneratedSource::uniform(N, 1 << 20, 7)),
+    ];
+    for (name, src) in &workloads {
+        let items = src.slice(0, N);
+        bench_structures(name, &items, chunk, K);
+    }
+
+    // k-sweep 256..64k on batched zipf-1.1 (the acceptance axis).
+    let items = workloads[0].1.slice(0, N);
+    for k in [256usize, 1024, 4096, 16_384, 65_536] {
+        for structure in STRUCTURES {
+            run(&format!("ksweep/k={k}/{structure}/batched"), Some(N as f64), || {
+                let mut s = structure.build(k);
+                let mut agg = ChunkAggregator::with_capacity(chunk);
+                for c in items.chunks(chunk) {
+                    offer_batched(&mut s, &mut agg, c);
+                }
+                black_box(s.processed());
+            });
+        }
+    }
+
+    // Adversarial rotation: k+1 items round-robin — pure eviction churn
+    // (per-item path; batching would collapse it to k+1 runs).
+    let rot: Vec<u64> = (0..N).map(|i| i % (K as u64 + 1)).collect();
+    for structure in STRUCTURES {
+        run(&format!("rotation/{structure}/per-item"), Some(N as f64), || {
+            let mut s = structure.build(K);
+            s.offer_all(&rot);
+            black_box(s.processed());
+        });
+    }
+
+    // Scratch reset cost: tiny chunks through a scratch provisioned for
+    // 64k distinct entries. With the generation-stamped FastMap clear
+    // this is O(chunk), not O(capacity) — the ChunkAggregator reset no
+    // longer scales with map size.
+    let small: Vec<u64> = (0..64u64).collect();
+    let mut wide = ChunkAggregator::with_capacity(1 << 16);
+    run("scratch-reset/64-of-64k", Some(small.len() as f64), || {
+        black_box(wide.aggregate(&small).len());
+    });
+}

@@ -4,6 +4,7 @@
 use std::path::Path;
 
 use crate::coordinator::{Routing, Transport};
+use crate::summary::SummaryKind;
 use crate::util::Json;
 use crate::Result;
 
@@ -38,6 +39,11 @@ pub struct RunConfig {
     /// Producer→shard transport: `ring` (lock-free SPSC, default) or
     /// `mpsc` (the sync_channel benchmark baseline).
     pub transport: Transport,
+    /// Per-shard summary structure: `heap` (`O(log k)` min-heap),
+    /// `bucket` (Metwally bucket list, default), or `compact`
+    /// (SoA block-min core — fastest hot loop). Identical guarantees
+    /// in every case.
+    pub structure: SummaryKind,
     /// Route chunks through the batched ingest fast path (per-chunk
     /// pre-aggregation + weighted updates). Same error guarantees as
     /// per-item ingestion; off reproduces exact per-item sequences.
@@ -69,6 +75,7 @@ impl Default for RunConfig {
             queue_depth: 8,
             routing: Routing::RoundRobin,
             transport: Transport::Ring,
+            structure: SummaryKind::BucketList,
             batch_ingest: true,
             delta_ring: 0,
             window_epochs: 8,
@@ -101,6 +108,9 @@ impl RunConfig {
         if let Some(v) = j.get("transport").and_then(|v| v.as_str()) {
             c.transport = v.parse().map_err(anyhow::Error::msg)?;
         }
+        if let Some(v) = j.get("structure").and_then(|v| v.as_str()) {
+            c.structure = v.parse().map_err(anyhow::Error::msg)?;
+        }
         if let Some(v) = j.get("batch_ingest").and_then(|v| v.as_bool()) { c.batch_ingest = v; }
         if let Some(v) = get_u("delta_ring") { c.delta_ring = v as usize; }
         if let Some(v) = get_u("window_epochs") { c.window_epochs = v as usize; }
@@ -128,11 +138,11 @@ impl RunConfig {
             "{{\"n\": {}, \"universe\": {}, \"skew\": {}, \"shift\": {}, \"seed\": {},\n \
               \"k\": {}, \"k_majority\": {}, \"threads\": {}, \"chunk_len\": {},\n \
               \"queue_depth\": {}, \"routing\": \"{}\", \"transport\": \"{}\",\n \
-              \"batch_ingest\": {}, \"delta_ring\": {},\n \
+              \"structure\": \"{}\", \"batch_ingest\": {}, \"delta_ring\": {},\n \
               \"window_epochs\": {}, \"verify\": {}}}",
             self.n, self.universe, self.skew, self.shift, self.seed, self.k,
             self.k_majority, self.threads, self.chunk_len, self.queue_depth,
-            self.routing, self.transport,
+            self.routing, self.transport, self.structure,
             self.batch_ingest, self.delta_ring, self.window_epochs, self.verify
         )
     }
@@ -242,6 +252,28 @@ mod tests {
         std::fs::write(&p, r#"{"routing": "teleport"}"#).unwrap();
         assert!(RunConfig::from_json_file(&p).is_err());
         std::fs::write(&p, r#"{"transport": "carrier-pigeon"}"#).unwrap();
+        assert!(RunConfig::from_json_file(&p).is_err());
+    }
+
+    #[test]
+    fn structure_defaults_and_roundtrips() {
+        let c = RunConfig::default();
+        assert_eq!(c.structure, SummaryKind::BucketList);
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        for (text, want) in [
+            (r#"{"structure": "heap"}"#, SummaryKind::Heap),
+            (r#"{"structure": "bucket"}"#, SummaryKind::BucketList),
+            (r#"{"structure": "compact"}"#, SummaryKind::Compact),
+        ] {
+            std::fs::write(&p, text).unwrap();
+            let c = RunConfig::from_json_file(&p).unwrap();
+            assert_eq!(c.structure, want);
+            std::fs::write(&p, c.to_json()).unwrap();
+            assert_eq!(RunConfig::from_json_file(&p).unwrap(), c);
+        }
+        // Unknown structures are rejected, not silently defaulted.
+        std::fs::write(&p, r#"{"structure": "btree"}"#).unwrap();
         assert!(RunConfig::from_json_file(&p).is_err());
     }
 

@@ -7,9 +7,9 @@
 //! Topology:
 //!
 //! ```text
-//!  push(chunk) ─▶ router ─▶ [SPSC ring]─▶ shard 0: SpaceSaving ──▶ epoch Arc ─┐
-//!                        ─▶ [SPSC ring]─▶ shard 1: SpaceSaving ──▶ epoch Arc ─┼▶ QueryEngine
-//!                        ─▶    ...     ─▶ shard s: SpaceSaving ──▶ epoch Arc ─┘  (live reads)
+//!  push(chunk) ─▶ router ─▶ [SPSC ring]─▶ shard 0: summary core ──▶ epoch Arc ─┐
+//!                        ─▶ [SPSC ring]─▶ shard 1: summary core ──▶ epoch Arc ─┼▶ QueryEngine
+//!                        ─▶    ...     ─▶ shard s: summary core ──▶ epoch Arc ─┘  (live reads)
 //!       ◀─────────────────[free ring]── consumed chunk buffers flow back
 //!  finish() ──────────────── join ─▶ tree_reduce(combine) ─▶ prune
 //! ```
@@ -73,7 +73,7 @@ use crate::parallel::reduction::tree_reduce;
 use crate::parallel::spsc::{self, Backoff, PopTimeoutError, TryPushError};
 use crate::query::{EpochRegistry, QueryEngine};
 use crate::summary::batch::{offer_runs, ChunkAggregator};
-use crate::summary::{merge_disjoint, Counter, FrequencySummary, StreamSummary, Summary};
+use crate::summary::{merge_disjoint, Counter, FrequencySummary, Summary, SummaryKind};
 use crate::util::shard_of;
 use crate::window::{DeltaBuilder, WindowStore, WindowedQueryEngine};
 
@@ -135,6 +135,12 @@ pub struct CoordinatorConfig {
     /// Producer→shard transport ([`Transport::Ring`] by default;
     /// [`Transport::Mpsc`] is the benchmark baseline).
     pub transport: Transport,
+    /// Per-shard summary structure ([`SummaryKind::BucketList`] by
+    /// default; [`SummaryKind::Compact`] is the cache-conscious SoA
+    /// core, [`SummaryKind::Heap`] the `O(log k)` baseline). Every
+    /// choice honors the same `f ≤ f̂ ≤ f + n/k` guarantee — only the
+    /// per-update cost differs (`bench_summary_core`).
+    pub structure: SummaryKind,
     /// Per-shard epoch snapshot cadence, in items: a shard republishes
     /// its summary after processing this many items since its last
     /// publication. 0 disables count-triggered publication (snapshots
@@ -175,6 +181,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 8,
             routing: Routing::RoundRobin,
             transport: Transport::Ring,
+            structure: SummaryKind::BucketList,
             epoch_items: 65_536,
             batch_ingest: true,
             delta_ring: 0,
@@ -434,13 +441,15 @@ impl Coordinator {
             let k = cfg.k;
             let epoch_items = cfg.epoch_items;
             let batch_ingest = cfg.batch_ingest;
+            let structure = cfg.structure;
             let loads = router.loads.clone();
             let registry = registry.clone();
             let window = store.clone();
             handles.push(std::thread::spawn(move || {
-                // Bucket-list Space Saving: O(1) amortized and ~30% faster
-                // on the eviction-heavy paths (see EXPERIMENTS.md §Perf).
-                let mut ss = StreamSummary::new(k);
+                // The configured Space Saving core (bucket list by
+                // default, `compact` for the cache-conscious SoA hot
+                // loop); one predictable enum-dispatch branch per call.
+                let mut ss = structure.build(k);
                 // Scratch for the batched fast path, reused across chunks
                 // so the steady state allocates nothing.
                 let mut scratch = batch_ingest.then(ChunkAggregator::new);
@@ -1142,6 +1151,38 @@ mod tests {
             out.stats.deltas_published,
             w.window_stats().deltas_published
         );
+    }
+
+    #[test]
+    fn summary_structures_are_selectable_and_meet_guarantees() {
+        let src = GeneratedSource::zipf(90_000, 2_500, 1.3, 11);
+        let mut exact = Exact::new();
+        exact.offer_all(&src.slice(0, 90_000));
+        for structure in [SummaryKind::Heap, SummaryKind::BucketList, SummaryKind::Compact] {
+            for batch_ingest in [false, true] {
+                let out = run_source(
+                    CoordinatorConfig {
+                        shards: 3,
+                        k: 128,
+                        k_majority: 128,
+                        structure,
+                        batch_ingest,
+                        ..Default::default()
+                    },
+                    &src,
+                    4096,
+                );
+                assert_eq!(out.stats.items, 90_000, "{structure} batch={batch_ingest}");
+                assert_eq!(out.summary.n(), 90_000, "{structure} batch={batch_ingest}");
+                let acc = AccuracyReport::evaluate(&out.frequent, &exact, 128);
+                assert_eq!(acc.recall, 1.0, "{structure} batch={batch_ingest}");
+                for c in out.summary.counters() {
+                    let f = exact.count(c.item);
+                    assert!(c.count >= f, "{structure}: under-estimate of {}", c.item);
+                    assert!(c.count - c.err <= f, "{structure}: err bound of {}", c.item);
+                }
+            }
+        }
     }
 
     #[test]

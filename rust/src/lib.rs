@@ -13,8 +13,9 @@
 //! The crate is organized bottom-up:
 //!
 //! * [`util`] — fast hashing, open-addressing map, deterministic RNG.
-//! * [`summary`] — the Space Saving stream summaries and the paper's
-//!   `combine` merge operator (Algorithm 2).
+//! * [`summary`] — the Space Saving stream summaries (heap, bucket
+//!   list, and the SoA block-min `CompactSummary`), runtime structure
+//!   selection, and the paper's `combine` merge operator (Algorithm 2).
 //! * [`baselines`] — Frequent (Misra–Gries), Lossy Counting, CountMin,
 //!   CountSketch, and an exact oracle, for the related-work comparisons.
 //! * [`gen`] — zipf / zipf-Mandelbrot workload generators and the binary
@@ -61,7 +62,9 @@ pub mod summary;
 pub mod util;
 pub mod window;
 
-pub use summary::{Counter, FrequencySummary, SpaceSaving, StreamSummary};
+pub use summary::{
+    CompactSummary, Counter, FrequencySummary, SpaceSaving, StreamSummary, SummaryKind,
+};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

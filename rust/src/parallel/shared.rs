@@ -9,40 +9,26 @@ use std::time::Instant;
 
 use crate::gen::ItemSource;
 use crate::metrics::PhaseTimes;
-use crate::summary::{Counter, FrequencySummary, SpaceSaving, StreamSummary, Summary};
+use crate::summary::{Counter, FrequencySummary, Summary};
 
 use super::partition::block_range;
 use super::reduction::tree_reduce;
 use super::thread_pool::fork_join;
 
-/// Which sequential summary structure each worker uses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SummaryKind {
-    /// Hash map + slot-indexed min-heap (`O(log k)`, default).
-    Heap,
-    /// Metwally bucket list (`O(1)` amortized).
-    BucketList,
-}
+// The structure selector lives with the structures it selects
+// (`summary::kind`); re-exported here because the shared-memory driver
+// is where it historically surfaced (`run_shared(..., SummaryKind)`).
+pub use crate::summary::SummaryKind;
 
-impl SummaryKind {
-    fn scan(self, src: &dyn ItemSource, left: u64, right: u64, k: usize) -> Summary {
-        /// Read granularity: large enough to amortize `fill`, small
-        /// enough to stay in L2.
-        const BUF: usize = 1 << 16;
-        let mut buf = vec![0u64; BUF];
-        match self {
-            SummaryKind::Heap => {
-                let mut s = SpaceSaving::new(k);
-                scan_into(&mut s, src, left, right, &mut buf);
-                s.freeze()
-            }
-            SummaryKind::BucketList => {
-                let mut s = StreamSummary::new(k);
-                scan_into(&mut s, src, left, right, &mut buf);
-                s.freeze()
-            }
-        }
-    }
+/// One worker's scan of `[left, right)` with the selected structure.
+fn scan(kind: SummaryKind, src: &dyn ItemSource, left: u64, right: u64, k: usize) -> Summary {
+    /// Read granularity: large enough to amortize `fill`, small
+    /// enough to stay in L2.
+    const BUF: usize = 1 << 16;
+    let mut buf = vec![0u64; BUF];
+    let mut s = kind.build(k);
+    scan_into(&mut s, src, left, right, &mut buf);
+    s.freeze()
 }
 
 fn scan_into<S: FrequencySummary>(
@@ -90,7 +76,7 @@ pub fn run_shared(
     let scans: Vec<(Summary, f64)> = fork_join(threads, |r| {
         let (left, right) = block_range(n, threads as u64, r as u64);
         let t = Instant::now();
-        let local = kind.scan(source, left, right, k);
+        let local = scan(kind, source, left, right, k);
         (local, t.elapsed().as_secs_f64())
     });
     let region = t0.elapsed().as_secs_f64();
@@ -147,13 +133,16 @@ mod tests {
     }
 
     #[test]
-    fn both_summary_kinds_agree() {
+    fn all_summary_kinds_agree() {
         let src = GeneratedSource::zipf(50_000, 2_000, 1.8, 17);
         let h = run_shared(&src, 100, 100, 4, SummaryKind::Heap);
-        let b = run_shared(&src, 100, 100, 4, SummaryKind::BucketList);
         let hi: std::collections::HashSet<u64> = h.frequent.iter().map(|c| c.item).collect();
-        let bi: std::collections::HashSet<u64> = b.frequent.iter().map(|c| c.item).collect();
-        assert_eq!(hi, bi);
+        for kind in [SummaryKind::BucketList, SummaryKind::Compact] {
+            let b = run_shared(&src, 100, 100, 4, kind);
+            let bi: std::collections::HashSet<u64> =
+                b.frequent.iter().map(|c| c.item).collect();
+            assert_eq!(hi, bi, "{kind}");
+        }
     }
 
     #[test]

@@ -41,9 +41,10 @@ use crate::util::FastMap;
 /// provisioned for the worst case of an all-distinct chunk. A chunk
 /// larger than the current capacity triggers a one-time rebuild at the
 /// next power of two; once chunks get small again the scratch shrinks
-/// back (never below the configured floor), keeping the per-chunk
-/// reset cost proportional to the chunks actually flowing, not the
-/// largest one ever seen.
+/// back (never below the configured floor) so the map's memory
+/// footprint tracks the chunks actually flowing, not the largest one
+/// ever seen. The reset itself is `O(1)` regardless of capacity —
+/// `FastMap::clear` is generation-stamped.
 #[derive(Debug)]
 pub struct ChunkAggregator {
     /// item -> index into `runs` (cleared per chunk).
@@ -90,11 +91,12 @@ impl ChunkAggregator {
     /// next call; weights always sum to `chunk.len()`.
     pub fn aggregate(&mut self, chunk: &[u64]) -> &[(u64, u64)] {
         self.runs.clear();
-        // Clearing refills the map's whole slot array, so the reset cost
-        // tracks `capacity`, not the chunk at hand: grow for oversized
-        // chunks, but also shrink back (with 8× hysteresis, never below
-        // the configured floor) so one huge chunk does not tax every
-        // later one with a full clear of a grossly over-provisioned map.
+        // The map reset itself is O(1) (FastMap's generation-stamped
+        // clear), so the per-chunk cost no longer scales with map
+        // capacity. The 8×-hysteresis shrink (never below the configured
+        // floor) survives purely for memory footprint and probe
+        // locality: one huge chunk must not leave every later chunk
+        // probing a grossly over-provisioned, cache-cold slot array.
         let fit = chunk.len().max(self.min_capacity).next_power_of_two();
         if chunk.len() > self.capacity {
             // Worst case is all-distinct; rebuild once at the next power
@@ -105,7 +107,7 @@ impl ChunkAggregator {
             self.capacity = fit;
             self.index = FastMap::with_capacity(self.capacity);
             self.runs.shrink_to(self.capacity);
-        } else if !self.index.is_empty() {
+        } else {
             self.index.clear();
         }
         // Software pipelining as in `offer_all`: hash a few items ahead

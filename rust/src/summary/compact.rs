@@ -1,0 +1,553 @@
+//! `CompactSummary` — cache-conscious Space Saving: Structure-of-Arrays
+//! counter storage with **block-min** eviction, `O(1)` amortized per
+//! update.
+//!
+//! # Layout
+//!
+//! Counters live in three parallel flat arrays indexed by slot id —
+//! `keys`, `counts`, `errors` — with the [`FastMap`] mapping item ids
+//! straight to slots. The hot loop therefore touches exactly two
+//! cachelines per monitored-item hit (the map probe and the slot's
+//! `counts` word); nothing else moves. Compare the alternatives:
+//!
+//! * [`SpaceSaving`](super::SpaceSaving) interleaves every touch with an
+//!   `O(log k)` heap sift across three bookkeeping vectors;
+//! * [`StreamSummary`](super::StreamSummary) walks a doubly-linked
+//!   bucket list — five link words per detach/attach even on the fast
+//!   path.
+//!
+//! # Block-min eviction
+//!
+//! Space Saving only ever needs the *minimum* counter, and only at
+//! eviction time. Slots are grouped into fixed blocks of `BLOCK` = 64
+//! (one cacheline of `u64` counts is 8 slots; 64 keeps the per-block
+//! metadata array 64× smaller than `k` while a block scan still spans
+//! just 8 lines, streamed linearly). Each block caches
+//! `(min_count, argmin)`:
+//!
+//! * **increment** — bump `counts[slot]`; if the slot was its block's
+//!   cached argmin, mark the block *dirty* (the cache becomes a lower
+//!   bound — the true block min can only have grown). No scan, no sift:
+//!   `O(1)` always.
+//! * **eviction** — linearly scan the `k/64`-entry block-min array for
+//!   the smallest cached value (branch-light: one compare per block).
+//!   If that block is dirty, repair it (rescan its ≤64 counts, restore
+//!   the exact cache) and rescan; because dirty caches are lower
+//!   bounds, the first *clean* minimum found is the true global
+//!   minimum. Evict its argmin, then repair just that one block.
+//!
+//! Amortization: a block goes dirty only when its cached argmin is
+//! incremented, and each repair retires one such event, so repairs are
+//! bounded by update count — each costing one ≤64-slot scan over a
+//! contiguous `counts` range the eviction was about to touch anyway.
+//! Together with the `k/64` block-min sweep this keeps
+//! [`offer`](FrequencySummary::offer) /
+//! [`offer_weighted`](FrequencySummary::offer_weighted) `O(1)`
+//! amortized with no sift loops and no linked-list traffic, which is
+//! what lets the per-shard update loop run at memory bandwidth (QPOPSS,
+//! arXiv:2409.01749; merge-side analysis in arXiv:1401.0702).
+
+use super::counter::Counter;
+use super::traits::FrequencySummary;
+use crate::util::FastMap;
+
+/// Slots per block: 8 cachelines of `u64` counts, and a block-min array
+/// 64× smaller than `k`.
+const BLOCK: usize = 64;
+
+/// Space Saving over Structure-of-Arrays storage with block-min
+/// eviction. See the [module docs](self) for the layout and the
+/// amortization argument.
+#[derive(Debug, Clone)]
+pub struct CompactSummary {
+    /// Monitored item per slot.
+    keys: Vec<u64>,
+    /// Estimated frequency per slot (`f̂`).
+    counts: Vec<u64>,
+    /// Over-estimation bound per slot (`err`).
+    errors: Vec<u64>,
+    /// item id -> slot id.
+    map: FastMap,
+    /// Cached minimum count per block. Exact while the block is clean;
+    /// a lower bound on the true block minimum while dirty.
+    block_min: Vec<u64>,
+    /// Slot holding the cached minimum, per block (meaningful only
+    /// while the block is clean).
+    block_argmin: Vec<u32>,
+    /// Whether the block's cache went stale since its last repair.
+    dirty: Vec<bool>,
+    /// Counter budget.
+    k: usize,
+    /// Items processed.
+    n: u64,
+}
+
+impl CompactSummary {
+    /// Create a summary with `k` counters (`k >= 1`).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "k must be at least 1");
+        let blocks = k.div_ceil(BLOCK);
+        Self {
+            keys: Vec::with_capacity(k),
+            counts: Vec::with_capacity(k),
+            errors: Vec::with_capacity(k),
+            map: FastMap::with_capacity(k),
+            block_min: Vec::with_capacity(blocks),
+            block_argmin: Vec::with_capacity(blocks),
+            dirty: Vec::with_capacity(blocks),
+            k,
+            n: 0,
+        }
+    }
+
+    /// Count of the current minimum counter (0 while under-full).
+    /// Repairs nothing: dirty blocks are rescanned on the fly.
+    pub fn min_count(&self) -> u64 {
+        if self.keys.len() < self.k {
+            return 0;
+        }
+        let mut min = u64::MAX;
+        for b in 0..self.block_min.len() {
+            let v = if self.dirty[b] { self.scan_block(b).0 } else { self.block_min[b] };
+            min = min.min(v);
+        }
+        min
+    }
+
+    /// True minimum `(count, slot)` of block `b` by scanning its counts.
+    #[inline]
+    fn scan_block(&self, b: usize) -> (u64, usize) {
+        let start = b * BLOCK;
+        let end = (start + BLOCK).min(self.counts.len());
+        let mut min = self.counts[start];
+        let mut argmin = start;
+        for s in start + 1..end {
+            // SAFETY: `s < end <= counts.len()`.
+            let c = unsafe { *self.counts.get_unchecked(s) };
+            if c < min {
+                min = c;
+                argmin = s;
+            }
+        }
+        (min, argmin)
+    }
+
+    /// Restore block `b`'s exact `(min, argmin)` cache.
+    #[inline]
+    fn repair_block(&mut self, b: usize) {
+        let (min, argmin) = self.scan_block(b);
+        self.block_min[b] = min;
+        self.block_argmin[b] = argmin as u32;
+        self.dirty[b] = false;
+    }
+
+    /// Locate the global minimum slot, repairing stale blocks on the
+    /// way. Returns `(block, slot)`; requires a full summary.
+    ///
+    /// Dirty caches are lower bounds, so whenever the smallest cached
+    /// value belongs to a dirty block the true global minimum might
+    /// hide behind it — repair (which can only raise the cache) and
+    /// rescan. The first time the smallest cache is clean, it is the
+    /// true minimum. Each repair retires a dirtying increment, so the
+    /// loop is `O(1)` amortized against the update stream.
+    #[inline]
+    fn locate_min(&mut self) -> (usize, usize) {
+        debug_assert_eq!(self.keys.len(), self.k);
+        loop {
+            // Branch-light linear sweep of the k/64-entry min array.
+            let mut best = 0usize;
+            let mut best_v = self.block_min[0];
+            for b in 1..self.block_min.len() {
+                // SAFETY: `b < block_min.len()`.
+                let v = unsafe { *self.block_min.get_unchecked(b) };
+                if v < best_v {
+                    best_v = v;
+                    best = b;
+                }
+            }
+            if !self.dirty[best] {
+                return (best, self.block_argmin[best] as usize);
+            }
+            self.repair_block(best);
+        }
+    }
+
+    /// Bump a monitored slot by `weight`, dirtying its block's cache
+    /// only when the cached argmin was the slot touched.
+    #[inline]
+    fn bump(&mut self, slot: usize, weight: u64) {
+        // SAFETY: `slot` comes from the map, which only stores ids of
+        // live slots in `[0, keys.len())`.
+        unsafe {
+            *self.counts.get_unchecked_mut(slot) += weight;
+        }
+        let b = slot / BLOCK;
+        if self.block_argmin[b] as usize == slot {
+            self.dirty[b] = true;
+        }
+    }
+
+    /// Adopt `item` into a spare slot with an exact count (`err = 0`).
+    #[inline]
+    fn adopt(&mut self, item: u64, weight: u64) {
+        let slot = self.keys.len();
+        self.keys.push(item);
+        self.counts.push(weight);
+        self.errors.push(0);
+        self.map.insert(item, slot as u32);
+        let b = slot / BLOCK;
+        if b == self.block_min.len() {
+            // First slot of a fresh block seeds its cache exactly.
+            self.block_min.push(weight);
+            self.block_argmin.push(slot as u32);
+            self.dirty.push(false);
+        } else if weight < self.block_min[b] {
+            // Clean: the cache stays exact. Dirty: it stays a valid
+            // lower bound (min(cache, weight) ≤ min(true_min, weight)).
+            self.block_min[b] = weight;
+            self.block_argmin[b] = slot as u32;
+        }
+    }
+
+    /// Evict the global minimum counter in favor of `item` (weighted
+    /// Space Saving rule), then repair the one block touched.
+    #[inline]
+    fn evict_into(&mut self, item: u64, weight: u64) {
+        let (b, slot) = self.locate_min();
+        let evicted = self.keys[slot];
+        self.map.remove(evicted);
+        self.map.insert(item, slot as u32);
+        self.keys[slot] = item;
+        self.errors[slot] = self.counts[slot];
+        self.counts[slot] += weight;
+        self.repair_block(b);
+    }
+
+    /// Prefetch the slot's `counts` cacheline (stage two of the
+    /// [`offer_all`](FrequencySummary::offer_all) software pipeline;
+    /// stage one is the map-probe prefetch).
+    #[inline]
+    fn prefetch_slot(&self, slot: usize) {
+        #[cfg(target_arch = "x86_64")]
+        unsafe {
+            use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            _mm_prefetch(self.counts.as_ptr().add(slot) as *const i8, _MM_HINT_T0);
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let _ = slot;
+        }
+    }
+
+    /// Walk the whole structure and panic on any broken invariant: the
+    /// parallel arrays in sync, the item map exact, mass conserved, and
+    /// the block-min cache sound — clean blocks cache exactly their
+    /// true `(min, argmin)`; dirty blocks cache a lower bound; and the
+    /// derived [`CompactSummary::min_count`] equals the true global
+    /// minimum. `O(k)`.
+    ///
+    /// Test/debug aid (the cross-structure property suite calls it
+    /// after every mutation burst); not on any hot path.
+    pub fn check_consistency(&self) {
+        let len = self.keys.len();
+        assert!(len <= self.k, "more slots than budget");
+        assert_eq!(self.counts.len(), len, "counts out of step");
+        assert_eq!(self.errors.len(), len, "errors out of step");
+        assert_eq!(self.map.len(), len, "item map size mismatch");
+        assert_eq!(self.block_min.len(), len.div_ceil(BLOCK), "block count");
+        assert_eq!(self.block_min.len(), self.block_argmin.len());
+        assert_eq!(self.block_min.len(), self.dirty.len());
+        let mut mass = 0u64;
+        for s in 0..len {
+            assert_eq!(self.map.get(self.keys[s]), Some(s as u32), "map out of sync");
+            assert!(self.errors[s] <= self.counts[s], "err exceeds count");
+            mass += self.counts[s];
+        }
+        assert_eq!(mass, self.n, "mass not conserved");
+        let mut true_min = u64::MAX;
+        for b in 0..self.block_min.len() {
+            let (min, _) = self.scan_block(b);
+            true_min = true_min.min(min);
+            if self.dirty[b] {
+                assert!(
+                    self.block_min[b] <= min,
+                    "dirty block {b}: cache {} above true min {min}",
+                    self.block_min[b]
+                );
+            } else {
+                assert_eq!(self.block_min[b], min, "clean block {b}: stale min");
+                let am = self.block_argmin[b] as usize;
+                assert!(am / BLOCK == b && am < len, "block {b}: argmin out of range");
+                assert_eq!(self.counts[am], min, "block {b}: argmin not minimal");
+            }
+        }
+        if len == self.k {
+            assert_eq!(self.min_count(), true_min, "min_count != true min");
+        } else {
+            assert_eq!(self.min_count(), 0, "under-full min_count");
+        }
+    }
+}
+
+impl FrequencySummary for CompactSummary {
+    fn capacity(&self) -> usize {
+        self.k
+    }
+
+    /// Process one stream item — the Space Saving update rule over the
+    /// SoA layout.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use pss::summary::{CompactSummary, FrequencySummary};
+    ///
+    /// let mut s = CompactSummary::new(2);
+    /// for &item in &[1u64, 1, 2, 3] {
+    ///     s.offer(item);
+    /// }
+    /// assert_eq!(s.processed(), 4);
+    /// assert_eq!(s.estimate(1), Some(2));
+    /// // 3 evicted the minimum counter (2, count 1): f̂ = 2, err = 1 —
+    /// // so f ≤ f̂ ≤ f + n/k holds for every monitored item.
+    /// assert_eq!(s.estimate(2), None);
+    /// assert_eq!(s.estimate(3), Some(2));
+    /// ```
+    #[inline]
+    fn offer(&mut self, item: u64) {
+        self.offer_weighted(item, 1);
+    }
+
+    #[inline]
+    fn offer_weighted(&mut self, item: u64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        self.n += weight;
+        if let Some(slot) = self.map.get(item) {
+            // Monitored: one counter bump, one block-cache check.
+            self.bump(slot as usize, weight);
+        } else if self.keys.len() < self.k {
+            // Spare counter available: adopt with f̂ = weight exactly.
+            self.adopt(item, weight);
+        } else {
+            // One eviction amortized over the run: the new item inherits
+            // min+weight with err = min.
+            self.evict_into(item, weight);
+        }
+    }
+
+    fn offer_all(&mut self, items: &[u64]) {
+        // Two-stage software pipeline. Far stage: hash the item 8 ahead
+        // and pull its map probe line into L1 (as the other structures
+        // do). Near stage: by 4 items ahead that line is resident, so a
+        // cheap probe resolves the slot and prefetches its `counts`
+        // word — the second cacheline the update will touch. The probe
+        // result is *not* reused (an eviction in between could remap
+        // the item); only the prefetch side effect is kept.
+        const MAP_AHEAD: usize = 8;
+        const SLOT_AHEAD: usize = 4;
+        for i in 0..items.len() {
+            if let Some(&far) = items.get(i + MAP_AHEAD) {
+                self.map.prefetch(far);
+            }
+            if let Some(&near) = items.get(i + SLOT_AHEAD) {
+                if let Some(slot) = self.map.get(near) {
+                    self.prefetch_slot(slot as usize);
+                }
+            }
+            self.offer(items[i]);
+        }
+    }
+
+    fn processed(&self) -> u64 {
+        self.n
+    }
+
+    fn counters(&self) -> Vec<Counter> {
+        (0..self.keys.len())
+            .map(|s| Counter { item: self.keys[s], count: self.counts[s], err: self.errors[s] })
+            .collect()
+    }
+
+    fn estimate(&self, item: u64) -> Option<u64> {
+        self.map.get(item).map(|s| self.counts[s as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::summary::space_saving::SpaceSaving;
+    use crate::summary::traits::testutil::check_invariants;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn classic_example() {
+        let (a, b, c) = (1u64, 2, 3);
+        let mut ss = CompactSummary::new(2);
+        ss.offer_all(&[a, a, b, c]);
+        assert_eq!(ss.estimate(a), Some(2));
+        assert_eq!(ss.estimate(b), None);
+        assert_eq!(ss.estimate(c), Some(2));
+        let cc = ss.counters().into_iter().find(|x| x.item == c).unwrap();
+        assert_eq!(cc.err, 1);
+        ss.check_consistency();
+    }
+
+    #[test]
+    fn exact_when_distinct_items_fit() {
+        let mut ss = CompactSummary::new(100);
+        let items: Vec<u64> = (0..50).flat_map(|i| vec![i; (i + 1) as usize]).collect();
+        ss.offer_all(&items);
+        for i in 0..50u64 {
+            assert_eq!(ss.estimate(i), Some(i + 1));
+        }
+        assert!(ss.counters().iter().all(|c| c.err == 0));
+        ss.check_consistency();
+    }
+
+    #[test]
+    fn invariants_uniform() {
+        let mut rng = SplitMix64::new(1);
+        let items: Vec<u64> = (0..20_000).map(|_| rng.next_below(500)).collect();
+        check_invariants(&mut CompactSummary::new(64), &items);
+    }
+
+    #[test]
+    fn invariants_heavy_skew() {
+        let mut rng = SplitMix64::new(2);
+        let items: Vec<u64> = (0..30_000)
+            .map(|_| {
+                if rng.next_f64() < 0.8 {
+                    rng.next_below(5)
+                } else {
+                    100 + rng.next_below(100_000)
+                }
+            })
+            .collect();
+        check_invariants(&mut CompactSummary::new(128), &items);
+    }
+
+    #[test]
+    fn invariants_adversarial_rotation() {
+        // Round-robin over exactly k+1 items: every offer beyond warmup
+        // is an eviction — the worst case for the block-min cache.
+        let k = 33;
+        let items: Vec<u64> = (0..50_000u64).map(|i| i % (k as u64 + 1)).collect();
+        check_invariants(&mut CompactSummary::new(k), &items);
+    }
+
+    #[test]
+    fn invariants_above_one_block() {
+        // k spanning several blocks, stream overflowing the budget, so
+        // evictions exercise the cross-block min sweep.
+        let mut rng = SplitMix64::new(3);
+        let items: Vec<u64> = (0..60_000).map(|_| rng.next_below(2_000)).collect();
+        check_invariants(&mut CompactSummary::new(300), &items);
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let mut ss = CompactSummary::new(1);
+        ss.offer_all(&[7, 7, 7, 8, 7]);
+        let c = ss.counters()[0];
+        assert_eq!(c.item, 7);
+        assert_eq!(c.count, 5);
+        assert!(c.count - c.err <= 4);
+        ss.check_consistency();
+    }
+
+    #[test]
+    fn block_cache_consistent_under_random_churn() {
+        // Dirty/repair bookkeeping checked after every single update,
+        // across block-boundary sizes of k.
+        for k in [1usize, 2, 63, 64, 65, 130] {
+            let mut ss = CompactSummary::new(k);
+            let mut rng = SplitMix64::new(k as u64);
+            for _ in 0..5_000 {
+                let item = rng.next_below(3 * k as u64 + 2);
+                let w = if rng.next_f64() < 0.5 { 1 } else { 1 + rng.next_below(9) };
+                ss.offer_weighted(item, w);
+                ss.check_consistency();
+            }
+        }
+    }
+
+    #[test]
+    fn min_count_tracks_true_minimum() {
+        let mut ss = CompactSummary::new(3);
+        assert_eq!(ss.min_count(), 0);
+        ss.offer_all(&[1, 1, 2, 2, 2, 3]);
+        assert_eq!(ss.min_count(), 1);
+        ss.offer_all(&[3, 3]);
+        assert_eq!(ss.min_count(), 2);
+        ss.check_consistency();
+    }
+
+    #[test]
+    fn weighted_updates_match_replayed_offers_when_monitored() {
+        let mut a = CompactSummary::new(8);
+        let mut b = CompactSummary::new(8);
+        for (item, w) in [(1u64, 5u64), (2, 3), (1, 4), (3, 1)] {
+            a.offer_weighted(item, w);
+            for _ in 0..w {
+                b.offer(item);
+            }
+        }
+        assert_eq!(a.processed(), b.processed());
+        for item in [1u64, 2, 3] {
+            assert_eq!(a.estimate(item), b.estimate(item), "item {item}");
+        }
+        a.offer_weighted(9, 0); // no-op
+        assert_eq!(a.processed(), 13);
+        assert_eq!(a.estimate(9), None);
+        a.check_consistency();
+    }
+
+    #[test]
+    fn weighted_eviction_inherits_min_and_conserves_mass() {
+        let mut ss = CompactSummary::new(2);
+        ss.offer_weighted(1, 4);
+        ss.offer_weighted(2, 3);
+        ss.offer_weighted(3, 5); // evicts 2 (min 3)
+        assert_eq!(ss.estimate(2), None);
+        let c = ss.counters().into_iter().find(|c| c.item == 3).unwrap();
+        assert_eq!(c.count, 8); // min 3 + weight 5
+        assert_eq!(c.err, 3); // inherited min
+        let total: u64 = ss.counters().iter().map(|c| c.count).sum();
+        assert_eq!(total, ss.processed());
+        ss.check_consistency();
+    }
+
+    #[test]
+    fn agrees_with_heap_variant_on_count_multisets() {
+        // Same update rule as the heap variant: eviction may pick a
+        // different minimal victim, but the multiset of counter values
+        // evolves identically.
+        let mut rng = SplitMix64::new(8);
+        let items: Vec<u64> = (0..50_000).map(|_| rng.next_below(200)).collect();
+        let mut a = SpaceSaving::new(32);
+        let mut b = CompactSummary::new(32);
+        a.offer_all(&items);
+        b.offer_all(&items);
+        let mut ca: Vec<u64> = a.counters().iter().map(|c| c.count).collect();
+        let mut cb: Vec<u64> = b.counters().iter().map(|c| c.count).collect();
+        ca.sort_unstable();
+        cb.sort_unstable();
+        assert_eq!(ca, cb);
+        b.check_consistency();
+    }
+
+    #[test]
+    fn freeze_orders_ascending() {
+        let mut ss = CompactSummary::new(16);
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..10_000 {
+            ss.offer(rng.next_below(40));
+        }
+        let s = ss.freeze();
+        assert_eq!(s.n(), 10_000);
+        assert!(s.counters().windows(2).all(|w| w[0].count <= w[1].count));
+    }
+}

@@ -1,0 +1,171 @@
+//! Runtime selection of the per-worker summary structure.
+//!
+//! Every live implementation shares [`FrequencySummary`], but the
+//! coordinator's shard workers, the shared-memory driver and the CLI
+//! all need to pick one *at runtime* (`--structure heap|bucket|compact`,
+//! the `structure` JSON field). [`SummaryKind`] names the choice and
+//! [`SummaryKind::build`] instantiates it as an [`AnySummary`] — a
+//! three-variant enum dispatching each trait call with one predictable
+//! branch, so the selection costs nothing measurable against the
+//! per-chunk work it guards (no boxing, no vtable on the hot loop).
+
+use super::compact::CompactSummary;
+use super::counter::Counter;
+use super::space_saving::SpaceSaving;
+use super::stream_summary::StreamSummary;
+use super::traits::FrequencySummary;
+
+/// Which sequential summary structure a worker uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SummaryKind {
+    /// [`SpaceSaving`]: hash map + slot-indexed min-heap, `O(log k)`
+    /// per update. The simplest structure; the ablation baseline.
+    Heap,
+    /// [`StreamSummary`]: Metwally's bucket list, `O(1)` amortized.
+    BucketList,
+    /// [`CompactSummary`]: Structure-of-Arrays counters with block-min
+    /// eviction, `O(1)` amortized and cache-resident — the fastest
+    /// per-shard hot loop.
+    Compact,
+}
+
+impl SummaryKind {
+    /// Instantiate the structure with `k` counters.
+    pub fn build(self, k: usize) -> AnySummary {
+        match self {
+            SummaryKind::Heap => AnySummary::Heap(SpaceSaving::new(k)),
+            SummaryKind::BucketList => AnySummary::Bucket(StreamSummary::new(k)),
+            SummaryKind::Compact => AnySummary::Compact(CompactSummary::new(k)),
+        }
+    }
+}
+
+impl std::fmt::Display for SummaryKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SummaryKind::Heap => "heap",
+            SummaryKind::BucketList => "bucket",
+            SummaryKind::Compact => "compact",
+        })
+    }
+}
+
+impl std::str::FromStr for SummaryKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "heap" => Ok(SummaryKind::Heap),
+            "bucket" | "bucketlist" | "bucket-list" => Ok(SummaryKind::BucketList),
+            "compact" | "soa" => Ok(SummaryKind::Compact),
+            other => Err(format!("unknown structure '{other}' (heap|bucket|compact)")),
+        }
+    }
+}
+
+/// A runtime-selected live summary (see [`SummaryKind::build`]).
+#[derive(Debug, Clone)]
+pub enum AnySummary {
+    /// Heap-based [`SpaceSaving`].
+    Heap(SpaceSaving),
+    /// Bucket-list [`StreamSummary`].
+    Bucket(StreamSummary),
+    /// SoA block-min [`CompactSummary`].
+    Compact(CompactSummary),
+}
+
+macro_rules! dispatch {
+    ($self:expr, $s:ident => $body:expr) => {
+        match $self {
+            AnySummary::Heap($s) => $body,
+            AnySummary::Bucket($s) => $body,
+            AnySummary::Compact($s) => $body,
+        }
+    };
+}
+
+impl AnySummary {
+    /// Count of the current minimum counter (0 while under-full).
+    pub fn min_count(&self) -> u64 {
+        dispatch!(self, s => s.min_count())
+    }
+}
+
+impl FrequencySummary for AnySummary {
+    fn capacity(&self) -> usize {
+        dispatch!(self, s => s.capacity())
+    }
+
+    #[inline]
+    fn offer(&mut self, item: u64) {
+        dispatch!(self, s => s.offer(item))
+    }
+
+    #[inline]
+    fn offer_weighted(&mut self, item: u64, weight: u64) {
+        dispatch!(self, s => s.offer_weighted(item, weight))
+    }
+
+    fn offer_all(&mut self, items: &[u64]) {
+        // Delegate so each structure keeps its own prefetch pipeline.
+        dispatch!(self, s => s.offer_all(items))
+    }
+
+    fn processed(&self) -> u64 {
+        dispatch!(self, s => s.processed())
+    }
+
+    fn counters(&self) -> Vec<Counter> {
+        dispatch!(self, s => s.counters())
+    }
+
+    fn estimate(&self, item: u64) -> Option<u64> {
+        dispatch!(self, s => s.estimate(item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for kind in [SummaryKind::Heap, SummaryKind::BucketList, SummaryKind::Compact] {
+            let s = kind.to_string();
+            assert_eq!(s.parse::<SummaryKind>().unwrap(), kind);
+        }
+        assert_eq!("bucketlist".parse::<SummaryKind>().unwrap(), SummaryKind::BucketList);
+        assert_eq!("soa".parse::<SummaryKind>().unwrap(), SummaryKind::Compact);
+        assert!("btree".parse::<SummaryKind>().is_err());
+    }
+
+    #[test]
+    fn built_structures_agree_on_identical_streams() {
+        let mut rng = SplitMix64::new(4);
+        let items: Vec<u64> = (0..30_000).map(|_| rng.next_below(150)).collect();
+        let mut built: Vec<AnySummary> =
+            [SummaryKind::Heap, SummaryKind::BucketList, SummaryKind::Compact]
+                .into_iter()
+                .map(|kind| kind.build(24))
+                .collect();
+        for s in &mut built {
+            assert_eq!(s.capacity(), 24);
+            s.offer_all(&items);
+            assert_eq!(s.processed(), items.len() as u64);
+        }
+        // Same update rule everywhere: identical count multisets and
+        // identical true minimum.
+        let mut counts: Vec<Vec<u64>> = built
+            .iter()
+            .map(|s| s.counters().iter().map(|c| c.count).collect())
+            .collect();
+        for c in &mut counts {
+            c.sort_unstable();
+        }
+        assert_eq!(counts[0], counts[1]);
+        assert_eq!(counts[0], counts[2]);
+        assert_eq!(built[0].min_count(), built[2].min_count());
+        assert_eq!(built[1].min_count(), built[2].min_count());
+    }
+}

@@ -1,10 +1,16 @@
-//! Stream summaries: the sequential Space Saving algorithm (two
+//! Stream summaries: the sequential Space Saving algorithm (three
 //! implementations) and the paper's `combine` merge operator.
 //!
-//! * [`SpaceSaving`] — hash map + slot-indexed binary min-heap, `O(log k)`
-//!   per item. Simple, cache-friendly, the default.
+//! * [`SpaceSaving`] — hash map + slot-indexed binary min-heap,
+//!   `O(log k)` per item. The simplest structure; ablation baseline.
 //! * [`StreamSummary`] — Metwally's bucket-list structure, `O(1)`
-//!   amortized per item. Ablation target (`bench_space_saving`).
+//!   amortized per item, pointer-heavy.
+//! * [`CompactSummary`] — Structure-of-Arrays counters with block-min
+//!   eviction: `O(1)` amortized *and* cache-resident, the fastest
+//!   per-shard hot loop (`bench_summary_core`, `pss bench --suite
+//!   summary`).
+//! * [`SummaryKind`] / [`AnySummary`] — runtime structure selection
+//!   (CLI `--structure heap|bucket|compact`) with enum dispatch.
 //! * [`Summary`] — the frozen, frequency-sorted summary value that ranks
 //!   and threads exchange; [`Summary::combine`] is paper Algorithm 2,
 //!   [`merge_disjoint`] the cheaper concatenation merge for
@@ -14,19 +20,23 @@
 //!   applies them as weighted updates, one summary touch per distinct
 //!   item.
 //!
-//! Both live implementations share the [`FrequencySummary`] trait so the
+//! All live implementations share the [`FrequencySummary`] trait so the
 //! parallel layers are generic over the structure used per worker.
 
 pub mod batch;
 pub mod combine;
+pub mod compact;
 pub mod counter;
+pub mod kind;
 pub mod space_saving;
 pub mod stream_summary;
 pub mod traits;
 
 pub use batch::{offer_batched, offer_runs, ChunkAggregator};
 pub use combine::{merge_disjoint, Summary};
+pub use compact::CompactSummary;
 pub use counter::Counter;
+pub use kind::{AnySummary, SummaryKind};
 pub use space_saving::SpaceSaving;
 pub use stream_summary::StreamSummary;
 pub use traits::FrequencySummary;

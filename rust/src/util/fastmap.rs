@@ -12,6 +12,22 @@
 //! ids are encoded into `[0, 2^63)` by the generators). Values are slot
 //! indices into the caller's counter storage (`u32`, so a summary may
 //! hold up to 4 G counters — far beyond any realistic `k`).
+//!
+//! **O(1) reset.** Each slot's value is packed with a 32-bit
+//! *generation stamp* into one `u64` word (`stamp << 32 | value`): a
+//! slot is live iff its stamp equals the map's current generation, so
+//! [`FastMap::clear`] just bumps the generation — no `O(capacity)`
+//! refill. Packing keeps the probe loop at the original two arrays
+//! (`keys` + the stamped-value word, read only when a non-EMPTY slot
+//! must be classified), so the summary hot paths that never clear pay
+//! nothing for it. The per-chunk scratch resets in
+//! [`ChunkAggregator`](crate::summary::ChunkAggregator) and the
+//! per-epoch resets in [`DeltaBuilder`](crate::window::DeltaBuilder)
+//! therefore cost the same whether the map is sized for 16 entries or
+//! 16 million. Stamp 0 is the universal dead marker (generations start
+//! at 1), and on the rare `u32` generation wrap — once per 2³²−1 clears
+//! — the slot array is fully re-stamped so a recycled generation value
+//! can never resurrect stale entries.
 
 const EMPTY: u64 = u64::MAX;
 
@@ -25,11 +41,16 @@ fn slot_hash(key: u64, shift: u32) -> usize {
     (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> shift) as usize
 }
 
-/// Open-addressing `u64 -> u32` map with backward-shift deletion.
+/// Open-addressing `u64 -> u32` map with backward-shift deletion and a
+/// generation-stamped `O(1)` [`FastMap::clear`].
 #[derive(Debug, Clone)]
 pub struct FastMap {
     keys: Vec<u64>,
-    vals: Vec<u32>,
+    /// Per-slot `generation_stamp << 32 | value`. A slot is live iff
+    /// its stamp equals [`FastMap::gen`]; stamp 0 is always dead.
+    vals: Vec<u64>,
+    /// Current generation, in `[1, u32::MAX]`.
+    gen: u32,
     mask: usize,
     /// `64 - log2(slots)`: high-bits shift for [`slot_hash`].
     shift: u32,
@@ -43,6 +64,7 @@ impl FastMap {
         Self {
             keys: vec![EMPTY; slots],
             vals: vec![0; slots],
+            gen: 1,
             mask: slots - 1,
             shift: 64 - slots.trailing_zeros(),
             len: 0,
@@ -66,6 +88,19 @@ impl FastMap {
         slot_hash(key, self.shift)
     }
 
+    /// Pack the current generation with `val`.
+    #[inline]
+    fn stamped(&self, val: u32) -> u64 {
+        ((self.gen as u64) << 32) | val as u64
+    }
+
+    /// Whether slot `i`'s stamped-value word marks it live.
+    #[inline]
+    fn live(&self, i: usize) -> bool {
+        // SAFETY: callers keep `i <= mask`, and `vals.len() == mask + 1`.
+        (unsafe { *self.vals.get_unchecked(i) } >> 32) as u32 == self.gen
+    }
+
     /// Look up `key`.
     #[inline]
     pub fn get(&self, key: u64) -> Option<u32> {
@@ -74,9 +109,15 @@ impl FastMap {
         loop {
             let k = unsafe { *self.keys.get_unchecked(i) };
             if k == key {
-                return Some(unsafe { *self.vals.get_unchecked(i) });
+                // Found the key; it counts only if the slot is live —
+                // a stale stamp is a dead slot and ends the chain.
+                let sv = unsafe { *self.vals.get_unchecked(i) };
+                if (sv >> 32) as u32 == self.gen {
+                    return Some(sv as u32);
+                }
+                return None;
             }
-            if k == EMPTY {
+            if k == EMPTY || !self.live(i) {
                 return None;
             }
             i = (i + 1) & self.mask;
@@ -88,17 +129,20 @@ impl FastMap {
     pub fn insert(&mut self, key: u64, val: u32) {
         debug_assert_ne!(key, EMPTY);
         debug_assert!(self.len * 2 <= self.mask + 1, "FastMap over-full");
+        let stamped = self.stamped(val);
         let mut i = self.slot_of(key);
         loop {
             let k = unsafe { *self.keys.get_unchecked(i) };
-            if k == key {
-                unsafe { *self.vals.get_unchecked_mut(i) = val };
+            if k == key && self.live(i) {
+                unsafe { *self.vals.get_unchecked_mut(i) = stamped };
                 return;
             }
-            if k == EMPTY {
+            if k == EMPTY || !self.live(i) {
+                // Dead slot (never used, deleted, or stale from an older
+                // generation): claim it.
                 unsafe {
                     *self.keys.get_unchecked_mut(i) = key;
-                    *self.vals.get_unchecked_mut(i) = val;
+                    *self.vals.get_unchecked_mut(i) = stamped;
                 }
                 self.len += 1;
                 return;
@@ -115,7 +159,7 @@ impl FastMap {
         let mut i = self.slot_of(key);
         loop {
             let k = self.keys[i];
-            if k == EMPTY {
+            if k == EMPTY || !self.live(i) {
                 return None;
             }
             if k == key {
@@ -123,14 +167,14 @@ impl FastMap {
             }
             i = (i + 1) & self.mask;
         }
-        let removed = self.vals[i];
+        let removed = self.vals[i] as u32;
         // Backward-shift: move later cluster members into the hole when
         // their home slot does not lie after the hole.
         let mut hole = i;
         let mut j = (i + 1) & self.mask;
         loop {
             let k = self.keys[j];
-            if k == EMPTY {
+            if k == EMPTY || !self.live(j) {
                 break;
             }
             let home = self.slot_of(k);
@@ -146,6 +190,7 @@ impl FastMap {
             j = (j + 1) & self.mask;
         }
         self.keys[hole] = EMPTY;
+        self.vals[hole] = 0;
         self.len -= 1;
         Some(removed)
     }
@@ -172,13 +217,34 @@ impl FastMap {
         self.keys
             .iter()
             .zip(self.vals.iter())
-            .filter(|(k, _)| **k != EMPTY)
-            .map(|(k, v)| (*k, *v))
+            .filter(|(_, sv)| (**sv >> 32) as u32 == self.gen)
+            .map(|(k, sv)| (*k, *sv as u32))
     }
 
-    /// Remove all entries, keeping the allocation.
+    /// Remove all entries, keeping the allocation. `O(1)`: bumps the
+    /// generation so every slot's stamp goes stale; the slow
+    /// `O(capacity)` re-stamp only runs on the `u32` generation wrap,
+    /// once per 2³²−1 clears.
     pub fn clear(&mut self) {
-        self.keys.fill(EMPTY);
+        self.len = 0;
+        if self.gen == u32::MAX {
+            // Wrap: stamp values from earlier generations would collide
+            // with reused generation numbers, so reset every slot to the
+            // dead marker and restart at generation 1.
+            self.vals.fill(0);
+            self.keys.fill(EMPTY);
+            self.gen = 1;
+        } else {
+            self.gen += 1;
+        }
+    }
+
+    /// Test-only: jump the generation counter (wrap-around coverage).
+    /// Abandons any live entries, so the map is logically emptied.
+    #[cfg(test)]
+    fn set_generation(&mut self, gen: u32) {
+        assert!(gen >= 1, "generation 0 is the dead marker");
+        self.gen = gen;
         self.len = 0;
     }
 }
@@ -282,5 +348,67 @@ mod tests {
         }
         m.insert(3, 7);
         assert_eq!(m.get(3), Some(7));
+    }
+
+    #[test]
+    fn repeated_generational_clears_never_resurrect() {
+        // Many clear/insert rounds over the same slots: stale stamps from
+        // earlier generations must stay dead, removals and overwrites
+        // included, and the churn must agree with a per-round oracle.
+        let mut m = FastMap::with_capacity(32);
+        let mut rng = SplitMix64::new(23);
+        for round in 0..2_000u64 {
+            let mut oracle: HashMap<u64, u32> = HashMap::new();
+            for _ in 0..rng.next_below(20) {
+                let k = 1 + rng.next_below(40);
+                let v = rng.next_below(1 << 30) as u32;
+                if rng.next_f64() < 0.2 {
+                    assert_eq!(m.remove(k), oracle.remove(&k), "round {round} key {k}");
+                } else {
+                    m.insert(k, v);
+                    oracle.insert(k, v);
+                }
+            }
+            assert_eq!(m.len(), oracle.len(), "round {round}");
+            for k in 1..=40u64 {
+                assert_eq!(m.get(k), oracle.get(&k).copied(), "round {round} key {k}");
+            }
+            m.clear();
+            assert!(m.is_empty(), "round {round}");
+            for k in 1..=40u64 {
+                assert_eq!(m.get(k), None, "round {round}: ghost key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn generation_wrap_falls_back_to_full_reset() {
+        let mut m = FastMap::with_capacity(8);
+        // Park the counter at the last representable generation and fill
+        // slots stamped u32::MAX.
+        m.set_generation(u32::MAX);
+        for k in 1..=6 {
+            m.insert(k, k as u32 * 10);
+        }
+        assert_eq!(m.get(4), Some(40));
+        assert_eq!(m.len(), 6);
+        // This clear takes the wrap path: full re-stamp, back to gen 1.
+        m.clear();
+        assert!(m.is_empty());
+        for k in 1..=6 {
+            assert_eq!(m.get(k), None, "stale MAX-stamped slot resurrected");
+        }
+        // The wrapped map behaves like a fresh one, including further
+        // clears walking the generations up from 1 again.
+        for round in 0..3 {
+            for k in 1..=6 {
+                m.insert(k, k as u32 + round);
+            }
+            for k in 1..=6u64 {
+                assert_eq!(m.get(k), Some(k as u32 + round), "round {round}");
+            }
+            m.clear();
+            assert!(m.is_empty(), "round {round}");
+        }
     }
 }

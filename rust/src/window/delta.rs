@@ -180,8 +180,10 @@ impl DeltaBuilder {
             .map(|&(item, count)| Counter { item, count, err: 0 })
             .collect();
         let summary = Summary::new(k, self.mass, counters);
-        // Reset, shrinking with hysteresis after an unusually wide epoch
-        // (mirrors ChunkAggregator's policy).
+        // Reset: the map clear is O(1) (generation-stamped), so only the
+        // memory-footprint shrink (8× hysteresis after an unusually wide
+        // epoch, mirroring ChunkAggregator's policy) ever touches the
+        // allocation.
         let fit = distinct.max(self.min_capacity).next_power_of_two();
         self.runs.clear();
         self.mass = 0;
@@ -189,7 +191,7 @@ impl DeltaBuilder {
             self.capacity = fit;
             self.index = FastMap::with_capacity(self.capacity);
             self.runs.shrink_to(self.capacity);
-        } else if !self.index.is_empty() {
+        } else {
             self.index.clear();
         }
         summary

@@ -6,7 +6,7 @@ use pss::baselines::Exact;
 use pss::coordinator::{run_source, Coordinator, CoordinatorConfig, PushError, Routing};
 use pss::gen::{GeneratedSource, ItemSource};
 use pss::metrics::AccuracyReport;
-use pss::summary::FrequencySummary;
+use pss::summary::{FrequencySummary, SummaryKind};
 use pss::util::SplitMix64;
 
 #[test]
@@ -91,6 +91,85 @@ fn single_shard_equals_sequential_space_saving() {
         out.frequent.iter().map(|c| (c.item, c.count)).collect::<Vec<_>>(),
         seq.iter().map(|c| (c.item, c.count)).collect::<Vec<_>>(),
     );
+}
+
+#[test]
+fn compact_single_shard_equals_sequential_and_heap_bounds() {
+    // `--structure compact` end to end on the deterministic single-shard
+    // per-item path: the coordinator's answer must be *identical* to a
+    // sequential CompactSummary over the same stream, and its counter
+    // value multiset identical to the heap structure's on the same seed
+    // (Space Saving counter values are determined by the update
+    // sequence; only tie-broken victim identities may differ).
+    let src = GeneratedSource::zipf(120_000, 3_000, 1.4, 21);
+    let mk = |structure| CoordinatorConfig {
+        shards: 1,
+        k: 100,
+        k_majority: 100,
+        queue_depth: 4,
+        routing: Routing::RoundRobin,
+        structure,
+        epoch_items: 65_536,
+        batch_ingest: false,
+        ..Default::default()
+    };
+    let out = run_source(mk(SummaryKind::Compact), &src, 1000);
+    let mut ss = pss::summary::CompactSummary::new(100);
+    ss.offer_all(&src.slice(0, 120_000));
+    ss.check_consistency();
+    let seq = ss.freeze().prune(120_000, 100);
+    assert_eq!(
+        out.frequent.iter().map(|c| (c.item, c.count)).collect::<Vec<_>>(),
+        seq.iter().map(|c| (c.item, c.count)).collect::<Vec<_>>(),
+    );
+
+    let heap = run_source(mk(SummaryKind::Heap), &src, 1000);
+    let multiset = |counters: &[pss::summary::Counter]| {
+        let mut v: Vec<u64> = counters.iter().map(|c| c.count).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(
+        multiset(out.summary.counters()),
+        multiset(heap.summary.counters()),
+        "compact and heap count multisets diverged on the same seed"
+    );
+    assert_eq!(out.summary.epsilon(), heap.summary.epsilon());
+}
+
+#[test]
+fn compact_keyed_batched_meets_guarantees() {
+    // The compact structure through the full keyed + batched write path:
+    // key-disjoint shards, max-per-shard bound, recall 1 vs exact truth.
+    let n = 200_000u64;
+    let src = GeneratedSource::zipf(n, 8_000, 1.2, 29);
+    let out = run_source(
+        CoordinatorConfig {
+            shards: 4,
+            k: 256,
+            k_majority: 256,
+            routing: Routing::Keyed,
+            structure: SummaryKind::Compact,
+            epoch_items: 65_536,
+            batch_ingest: true,
+            ..Default::default()
+        },
+        &src,
+        4096,
+    );
+    assert_eq!(out.stats.items, n);
+    assert_eq!(out.summary.n(), n);
+    let mut exact = Exact::new();
+    exact.offer_all(&src.slice(0, n));
+    let acc = AccuracyReport::evaluate(&out.frequent, &exact, 256);
+    assert_eq!(acc.recall, 1.0, "compact keyed batched must keep recall 1");
+    // Disjoint merge keeps home-shard (count, err) intact, so the
+    // per-counter err bound is checkable directly on the merged summary.
+    for c in out.summary.counters() {
+        let f = exact.count(c.item);
+        assert!(c.count >= f, "under-estimate of {}", c.item);
+        assert!(c.count - c.err <= f, "err bound broken for {}", c.item);
+    }
 }
 
 #[test]

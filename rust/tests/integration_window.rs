@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use pss::coordinator::{Coordinator, CoordinatorConfig};
 use pss::gen::{GeneratedSource, ItemSource};
+use pss::summary::SummaryKind;
 use pss::window::WindowSnapshot;
 
 fn truth_of_chunks(src: &GeneratedSource, chunk: u64, covered: &[u64]) -> HashMap<u64, u64> {
@@ -117,6 +118,89 @@ fn windowed_answers_cover_exact_recent_epochs() {
             check_window_against_oracle(&snap, &src, CHUNK, shards, k);
         }
     }
+}
+
+#[test]
+fn compact_structure_through_epochs_windows_and_drain() {
+    // `--structure compact` across the whole read side on the same seed
+    // as a heap-structure run: epoch snapshots, windowed queries and the
+    // drain must honor identical guarantees, the windows must be
+    // *identical* (epoch deltas are cut by the structure-independent
+    // DeltaBuilder from identical chunk streams), and the drained
+    // summaries must carry identical per-shard counter-value multisets.
+    const CHUNK: u64 = 5_000;
+    const CHUNKS: u64 = 24;
+    let n = CHUNK * CHUNKS;
+    let shards = 2usize;
+    let k = 64usize;
+    let src = GeneratedSource::zipf(n, 2_000, 1.2, 7);
+    let session = |structure| {
+        let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
+            shards,
+            k,
+            k_majority: k as u64,
+            structure,
+            epoch_items: CHUNK,
+            delta_ring: 32,
+            window_epochs: 4,
+            // Per-item path: both runs see byte-identical update
+            // sequences, making the cross-structure comparison exact.
+            batch_ingest: false,
+            ..Default::default()
+        });
+        let windows = coord.windows().expect("delta ring on");
+        for i in 0..CHUNKS {
+            coord.push(src.slice(i * CHUNK, (i + 1) * CHUNK));
+        }
+        let result = coord.finish();
+        (result, engine, windows)
+    };
+    let (heap_out, heap_engine, heap_windows) = session(SummaryKind::Heap);
+    let (out, engine, windows) = session(SummaryKind::Compact);
+    assert_eq!(out.stats.items, n);
+    assert_eq!(out.stats.deltas_published, CHUNKS);
+    assert_eq!(out.stats.epochs_published, heap_out.stats.epochs_published);
+
+    // Windowed answers: full oracle check, then exact equality with the
+    // heap run's windows.
+    for w in [1usize, 4, 7] {
+        let snap = windows.window(w);
+        check_window_against_oracle(&snap, &src, CHUNK, shards, k);
+        let heap_snap = heap_windows.window(w);
+        assert_eq!(
+            snap.summary().counters(),
+            heap_snap.summary().counters(),
+            "w={w}: windows must not depend on the summary structure"
+        );
+        assert_eq!(snap.n(), heap_snap.n(), "w={w}");
+    }
+
+    // Landmark/drain: same coverage and error bound; per-shard final
+    // snapshots carry identical count multisets (Space Saving counter
+    // values are update-sequence-determined; only tie-broken victim
+    // identities differ between structures).
+    let (snap, heap_snap) = (engine.snapshot(), heap_engine.snapshot());
+    assert_eq!(snap.n(), n);
+    assert_eq!(snap.n(), heap_snap.n());
+    assert_eq!(snap.epsilon(), heap_snap.epsilon());
+    let multiset_of = |parts: &[std::sync::Arc<pss::query::EpochSnapshot>]| {
+        let mut per_shard: Vec<Vec<u64>> = parts
+            .iter()
+            .map(|p| {
+                let mut v: Vec<u64> =
+                    p.summary.counters().iter().map(|c| c.count).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        per_shard.sort();
+        per_shard
+    };
+    assert_eq!(
+        multiset_of(&engine.registry().latest()),
+        multiset_of(&heap_engine.registry().latest()),
+        "per-shard drain multisets diverged between compact and heap"
+    );
 }
 
 #[test]

@@ -9,7 +9,7 @@ use std::collections::{HashMap, HashSet};
 use pss::baselines::Exact;
 use pss::gen::{GeneratedSource, ItemSource};
 use pss::parallel::{block_range, run_shared, tree_reduce, tree_reduce_refs, SummaryKind};
-use pss::summary::{FrequencySummary, SpaceSaving, StreamSummary, Summary};
+use pss::summary::{CompactSummary, FrequencySummary, SpaceSaving, StreamSummary, Summary};
 use pss::util::SplitMix64;
 
 const TRIALS: u64 = 60;
@@ -59,6 +59,12 @@ fn prop_sequential_invariants() {
             ("bucket", {
                 let mut s = StreamSummary::new(k);
                 s.offer_all(&items);
+                s.counters()
+            }),
+            ("compact", {
+                let mut s = CompactSummary::new(k);
+                s.offer_all(&items);
+                s.check_consistency();
                 s.counters()
             }),
         ] {
@@ -626,6 +632,124 @@ fn prop_keyed_routing_bounds() {
                     monitored.contains(item),
                     "seed {seed}: lost item {item} (f={f} > home threshold)"
                 );
+            }
+        }
+    }
+}
+
+/// Property 14 (compact summary equivalence): identical streams routed
+/// identically through [`SpaceSaving`], [`StreamSummary`] and
+/// [`CompactSummary`] — per-item or batched write path, 1–4 shards,
+/// chunked (round-robin) or keyed routing — leave the three structures
+/// with the same `n`, the same conserved mass, and *identical count
+/// multisets* (Space Saving's counter values are determined by the
+/// update sequence; only tie-broken victim identities may differ), each
+/// honoring `f ≤ f̂ ≤ f + n/k` with full recall above `n/k` against its
+/// shard's exact truth. The compact structure's block-min cache is
+/// checked against the true minimum after every mutation burst
+/// (`CompactSummary::check_consistency`, mirroring the bucket-list
+/// checker of property 12).
+#[test]
+fn prop_compact_matches_reference() {
+    use pss::summary::{offer_runs, ChunkAggregator};
+    use pss::util::shard_of;
+
+    for seed in 1500..1500 + TRIALS / 2 {
+        let mut rng = SplitMix64::new(seed);
+        let items = random_stream(&mut rng);
+        let shards = 1 + rng.next_below(4) as usize;
+        let k = 1 + rng.next_below(160) as usize;
+        let chunk = 1 + rng.next_below(600) as usize;
+        let batched = rng.next_f64() < 0.5;
+        let keyed = rng.next_f64() < 0.5;
+
+        let mut heap: Vec<SpaceSaving> = (0..shards).map(|_| SpaceSaving::new(k)).collect();
+        let mut bucket: Vec<StreamSummary> =
+            (0..shards).map(|_| StreamSummary::new(k)).collect();
+        let mut compact: Vec<CompactSummary> =
+            (0..shards).map(|_| CompactSummary::new(k)).collect();
+        let mut agg = ChunkAggregator::new();
+        let mut scatter: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        for (ci, block) in items.chunks(chunk).enumerate() {
+            // The coordinator's two routing families, emulated
+            // deterministically: keyed hash-scatter vs whole-chunk
+            // round-robin.
+            if keyed {
+                for &it in block {
+                    scatter[shard_of(it, shards)].push(it);
+                }
+            } else {
+                scatter[ci % shards].extend_from_slice(block);
+            }
+            for (s, sub) in scatter.iter_mut().enumerate() {
+                if sub.is_empty() {
+                    continue;
+                }
+                if batched {
+                    // One aggregation, the same runs into all three —
+                    // exactly how a shard worker feeds its summary.
+                    let runs = agg.aggregate(sub);
+                    offer_runs(&mut heap[s], runs);
+                    offer_runs(&mut bucket[s], runs);
+                    offer_runs(&mut compact[s], runs);
+                } else {
+                    heap[s].offer_all(sub);
+                    bucket[s].offer_all(sub);
+                    compact[s].offer_all(sub);
+                }
+                // Block-min cache == true min after every burst.
+                compact[s].check_consistency();
+                per_shard[s].extend_from_slice(sub);
+                sub.clear();
+            }
+        }
+
+        for s in 0..shards {
+            let n_s = per_shard[s].len() as u64;
+            let t = truth(&per_shard[s]);
+            let thresh = n_s / k as u64;
+            let multiset = |counters: &[pss::summary::Counter]| {
+                let mut v: Vec<u64> = counters.iter().map(|c| c.count).collect();
+                v.sort_unstable();
+                v
+            };
+            let reference = multiset(&heap[s].counters());
+            for (label, processed, counters) in [
+                ("heap", heap[s].processed(), heap[s].counters()),
+                ("bucket", bucket[s].processed(), bucket[s].counters()),
+                ("compact", compact[s].processed(), compact[s].counters()),
+            ] {
+                assert_eq!(processed, n_s, "seed {seed} shard {s} {label}: n");
+                assert!(counters.len() <= k, "seed {seed} shard {s} {label}: budget");
+                let mass: u64 = counters.iter().map(|c| c.count).sum();
+                assert_eq!(mass, n_s, "seed {seed} shard {s} {label}: mass");
+                assert_eq!(
+                    multiset(&counters),
+                    reference,
+                    "seed {seed} shard {s} {label}: count multiset diverged"
+                );
+                let monitored: HashSet<u64> = counters.iter().map(|c| c.item).collect();
+                for c in &counters {
+                    let f = t.get(&c.item).copied().unwrap_or(0);
+                    assert!(c.count >= f, "seed {seed} shard {s} {label}: under-estimate");
+                    assert!(
+                        c.count - f <= thresh,
+                        "seed {seed} shard {s} {label}: ε=n/k bound"
+                    );
+                    assert!(
+                        c.count - c.err <= f,
+                        "seed {seed} shard {s} {label}: err bound"
+                    );
+                }
+                for (item, f) in &t {
+                    if *f > thresh {
+                        assert!(
+                            monitored.contains(item),
+                            "seed {seed} shard {s} {label}: lost {item} (f={f})"
+                        );
+                    }
+                }
             }
         }
     }
