@@ -1,0 +1,94 @@
+//! The serve layer in one process: bind a loopback server, drive it
+//! with the multi-client load generator, query it over the wire while
+//! ingest is still running, then shut it down through the protocol —
+//! the same path `pss serve` / `pss loadgen` exercise across
+//! processes.
+//!
+//! The point to notice: the answers come back as the library's own
+//! types ([`pss::query::PointEstimate`], [`pss::summary::Counter`]),
+//! and the server's final stats show `buffers_recycled > 0` — the
+//! allocation-free ingest steady state survives the socket hop.
+//!
+//! ```text
+//! cargo run --release --example serve_roundtrip
+//! ```
+
+use std::thread;
+
+use pss::coordinator::CoordinatorConfig;
+use pss::serve::{run_loadgen, LoadgenConfig, QueryClient, ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    let k = 1024usize;
+    let server = Server::bind(
+        &"127.0.0.1:0".parse().map_err(anyhow::Error::msg)?,
+        ServeConfig {
+            coordinator: CoordinatorConfig {
+                shards: 4,
+                k,
+                k_majority: 64,
+                epoch_items: 25_000,
+                ..Default::default()
+            },
+            query_threads: 2,
+            ..Default::default()
+        },
+    )?;
+    let endpoint = server.endpoint().clone();
+    println!("serving on {endpoint}");
+
+    // Writers: 4 loadgen clients, each its own socket = its own
+    // producer, pipelined frames against recycled chunk buffers.
+    let writer = thread::spawn(move || {
+        run_loadgen(
+            &endpoint,
+            &LoadgenConfig {
+                clients: 4,
+                items_per_client: 500_000,
+                universe: 1 << 20,
+                skew: 1.1,
+                seed: 7,
+                ..Default::default()
+            },
+        )
+    });
+
+    // Reader: concurrent wire queries while the writers stream.
+    let mut q = QueryClient::connect(server.endpoint())?;
+    loop {
+        let s = q.stats()?;
+        if s.items == 0 {
+            server.queries().refresh();
+            thread::yield_now();
+            continue;
+        }
+        let top = q.top_k(5, 0)?;
+        println!("live: n={} ε={} (bound n/k={})", top.n, top.epsilon, top.n / k as u64);
+        for c in &top.counters {
+            println!("  item {:>8}  f̂={:<10} ε≤{}", c.item, c.count, c.err);
+        }
+        if s.items >= 2_000_000 {
+            break;
+        }
+        thread::sleep(std::time::Duration::from_millis(50));
+        server.queries().refresh();
+    }
+
+    let report = writer.join().expect("loadgen thread panicked")?;
+    println!(
+        "loadgen: acked {} items at {:.2} M items/s, per-frame {}",
+        report.items_acked,
+        report.items_per_sec() / 1e6,
+        report.frame_latency,
+    );
+
+    q.shutdown_server()?;
+    server.wait_shutdown(None);
+    let (result, stats) = server.finish();
+    println!(
+        "drained: {} items, {} ingest conns, {} frames, {} buffers recycled",
+        result.stats.items, stats.ingest_connections, stats.frames, result.stats.buffers_recycled,
+    );
+    assert!(result.stats.buffers_recycled > 0, "socket ingest must reuse chunk buffers");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! The serve layer: what the socket hop costs. Ingest throughput
+//! in-process (take_buffer/push) vs over loopback TCP (1 and 4
+//! pipelined connections), the runs vs flat wire encodings, and query
+//! round-trip latency over the wire vs straight off the snapshot.
+//!
+//! The interesting number is the socket/in-process throughput ratio:
+//! the frame path re-uses recycled chunk buffers server-side, so the
+//! gap should be syscall + memcpy cost, not allocator churn.
+
+use pss::coordinator::{Coordinator, CoordinatorConfig};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::serve::{run_loadgen, LoadgenConfig, QueryClient, ServeConfig, Server};
+use pss::util::benchkit::{black_box, run};
+
+const N: u64 = 500_000;
+const CHUNK: usize = 4_096;
+const K: usize = 2_000;
+const SHARDS: usize = 4;
+
+fn coord_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        shards: SHARDS,
+        k: K,
+        k_majority: K as u64,
+        epoch_items: 65_536,
+        ..Default::default()
+    }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig { coordinator: coord_cfg(), query_threads: 1, ..Default::default() }
+}
+
+/// Baseline: the same stream through the coordinator in process,
+/// producer on recycled buffers.
+fn in_process_session() -> u64 {
+    let src = GeneratedSource::zipf(N, 1 << 20, 1.1, 7);
+    let (mut c, _q) = Coordinator::spawn(coord_cfg());
+    let mut pos = 0u64;
+    while pos < N {
+        let take = ((N - pos) as usize).min(CHUNK);
+        let mut buf = c.take_buffer();
+        buf.resize(take, 0);
+        src.fill(pos, &mut buf);
+        c.push(buf);
+        pos += take as u64;
+    }
+    c.finish().stats.items
+}
+
+/// The same stream mass over loopback TCP, split across `clients`
+/// pipelined connections.
+fn socket_session(clients: usize, runs: bool) -> u64 {
+    let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), serve_cfg()).unwrap();
+    let report = run_loadgen(
+        server.endpoint(),
+        &LoadgenConfig {
+            clients,
+            items_per_client: N / clients as u64,
+            chunk_len: CHUNK,
+            universe: 1 << 20,
+            skew: 1.1,
+            shift: 0.0,
+            seed: 7,
+            runs,
+            max_inflight: 4,
+        },
+    )
+    .unwrap();
+    let (result, _) = server.finish();
+    assert_eq!(result.stats.items, report.items_acked);
+    assert!(result.stats.buffers_recycled > 0, "socket path must recycle");
+    result.stats.items
+}
+
+fn main() {
+    println!("# bench_serve — socket vs in-process ingest, wire query RTT");
+    println!("# n={N} chunk={CHUNK} k={K} shards={SHARDS} zipf-1.1");
+
+    let base = run("ingest/in_process", Some(N as f64), || {
+        black_box(in_process_session());
+    });
+    let sock1 = run("ingest/socket_1conn", Some(N as f64), || {
+        black_box(socket_session(1, false));
+    });
+    let sock4 = run("ingest/socket_4conn", Some(N as f64), || {
+        black_box(socket_session(4, false));
+    });
+    run("ingest/socket_4conn_runs", Some(N as f64), || {
+        black_box(socket_session(4, true));
+    });
+    println!(
+        "# socket hop cost: 1 conn {:.2}x, 4 conn {:.2}x of in-process wall time",
+        sock1.mean_ns / base.mean_ns,
+        sock4.mean_ns / base.mean_ns,
+    );
+
+    // Query RTT: a served session with data in the snapshots, then
+    // request/response round trips over the wire vs straight reads.
+    let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), serve_cfg()).unwrap();
+    run_loadgen(
+        server.endpoint(),
+        &LoadgenConfig {
+            clients: 2,
+            items_per_client: 100_000,
+            chunk_len: CHUNK,
+            universe: 1 << 20,
+            skew: 1.1,
+            shift: 0.0,
+            seed: 7,
+            runs: false,
+            max_inflight: 4,
+        },
+    )
+    .unwrap();
+    let engine = server.queries();
+    engine.refresh();
+    let mut q = QueryClient::connect(server.endpoint()).unwrap();
+    run("query/wire_point", None, || {
+        black_box(q.point(0, 0).unwrap());
+    });
+    run("query/wire_top10", None, || {
+        black_box(q.top_k(10, 0).unwrap());
+    });
+    run("query/in_process_point", None, || {
+        black_box(engine.snapshot().point(0));
+    });
+    run("query/in_process_top10", None, || {
+        black_box(engine.top_k(10));
+    });
+    drop(q);
+    server.finish();
+}

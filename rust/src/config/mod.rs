@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use crate::coordinator::{Routing, Transport};
+use crate::coordinator::{CoordinatorConfig, Routing, Transport};
 use crate::summary::SummaryKind;
 use crate::util::Json;
 use crate::Result;
@@ -48,6 +48,10 @@ pub struct RunConfig {
     /// pre-aggregation + weighted updates). Same error guarantees as
     /// per-item ingestion; off reproduces exact per-item sequences.
     pub batch_ingest: bool,
+    /// Epoch publication cadence in items per shard (live read path).
+    /// 0 disables epoch snapshots — right for batch `pss run`, useless
+    /// for `pss query`/`pss serve`, which need live readers.
+    pub epoch_items: u64,
     /// Sliding-window read path: delta-ring capacity, in epoch deltas
     /// retained per shard. 0 (default) disables delta publication and
     /// windowed queries.
@@ -77,6 +81,7 @@ impl Default for RunConfig {
             transport: Transport::Ring,
             structure: SummaryKind::BucketList,
             batch_ingest: true,
+            epoch_items: 65_536,
             delta_ring: 0,
             window_epochs: 8,
             verify: false,
@@ -112,6 +117,7 @@ impl RunConfig {
             c.structure = v.parse().map_err(anyhow::Error::msg)?;
         }
         if let Some(v) = j.get("batch_ingest").and_then(|v| v.as_bool()) { c.batch_ingest = v; }
+        if let Some(v) = get_u("epoch_items") { c.epoch_items = v; }
         if let Some(v) = get_u("delta_ring") { c.delta_ring = v as usize; }
         if let Some(v) = get_u("window_epochs") { c.window_epochs = v as usize; }
         if let Some(v) = j.get("verify").and_then(|v| v.as_bool()) { c.verify = v; }
@@ -138,13 +144,32 @@ impl RunConfig {
             "{{\"n\": {}, \"universe\": {}, \"skew\": {}, \"shift\": {}, \"seed\": {},\n \
               \"k\": {}, \"k_majority\": {}, \"threads\": {}, \"chunk_len\": {},\n \
               \"queue_depth\": {}, \"routing\": \"{}\", \"transport\": \"{}\",\n \
-              \"structure\": \"{}\", \"batch_ingest\": {}, \"delta_ring\": {},\n \
-              \"window_epochs\": {}, \"verify\": {}}}",
+              \"structure\": \"{}\", \"batch_ingest\": {}, \"epoch_items\": {},\n \
+              \"delta_ring\": {}, \"window_epochs\": {}, \"verify\": {}}}",
             self.n, self.universe, self.skew, self.shift, self.seed, self.k,
             self.k_majority, self.threads, self.chunk_len, self.queue_depth,
-            self.routing, self.transport, self.structure,
-            self.batch_ingest, self.delta_ring, self.window_epochs, self.verify
+            self.routing, self.transport, self.structure, self.batch_ingest,
+            self.epoch_items, self.delta_ring, self.window_epochs, self.verify
         )
+    }
+
+    /// The coordinator session this config describes. One mapping used
+    /// by `pss query`, `pss serve`, and the serve integration tests, so
+    /// a config file means the same session everywhere.
+    pub fn coordinator(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            shards: self.threads,
+            k: self.k,
+            k_majority: self.k_majority,
+            queue_depth: self.queue_depth,
+            routing: self.routing,
+            transport: self.transport,
+            structure: self.structure,
+            epoch_items: self.epoch_items,
+            batch_ingest: self.batch_ingest,
+            delta_ring: self.delta_ring,
+            window_epochs: self.window_epochs,
+        }
     }
 }
 
@@ -213,6 +238,27 @@ mod tests {
         // And it survives the serialize/parse roundtrip.
         std::fs::write(&p, c.to_json()).unwrap();
         assert!(!RunConfig::from_json_file(&p).unwrap().batch_ingest);
+    }
+
+    #[test]
+    fn epoch_items_roundtrips_and_maps_to_coordinator() {
+        let c = RunConfig::default();
+        assert_eq!(c.epoch_items, 65_536, "live read path on by default");
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        std::fs::write(&p, r#"{"epoch_items": 1024, "threads": 3, "delta_ring": 8}"#).unwrap();
+        let c = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c.epoch_items, 1024);
+        std::fs::write(&p, c.to_json()).unwrap();
+        assert_eq!(RunConfig::from_json_file(&p).unwrap(), c);
+        // One mapping for every session spawner.
+        let cc = c.coordinator();
+        assert_eq!(cc.epoch_items, 1024);
+        assert_eq!(cc.shards, 3);
+        assert_eq!(cc.delta_ring, 8);
+        assert_eq!(cc.k, c.k);
+        assert_eq!(cc.routing, c.routing);
+        assert_eq!(cc.structure, c.structure);
     }
 
     #[test]

@@ -810,15 +810,17 @@ impl Coordinator {
     /// Drain, merge and prune. The epoch registry (and every
     /// [`QueryEngine`] handle) survives with each shard's final
     /// snapshot published.
-    pub fn finish(self) -> QueryResult {
+    pub fn finish(mut self) -> QueryResult {
         // Dropping the producer halves closes every ring / channel:
         // the workers drain what is buffered, publish their final
         // snapshots, and exit — the transports' close protocol *is*
-        // the finish message.
-        drop(self.links);
-        let mut summaries = Vec::with_capacity(self.handles.len());
-        let mut stats = self.stats;
-        for (shard, h) in self.handles.into_iter().enumerate() {
+        // the finish message. Fields are taken out so the `Drop` impl
+        // (the abandoned-session path) sees empty vectors and no-ops.
+        drop(std::mem::take(&mut self.links));
+        let handles = std::mem::take(&mut self.handles);
+        let mut summaries = Vec::with_capacity(handles.len());
+        let mut stats = std::mem::take(&mut self.stats);
+        for (shard, h) in handles.into_iter().enumerate() {
             let out = h.join().expect("shard panicked");
             debug_assert_eq!(out.items, stats.per_shard_items[shard]);
             if self.windows.is_some() {
@@ -848,6 +850,25 @@ impl Coordinator {
             .map_or(0, |w| w.store().deltas_published());
         stats.per_shard_items.shrink_to_fit();
         QueryResult { summary, frequent, stats }
+    }
+}
+
+impl Drop for Coordinator {
+    /// Drop safety: a session abandoned without [`Coordinator::finish`]
+    /// (an error path unwinding, a server tearing down a failed bind)
+    /// must not leak parked shard workers. Closing the transports
+    /// (dropping the producer halves) wakes every worker out of its
+    /// park, lets it drain what is buffered and publish its final
+    /// snapshot, and the join guarantees no thread outlives the
+    /// session. After a normal `finish()` both vectors are already
+    /// empty and this is a no-op.
+    fn drop(&mut self) {
+        drop(std::mem::take(&mut self.links));
+        for h in self.handles.drain(..) {
+            // A worker that panicked already tore its state down; the
+            // drop path only guarantees termination, not results.
+            let _ = h.join();
+        }
     }
 }
 
@@ -1314,6 +1335,63 @@ mod tests {
             assert!(ctr.count >= f, "under-estimate");
             assert!(ctr.count - f <= eps_max, "max-per-shard bound broken");
         }
+    }
+
+    #[test]
+    fn drop_without_finish_joins_workers_and_publishes_drain() {
+        // Abandoning a session (server error paths) must close the
+        // rings and join the shard workers — after `drop` returns, the
+        // drain-time snapshots are deterministically visible because
+        // the workers have already exited.
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 3,
+            k: 32,
+            k_majority: 8,
+            epoch_items: 0,
+            ..Default::default()
+        });
+        for _ in 0..20 {
+            c.push(vec![5; 50]);
+        }
+        drop(c);
+        // No polling: Drop joined the workers, so the final snapshots
+        // are published and flagged finished.
+        let snap = q.snapshot();
+        assert_eq!(snap.n(), 1000);
+        assert_eq!(snap.point(5).estimate, 1000);
+        assert!(snap.epochs().iter().all(|e| e.finished), "drain snapshots published");
+
+        // Same for a windowed session: the drain deltas land too.
+        let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            k: 16,
+            k_majority: 4,
+            epoch_items: 0,
+            delta_ring: 8,
+            ..Default::default()
+        });
+        let w = c.windows().expect("delta ring on");
+        c.push(vec![3; 40]);
+        drop(c);
+        let win = w.window(8);
+        assert_eq!(win.n(), 40);
+        assert!(win.deltas().iter().any(|d| d.finished));
+    }
+
+    #[test]
+    fn finish_after_restructure_still_noops_drop() {
+        // finish() takes the links/handles out of self; the Drop that
+        // follows must be a no-op (double-join or double-close would
+        // hang or panic here).
+        let mut c = Coordinator::start(CoordinatorConfig {
+            shards: 2,
+            k: 16,
+            k_majority: 4,
+            ..Default::default()
+        });
+        c.push(vec![1; 10]);
+        let out = c.finish();
+        assert_eq!(out.stats.items, 10);
     }
 
     #[test]

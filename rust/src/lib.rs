@@ -37,6 +37,11 @@
 //!   behind atomically-swapped `Arc`s; the [`query::QueryEngine`]
 //!   merges them with the combine tree and serves `top_k` / `point` /
 //!   `threshold` / `stats` concurrently with ingestion.
+//! * [`serve`] — the network-facing service layer: a length-prefixed
+//!   binary wire protocol, a TCP/Unix-socket server where one ingest
+//!   connection = one producer feeding the recycled chunk buffers, a
+//!   query reader pool over the epoch snapshots, and the `pss loadgen`
+//!   multi-client load generator.
 //! * [`window`] — the sliding-window read path: shards additionally
 //!   publish per-epoch *delta* summaries into bounded rings; the
 //!   [`window::WindowedQueryEngine`] merges the last `w` deltas and
@@ -58,6 +63,7 @@ pub mod mic;
 pub mod parallel;
 pub mod query;
 pub mod runtime;
+pub mod serve;
 pub mod summary;
 pub mod util;
 pub mod window;

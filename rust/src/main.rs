@@ -10,6 +10,14 @@
 //!   through the coordinator while this thread issues `top_k` / `point`
 //!   / `threshold` queries against the epoch snapshots; `--window N`
 //!   additionally serves sliding-window answers from the delta rings.
+//! * `serve` — run the coordinator as a network service: TCP or
+//!   Unix-socket listener, ingest connections feeding the recycled
+//!   chunk buffers, query connections answering from epoch snapshots;
+//!   drains cleanly on a wire `Shutdown` frame or `--duration-s`.
+//! * `loadgen` — multi-threaded load generator for `pss serve`:
+//!   N concurrent ingest connections streaming `gen/` workloads,
+//!   reporting end-to-end items/s and per-frame ack latency, then
+//!   querying the served top-k over the wire.
 //! * `bench` — machine-readable perf records: `--suite window` (delta
 //!   ring overhead, landmark vs windowed latency), `--suite transport`
 //!   (ring vs mpsc × routing), `--suite summary` (heap vs bucket vs
@@ -49,6 +57,14 @@ USAGE:
                [--epoch-items E] [--interval-ms I]
                [--window W] [--delta-ring R]
                [--top M] [--watch ITEM]
+  pss serve    [--listen unix:/path|host:port] [--k K] [--threads T]
+               [--queue-depth Q] [--routing rr|ll|keyed] [--transport ring|mpsc]
+               [--structure heap|bucket|compact] [--batch-ingest true|false]
+               [--epoch-items E] [--delta-ring R] [--window W]
+               [--query-threads QT] [--max-ingest MI] [--duration-s S]
+  pss loadgen  [--connect unix:/path|host:port] [--clients N] [--items M]
+               [--chunk-len C] [--universe U] [--skew R] [--seed S]
+               [--runs] [--inflight F] [--top M] [--window W] [--shutdown]
   pss bench    [--suite window|transport|summary] [--n N] [--k K] [--threads T]
                [--window W] [--delta-ring R] [--epoch-items E] [--repeat R]
                [--chunk-len C] [--json] [--out FILE]
@@ -70,6 +86,8 @@ fn main() {
         "generate" => cmd_generate(&args),
         "run" => cmd_run(&args),
         "query" => cmd_query(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "bench" => cmd_bench(&args),
         "repro" => cmd_repro(&args),
         "verify" => cmd_verify(&args),
@@ -142,6 +160,7 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
         cfg.structure = v.parse().map_err(anyhow::Error::msg)?;
     }
     if let Some(v) = args.get("batch-ingest") { cfg.batch_ingest = v.parse()?; }
+    if let Some(v) = args.get("epoch-items") { cfg.epoch_items = v.parse()?; }
     if let Some(v) = args.get("window") {
         cfg.window_epochs = v.parse()?;
         // A usable ring must hold at least one full window; default to
@@ -250,7 +269,7 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     use pss::coordinator::Coordinator;
 
     let cfg = load_config(args)?;
-    let epoch_items: u64 = args.get_or("epoch-items", 65_536).map_err(anyhow::Error::msg)?;
+    let epoch_items = cfg.epoch_items;
     let interval_ms: u64 = args.get_or("interval-ms", 250).map_err(anyhow::Error::msg)?;
     let top: usize = args.get_or("top", 5).map_err(anyhow::Error::msg)?;
     let watch: Option<u64> = match args.get("watch") {
@@ -417,6 +436,165 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "queries served: {} ({}), staleness at exit: {} items",
         s.queries_served, s.query_latency, s.staleness_items
     );
+    Ok(())
+}
+
+/// `pss serve` — run the coordinator as a network service. The
+/// coordinator session is fully selectable from the same flags as
+/// `pss run`/`pss query` (structure, routing, transport, delta ring);
+/// the service shape adds `--listen`, `--query-threads`,
+/// `--max-ingest`, and `--duration-s` (0 = run until a wire `Shutdown`
+/// frame, e.g. `pss loadgen --shutdown`).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use pss::serve::{Endpoint, ServeConfig, Server};
+
+    let cfg = load_config(args)?;
+    anyhow::ensure!(
+        cfg.epoch_items > 0,
+        "pss serve needs live epoch snapshots; --epoch-items must be > 0"
+    );
+    let endpoint: Endpoint = args
+        .get("listen")
+        .unwrap_or("127.0.0.1:9009")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let query_threads: usize = args.get_or("query-threads", 2).map_err(anyhow::Error::msg)?;
+    let max_ingest: usize = args.get_or("max-ingest", 64).map_err(anyhow::Error::msg)?;
+    let duration_s: u64 = args.get_or("duration-s", 0).map_err(anyhow::Error::msg)?;
+
+    let server = Server::bind(
+        &endpoint,
+        ServeConfig {
+            coordinator: cfg.coordinator(),
+            query_threads,
+            max_ingest,
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "pss serve on {}: {} shards, k={}, epoch={} items, routing={}, transport={}, structure={}, {} query readers",
+        server.endpoint(),
+        cfg.threads,
+        cfg.k,
+        cfg.epoch_items,
+        cfg.routing,
+        cfg.transport,
+        cfg.structure,
+        query_threads,
+    );
+    if cfg.delta_ring > 0 {
+        println!(
+            "sliding window live: ring of {} deltas/shard, default window {} epochs",
+            cfg.delta_ring, cfg.window_epochs
+        );
+    }
+    if duration_s > 0 {
+        println!("serving for up to {duration_s}s (or until a wire shutdown) ...");
+        server.wait_shutdown(Some(std::time::Duration::from_secs(duration_s)));
+    } else {
+        println!("serving until a wire shutdown frame (pss loadgen --shutdown) ...");
+        server.wait_shutdown(None);
+    }
+
+    println!("draining ...");
+    let (result, stats) = server.finish();
+    println!(
+        "served {} items in {} chunks over {} ingest + {} query connections ({} frames, {} protocol errors)",
+        result.stats.items,
+        result.stats.chunks,
+        stats.ingest_connections,
+        stats.query_connections,
+        stats.frames,
+        stats.proto_errors,
+    );
+    println!(
+        "transport: {} buffers recycled, {} backpressure stalls, {} epochs published",
+        result.stats.buffers_recycled,
+        result.stats.backpressure_events,
+        result.stats.epochs_published,
+    );
+    println!(
+        "final k-majority candidates (f̂ > n/{}): {}",
+        cfg.k_majority,
+        result.frequent.len()
+    );
+    for c in result.frequent.iter().take(10) {
+        println!("  item {:>12}  f̂={:<12} ε≤{}", c.item, c.count, c.err);
+    }
+    Ok(())
+}
+
+/// `pss loadgen` — drive a running `pss serve` with N concurrent
+/// ingest connections streaming deterministic `gen/` workloads, then
+/// query the served answers over the wire. `--runs` sends
+/// pre-aggregated `(item, weight)` frames (the batched-ingest wire
+/// shape); `--shutdown` asks the server to drain afterwards.
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use pss::serve::{run_loadgen, Endpoint, LoadgenConfig, QueryClient};
+
+    let endpoint: Endpoint = args
+        .get("connect")
+        .unwrap_or("127.0.0.1:9009")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let cfg = LoadgenConfig {
+        clients: args.get_or("clients", 4).map_err(anyhow::Error::msg)?,
+        items_per_client: args.get_or("items", 1_000_000).map_err(anyhow::Error::msg)?,
+        chunk_len: args
+            .get_or("chunk-len", pss::parallel::batch_chunk_len_default())
+            .map_err(anyhow::Error::msg)?,
+        universe: args.get_or("universe", 1 << 20).map_err(anyhow::Error::msg)?,
+        skew: args.get_or("skew", 1.1).map_err(anyhow::Error::msg)?,
+        shift: args.get_or("shift", 0.0).map_err(anyhow::Error::msg)?,
+        seed: args.get_or("seed", 42).map_err(anyhow::Error::msg)?,
+        runs: args.has("runs"),
+        max_inflight: args.get_or("inflight", 4).map_err(anyhow::Error::msg)?,
+    };
+    let top: usize = args.get_or("top", 10).map_err(anyhow::Error::msg)?;
+    let window: u32 = args.get_or("window", 0).map_err(anyhow::Error::msg)?;
+
+    println!(
+        "loadgen → {endpoint}: {} clients × {} items (chunk {}, {} frames in flight, {} encoding, skew {})",
+        cfg.clients,
+        cfg.items_per_client,
+        cfg.chunk_len,
+        cfg.max_inflight,
+        if cfg.runs { "runs" } else { "items" },
+        cfg.skew,
+    );
+    let report = run_loadgen(&endpoint, &cfg)?;
+    println!(
+        "acked {} of {} items in {:.3}s — {:.2} M items/s over {} frames",
+        report.items_acked,
+        report.items_sent,
+        report.elapsed.as_secs_f64(),
+        report.items_per_sec() / 1e6,
+        report.frames,
+    );
+    println!("per-frame ack latency: {}", report.frame_latency);
+
+    // Read back what the server now serves, over the wire.
+    let mut q = QueryClient::connect(&endpoint)?;
+    let answer = q.top_k(top as u32, window)?;
+    println!(
+        "served top{top}{}: n={} ε={}",
+        if window > 0 { format!(" (window {window} epochs)") } else { String::new() },
+        answer.n,
+        answer.epsilon,
+    );
+    for c in &answer.counters {
+        println!("  item {:>12}  f̂={:<12} ε≤{}", c.item, c.count, c.err);
+    }
+    let s = q.stats()?;
+    println!(
+        "server: {} items in {} chunks, {} buffers recycled, {} backpressure stalls, {} epochs, {} ingest conns",
+        s.items, s.chunks, s.buffers_recycled, s.backpressure_events, s.epochs_published,
+        s.ingest_connections,
+    );
+    if args.has("shutdown") {
+        q.shutdown_server()?;
+        println!("server drain requested");
+    }
     Ok(())
 }
 

@@ -129,6 +129,26 @@ impl LatencyHistogram {
         self.max_ns()
     }
 
+    /// Fold another histogram's samples into this one. Both sides stay
+    /// usable; counts add bucket-wise, so quantiles of the merged
+    /// histogram are exactly what one shared histogram would report.
+    /// The load generator gives each client its own (uncontended)
+    /// histogram and merges them for the final report.
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let v = theirs.load(Ordering::Relaxed);
+            if v > 0 {
+                mine.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns
+            .fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Compact snapshot for reports.
     pub fn summary(&self) -> LatencySummary {
         LatencySummary {
@@ -233,6 +253,25 @@ mod tests {
         });
         assert_eq!(h.count(), 4_000);
         assert_eq!(h.max_ns(), 999);
+    }
+
+    #[test]
+    fn merge_matches_shared_recording() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let shared = LatencyHistogram::new();
+        for ns in [100u64, 3_000, 70_000] {
+            a.record(Duration::from_nanos(ns));
+            shared.record(Duration::from_nanos(ns));
+        }
+        for ns in [5u64, 900_000] {
+            b.record(Duration::from_nanos(ns));
+            shared.record(Duration::from_nanos(ns));
+        }
+        a.merge(&b);
+        assert_eq!(a.summary(), shared.summary());
+        // `b` is untouched.
+        assert_eq!(b.count(), 2);
     }
 
     #[test]

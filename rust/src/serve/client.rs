@@ -1,0 +1,578 @@
+//! Client side of the wire protocol: typed ingest/query clients plus
+//! the multi-threaded load generator behind `pss loadgen`.
+//!
+//! [`IngestClient`] pipelines ingest frames with a bounded in-flight
+//! window — it keeps writing while acks trail behind, so one
+//! connection can saturate the socket without unbounded buffering —
+//! and attributes each ack round trip to a [`LatencyHistogram`]
+//! sample. [`QueryClient`] speaks the query frames and hands back the
+//! *same* answer types the in-process engines produce
+//! ([`PointEstimate`], [`ThresholdReport`]), so a caller can swap
+//! in-process and over-the-wire query paths without touching its
+//! result handling.
+//!
+//! [`run_loadgen`] drives N concurrent ingest connections from the
+//! `gen/` workload generators (one deterministic source per client,
+//! seeds `seed..seed+N`) and folds the per-client histograms with
+//! [`LatencyHistogram::merge`] into one end-to-end report.
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+use crate::gen::{GeneratedSource, ItemSource};
+use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::query::{PointEstimate, ThresholdReport};
+use crate::summary::{ChunkAggregator, Counter};
+
+use super::proto::{
+    encode_hello, encode_items_into, encode_runs_into, read_frame, write_frame, Frame, Role,
+    WireStats, MAX_FRAME_MASS, VERSION,
+};
+use super::server::{AnyStream, Endpoint};
+
+/// Connect, send the hello, and require a `HelloOk`.
+fn handshake(endpoint: &Endpoint, role: Role) -> crate::Result<AnyStream> {
+    let mut stream = endpoint
+        .connect()
+        .map_err(|e| anyhow::anyhow!("connect {endpoint}: {e}"))?;
+    // Client reads are blocking with a generous safety-net timeout so a
+    // wedged server fails loudly instead of hanging the caller forever.
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    stream.write_all(&encode_hello(role))?;
+    stream.flush()?;
+    let mut scratch = Vec::new();
+    match read_frame(&mut stream, &mut scratch)? {
+        Some((kind, body)) => match Frame::decode(kind, body)? {
+            Frame::HelloOk { version } => {
+                anyhow::ensure!(
+                    version == VERSION,
+                    "server speaks protocol v{version}, client v{VERSION}"
+                );
+                Ok(stream)
+            }
+            Frame::Error { code, message } => {
+                anyhow::bail!("server rejected hello ({code:?}): {message}")
+            }
+            other => anyhow::bail!("unexpected reply to hello: {other:?}"),
+        },
+        None => anyhow::bail!("server closed during handshake"),
+    }
+}
+
+/// A pipelined ingest connection: one wire producer.
+///
+/// Frames carry a client sequence number; the server acks each one,
+/// and the client bounds unacked frames at `max_inflight` — writes
+/// overlap with acks (pipelining) but memory and latency attribution
+/// stay bounded. Every ack round trip lands in the client's
+/// [`LatencyHistogram`].
+pub struct IngestClient {
+    stream: AnyStream,
+    wire: Vec<u8>,
+    scratch: Vec<u8>,
+    seq: u64,
+    inflight: VecDeque<(u64, Instant)>,
+    max_inflight: usize,
+    latency: LatencyHistogram,
+    acked_items: u64,
+    frames: u64,
+}
+
+impl IngestClient {
+    /// Connect and handshake as an ingest producer.
+    pub fn connect(endpoint: &Endpoint) -> crate::Result<IngestClient> {
+        Ok(IngestClient {
+            stream: handshake(endpoint, Role::Ingest)?,
+            wire: Vec::new(),
+            scratch: Vec::new(),
+            seq: 0,
+            inflight: VecDeque::new(),
+            max_inflight: 4,
+            latency: LatencyHistogram::new(),
+            acked_items: 0,
+            frames: 0,
+        })
+    }
+
+    /// Bound on unacked frames (default 4). 1 degenerates to
+    /// request/response lock-step.
+    pub fn with_inflight(mut self, max_inflight: usize) -> IngestClient {
+        self.max_inflight = max_inflight.max(1);
+        self
+    }
+
+    /// Send one flat item chunk as an `IngestItems` frame.
+    pub fn send_items(&mut self, items: &[u64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            items.len() as u64 <= MAX_FRAME_MASS,
+            "chunk of {} items exceeds the frame mass cap {MAX_FRAME_MASS}",
+            items.len()
+        );
+        self.wire.clear();
+        self.seq += 1;
+        encode_items_into(self.seq, items, &mut self.wire);
+        self.dispatch()
+    }
+
+    /// Send pre-aggregated `(item, weight)` runs as an `IngestRuns`
+    /// frame (the batched-ingest wire shape — compact under skew).
+    pub fn send_runs(&mut self, runs: &[(u64, u64)]) -> crate::Result<()> {
+        let mass: u64 = runs.iter().map(|&(_, w)| w).sum();
+        anyhow::ensure!(
+            mass <= MAX_FRAME_MASS,
+            "runs of mass {mass} exceed the frame mass cap {MAX_FRAME_MASS}"
+        );
+        self.wire.clear();
+        self.seq += 1;
+        encode_runs_into(self.seq, runs, &mut self.wire);
+        self.dispatch()
+    }
+
+    /// Write the staged frame, then absorb acks until the in-flight
+    /// window has room again.
+    fn dispatch(&mut self) -> crate::Result<()> {
+        self.stream.write_all(&self.wire)?;
+        self.stream.flush()?;
+        self.inflight.push_back((self.seq, Instant::now()));
+        self.frames += 1;
+        while self.inflight.len() >= self.max_inflight {
+            self.recv_ack()?;
+        }
+        Ok(())
+    }
+
+    /// Block for the next ack; acks arrive strictly in send order.
+    fn recv_ack(&mut self) -> crate::Result<()> {
+        let (want, sent_at) = self
+            .inflight
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("recv_ack with nothing in flight"))?;
+        match read_frame(&mut self.stream, &mut self.scratch)? {
+            Some((kind, body)) => match Frame::decode(kind, body)? {
+                Frame::IngestAck { seq, items } => {
+                    anyhow::ensure!(
+                        seq == want,
+                        "ack out of order: got seq {seq}, expected {want}"
+                    );
+                    self.latency.record(sent_at.elapsed());
+                    self.acked_items += items;
+                    Ok(())
+                }
+                Frame::Error { code, message } => {
+                    anyhow::bail!("server error ({code:?}): {message}")
+                }
+                other => anyhow::bail!("unexpected frame on ingest connection: {other:?}"),
+            },
+            None => anyhow::bail!("server closed with {} frames unacked", self.inflight.len() + 1),
+        }
+    }
+
+    /// Wait for every outstanding ack.
+    pub fn drain(&mut self) -> crate::Result<()> {
+        while !self.inflight.is_empty() {
+            self.recv_ack()?;
+        }
+        Ok(())
+    }
+
+    /// Item mass acked so far.
+    pub fn acked_items(&self) -> u64 {
+        self.acked_items
+    }
+
+    /// Per-frame ack round-trip latency so far.
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.latency
+    }
+
+    /// Drain outstanding acks and close, returning `(frames sent,
+    /// items acked, latency histogram)`.
+    pub fn finish(mut self) -> crate::Result<(u64, u64, LatencyHistogram)> {
+        self.drain()?;
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        Ok((self.frames, self.acked_items, self.latency))
+    }
+}
+
+/// A top-k answer from the wire, in engine terms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopKAnswer {
+    /// Stream coverage of the answer.
+    pub n: u64,
+    /// Error bound every counter honors.
+    pub epsilon: u64,
+    /// The heavy hitters, descending by count.
+    pub counters: Vec<Counter>,
+}
+
+fn from_wire(counters: Vec<super::proto::WireCounter>) -> Vec<Counter> {
+    counters
+        .into_iter()
+        .map(|c| Counter { item: c.item, count: c.count, err: c.err })
+        .collect()
+}
+
+/// A query connection speaking request/response frames. Answers come
+/// back as the same types the in-process [`QueryEngine`] yields.
+///
+/// [`QueryEngine`]: crate::query::QueryEngine
+pub struct QueryClient {
+    stream: AnyStream,
+    wire: Vec<u8>,
+    scratch: Vec<u8>,
+}
+
+impl QueryClient {
+    /// Connect and handshake as a query reader.
+    pub fn connect(endpoint: &Endpoint) -> crate::Result<QueryClient> {
+        Ok(QueryClient {
+            stream: handshake(endpoint, Role::Query)?,
+            wire: Vec::new(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// One request/response round trip; server `Error` frames become
+    /// `Err` here.
+    fn request(&mut self, frame: &Frame) -> crate::Result<Frame> {
+        write_frame(&mut self.stream, frame, &mut self.wire)?;
+        match read_frame(&mut self.stream, &mut self.scratch)? {
+            Some((kind, body)) => match Frame::decode(kind, body)? {
+                Frame::Error { code, message } => {
+                    anyhow::bail!("server error ({code:?}): {message}")
+                }
+                reply => Ok(reply),
+            },
+            None => anyhow::bail!("server closed mid-query"),
+        }
+    }
+
+    /// Top-`m` heavy hitters; `window_epochs` 0 = landmark, else the
+    /// last `w` epochs.
+    pub fn top_k(&mut self, m: u32, window_epochs: u32) -> crate::Result<TopKAnswer> {
+        match self.request(&Frame::TopK { m, window_epochs })? {
+            Frame::TopKResult { n, epsilon, counters } => {
+                Ok(TopKAnswer { n, epsilon, counters: from_wire(counters) })
+            }
+            other => anyhow::bail!("unexpected top-k reply: {other:?}"),
+        }
+    }
+
+    /// Point frequency estimate for one item.
+    pub fn point(&mut self, item: u64, window_epochs: u32) -> crate::Result<PointEstimate> {
+        match self.request(&Frame::Point { item, window_epochs })? {
+            Frame::PointResult { estimate, guaranteed, monitored, n } => {
+                Ok(PointEstimate { item, estimate, guaranteed, monitored, n })
+            }
+            other => anyhow::bail!("unexpected point reply: {other:?}"),
+        }
+    }
+
+    /// k-majority report (`f̂ > n/k`); `k < 2` uses the server's
+    /// configured default.
+    pub fn k_majority(&mut self, k: u64, window_epochs: u32) -> crate::Result<ThresholdReport> {
+        match self.request(&Frame::KMajority { k, window_epochs })? {
+            Frame::KMajorityResult { n, epsilon, guaranteed, possible } => Ok(ThresholdReport {
+                threshold: if k < 2 { 0 } else { n / k },
+                guaranteed: from_wire(guaranteed),
+                possible: from_wire(possible),
+                n,
+                epsilon,
+            }),
+            other => anyhow::bail!("unexpected k-majority reply: {other:?}"),
+        }
+    }
+
+    /// Server counter snapshot.
+    pub fn stats(&mut self) -> crate::Result<WireStats> {
+        match self.request(&Frame::Stats)? {
+            Frame::StatsResult(s) => Ok(s),
+            other => anyhow::bail!("unexpected stats reply: {other:?}"),
+        }
+    }
+
+    /// Ask the server to drain and stop (consumes the connection — the
+    /// server closes it after acking).
+    pub fn shutdown_server(mut self) -> crate::Result<()> {
+        match self.request(&Frame::Shutdown)? {
+            Frame::ShutdownAck => Ok(()),
+            other => anyhow::bail!("unexpected shutdown reply: {other:?}"),
+        }
+    }
+}
+
+/// Shape of one `pss loadgen` run.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Concurrent ingest connections.
+    pub clients: usize,
+    /// Items each client streams.
+    pub items_per_client: u64,
+    /// Items per ingest frame.
+    pub chunk_len: usize,
+    /// Workload universe.
+    pub universe: u64,
+    /// Zipf skew (0 = uniform).
+    pub skew: f64,
+    /// Zipf-Mandelbrot shift.
+    pub shift: f64,
+    /// Base seed; client `i` uses `seed + i`.
+    pub seed: u64,
+    /// Pre-aggregate each chunk into `(item, weight)` runs and send
+    /// `IngestRuns` frames (compact under skew) instead of flat items.
+    pub runs: bool,
+    /// Per-connection in-flight frame window.
+    pub max_inflight: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            clients: 4,
+            items_per_client: 1_000_000,
+            chunk_len: crate::parallel::batch_chunk_len_default(),
+            universe: 1 << 20,
+            skew: 1.1,
+            shift: 0.0,
+            seed: 42,
+            runs: false,
+            max_inflight: 4,
+        }
+    }
+}
+
+/// What a load-generation run measured.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Connections that ran.
+    pub clients: usize,
+    /// Items streamed (sum over clients).
+    pub items_sent: u64,
+    /// Item mass the server acked.
+    pub items_acked: u64,
+    /// Ingest frames sent.
+    pub frames: u64,
+    /// Wall time of the whole run.
+    pub elapsed: Duration,
+    /// Per-frame ack round-trip latency, merged over all clients.
+    pub frame_latency: LatencySummary,
+}
+
+impl LoadgenReport {
+    /// End-to-end acked throughput in items/s.
+    pub fn items_per_sec(&self) -> f64 {
+        let s = self.elapsed.as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.items_acked as f64 / s
+        }
+    }
+}
+
+/// Drive `cfg.clients` concurrent ingest connections against
+/// `endpoint`, each streaming a deterministic `gen/` workload, and
+/// merge the per-client latency histograms into one report. Fails if
+/// any client fails.
+pub fn run_loadgen(endpoint: &Endpoint, cfg: &LoadgenConfig) -> crate::Result<LoadgenReport> {
+    anyhow::ensure!(cfg.clients >= 1, "loadgen needs at least one client");
+    anyhow::ensure!(cfg.chunk_len >= 1, "chunk_len must be positive");
+    anyhow::ensure!(
+        cfg.chunk_len as u64 <= MAX_FRAME_MASS,
+        "chunk_len {} exceeds the frame mass cap {MAX_FRAME_MASS}",
+        cfg.chunk_len
+    );
+    let t0 = Instant::now();
+    let outcomes: Vec<crate::Result<(u64, u64, u64, LatencyHistogram)>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cfg.clients)
+                .map(|i| {
+                    scope.spawn(move || -> crate::Result<(u64, u64, u64, LatencyHistogram)> {
+                        let n = cfg.items_per_client;
+                        let seed = cfg.seed + i as u64;
+                        let src = if cfg.skew > 0.0 {
+                            GeneratedSource::zipf_mandelbrot(
+                                n,
+                                cfg.universe,
+                                cfg.skew,
+                                cfg.shift,
+                                seed,
+                            )
+                        } else {
+                            GeneratedSource::uniform(n, cfg.universe, seed)
+                        };
+                        let mut client =
+                            IngestClient::connect(endpoint)?.with_inflight(cfg.max_inflight);
+                        let mut buf = vec![0u64; cfg.chunk_len];
+                        let mut agg = ChunkAggregator::with_capacity(cfg.chunk_len);
+                        let mut pos = 0u64;
+                        let mut sent = 0u64;
+                        while pos < n {
+                            let take = ((n - pos) as usize).min(cfg.chunk_len);
+                            src.fill(pos, &mut buf[..take]);
+                            if cfg.runs {
+                                client.send_runs(agg.aggregate(&buf[..take]))?;
+                            } else {
+                                client.send_items(&buf[..take])?;
+                            }
+                            pos += take as u64;
+                            sent += take as u64;
+                        }
+                        let (frames, acked, hist) = client.finish()?;
+                        Ok((sent, acked, frames, hist))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("loadgen client panicked"))
+                .collect()
+        });
+    let elapsed = t0.elapsed();
+    let merged = LatencyHistogram::new();
+    let (mut items_sent, mut items_acked, mut frames) = (0u64, 0u64, 0u64);
+    for outcome in outcomes {
+        let (sent, acked, f, hist) = outcome?;
+        items_sent += sent;
+        items_acked += acked;
+        frames += f;
+        merged.merge(&hist);
+    }
+    Ok(LoadgenReport {
+        clients: cfg.clients,
+        items_sent,
+        items_acked,
+        frames,
+        elapsed,
+        frame_latency: merged.summary(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::serve::server::{ServeConfig, Server};
+
+    fn tiny_server() -> Server {
+        Server::bind(
+            &"127.0.0.1:0".parse().unwrap(),
+            ServeConfig {
+                coordinator: CoordinatorConfig {
+                    shards: 2,
+                    k: 64,
+                    k_majority: 8,
+                    epoch_items: 200,
+                    ..Default::default()
+                },
+                query_threads: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ingest_client_pipelines_and_attributes_latency() {
+        let server = tiny_server();
+        let mut c = IngestClient::connect(server.endpoint()).unwrap().with_inflight(3);
+        for i in 0..10u64 {
+            c.send_items(&[i % 3; 100]).unwrap();
+        }
+        let (frames, acked, hist) = c.finish().unwrap();
+        assert_eq!(frames, 10);
+        assert_eq!(acked, 1000);
+        assert_eq!(hist.count(), 10, "one latency sample per frame");
+        let (result, _) = server.finish();
+        assert_eq!(result.stats.items, 1000);
+    }
+
+    #[test]
+    fn query_client_speaks_engine_types() {
+        let server = tiny_server();
+        let mut ing = IngestClient::connect(server.endpoint()).unwrap();
+        // 600 of item 5, 400 of item 9, as runs.
+        ing.send_runs(&[(5, 600), (9, 400)]).unwrap();
+        ing.finish().unwrap();
+        server.queries().refresh();
+
+        let mut q = QueryClient::connect(server.endpoint()).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let top = loop {
+            let t = q.top_k(2, 0).unwrap();
+            if t.n >= 1000 {
+                break t;
+            }
+            assert!(Instant::now() < deadline, "epochs never covered ingest");
+            std::thread::sleep(Duration::from_millis(5));
+            server.queries().refresh();
+        };
+        assert_eq!(top.counters[0].item, 5);
+        assert_eq!(top.counters[0].count, 600);
+        let p = q.point(9, 0).unwrap();
+        assert_eq!(p.estimate, 400);
+        assert!(p.monitored);
+        let rep = q.k_majority(8, 0).unwrap();
+        assert!(rep.guaranteed.iter().any(|c| c.item == 5));
+        let s = q.stats().unwrap();
+        assert_eq!(s.items, 1000);
+        q.shutdown_server().unwrap();
+        assert!(server.shutdown_requested());
+        let (result, _) = server.finish();
+        assert_eq!(result.stats.items, 1000);
+    }
+
+    #[test]
+    fn loadgen_drives_concurrent_clients() {
+        let server = tiny_server();
+        let report = run_loadgen(
+            server.endpoint(),
+            &LoadgenConfig {
+                clients: 3,
+                items_per_client: 2_000,
+                chunk_len: 256,
+                universe: 1 << 10,
+                seed: 7,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.items_sent, 6_000);
+        assert_eq!(report.items_acked, 6_000);
+        assert_eq!(report.frames, 3 * 8);
+        assert_eq!(report.frame_latency.count, report.frames);
+        assert!(report.items_per_sec() > 0.0);
+        let (result, stats) = server.finish();
+        assert_eq!(result.stats.items, 6_000);
+        assert_eq!(stats.ingest_connections, 3);
+    }
+
+    #[test]
+    fn loadgen_runs_shape_matches_flat() {
+        let server = tiny_server();
+        let cfg = LoadgenConfig {
+            clients: 2,
+            items_per_client: 1_000,
+            chunk_len: 250,
+            universe: 1 << 8,
+            seed: 11,
+            runs: true,
+            ..Default::default()
+        };
+        let report = run_loadgen(server.endpoint(), &cfg).unwrap();
+        assert_eq!(report.items_acked, 2_000, "runs expand to full mass server-side");
+        let (result, _) = server.finish();
+        assert_eq!(result.stats.items, 2_000);
+    }
+
+    #[test]
+    fn oversized_chunk_is_rejected_client_side() {
+        let server = tiny_server();
+        let mut c = IngestClient::connect(server.endpoint()).unwrap();
+        let e = c.send_runs(&[(1, MAX_FRAME_MASS + 1)]).unwrap_err();
+        assert!(e.to_string().contains("mass"), "{e}");
+        server.finish();
+    }
+}

@@ -1,0 +1,30 @@
+//! The network-facing service layer: wire protocol, server, clients.
+//!
+//! Everything below the socket is the existing stack — [`proto`]
+//! frames splice into the coordinator's recycled chunk buffers,
+//! queries answer from the epoch snapshots — so the service preserves
+//! both invariants the library guarantees in process: the
+//! `f ≤ f̂ ≤ f + n/k` bound end to end, and the allocation-free ingest
+//! steady state across the socket hop.
+//!
+//! * [`proto`] — length-prefixed little-endian frames: the 8-byte
+//!   hello (magic/version/role), `IngestItems`/`IngestRuns` with
+//!   per-frame acks, the query/answer pairs, typed errors, and the
+//!   resumable [`proto::FrameReader`] that survives read timeouts
+//!   mid-frame.
+//! * [`server`] — [`server::Server`]: TCP + Unix-socket listener, one
+//!   ingest connection = one producer, a fixed query reader pool, and
+//!   a drain-then-join shutdown protocol.
+//! * [`client`] — [`client::IngestClient`] (pipelined acks + latency
+//!   attribution), [`client::QueryClient`] (engine-typed answers), and
+//!   [`client::run_loadgen`] behind `pss loadgen`.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{
+    run_loadgen, IngestClient, LoadgenConfig, LoadgenReport, QueryClient, TopKAnswer,
+};
+pub use proto::{ErrorCode, Frame, FrameReader, ProtoError, Role, WireCounter, WireStats};
+pub use server::{AnyStream, Endpoint, ServeConfig, ServeStats, Server};

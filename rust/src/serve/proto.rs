@@ -1,0 +1,1300 @@
+//! The `pss` wire protocol: length-prefixed binary frames over a byte
+//! stream (TCP or Unix socket).
+//!
+//! A connection opens with an 8-byte **hello**, then carries
+//! self-describing **frames**:
+//!
+//! ```text
+//!  hello (client → server, once):
+//!  ┌─────────────┬────────────┬──────────┬───────────┐
+//!  │ magic: u32  │ version:u16│ role: u8 │ flags: u8 │   "PSS1", 1, ingest|query, 0
+//!  └─────────────┴────────────┴──────────┴───────────┘
+//!
+//!  frame (either direction, repeated):
+//!  ┌────────────┬───────────┬──────────────────────────┐
+//!  │ len: u32   │ kind: u8  │ body: len − 1 bytes      │   len covers kind + body
+//!  └────────────┴───────────┴──────────────────────────┘
+//! ```
+//!
+//! All integers are **little-endian**. `len` is capped at
+//! [`MAX_FRAME_LEN`] so a malformed or hostile peer cannot make the
+//! server allocate unboundedly. Ingest payloads come in two shapes:
+//!
+//! * [`Frame::IngestItems`] — a flat `u64` item array. The body is a
+//!   byte-image of the chunk buffer: decoding is a bounds check plus a
+//!   `u64::from_le_bytes` sweep straight into a recycled `Vec<u64>`
+//!   ([`decode_ingest_into`]), so the zero-alloc ingest steady state
+//!   survives the socket hop.
+//! * [`Frame::IngestRuns`] — `(item, weight)` pairs, the batched-ingest
+//!   run representation. Under skew this is the compact encoding (a
+//!   chunk of 16k items collapses to its distinct items); the server
+//!   expands runs back into the chunk buffer, and the *declared mass*
+//!   (Σ weights) is validated against [`MAX_FRAME_MASS`] before any
+//!   expansion happens, so a tiny frame cannot claim a huge weight and
+//!   blow up server memory.
+//!
+//! Every ingest frame carries a client-chosen `seq`; the server answers
+//! each with [`Frame::IngestAck`]`{seq, items}`. Acks return in frame
+//! order (the transport is a byte stream), which is what lets the
+//! client pipeline frames and still attribute per-frame latency.
+//!
+//! Malformed input never panics and never kills the server: every
+//! decode path returns a typed [`ProtoError`], which the server maps to
+//! a [`Frame::Error`] (code + message) before closing *that*
+//! connection only.
+
+use std::io::{Read, Write};
+
+/// Connection magic: `b"PSS1"` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"PSS1");
+
+/// Protocol version carried in the hello.
+pub const VERSION: u16 = 1;
+
+/// Hard cap on `len` (kind + body), bytes. 16 MiB ≈ a 2M-item flat
+/// chunk — far past any sane chunk_len, small enough to bound a
+/// hostile peer's damage.
+pub const MAX_FRAME_LEN: u32 = 16 << 20;
+
+/// Hard cap on the declared item mass (Σ weights) of one ingest frame:
+/// the expanded chunk buffer never exceeds this many items.
+pub const MAX_FRAME_MASS: u64 = 4 << 20;
+
+/// Connection role declared in the hello.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// This connection streams ingest frames (connection = producer).
+    Ingest,
+    /// This connection issues queries (served by the reader pool).
+    Query,
+}
+
+impl Role {
+    fn to_u8(self) -> u8 {
+        match self {
+            Role::Ingest => 0,
+            Role::Query => 1,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Role, ProtoError> {
+        match b {
+            0 => Ok(Role::Ingest),
+            1 => Ok(Role::Query),
+            other => Err(ProtoError::BadRole(other)),
+        }
+    }
+}
+
+impl std::fmt::Display for Role {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Role::Ingest => "ingest",
+            Role::Query => "query",
+        })
+    }
+}
+
+/// Frame kind discriminants (the `kind` byte on the wire).
+mod kind {
+    pub const INGEST_ITEMS: u8 = 0x01;
+    pub const INGEST_RUNS: u8 = 0x02;
+    pub const INGEST_ACK: u8 = 0x03;
+    pub const TOP_K: u8 = 0x10;
+    pub const POINT: u8 = 0x11;
+    pub const K_MAJORITY: u8 = 0x12;
+    pub const STATS: u8 = 0x13;
+    pub const TOP_K_RESULT: u8 = 0x20;
+    pub const POINT_RESULT: u8 = 0x21;
+    pub const K_MAJORITY_RESULT: u8 = 0x22;
+    pub const STATS_RESULT: u8 = 0x23;
+    pub const HELLO_OK: u8 = 0x30;
+    pub const SHUTDOWN: u8 = 0x3E;
+    pub const SHUTDOWN_ACK: u8 = 0x3F;
+    pub const ERROR: u8 = 0x40;
+}
+
+/// Typed error codes carried by [`Frame::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Hello magic mismatch — not a pss client.
+    BadMagic,
+    /// Hello version unsupported.
+    BadVersion,
+    /// Frame failed to decode (bad length, unknown kind, bad payload).
+    Malformed,
+    /// Frame length or declared mass over the protocol caps.
+    TooLarge,
+    /// Frame kind not valid for this connection's role.
+    WrongRole,
+    /// Server is draining; no further frames accepted.
+    ShuttingDown,
+    /// Server at its ingest-connection limit.
+    Overloaded,
+    /// Windowed query against a server with no delta ring.
+    WindowUnavailable,
+    /// Code not understood by this build (forward compatibility).
+    Unknown(u16),
+}
+
+impl ErrorCode {
+    /// Wire encoding.
+    pub fn to_u16(self) -> u16 {
+        match self {
+            ErrorCode::BadMagic => 1,
+            ErrorCode::BadVersion => 2,
+            ErrorCode::Malformed => 3,
+            ErrorCode::TooLarge => 4,
+            ErrorCode::WrongRole => 5,
+            ErrorCode::ShuttingDown => 6,
+            ErrorCode::Overloaded => 7,
+            ErrorCode::WindowUnavailable => 8,
+            ErrorCode::Unknown(c) => c,
+        }
+    }
+
+    /// Wire decoding (never fails: unknown codes round-trip).
+    pub fn from_u16(c: u16) -> ErrorCode {
+        match c {
+            1 => ErrorCode::BadMagic,
+            2 => ErrorCode::BadVersion,
+            3 => ErrorCode::Malformed,
+            4 => ErrorCode::TooLarge,
+            5 => ErrorCode::WrongRole,
+            6 => ErrorCode::ShuttingDown,
+            7 => ErrorCode::Overloaded,
+            8 => ErrorCode::WindowUnavailable,
+            other => ErrorCode::Unknown(other),
+        }
+    }
+}
+
+/// One wire counter in a query result: `(item, count, err)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireCounter {
+    /// Item id.
+    pub item: u64,
+    /// Estimated count `f̂`.
+    pub count: u64,
+    /// Over-estimation bound (`f ≥ f̂ − err`).
+    pub err: u64,
+}
+
+/// Server-side counters surfaced over the wire ([`Frame::StatsResult`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Items accepted into the coordinator.
+    pub items: u64,
+    /// Caller chunks accepted.
+    pub chunks: u64,
+    /// Chunk buffers reused instead of allocated (socket-path recycling).
+    pub buffers_recycled: u64,
+    /// Producer stalls on full shard queues.
+    pub backpressure_events: u64,
+    /// Epoch snapshots published so far.
+    pub epochs_published: u64,
+    /// Ingest connections accepted since bind.
+    pub ingest_connections: u64,
+    /// Query connections accepted since bind.
+    pub query_connections: u64,
+    /// Frames rejected with a protocol error.
+    pub proto_errors: u64,
+}
+
+/// A decoded protocol frame.
+///
+/// `Ingest*` frames flow client→server; `*Result`/`IngestAck`/`Error`
+/// flow server→client; `Shutdown` is the admin drain request (query
+/// role).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Flat item chunk.
+    IngestItems {
+        /// Client-chosen sequence number, echoed by the ack.
+        seq: u64,
+        /// The items.
+        items: Vec<u64>,
+    },
+    /// Pre-aggregated `(item, weight)` runs (batched-ingest shape).
+    IngestRuns {
+        /// Client-chosen sequence number, echoed by the ack.
+        seq: u64,
+        /// The runs; Σ weight ≤ [`MAX_FRAME_MASS`].
+        runs: Vec<(u64, u64)>,
+    },
+    /// Per-ingest-frame acknowledgement.
+    IngestAck {
+        /// Echo of the ingest frame's `seq`.
+        seq: u64,
+        /// Item mass accepted from that frame.
+        items: u64,
+    },
+    /// Top-`m` query; `window_epochs` 0 = landmark, else the last `w`
+    /// epochs from the delta rings.
+    TopK {
+        /// How many heavy hitters to return.
+        m: u32,
+        /// 0 = landmark; else windowed width in epochs.
+        window_epochs: u32,
+    },
+    /// Point frequency query for one item.
+    Point {
+        /// Item to look up.
+        item: u64,
+        /// 0 = landmark; else windowed width in epochs.
+        window_epochs: u32,
+    },
+    /// k-majority query (`f̂ > n/k`).
+    KMajority {
+        /// The k in k-majority.
+        k: u64,
+        /// 0 = landmark; else windowed width in epochs.
+        window_epochs: u32,
+    },
+    /// Server-side counter snapshot request.
+    Stats,
+    /// Top-k answer.
+    TopKResult {
+        /// Stream coverage of the answer.
+        n: u64,
+        /// Error bound every counter honors.
+        epsilon: u64,
+        /// The heavy hitters, descending by count.
+        counters: Vec<WireCounter>,
+    },
+    /// Point answer.
+    PointResult {
+        /// Upper-bound estimate `f̂`.
+        estimate: u64,
+        /// Guaranteed lower bound.
+        guaranteed: u64,
+        /// Whether the item held a counter.
+        monitored: bool,
+        /// Stream coverage of the answer.
+        n: u64,
+    },
+    /// k-majority answer, split per the paper.
+    KMajorityResult {
+        /// Stream coverage of the answer.
+        n: u64,
+        /// Error bound of the report.
+        epsilon: u64,
+        /// Lower bound clears the threshold: true positives.
+        guaranteed: Vec<WireCounter>,
+        /// Estimate clears it, lower bound does not: candidates.
+        possible: Vec<WireCounter>,
+    },
+    /// Server counters.
+    StatsResult(WireStats),
+    /// Hello accepted; carries the server's protocol version.
+    HelloOk {
+        /// Server protocol version.
+        version: u16,
+    },
+    /// Admin: drain and stop the server (query role).
+    Shutdown,
+    /// Shutdown request acknowledged; the server is draining.
+    ShutdownAck,
+    /// Typed failure; the server closes the connection after sending.
+    Error {
+        /// Machine-readable code.
+        code: ErrorCode,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+/// Why a hello or frame failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Stream ended mid-hello or mid-frame.
+    Truncated,
+    /// Hello magic mismatch.
+    BadMagic(u32),
+    /// Hello version unsupported.
+    BadVersion(u16),
+    /// Hello role byte invalid.
+    BadRole(u8),
+    /// Zero-length frame (no kind byte).
+    EmptyFrame,
+    /// Unknown frame kind byte.
+    UnknownKind(u8),
+    /// Body length inconsistent with the frame kind.
+    BadLength {
+        /// Offending kind byte.
+        kind: u8,
+        /// Body length received.
+        len: usize,
+    },
+    /// Frame length over [`MAX_FRAME_LEN`].
+    FrameTooLarge(u32),
+    /// Declared ingest mass over [`MAX_FRAME_MASS`] (or u64 overflow).
+    MassTooLarge(u64),
+    /// Error-frame message is not UTF-8.
+    BadUtf8,
+    /// Underlying socket error.
+    Io(std::io::ErrorKind),
+}
+
+impl ProtoError {
+    /// The wire error code a server should answer this failure with.
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            ProtoError::BadMagic(_) => ErrorCode::BadMagic,
+            ProtoError::BadVersion(_) => ErrorCode::BadVersion,
+            ProtoError::FrameTooLarge(_) | ProtoError::MassTooLarge(_) => ErrorCode::TooLarge,
+            _ => ErrorCode::Malformed,
+        }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Truncated => write!(f, "stream truncated mid-frame"),
+            ProtoError::BadMagic(m) => write!(f, "bad magic {m:#010x} (want {MAGIC:#010x})"),
+            ProtoError::BadVersion(v) => write!(f, "unsupported version {v} (want {VERSION})"),
+            ProtoError::BadRole(r) => write!(f, "invalid role byte {r}"),
+            ProtoError::EmptyFrame => write!(f, "zero-length frame"),
+            ProtoError::UnknownKind(k) => write!(f, "unknown frame kind {k:#04x}"),
+            ProtoError::BadLength { kind, len } => {
+                write!(f, "bad body length {len} for frame kind {kind:#04x}")
+            }
+            ProtoError::FrameTooLarge(l) => {
+                write!(f, "frame length {l} over cap {MAX_FRAME_LEN}")
+            }
+            ProtoError::MassTooLarge(m) => {
+                write!(f, "ingest mass {m} over cap {MAX_FRAME_MASS}")
+            }
+            ProtoError::BadUtf8 => write!(f, "error message is not UTF-8"),
+            ProtoError::Io(k) => write!(f, "io error: {k:?}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ProtoError::Truncated
+        } else {
+            ProtoError::Io(e.kind())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian body readers (all bounds-checked, never panic).
+
+fn take_u64(body: &[u8], off: usize) -> Option<u64> {
+    body.get(off..off + 8)
+        .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+fn take_u32(body: &[u8], off: usize) -> Option<u32> {
+    body.get(off..off + 4)
+        .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+fn take_u16(body: &[u8], off: usize) -> Option<u16> {
+    body.get(off..off + 2)
+        .map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+}
+
+fn counters_bytes(counters: &[WireCounter], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(counters.len() as u32).to_le_bytes());
+    for c in counters {
+        out.extend_from_slice(&c.item.to_le_bytes());
+        out.extend_from_slice(&c.count.to_le_bytes());
+        out.extend_from_slice(&c.err.to_le_bytes());
+    }
+}
+
+fn read_counters(kind: u8, body: &[u8], off: &mut usize) -> Result<Vec<WireCounter>, ProtoError> {
+    let bad = |len| ProtoError::BadLength { kind, len };
+    let count = take_u32(body, *off).ok_or(bad(body.len()))? as usize;
+    *off += 4;
+    // A counter is 24 bytes; reject declared counts past the body so a
+    // hostile length cannot drive a huge reserve.
+    if count > (body.len() - *off) / 24 {
+        return Err(bad(body.len()));
+    }
+    let mut v = Vec::with_capacity(count);
+    for _ in 0..count {
+        let item = take_u64(body, *off).ok_or(bad(body.len()))?;
+        let count_ = take_u64(body, *off + 8).ok_or(bad(body.len()))?;
+        let err = take_u64(body, *off + 16).ok_or(bad(body.len()))?;
+        *off += 24;
+        v.push(WireCounter { item, count: count_, err });
+    }
+    Ok(v)
+}
+
+impl Frame {
+    /// The frame's wire kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::IngestItems { .. } => kind::INGEST_ITEMS,
+            Frame::IngestRuns { .. } => kind::INGEST_RUNS,
+            Frame::IngestAck { .. } => kind::INGEST_ACK,
+            Frame::TopK { .. } => kind::TOP_K,
+            Frame::Point { .. } => kind::POINT,
+            Frame::KMajority { .. } => kind::K_MAJORITY,
+            Frame::Stats => kind::STATS,
+            Frame::TopKResult { .. } => kind::TOP_K_RESULT,
+            Frame::PointResult { .. } => kind::POINT_RESULT,
+            Frame::KMajorityResult { .. } => kind::K_MAJORITY_RESULT,
+            Frame::StatsResult(_) => kind::STATS_RESULT,
+            Frame::HelloOk { .. } => kind::HELLO_OK,
+            Frame::Shutdown => kind::SHUTDOWN,
+            Frame::ShutdownAck => kind::SHUTDOWN_ACK,
+            Frame::Error { .. } => kind::ERROR,
+        }
+    }
+
+    /// Append this frame's wire image (`len | kind | body`) to `out`.
+    /// The buffer is reusable across frames; steady-state encoding
+    /// allocates nothing once it has grown to the working frame size.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.extend_from_slice(&[0u8; 4]); // len placeholder
+        out.push(self.kind());
+        match self {
+            Frame::IngestItems { seq, items } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                for it in items {
+                    out.extend_from_slice(&it.to_le_bytes());
+                }
+            }
+            Frame::IngestRuns { seq, runs } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                for (item, weight) in runs {
+                    out.extend_from_slice(&item.to_le_bytes());
+                    out.extend_from_slice(&weight.to_le_bytes());
+                }
+            }
+            Frame::IngestAck { seq, items } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.extend_from_slice(&items.to_le_bytes());
+            }
+            Frame::TopK { m, window_epochs } => {
+                out.extend_from_slice(&m.to_le_bytes());
+                out.extend_from_slice(&window_epochs.to_le_bytes());
+            }
+            Frame::Point { item, window_epochs } => {
+                out.extend_from_slice(&item.to_le_bytes());
+                out.extend_from_slice(&window_epochs.to_le_bytes());
+            }
+            Frame::KMajority { k, window_epochs } => {
+                out.extend_from_slice(&k.to_le_bytes());
+                out.extend_from_slice(&window_epochs.to_le_bytes());
+            }
+            Frame::Stats | Frame::Shutdown | Frame::ShutdownAck => {}
+            Frame::TopKResult { n, epsilon, counters } => {
+                out.extend_from_slice(&n.to_le_bytes());
+                out.extend_from_slice(&epsilon.to_le_bytes());
+                counters_bytes(counters, out);
+            }
+            Frame::PointResult { estimate, guaranteed, monitored, n } => {
+                out.extend_from_slice(&estimate.to_le_bytes());
+                out.extend_from_slice(&guaranteed.to_le_bytes());
+                out.push(u8::from(*monitored));
+                out.extend_from_slice(&n.to_le_bytes());
+            }
+            Frame::KMajorityResult { n, epsilon, guaranteed, possible } => {
+                out.extend_from_slice(&n.to_le_bytes());
+                out.extend_from_slice(&epsilon.to_le_bytes());
+                counters_bytes(guaranteed, out);
+                counters_bytes(possible, out);
+            }
+            Frame::StatsResult(s) => {
+                for v in [
+                    s.items,
+                    s.chunks,
+                    s.buffers_recycled,
+                    s.backpressure_events,
+                    s.epochs_published,
+                    s.ingest_connections,
+                    s.query_connections,
+                    s.proto_errors,
+                ] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::HelloOk { version } => {
+                out.extend_from_slice(&version.to_le_bytes());
+            }
+            Frame::Error { code, message } => {
+                out.extend_from_slice(&code.to_u16().to_le_bytes());
+                out.extend_from_slice(message.as_bytes());
+            }
+        }
+        let len = (out.len() - start - 4) as u32;
+        out[start..start + 4].copy_from_slice(&len.to_le_bytes());
+    }
+
+    /// Encode into a fresh buffer (tests and one-shot senders).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Decode a frame from its kind byte and body. Every failure is a
+    /// typed [`ProtoError`]; no input panics.
+    pub fn decode(kind_byte: u8, body: &[u8]) -> Result<Frame, ProtoError> {
+        let bad = || ProtoError::BadLength { kind: kind_byte, len: body.len() };
+        match kind_byte {
+            kind::INGEST_ITEMS => {
+                if body.len() < 8 || (body.len() - 8) % 8 != 0 {
+                    return Err(bad());
+                }
+                let seq = take_u64(body, 0).ok_or_else(bad)?;
+                let items = body[8..]
+                    .chunks_exact(8)
+                    .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+                    .collect();
+                Ok(Frame::IngestItems { seq, items })
+            }
+            kind::INGEST_RUNS => {
+                if body.len() < 8 || (body.len() - 8) % 16 != 0 {
+                    return Err(bad());
+                }
+                let seq = take_u64(body, 0).ok_or_else(bad)?;
+                let mut runs = Vec::with_capacity((body.len() - 8) / 16);
+                let mut mass = 0u64;
+                for pair in body[8..].chunks_exact(16) {
+                    let item = u64::from_le_bytes(pair[..8].try_into().unwrap());
+                    let weight = u64::from_le_bytes(pair[8..].try_into().unwrap());
+                    mass = mass
+                        .checked_add(weight)
+                        .ok_or(ProtoError::MassTooLarge(u64::MAX))?;
+                    runs.push((item, weight));
+                }
+                if mass > MAX_FRAME_MASS {
+                    return Err(ProtoError::MassTooLarge(mass));
+                }
+                Ok(Frame::IngestRuns { seq, runs })
+            }
+            kind::INGEST_ACK => {
+                if body.len() != 16 {
+                    return Err(bad());
+                }
+                Ok(Frame::IngestAck {
+                    seq: take_u64(body, 0).ok_or_else(bad)?,
+                    items: take_u64(body, 8).ok_or_else(bad)?,
+                })
+            }
+            kind::TOP_K => {
+                if body.len() != 8 {
+                    return Err(bad());
+                }
+                Ok(Frame::TopK {
+                    m: take_u32(body, 0).ok_or_else(bad)?,
+                    window_epochs: take_u32(body, 4).ok_or_else(bad)?,
+                })
+            }
+            kind::POINT => {
+                if body.len() != 12 {
+                    return Err(bad());
+                }
+                Ok(Frame::Point {
+                    item: take_u64(body, 0).ok_or_else(bad)?,
+                    window_epochs: take_u32(body, 8).ok_or_else(bad)?,
+                })
+            }
+            kind::K_MAJORITY => {
+                if body.len() != 12 {
+                    return Err(bad());
+                }
+                Ok(Frame::KMajority {
+                    k: take_u64(body, 0).ok_or_else(bad)?,
+                    window_epochs: take_u32(body, 8).ok_or_else(bad)?,
+                })
+            }
+            kind::STATS => {
+                if !body.is_empty() {
+                    return Err(bad());
+                }
+                Ok(Frame::Stats)
+            }
+            kind::TOP_K_RESULT => {
+                let n = take_u64(body, 0).ok_or_else(bad)?;
+                let epsilon = take_u64(body, 8).ok_or_else(bad)?;
+                let mut off = 16;
+                let counters = read_counters(kind_byte, body, &mut off)?;
+                if off != body.len() {
+                    return Err(bad());
+                }
+                Ok(Frame::TopKResult { n, epsilon, counters })
+            }
+            kind::POINT_RESULT => {
+                if body.len() != 25 {
+                    return Err(bad());
+                }
+                Ok(Frame::PointResult {
+                    estimate: take_u64(body, 0).ok_or_else(bad)?,
+                    guaranteed: take_u64(body, 8).ok_or_else(bad)?,
+                    monitored: body[16] != 0,
+                    n: take_u64(body, 17).ok_or_else(bad)?,
+                })
+            }
+            kind::K_MAJORITY_RESULT => {
+                let n = take_u64(body, 0).ok_or_else(bad)?;
+                let epsilon = take_u64(body, 8).ok_or_else(bad)?;
+                let mut off = 16;
+                let guaranteed = read_counters(kind_byte, body, &mut off)?;
+                let possible = read_counters(kind_byte, body, &mut off)?;
+                if off != body.len() {
+                    return Err(bad());
+                }
+                Ok(Frame::KMajorityResult { n, epsilon, guaranteed, possible })
+            }
+            kind::STATS_RESULT => {
+                if body.len() != 64 {
+                    return Err(bad());
+                }
+                let f = |i: usize| take_u64(body, i * 8).unwrap();
+                Ok(Frame::StatsResult(WireStats {
+                    items: f(0),
+                    chunks: f(1),
+                    buffers_recycled: f(2),
+                    backpressure_events: f(3),
+                    epochs_published: f(4),
+                    ingest_connections: f(5),
+                    query_connections: f(6),
+                    proto_errors: f(7),
+                }))
+            }
+            kind::HELLO_OK => {
+                if body.len() != 2 {
+                    return Err(bad());
+                }
+                Ok(Frame::HelloOk { version: take_u16(body, 0).ok_or_else(bad)? })
+            }
+            kind::SHUTDOWN => {
+                if !body.is_empty() {
+                    return Err(bad());
+                }
+                Ok(Frame::Shutdown)
+            }
+            kind::SHUTDOWN_ACK => {
+                if !body.is_empty() {
+                    return Err(bad());
+                }
+                Ok(Frame::ShutdownAck)
+            }
+            kind::ERROR => {
+                let code = ErrorCode::from_u16(take_u16(body, 0).ok_or_else(bad)?);
+                let message = std::str::from_utf8(&body[2..])
+                    .map_err(|_| ProtoError::BadUtf8)?
+                    .to_string();
+                Ok(Frame::Error { code, message })
+            }
+            other => Err(ProtoError::UnknownKind(other)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hello handshake.
+
+/// Encode the 8-byte client hello.
+pub fn encode_hello(role: Role) -> [u8; 8] {
+    let mut h = [0u8; 8];
+    h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    h[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    h[6] = role.to_u8();
+    h
+}
+
+/// Read and validate the client hello, returning the declared role.
+pub fn read_hello(r: &mut impl Read) -> Result<Role, ProtoError> {
+    let mut h = [0u8; 8];
+    r.read_exact(&mut h)?;
+    let magic = u32::from_le_bytes(h[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(ProtoError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(h[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(ProtoError::BadVersion(version));
+    }
+    Role::from_u8(h[6])
+}
+
+// ---------------------------------------------------------------------------
+// Stream framing.
+
+/// Read one raw frame (`kind`, body in `scratch`). Returns `Ok(None)`
+/// on a clean EOF *at a frame boundary*; EOF mid-frame is
+/// [`ProtoError::Truncated`]. `scratch` is reused across calls so the
+/// read side allocates nothing in the steady state.
+pub fn read_frame<'a>(
+    r: &mut impl Read,
+    scratch: &'a mut Vec<u8>,
+) -> Result<Option<(u8, &'a [u8])>, ProtoError> {
+    let mut len4 = [0u8; 4];
+    // A clean close before any header byte is a graceful end-of-stream.
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(ProtoError::Truncated)
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len4);
+    if len == 0 {
+        return Err(ProtoError::EmptyFrame);
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(ProtoError::FrameTooLarge(len));
+    }
+    let mut kind_byte = [0u8; 1];
+    r.read_exact(&mut kind_byte)?;
+    scratch.clear();
+    scratch.resize(len as usize - 1, 0);
+    r.read_exact(scratch)?;
+    Ok(Some((kind_byte[0], scratch.as_slice())))
+}
+
+/// Outcome of one [`FrameReader::poll`] call.
+#[derive(Debug)]
+pub enum Poll<'a> {
+    /// A complete frame: `(kind, body)`.
+    Frame(u8, &'a [u8]),
+    /// The read timed out (or would block) with no frame complete; no
+    /// bytes were lost — call again.
+    Pending,
+    /// Clean end of stream at a frame boundary.
+    Eof,
+}
+
+/// A resumable frame reader for sockets with a read timeout.
+///
+/// The server polls connections so idle threads can observe the
+/// shutdown flag, which means a read can time out *mid-frame* (TCP
+/// delivers bytes in arbitrary pieces). A plain `read_exact` loop
+/// would lose the partial bytes it already consumed and desync the
+/// stream; this reader keeps the partial header/body across
+/// [`Poll::Pending`] returns, so timeouts are always safe to retry.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    header: [u8; 4],
+    header_got: usize,
+    /// `kind + body` length once the header parsed; `None` while the
+    /// header is still being read.
+    need: Option<usize>,
+    buf: Vec<u8>,
+    body_got: usize,
+}
+
+impl FrameReader {
+    /// New reader with empty state.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether a frame is partially read (an EOF now would truncate).
+    pub fn mid_frame(&self) -> bool {
+        self.header_got > 0 || self.need.is_some()
+    }
+
+    /// Try to complete one frame from `r`. Timeouts return
+    /// [`Poll::Pending`] without losing progress; a clean close at a
+    /// frame boundary returns [`Poll::Eof`]; a close mid-frame is
+    /// [`ProtoError::Truncated`].
+    pub fn poll(&mut self, r: &mut impl Read) -> Result<Poll<'_>, ProtoError> {
+        // Phase 1: the 4-byte length header.
+        while self.need.is_none() {
+            if self.header_got == 4 {
+                let len = u32::from_le_bytes(self.header);
+                if len == 0 {
+                    return Err(ProtoError::EmptyFrame);
+                }
+                if len > MAX_FRAME_LEN {
+                    return Err(ProtoError::FrameTooLarge(len));
+                }
+                self.need = Some(len as usize);
+                self.buf.clear();
+                self.buf.resize(len as usize, 0);
+                self.body_got = 0;
+                break;
+            }
+            match r.read(&mut self.header[self.header_got..]) {
+                Ok(0) => {
+                    return if self.mid_frame() {
+                        Err(ProtoError::Truncated)
+                    } else {
+                        Ok(Poll::Eof)
+                    };
+                }
+                Ok(n) => self.header_got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(Poll::Pending);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // Phase 2: kind byte + body.
+        let need = self.need.unwrap_or(0);
+        while self.body_got < need {
+            match r.read(&mut self.buf[self.body_got..]) {
+                Ok(0) => return Err(ProtoError::Truncated),
+                Ok(n) => self.body_got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(Poll::Pending);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // Complete: reset state for the next call, then hand out the
+        // borrow (the buffer itself is only cleared on the next
+        // header parse).
+        self.header_got = 0;
+        self.need = None;
+        Ok(Poll::Frame(self.buf[0], &self.buf[1..]))
+    }
+}
+
+/// Encode and write one frame through `buf` (reused; no steady-state
+/// allocation), then flush.
+pub fn write_frame(
+    w: &mut impl Write,
+    frame: &Frame,
+    buf: &mut Vec<u8>,
+) -> Result<(), ProtoError> {
+    buf.clear();
+    frame.encode_into(buf);
+    w.write_all(buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy-friendly ingest decoding.
+
+/// Decode an ingest frame body straight into a (recycled) chunk
+/// buffer, returning `(seq, mass)`. [`Frame::IngestItems`] appends the
+/// item array verbatim; [`Frame::IngestRuns`] validates the declared
+/// mass against [`MAX_FRAME_MASS`] *before* expanding the runs, so the
+/// output length is bounded no matter what the peer claims. Non-ingest
+/// kinds return `Ok(None)` so callers can fall back to
+/// [`Frame::decode`].
+pub fn decode_ingest_into(
+    kind_byte: u8,
+    body: &[u8],
+    out: &mut Vec<u64>,
+) -> Result<Option<(u64, u64)>, ProtoError> {
+    let bad = || ProtoError::BadLength { kind: kind_byte, len: body.len() };
+    match kind_byte {
+        kind::INGEST_ITEMS => {
+            if body.len() < 8 || (body.len() - 8) % 8 != 0 {
+                return Err(bad());
+            }
+            let seq = take_u64(body, 0).ok_or_else(bad)?;
+            let mass = ((body.len() - 8) / 8) as u64;
+            if mass > MAX_FRAME_MASS {
+                return Err(ProtoError::MassTooLarge(mass));
+            }
+            out.reserve(mass as usize);
+            for b in body[8..].chunks_exact(8) {
+                out.push(u64::from_le_bytes(b.try_into().unwrap()));
+            }
+            Ok(Some((seq, mass)))
+        }
+        kind::INGEST_RUNS => {
+            if body.len() < 8 || (body.len() - 8) % 16 != 0 {
+                return Err(bad());
+            }
+            let seq = take_u64(body, 0).ok_or_else(bad)?;
+            // Validate the total mass before growing `out` at all.
+            let mut mass = 0u64;
+            for pair in body[8..].chunks_exact(16) {
+                let weight = u64::from_le_bytes(pair[8..].try_into().unwrap());
+                mass = mass
+                    .checked_add(weight)
+                    .ok_or(ProtoError::MassTooLarge(u64::MAX))?;
+            }
+            if mass > MAX_FRAME_MASS {
+                return Err(ProtoError::MassTooLarge(mass));
+            }
+            out.reserve(mass as usize);
+            for pair in body[8..].chunks_exact(16) {
+                let item = u64::from_le_bytes(pair[..8].try_into().unwrap());
+                let weight = u64::from_le_bytes(pair[8..].try_into().unwrap());
+                for _ in 0..weight {
+                    out.push(item);
+                }
+            }
+            Ok(Some((seq, mass)))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Encode a flat item chunk as an `IngestItems` frame appended to
+/// `out` (the reusable wire buffer): the hot-path encoder the ingest
+/// client uses, skipping the `Frame` allocation entirely.
+pub fn encode_items_into(seq: u64, items: &[u64], out: &mut Vec<u8>) {
+    let len = (1 + 8 + 8 * items.len()) as u32;
+    out.extend_from_slice(&len.to_le_bytes());
+    out.push(kind::INGEST_ITEMS);
+    out.extend_from_slice(&seq.to_le_bytes());
+    for it in items {
+        out.extend_from_slice(&it.to_le_bytes());
+    }
+}
+
+/// Encode `(item, weight)` runs as an `IngestRuns` frame appended to
+/// `out`. The caller guarantees Σ weight ≤ [`MAX_FRAME_MASS`] (a chunk
+/// aggregated from ≤ `MAX_FRAME_MASS` items always does).
+pub fn encode_runs_into(seq: u64, runs: &[(u64, u64)], out: &mut Vec<u8>) {
+    let len = (1 + 8 + 16 * runs.len()) as u32;
+    out.extend_from_slice(&len.to_le_bytes());
+    out.push(kind::INGEST_RUNS);
+    out.extend_from_slice(&seq.to_le_bytes());
+    for (item, weight) in runs {
+        out.extend_from_slice(&item.to_le_bytes());
+        out.extend_from_slice(&weight.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        let mut r = std::io::Cursor::new(bytes);
+        let mut scratch = Vec::new();
+        let (k, body) = read_frame(&mut r, &mut scratch).unwrap().unwrap();
+        Frame::decode(k, body).unwrap()
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let frames = [
+            Frame::IngestItems { seq: 7, items: vec![1, 2, 3, u64::MAX] },
+            Frame::IngestRuns { seq: 8, runs: vec![(5, 1000), (9, 1)] },
+            Frame::IngestAck { seq: 7, items: 4 },
+            Frame::TopK { m: 10, window_epochs: 0 },
+            Frame::Point { item: 42, window_epochs: 3 },
+            Frame::KMajority { k: 100, window_epochs: 0 },
+            Frame::Stats,
+            Frame::TopKResult {
+                n: 1000,
+                epsilon: 10,
+                counters: vec![WireCounter { item: 1, count: 500, err: 3 }],
+            },
+            Frame::PointResult { estimate: 9, guaranteed: 4, monitored: true, n: 100 },
+            Frame::KMajorityResult {
+                n: 1000,
+                epsilon: 10,
+                guaranteed: vec![WireCounter { item: 1, count: 900, err: 0 }],
+                possible: vec![WireCounter { item: 2, count: 11, err: 5 }],
+            },
+            Frame::StatsResult(WireStats {
+                items: 1,
+                chunks: 2,
+                buffers_recycled: 3,
+                backpressure_events: 4,
+                epochs_published: 5,
+                ingest_connections: 6,
+                query_connections: 7,
+                proto_errors: 8,
+            }),
+            Frame::HelloOk { version: VERSION },
+            Frame::Shutdown,
+            Frame::ShutdownAck,
+            Frame::Error { code: ErrorCode::Malformed, message: "nope".into() },
+        ];
+        for f in &frames {
+            assert_eq!(&roundtrip(f), f, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn hello_roundtrips_and_rejects() {
+        for role in [Role::Ingest, Role::Query] {
+            let h = encode_hello(role);
+            let mut r = std::io::Cursor::new(h.to_vec());
+            assert_eq!(read_hello(&mut r).unwrap(), role);
+        }
+        // Bad magic.
+        let mut h = encode_hello(Role::Ingest);
+        h[0] ^= 0xFF;
+        assert!(matches!(
+            read_hello(&mut std::io::Cursor::new(h.to_vec())),
+            Err(ProtoError::BadMagic(_))
+        ));
+        // Bad version.
+        let mut h = encode_hello(Role::Ingest);
+        h[4] = 99;
+        assert!(matches!(
+            read_hello(&mut std::io::Cursor::new(h.to_vec())),
+            Err(ProtoError::BadVersion(99))
+        ));
+        // Bad role.
+        let mut h = encode_hello(Role::Ingest);
+        h[6] = 7;
+        assert!(matches!(
+            read_hello(&mut std::io::Cursor::new(h.to_vec())),
+            Err(ProtoError::BadRole(7))
+        ));
+        // Truncated hello.
+        assert!(matches!(
+            read_hello(&mut std::io::Cursor::new(vec![1, 2, 3])),
+            Err(ProtoError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn clean_eof_vs_truncation() {
+        let mut scratch = Vec::new();
+        // Empty stream: clean end.
+        let mut r = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut r, &mut scratch).unwrap().is_none());
+        // One whole frame then EOF: frame, then clean end.
+        let bytes = Frame::Stats.encode();
+        let mut r = std::io::Cursor::new(bytes.clone());
+        assert!(read_frame(&mut r, &mut scratch).unwrap().is_some());
+        assert!(read_frame(&mut r, &mut scratch).unwrap().is_none());
+        // Cut mid-header and mid-body: truncation, not a panic.
+        for cut in 1..bytes.len() {
+            let mut r = std::io::Cursor::new(bytes[..cut].to_vec());
+            assert_eq!(
+                read_frame(&mut r, &mut scratch).unwrap_err(),
+                ProtoError::Truncated,
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_and_empty_frames_rejected() {
+        let mut scratch = Vec::new();
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        bytes.push(kind::STATS);
+        let mut r = std::io::Cursor::new(bytes);
+        assert!(matches!(
+            read_frame(&mut r, &mut scratch),
+            Err(ProtoError::FrameTooLarge(_))
+        ));
+        let mut r = std::io::Cursor::new(0u32.to_le_bytes().to_vec());
+        assert_eq!(read_frame(&mut r, &mut scratch).unwrap_err(), ProtoError::EmptyFrame);
+    }
+
+    #[test]
+    fn runs_mass_cap_enforced_before_expansion() {
+        // A 32-byte frame claiming u64::MAX mass must be rejected
+        // without growing the output buffer.
+        let f = Frame::IngestRuns { seq: 1, runs: vec![(3, MAX_FRAME_MASS + 1)] };
+        let bytes = f.encode();
+        let mut out = Vec::new();
+        let err = decode_ingest_into(bytes[4], &bytes[5..], &mut out).unwrap_err();
+        assert!(matches!(err, ProtoError::MassTooLarge(_)));
+        assert!(out.is_empty(), "no expansion before validation");
+        // Overflowing sums are caught too.
+        let f = Frame::IngestRuns { seq: 1, runs: vec![(3, u64::MAX), (4, 2)] };
+        let bytes = f.encode();
+        assert!(matches!(
+            decode_ingest_into(bytes[4], &bytes[5..], &mut out),
+            Err(ProtoError::MassTooLarge(_))
+        ));
+        // Frame::decode applies the same cap.
+        assert!(matches!(
+            Frame::decode(bytes[4], &bytes[5..]),
+            Err(ProtoError::MassTooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn ingest_decode_into_expands_runs() {
+        let mut out = vec![99]; // pre-existing content is preserved
+        let f = Frame::IngestRuns { seq: 5, runs: vec![(7, 3), (8, 1)] };
+        let bytes = f.encode();
+        let (seq, mass) = decode_ingest_into(bytes[4], &bytes[5..], &mut out)
+            .unwrap()
+            .unwrap();
+        assert_eq!((seq, mass), (5, 4));
+        assert_eq!(out, vec![99, 7, 7, 7, 8]);
+
+        let mut out = Vec::new();
+        let mut wire = Vec::new();
+        encode_items_into(9, &[4, 5, 6], &mut wire);
+        let mut r = std::io::Cursor::new(wire);
+        let mut scratch = Vec::new();
+        let (k, body) = read_frame(&mut r, &mut scratch).unwrap().unwrap();
+        let (seq, mass) = decode_ingest_into(k, body, &mut out).unwrap().unwrap();
+        assert_eq!((seq, mass), (9, 3));
+        assert_eq!(out, vec![4, 5, 6]);
+
+        // Non-ingest frames pass through untouched.
+        let bytes = Frame::Stats.encode();
+        assert!(decode_ingest_into(bytes[4], &bytes[5..], &mut out)
+            .unwrap()
+            .is_none());
+        assert_eq!(out, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn hot_path_encoders_match_frame_encoding() {
+        let mut wire = Vec::new();
+        encode_items_into(3, &[10, 20], &mut wire);
+        assert_eq!(wire, Frame::IngestItems { seq: 3, items: vec![10, 20] }.encode());
+        wire.clear();
+        encode_runs_into(4, &[(10, 2)], &mut wire);
+        assert_eq!(wire, Frame::IngestRuns { seq: 4, runs: vec![(10, 2)] }.encode());
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_errors() {
+        // Wrong body sizes for fixed-size frames.
+        for (k, len) in [
+            (kind::INGEST_ACK, 15),
+            (kind::TOP_K, 7),
+            (kind::POINT, 11),
+            (kind::K_MAJORITY, 0),
+            (kind::STATS, 1),
+            (kind::POINT_RESULT, 24),
+            (kind::STATS_RESULT, 63),
+            (kind::HELLO_OK, 3),
+            (kind::SHUTDOWN, 2),
+        ] {
+            let body = vec![0u8; len];
+            assert!(
+                matches!(Frame::decode(k, &body), Err(ProtoError::BadLength { .. })),
+                "kind {k:#04x} len {len}"
+            );
+        }
+        // Unknown kind.
+        assert!(matches!(
+            Frame::decode(0x77, &[]),
+            Err(ProtoError::UnknownKind(0x77))
+        ));
+        // Counter list length lying past the body.
+        let mut body = vec![0u8; 16];
+        body.extend_from_slice(&1000u32.to_le_bytes());
+        assert!(matches!(
+            Frame::decode(kind::TOP_K_RESULT, &body),
+            Err(ProtoError::BadLength { .. })
+        ));
+        // Non-UTF8 error message.
+        let mut body = 3u16.to_le_bytes().to_vec();
+        body.extend_from_slice(&[0xFF, 0xFE]);
+        assert_eq!(Frame::decode(kind::ERROR, &body).unwrap_err(), ProtoError::BadUtf8);
+    }
+
+    /// A reader that yields one byte, then `WouldBlock`, alternating —
+    /// the worst-case fragmentation a timed-out socket can produce.
+    struct Dribble {
+        data: Vec<u8>,
+        pos: usize,
+        starve: bool,
+    }
+
+    impl std::io::Read for Dribble {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            self.starve = !self.starve;
+            if self.starve {
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            out[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_timeouts_mid_frame() {
+        let mut wire = Frame::IngestAck { seq: 3, items: 64 }.encode();
+        wire.extend(Frame::Stats.encode());
+        let mut r = Dribble { data: wire, pos: 0, starve: false };
+        let mut fr = FrameReader::new();
+        let mut got = Vec::new();
+        loop {
+            match fr.poll(&mut r).unwrap() {
+                Poll::Frame(k, body) => got.push(Frame::decode(k, body).unwrap()),
+                Poll::Pending => continue,
+                Poll::Eof => break,
+            }
+        }
+        assert_eq!(
+            got,
+            vec![Frame::IngestAck { seq: 3, items: 64 }, Frame::Stats]
+        );
+    }
+
+    #[test]
+    fn frame_reader_flags_truncation_and_boundaries() {
+        // EOF mid-frame is truncation, not a clean end.
+        let wire = Frame::Stats.encode();
+        for cut in 1..wire.len() {
+            let mut r = std::io::Cursor::new(wire[..cut].to_vec());
+            let mut fr = FrameReader::new();
+            loop {
+                match fr.poll(&mut r) {
+                    Ok(Poll::Pending) => continue,
+                    Ok(other) => panic!("cut {cut}: unexpected {other:?}"),
+                    Err(e) => {
+                        assert_eq!(e, ProtoError::Truncated, "cut {cut}");
+                        break;
+                    }
+                }
+            }
+        }
+        // mid_frame reporting.
+        let mut fr = FrameReader::new();
+        assert!(!fr.mid_frame());
+        let mut r = std::io::Cursor::new(wire[..2].to_vec());
+        while !matches!(fr.poll(&mut r), Err(ProtoError::Truncated)) {}
+        // Oversized frames rejected at the header.
+        let mut fr = FrameReader::new();
+        let mut bytes = (MAX_FRAME_LEN + 1).to_le_bytes().to_vec();
+        bytes.push(kind::STATS);
+        let mut r = std::io::Cursor::new(bytes);
+        assert!(matches!(
+            fr.poll(&mut r),
+            Err(ProtoError::FrameTooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::BadMagic,
+            ErrorCode::BadVersion,
+            ErrorCode::Malformed,
+            ErrorCode::TooLarge,
+            ErrorCode::WrongRole,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Overloaded,
+            ErrorCode::WindowUnavailable,
+            ErrorCode::Unknown(999),
+        ] {
+            assert_eq!(ErrorCode::from_u16(code.to_u16()), code);
+        }
+    }
+}

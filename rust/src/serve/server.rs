@@ -1,0 +1,1077 @@
+//! The network-facing `pss` service: socket ingest + socket queries
+//! over one [`Coordinator`] session.
+//!
+//! ```text
+//!             ┌────────────────────── serve::Server ──────────────────────┐
+//!  ingest ────┤ conn thread ──┐                                           │
+//!  ingest ────┤ conn thread ──┼─▶ Mutex<Coordinator> ─▶ SPSC rings ─▶ shards
+//!  (hello:    │   (decode     │      (take_buffer +        │              │
+//!   ingest)   │    outside    │       try_push, short      ▼              │
+//!             │    the lock)  │       critical section)  epoch Arcs       │
+//!             │               │                            │              │
+//!  query  ────┤ reader pool ──┴────────────────────────────┴─▶ answers    │
+//!  (hello:    │   (QueryEngine / WindowedQueryEngine clones — never      │
+//!   query)    │    touches the coordinator mutex: readers don't block    │
+//!             │    writers, writers don't block readers)                 │
+//!             └────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! **Connection = producer.** Each ingest connection gets a dedicated
+//! thread that owns its socket and decodes frames *outside* the
+//! coordinator lock: it borrows a recycled chunk buffer
+//! ([`Coordinator::take_buffer`], one short lock), expands the frame
+//! into it, then routes it with [`Coordinator::try_push`] (second
+//! short lock, released between backpressure retries so one slow shard
+//! never convoys every other connection). One ingest frame becomes
+//! exactly one coordinator chunk, and consumed buffers flow back
+//! through the free rings — the zero-alloc ingest steady state
+//! survives the socket hop ([`IngestStats::buffers_recycled`] keeps
+//! counting on the socket path).
+//!
+//! **Queries never wait on ingest.** Query connections are served by a
+//! small fixed reader pool holding [`QueryEngine`] /
+//! [`WindowedQueryEngine`] clones. Those answer from the epoch
+//! snapshots (atomically-swapped `Arc`s), so query fan-out is
+//! embarrassingly parallel and completely decoupled from the ingest
+//! mutex.
+//!
+//! **Shutdown protocol.** [`Server::request_shutdown`] (or a wire
+//! [`Frame::Shutdown`] from a query connection) flips one flag; the
+//! accept loop stops accepting, every connection thread finishes the
+//! frame it is mid-way through (the resumable [`FrameReader`] makes
+//! the poll loop timeout-safe), answers in-flight ingest with a final
+//! ack, tells peers `ShuttingDown`, and exits; [`Server::finish`]
+//! joins them all, then drains the coordinator
+//! ([`Coordinator::finish`]) for the final merged summary. Connections
+//! that die mid-frame, send garbage, or overflow the frame caps are
+//! answered with a typed [`Frame::Error`] and closed *individually* —
+//! one bad peer never poisons the listener, the pool, or another
+//! connection.
+//!
+//! [`IngestStats::buffers_recycled`]: crate::coordinator::IngestStats::buffers_recycled
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, PushError, QueryResult};
+use crate::query::QueryEngine;
+use crate::window::WindowedQueryEngine;
+
+use super::proto::{
+    read_hello, write_frame, decode_ingest_into, ErrorCode, Frame, FrameReader, Poll,
+    ProtoError, Role, WireCounter, WireStats, VERSION,
+};
+
+/// Where the server listens (or a client connects).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP, `host:port` (port 0 binds an ephemeral port).
+    Tcp(String),
+    /// Unix domain socket at this path (unix targets only).
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Connect a client stream to this endpoint.
+    pub fn connect(&self) -> std::io::Result<AnyStream> {
+        match self {
+            Endpoint::Tcp(addr) => TcpStream::connect(addr.as_str()).map(AnyStream::Tcp),
+            #[cfg(unix)]
+            Endpoint::Unix(path) => UnixStream::connect(path).map(AnyStream::Unix),
+            #[cfg(not(unix))]
+            Endpoint::Unix(_) => Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "unix sockets are not available on this target",
+            )),
+        }
+    }
+}
+
+impl std::str::FromStr for Endpoint {
+    type Err = String;
+
+    /// `unix:/path`, `tcp:host:port`, a bare `/path` (unix) or a bare
+    /// `host:port` (tcp).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            return Ok(Endpoint::Unix(PathBuf::from(path)));
+        }
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            return Ok(Endpoint::Tcp(addr.to_string()));
+        }
+        if s.starts_with('/') || s.starts_with("./") {
+            return Ok(Endpoint::Unix(PathBuf::from(s)));
+        }
+        if s.contains(':') {
+            return Ok(Endpoint::Tcp(s.to_string()));
+        }
+        Err(format!(
+            "unrecognized endpoint '{s}' (want unix:/path, tcp:host:port, /path or host:port)"
+        ))
+    }
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Tcp(a) => write!(f, "tcp:{a}"),
+            Endpoint::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// A connected stream over either transport. Cloning duplicates the OS
+/// handle (shared offset), which is how the ingest client splits its
+/// writer and ack-reader halves.
+#[derive(Debug)]
+pub enum AnyStream {
+    /// TCP connection.
+    Tcp(TcpStream),
+    /// Unix-socket connection (unix targets only).
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl AnyStream {
+    /// Duplicate the OS handle.
+    pub fn try_clone(&self) -> std::io::Result<AnyStream> {
+        match self {
+            AnyStream::Tcp(s) => s.try_clone().map(AnyStream::Tcp),
+            #[cfg(unix)]
+            AnyStream::Unix(s) => s.try_clone().map(AnyStream::Unix),
+        }
+    }
+
+    /// Set the read timeout (None = blocking).
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            AnyStream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            AnyStream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Set the write timeout (None = blocking).
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            AnyStream::Tcp(s) => s.set_write_timeout(d),
+            #[cfg(unix)]
+            AnyStream::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+
+    /// Half- or full-close the connection.
+    pub fn shutdown(&self, how: std::net::Shutdown) -> std::io::Result<()> {
+        match self {
+            AnyStream::Tcp(s) => s.shutdown(how),
+            #[cfg(unix)]
+            AnyStream::Unix(s) => s.shutdown(how),
+        }
+    }
+}
+
+impl Read for AnyStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            AnyStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            AnyStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for AnyStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            AnyStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            AnyStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            AnyStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            AnyStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum AnyListener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl AnyListener {
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            AnyListener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            AnyListener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<AnyStream> {
+        match self {
+            AnyListener::Tcp(l) => l.accept().map(|(s, _)| AnyStream::Tcp(s)),
+            #[cfg(unix)]
+            AnyListener::Unix(l) => l.accept().map(|(s, _)| AnyStream::Unix(s)),
+        }
+    }
+}
+
+/// Server configuration: the coordinator session plus the service
+/// shape around it.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// The coordinator session (shards, k, routing, transport,
+    /// structure, batch ingest, epoch cadence, delta ring — everything
+    /// is selectable over the wire path).
+    pub coordinator: CoordinatorConfig,
+    /// Query reader pool size.
+    pub query_threads: usize,
+    /// Maximum concurrent ingest connections; excess connections are
+    /// answered `Overloaded` and closed.
+    pub max_ingest: usize,
+    /// Socket poll granularity: how long an idle connection thread
+    /// blocks in a read before re-checking the shutdown flag.
+    pub poll: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            coordinator: CoordinatorConfig::default(),
+            query_threads: 2,
+            max_ingest: 64,
+            poll: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Shared state between the accept loop, connection threads, the
+/// query pool and the handle.
+struct Shared {
+    coord: Mutex<Option<Coordinator>>,
+    engine: QueryEngine,
+    windows: Option<WindowedQueryEngine>,
+    k_majority: u64,
+    shutdown: AtomicBool,
+    poll: Duration,
+    max_ingest: usize,
+    ingest_active: AtomicUsize,
+    ingest_conns: AtomicU64,
+    query_conns: AtomicU64,
+    frames_in: AtomicU64,
+    proto_errors: AtomicU64,
+}
+
+impl Shared {
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Wire-visible counter snapshot (one brief coordinator lock).
+    fn wire_stats(&self) -> WireStats {
+        let (items, chunks, recycled, backpressure) = {
+            let guard = self.coord.lock().expect("coordinator lock");
+            match guard.as_ref() {
+                Some(c) => {
+                    let s = c.stats();
+                    (s.items, s.chunks, s.buffers_recycled, s.backpressure_events)
+                }
+                None => (0, 0, 0, 0),
+            }
+        };
+        WireStats {
+            items,
+            chunks,
+            buffers_recycled: recycled,
+            backpressure_events: backpressure,
+            epochs_published: self.engine.registry().epochs_published(),
+            ingest_connections: self.ingest_conns.load(Ordering::Relaxed),
+            query_connections: self.query_conns.load(Ordering::Relaxed),
+            proto_errors: self.proto_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Service-layer statistics reported by [`Server::finish`] alongside
+/// the coordinator's [`QueryResult`].
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Ingest connections accepted over the server's lifetime.
+    pub ingest_connections: u64,
+    /// Query connections accepted over the server's lifetime.
+    pub query_connections: u64,
+    /// Frames received (both roles).
+    pub frames: u64,
+    /// Connections terminated with a protocol error.
+    pub proto_errors: u64,
+}
+
+/// A running `pss` server. Bind with [`Server::bind`], stop with
+/// [`Server::request_shutdown`] (or a wire [`Frame::Shutdown`]), then
+/// collect the drained session with [`Server::finish`].
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    pool: Vec<JoinHandle<()>>,
+    endpoint: Endpoint,
+    /// Unix-socket path to unlink on finish.
+    unix_path: Option<PathBuf>,
+}
+
+impl Server {
+    /// Bind the listener, spawn the coordinator session, the accept
+    /// loop and the query pool. For TCP with port 0, the returned
+    /// server's [`Server::endpoint`] carries the resolved port.
+    pub fn bind(endpoint: &Endpoint, cfg: ServeConfig) -> crate::Result<Server> {
+        anyhow::ensure!(cfg.query_threads >= 1, "query_threads must be >= 1");
+        anyhow::ensure!(cfg.max_ingest >= 1, "max_ingest must be >= 1");
+        let (listener, endpoint, unix_path) = match endpoint {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+                let actual = l.local_addr()?;
+                (AnyListener::Tcp(l), Endpoint::Tcp(actual.to_string()), None)
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                // A stale socket file from a dead server blocks the
+                // bind; remove it (connect-refused is the live check a
+                // production server would do — this is a demo service).
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .map_err(|e| anyhow::anyhow!("bind {}: {e}", path.display()))?;
+                (
+                    AnyListener::Unix(l),
+                    Endpoint::Unix(path.clone()),
+                    Some(path.clone()),
+                )
+            }
+            #[cfg(not(unix))]
+            Endpoint::Unix(p) => {
+                anyhow::bail!("unix endpoint {} unsupported on this target", p.display())
+            }
+        };
+        listener.set_nonblocking(true)?;
+
+        let k_majority = cfg.coordinator.k_majority;
+        let (coord, engine) = Coordinator::spawn(cfg.coordinator.clone());
+        let windows = coord.windows();
+        let shared = Arc::new(Shared {
+            coord: Mutex::new(Some(coord)),
+            engine,
+            windows,
+            k_majority,
+            shutdown: AtomicBool::new(false),
+            poll: cfg.poll,
+            max_ingest: cfg.max_ingest,
+            ingest_active: AtomicUsize::new(0),
+            ingest_conns: AtomicU64::new(0),
+            query_conns: AtomicU64::new(0),
+            frames_in: AtomicU64::new(0),
+            proto_errors: AtomicU64::new(0),
+        });
+
+        // Query pool: fixed worker threads pulling accepted query
+        // connections off a shared channel.
+        let (query_tx, query_rx) = channel::<AnyStream>();
+        let query_rx = Arc::new(Mutex::new(query_rx));
+        let pool = (0..cfg.query_threads)
+            .map(|i| {
+                let shared = shared.clone();
+                let rx = query_rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("pss-query-{i}"))
+                    .spawn(move || query_worker(&shared, &rx))
+                    .expect("spawn query worker")
+            })
+            .collect();
+
+        let conn_threads = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let conn_threads = conn_threads.clone();
+            std::thread::Builder::new()
+                .name("pss-accept".into())
+                .spawn(move || accept_loop(&listener, &shared, &conn_threads, &query_tx))
+                .expect("spawn accept loop")
+        };
+
+        Ok(Server {
+            shared,
+            accept: Some(accept),
+            conn_threads,
+            pool,
+            endpoint,
+            unix_path,
+        })
+    }
+
+    /// The bound endpoint (TCP port resolved).
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    /// In-process live query handle over the same epoch snapshots the
+    /// wire queries answer from.
+    pub fn queries(&self) -> QueryEngine {
+        self.shared.engine.clone()
+    }
+
+    /// In-process windowed query handle (`Some` iff the session runs a
+    /// delta ring).
+    pub fn windows(&self) -> Option<WindowedQueryEngine> {
+        self.shared.windows.clone()
+    }
+
+    /// Begin the drain: stop accepting, let connections finish their
+    /// in-flight frames and close.
+    pub fn request_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+    }
+
+    /// Whether a shutdown (handle- or wire-initiated) is in progress.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutting_down()
+    }
+
+    /// Block until shutdown is requested (wire `Shutdown` frame or
+    /// another handle), or until `max` elapses — at which point the
+    /// shutdown is initiated here.
+    pub fn wait_shutdown(&self, max: Option<Duration>) {
+        let deadline = max.map(|d| Instant::now() + d);
+        while !self.shared.shutting_down() {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                self.request_shutdown();
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// Drain and stop: joins the accept loop, every connection thread
+    /// and the query pool, then finishes the coordinator session.
+    /// Returns the final merged [`QueryResult`] plus service counters.
+    pub fn finish(mut self) -> (QueryResult, ServeStats) {
+        self.request_shutdown();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // The accept loop has exited, so no new connection threads can
+        // appear; join what is there.
+        let handles = {
+            let mut guard = self.conn_threads.lock().expect("conn threads lock");
+            std::mem::take(&mut *guard)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        for h in self.pool.drain(..) {
+            let _ = h.join();
+        }
+        let coord = self
+            .shared
+            .coord
+            .lock()
+            .expect("coordinator lock")
+            .take()
+            .expect("server finished twice");
+        let result = coord.finish();
+        if let Some(path) = self.unix_path.take() {
+            let _ = std::fs::remove_file(path);
+        }
+        let stats = ServeStats {
+            ingest_connections: self.shared.ingest_conns.load(Ordering::Relaxed),
+            query_connections: self.shared.query_conns.load(Ordering::Relaxed),
+            frames: self.shared.frames_in.load(Ordering::Relaxed),
+            proto_errors: self.shared.proto_errors.load(Ordering::Relaxed),
+        };
+        (result, stats)
+    }
+}
+
+/// Accept until shutdown. Each accepted stream gets a greeter thread
+/// that validates the hello and becomes the ingest handler (ingest
+/// role) or hands the stream to the query pool (query role) — so a
+/// peer that connects and stalls mid-hello never blocks the accept
+/// loop.
+fn accept_loop(
+    listener: &AnyListener,
+    shared: &Arc<Shared>,
+    conn_threads: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    query_tx: &Sender<AnyStream>,
+) {
+    while !shared.shutting_down() {
+        match listener.accept() {
+            Ok(stream) => {
+                let shared = shared.clone();
+                let query_tx = query_tx.clone();
+                let handle = std::thread::Builder::new()
+                    .name("pss-conn".into())
+                    .spawn(move || greet(stream, &shared, &query_tx))
+                    .expect("spawn connection thread");
+                let mut guard = conn_threads.lock().expect("conn threads lock");
+                // Reap finished handlers so a long session with many
+                // reconnects does not accumulate join handles.
+                let (done, live): (Vec<_>, Vec<_>) =
+                    guard.drain(..).partition(|h| h.is_finished());
+                for h in done {
+                    let _ = h.join();
+                }
+                *guard = live;
+                guard.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break, // listener gone
+        }
+    }
+}
+
+fn send_error(stream: &mut AnyStream, wire: &mut Vec<u8>, code: ErrorCode, message: String) {
+    let _ = write_frame(stream, &Frame::Error { code, message }, wire);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Validate the hello and dispatch the connection by role.
+fn greet(mut stream: AnyStream, shared: &Arc<Shared>, query_tx: &Sender<AnyStream>) {
+    let mut wire = Vec::new();
+    // A peer gets 5 seconds to say hello; write side is bounded so a
+    // peer that never reads cannot pin this thread forever.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let role = match read_hello(&mut stream) {
+        Ok(role) => role,
+        Err(e) => {
+            shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+            send_error(&mut stream, &mut wire, e.code(), e.to_string());
+            return;
+        }
+    };
+    if shared.shutting_down() {
+        send_error(
+            &mut stream,
+            &mut wire,
+            ErrorCode::ShuttingDown,
+            "server is draining".into(),
+        );
+        return;
+    }
+    if write_frame(&mut stream, &Frame::HelloOk { version: VERSION }, &mut wire).is_err() {
+        return;
+    }
+    // From here the connection polls so it can observe shutdown.
+    let _ = stream.set_read_timeout(Some(shared.poll));
+    match role {
+        Role::Ingest => {
+            if shared.ingest_active.fetch_add(1, Ordering::AcqRel) >= shared.max_ingest {
+                shared.ingest_active.fetch_sub(1, Ordering::AcqRel);
+                send_error(
+                    &mut stream,
+                    &mut wire,
+                    ErrorCode::Overloaded,
+                    format!("ingest connection limit {} reached", shared.max_ingest),
+                );
+                return;
+            }
+            shared.ingest_conns.fetch_add(1, Ordering::Relaxed);
+            ingest_conn(&mut stream, shared, &mut wire);
+            shared.ingest_active.fetch_sub(1, Ordering::AcqRel);
+        }
+        Role::Query => {
+            shared.query_conns.fetch_add(1, Ordering::Relaxed);
+            // Hand off to the pool; if the pool is gone (drain), tell
+            // the peer and close.
+            if query_tx.send(stream).is_err() {
+                // Stream moved into the failed send; nothing to do.
+            }
+        }
+    }
+}
+
+/// One ingest connection: frames → recycled chunk buffers → the
+/// coordinator, acked per frame.
+fn ingest_conn(stream: &mut AnyStream, shared: &Arc<Shared>, wire: &mut Vec<u8>) {
+    let mut reader = FrameReader::new();
+    loop {
+        match reader.poll(stream) {
+            Ok(Poll::Frame(kind, body)) => {
+                shared.frames_in.fetch_add(1, Ordering::Relaxed);
+                // Borrow a recycled chunk buffer (short lock), decode
+                // outside the lock, push (second short lock).
+                let mut chunk = {
+                    let mut guard = shared.coord.lock().expect("coordinator lock");
+                    match guard.as_mut() {
+                        Some(c) => c.take_buffer(),
+                        None => return,
+                    }
+                };
+                match decode_ingest_into(kind, body, &mut chunk) {
+                    Ok(Some((seq, mass))) => {
+                        if !push_with_backpressure(shared, chunk) {
+                            send_error(
+                                stream,
+                                wire,
+                                ErrorCode::ShuttingDown,
+                                "coordinator gone".into(),
+                            );
+                            return;
+                        }
+                        if write_frame(stream, &Frame::IngestAck { seq, items: mass }, wire)
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Ok(None) => {
+                        shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                        send_error(
+                            stream,
+                            wire,
+                            ErrorCode::WrongRole,
+                            format!("frame kind {kind:#04x} not valid on an ingest connection"),
+                        );
+                        return;
+                    }
+                    Err(e) => {
+                        shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                        send_error(stream, wire, e.code(), e.to_string());
+                        return;
+                    }
+                }
+            }
+            Ok(Poll::Pending) => {
+                // Idle between frames: honor the drain. Mid-frame the
+                // peer keeps the right to complete what it started.
+                if shared.shutting_down() && !reader.mid_frame() {
+                    send_error(
+                        stream,
+                        wire,
+                        ErrorCode::ShuttingDown,
+                        "server is draining".into(),
+                    );
+                    return;
+                }
+            }
+            Ok(Poll::Eof) => return, // clean close
+            Err(e) => {
+                shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                send_error(stream, wire, e.code(), e.to_string());
+                return;
+            }
+        }
+    }
+}
+
+/// Route one chunk, releasing the coordinator lock between
+/// backpressure retries so other connections (and buffer reclaim)
+/// stay live while a shard is saturated. Returns false when the
+/// coordinator is gone or a shard worker died.
+fn push_with_backpressure(shared: &Arc<Shared>, chunk: Vec<u64>) -> bool {
+    let mut pending = chunk;
+    loop {
+        let outcome = {
+            let mut guard = shared.coord.lock().expect("coordinator lock");
+            match guard.as_mut() {
+                Some(c) => c.try_push(std::mem::take(&mut pending)),
+                None => return false,
+            }
+        };
+        match outcome {
+            Ok(()) => return true,
+            Err(PushError::Full { chunk, .. }) => {
+                pending = chunk;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(PushError::Disconnected { .. }) => return false,
+        }
+    }
+}
+
+/// One query-pool worker: serve connections off the channel until the
+/// channel closes (accept loop gone) and no connection is in hand.
+fn query_worker(shared: &Arc<Shared>, rx: &Arc<Mutex<Receiver<AnyStream>>>) {
+    loop {
+        let next = {
+            let guard = rx.lock().expect("query rx lock");
+            guard.recv_timeout(shared.poll)
+        };
+        match next {
+            Ok(mut stream) => query_conn(&mut stream, shared),
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.shutting_down() {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn counters_to_wire(counters: &[crate::summary::Counter]) -> Vec<WireCounter> {
+    counters
+        .iter()
+        .map(|c| WireCounter { item: c.item, count: c.count, err: c.err })
+        .collect()
+}
+
+/// Serve one query connection to completion.
+fn query_conn(stream: &mut AnyStream, shared: &Arc<Shared>) {
+    let mut reader = FrameReader::new();
+    let mut wire = Vec::new();
+    loop {
+        match reader.poll(stream) {
+            Ok(Poll::Frame(kind, body)) => {
+                shared.frames_in.fetch_add(1, Ordering::Relaxed);
+                let frame = match Frame::decode(kind, body) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                        send_error(stream, &mut wire, e.code(), e.to_string());
+                        return;
+                    }
+                };
+                let reply = match answer_query(shared, &frame) {
+                    Some(r) => r,
+                    None => {
+                        shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                        send_error(
+                            stream,
+                            &mut wire,
+                            ErrorCode::WrongRole,
+                            format!("frame kind {kind:#04x} not valid on a query connection"),
+                        );
+                        return;
+                    }
+                };
+                let is_shutdown = matches!(reply, Frame::ShutdownAck);
+                if write_frame(stream, &reply, &mut wire).is_err() {
+                    return;
+                }
+                if is_shutdown {
+                    // The drain begins; this connection is done.
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                    return;
+                }
+            }
+            Ok(Poll::Pending) => {
+                if shared.shutting_down() && !reader.mid_frame() {
+                    send_error(
+                        stream,
+                        &mut wire,
+                        ErrorCode::ShuttingDown,
+                        "server is draining".into(),
+                    );
+                    return;
+                }
+            }
+            Ok(Poll::Eof) => return,
+            Err(e) => {
+                shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                send_error(stream, &mut wire, e.code(), e.to_string());
+                return;
+            }
+        }
+    }
+}
+
+/// Answer one query frame from the snapshot engines. `None` marks a
+/// frame that is not a query (role error).
+fn answer_query(shared: &Arc<Shared>, frame: &Frame) -> Option<Frame> {
+    let windowed = |w: u32| -> Result<crate::window::WindowSnapshot, Frame> {
+        match shared.windows.as_ref() {
+            Some(eng) => Ok(eng.window(w as usize)),
+            None => Err(Frame::Error {
+                code: ErrorCode::WindowUnavailable,
+                message: "server runs no delta ring (start with --delta-ring N)".into(),
+            }),
+        }
+    };
+    Some(match *frame {
+        Frame::TopK { m, window_epochs: 0 } => {
+            let snap = shared.engine.snapshot();
+            Frame::TopKResult {
+                n: snap.n(),
+                epsilon: snap.epsilon(),
+                counters: counters_to_wire(&snap.top_k(m as usize)),
+            }
+        }
+        Frame::TopK { m, window_epochs } => match windowed(window_epochs) {
+            Ok(win) => Frame::TopKResult {
+                n: win.n(),
+                epsilon: win.epsilon(),
+                counters: counters_to_wire(&win.top_k(m as usize)),
+            },
+            Err(e) => e,
+        },
+        Frame::Point { item, window_epochs: 0 } => {
+            let p = shared.engine.snapshot().point(item);
+            Frame::PointResult {
+                estimate: p.estimate,
+                guaranteed: p.guaranteed,
+                monitored: p.monitored,
+                n: p.n,
+            }
+        }
+        Frame::Point { item, window_epochs } => match windowed(window_epochs) {
+            Ok(win) => {
+                let p = win.point(item);
+                Frame::PointResult {
+                    estimate: p.estimate,
+                    guaranteed: p.guaranteed,
+                    monitored: p.monitored,
+                    n: p.n,
+                }
+            }
+            Err(e) => e,
+        },
+        Frame::KMajority { k, window_epochs } => {
+            let k = if k < 2 { shared.k_majority } else { k };
+            let report = if window_epochs == 0 {
+                shared.engine.snapshot().k_majority(k)
+            } else {
+                match windowed(window_epochs) {
+                    Ok(win) => win.k_majority(k),
+                    Err(e) => return Some(e),
+                }
+            };
+            Frame::KMajorityResult {
+                n: report.n,
+                epsilon: report.epsilon,
+                guaranteed: counters_to_wire(&report.guaranteed),
+                possible: counters_to_wire(&report.possible),
+            }
+        }
+        Frame::Stats => Frame::StatsResult(shared.wire_stats()),
+        Frame::Shutdown => {
+            shared.shutdown.store(true, Ordering::Release);
+            Frame::ShutdownAck
+        }
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::proto::encode_hello;
+    use crate::util::TempDir;
+
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            coordinator: CoordinatorConfig {
+                shards: 2,
+                k: 64,
+                k_majority: 8,
+                epoch_items: 100,
+                ..Default::default()
+            },
+            query_threads: 1,
+            ..Default::default()
+        }
+    }
+
+    fn read_one(stream: &mut AnyStream) -> Frame {
+        let mut r = FrameReader::new();
+        loop {
+            match r.poll(stream).expect("frame") {
+                Poll::Frame(k, body) => return Frame::decode(k, body).expect("decode"),
+                Poll::Pending => continue,
+                Poll::Eof => panic!("eof before frame"),
+            }
+        }
+    }
+
+    #[test]
+    fn endpoint_parses_and_displays() {
+        assert_eq!(
+            "unix:/tmp/x.sock".parse::<Endpoint>().unwrap(),
+            Endpoint::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        assert_eq!(
+            "/tmp/x.sock".parse::<Endpoint>().unwrap(),
+            Endpoint::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        assert_eq!(
+            "tcp:127.0.0.1:9009".parse::<Endpoint>().unwrap(),
+            Endpoint::Tcp("127.0.0.1:9009".into())
+        );
+        assert_eq!(
+            "127.0.0.1:0".parse::<Endpoint>().unwrap(),
+            Endpoint::Tcp("127.0.0.1:0".into())
+        );
+        assert!("florp".parse::<Endpoint>().is_err());
+        assert_eq!(
+            "unix:/a/b".parse::<Endpoint>().unwrap().to_string(),
+            "unix:/a/b"
+        );
+    }
+
+    #[test]
+    fn tcp_hello_ingest_ack_and_query_roundtrip() {
+        let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), tiny_cfg()).unwrap();
+        let endpoint = server.endpoint().clone();
+
+        // Ingest connection: hello, one frame, one ack.
+        let mut ing = endpoint.connect().unwrap();
+        ing.write_all(&encode_hello(Role::Ingest)).unwrap();
+        assert_eq!(read_one(&mut ing), Frame::HelloOk { version: VERSION });
+        let mut wire = Vec::new();
+        write_frame(
+            &mut ing,
+            &Frame::IngestItems { seq: 1, items: vec![42; 500] },
+            &mut wire,
+        )
+        .unwrap();
+        assert_eq!(read_one(&mut ing), Frame::IngestAck { seq: 1, items: 500 });
+        // Runs shape too.
+        write_frame(
+            &mut ing,
+            &Frame::IngestRuns { seq: 2, runs: vec![(42, 250), (7, 250)] },
+            &mut wire,
+        )
+        .unwrap();
+        assert_eq!(read_one(&mut ing), Frame::IngestAck { seq: 2, items: 500 });
+        drop(ing);
+
+        // Query connection: point lookup sees the ingested mass after
+        // a refresh (cadence 100 already forced epochs).
+        let mut q = endpoint.connect().unwrap();
+        q.write_all(&encode_hello(Role::Query)).unwrap();
+        assert_eq!(read_one(&mut q), Frame::HelloOk { version: VERSION });
+        server.queries().refresh();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            write_frame(&mut q, &Frame::Point { item: 42, window_epochs: 0 }, &mut wire)
+                .unwrap();
+            match read_one(&mut q) {
+                Frame::PointResult { estimate, n, .. } if n >= 1000 => {
+                    assert_eq!(estimate, 750);
+                    break;
+                }
+                Frame::PointResult { .. } => {
+                    assert!(Instant::now() < deadline, "epochs never covered ingest");
+                    std::thread::sleep(Duration::from_millis(5));
+                    server.queries().refresh();
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Stats over the wire.
+        write_frame(&mut q, &Frame::Stats, &mut wire).unwrap();
+        match read_one(&mut q) {
+            Frame::StatsResult(s) => {
+                assert_eq!(s.items, 1000);
+                assert_eq!(s.ingest_connections, 1);
+                assert!(s.query_connections >= 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Wire-initiated shutdown.
+        write_frame(&mut q, &Frame::Shutdown, &mut wire).unwrap();
+        assert_eq!(read_one(&mut q), Frame::ShutdownAck);
+        let (result, stats) = server.finish();
+        assert_eq!(result.stats.items, 1000);
+        assert_eq!(stats.ingest_connections, 1);
+        assert_eq!(stats.proto_errors, 0);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_serves_and_cleans_up() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("pss.sock");
+        let endpoint = Endpoint::Unix(path.clone());
+        let server = Server::bind(&endpoint, tiny_cfg()).unwrap();
+        assert!(path.exists());
+        let mut ing = endpoint.connect().unwrap();
+        ing.write_all(&encode_hello(Role::Ingest)).unwrap();
+        assert_eq!(read_one(&mut ing), Frame::HelloOk { version: VERSION });
+        let mut wire = Vec::new();
+        write_frame(
+            &mut ing,
+            &Frame::IngestItems { seq: 9, items: vec![1, 2, 3] },
+            &mut wire,
+        )
+        .unwrap();
+        assert_eq!(read_one(&mut ing), Frame::IngestAck { seq: 9, items: 3 });
+        drop(ing);
+        server.request_shutdown();
+        let (result, _) = server.finish();
+        assert_eq!(result.stats.items, 3);
+        assert!(!path.exists(), "socket file unlinked on finish");
+    }
+
+    #[test]
+    fn bad_magic_gets_typed_error_and_close() {
+        let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), tiny_cfg()).unwrap();
+        let mut s = server.endpoint().connect().unwrap();
+        s.write_all(b"GARBAGE!").unwrap();
+        match read_one(&mut s) {
+            Frame::Error { code, .. } => assert_eq!(code, ErrorCode::BadMagic),
+            other => panic!("unexpected {other:?}"),
+        }
+        // The connection is closed afterwards...
+        let mut reader = FrameReader::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match reader.poll(&mut s) {
+                Ok(Poll::Eof) | Err(_) => break,
+                Ok(Poll::Frame(..)) => panic!("frame after error"),
+                Ok(Poll::Pending) => assert!(Instant::now() < deadline, "no close"),
+            }
+        }
+        // ...but the server keeps serving new connections.
+        let mut ok = server.endpoint().connect().unwrap();
+        ok.write_all(&encode_hello(Role::Query)).unwrap();
+        assert_eq!(read_one(&mut ok), Frame::HelloOk { version: VERSION });
+        let (_, stats) = server.finish();
+        assert_eq!(stats.proto_errors, 1);
+    }
+
+    #[test]
+    fn query_frame_on_ingest_conn_is_role_error() {
+        let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), tiny_cfg()).unwrap();
+        let mut s = server.endpoint().connect().unwrap();
+        s.write_all(&encode_hello(Role::Ingest)).unwrap();
+        assert_eq!(read_one(&mut s), Frame::HelloOk { version: VERSION });
+        let mut wire = Vec::new();
+        write_frame(&mut s, &Frame::TopK { m: 5, window_epochs: 0 }, &mut wire).unwrap();
+        match read_one(&mut s) {
+            Frame::Error { code, .. } => assert_eq!(code, ErrorCode::WrongRole),
+            other => panic!("unexpected {other:?}"),
+        }
+        server.finish();
+    }
+
+    #[test]
+    fn window_query_without_ring_is_typed_error() {
+        let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), tiny_cfg()).unwrap();
+        let mut q = server.endpoint().connect().unwrap();
+        q.write_all(&encode_hello(Role::Query)).unwrap();
+        assert_eq!(read_one(&mut q), Frame::HelloOk { version: VERSION });
+        let mut wire = Vec::new();
+        write_frame(&mut q, &Frame::TopK { m: 5, window_epochs: 4 }, &mut wire).unwrap();
+        match read_one(&mut q) {
+            Frame::Error { code, .. } => assert_eq!(code, ErrorCode::WindowUnavailable),
+            other => panic!("unexpected {other:?}"),
+        }
+        server.finish();
+    }
+}

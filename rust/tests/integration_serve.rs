@@ -1,0 +1,324 @@
+//! Integration: the network service end to end — `pss serve` fed by
+//! concurrent loadgen clients over real sockets, checked against an
+//! in-process oracle built from the *same* seeded workloads. The
+//! socket hop must preserve both library invariants: the Space Saving
+//! guarantee `f ≤ f̂ ≤ f + ε` (with full recall above `n/k`), and the
+//! allocation-free ingest steady state (`buffers_recycled > 0` on the
+//! wire path). Garbage and truncated frames must kill only their own
+//! connection — never the listener, the pool, or another client.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+use pss::coordinator::CoordinatorConfig;
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::serve::proto::{
+    encode_hello, kind, read_frame, write_frame, ErrorCode, Frame, Role, VERSION,
+};
+use pss::serve::{
+    run_loadgen, Endpoint, IngestClient, LoadgenConfig, QueryClient, ServeConfig, Server,
+};
+
+const CLIENTS: usize = 8;
+const ITEMS_PER_CLIENT: u64 = 50_000;
+const UNIVERSE: u64 = 1 << 14;
+const SKEW: f64 = 1.1;
+const SEED: u64 = 42;
+const K: usize = 512;
+const K_MAJORITY: u64 = 64;
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        coordinator: CoordinatorConfig {
+            shards: 4,
+            k: K,
+            k_majority: K_MAJORITY,
+            epoch_items: 10_000,
+            ..Default::default()
+        },
+        query_threads: 2,
+        ..Default::default()
+    }
+}
+
+fn loadgen_cfg() -> LoadgenConfig {
+    LoadgenConfig {
+        clients: CLIENTS,
+        items_per_client: ITEMS_PER_CLIENT,
+        chunk_len: 2_048,
+        universe: UNIVERSE,
+        skew: SKEW,
+        shift: 0.0,
+        seed: SEED,
+        runs: false,
+        max_inflight: 4,
+    }
+}
+
+/// Exact frequencies of the union of every loadgen client's stream —
+/// the generators are deterministic, so replaying the seeds in
+/// process reproduces byte-for-byte what went over the wire.
+fn oracle(cfg: &LoadgenConfig) -> HashMap<u64, u64> {
+    let mut t = HashMap::new();
+    for i in 0..cfg.clients {
+        let src = GeneratedSource::zipf_mandelbrot(
+            cfg.items_per_client,
+            cfg.universe,
+            cfg.skew,
+            cfg.shift,
+            cfg.seed + i as u64,
+        );
+        for item in src.slice(0, cfg.items_per_client) {
+            *t.entry(item).or_insert(0u64) += 1;
+        }
+    }
+    t
+}
+
+/// Block until the published epochs cover all `n` ingested items.
+fn await_coverage(server: &Server, n: u64) {
+    let engine = server.queries();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        engine.refresh();
+        if engine.snapshot().n() >= n {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "epochs never covered the ingested stream"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The acceptance path: 8 concurrent socket clients vs the oracle.
+#[test]
+fn socket_ingest_preserves_guarantees_vs_oracle() {
+    let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), serve_cfg()).unwrap();
+    let cfg = loadgen_cfg();
+    let total = cfg.clients as u64 * cfg.items_per_client;
+
+    let report = run_loadgen(server.endpoint(), &cfg).unwrap();
+    assert_eq!(report.items_sent, total);
+    assert_eq!(report.items_acked, total, "every frame acked");
+    assert_eq!(report.frame_latency.count, report.frames);
+
+    let truth = oracle(&cfg);
+    let mass: u64 = truth.values().sum();
+    assert_eq!(mass, total, "oracle replays the same streams");
+    await_coverage(&server, total);
+
+    // Query over the wire, like a real client would.
+    let mut q = QueryClient::connect(server.endpoint()).unwrap();
+    let answer = q.top_k(K as u32, 0).unwrap();
+    assert_eq!(answer.n, total);
+    assert!(
+        answer.epsilon <= total / K as u64,
+        "merged bound {} above n/k {}",
+        answer.epsilon,
+        total / K as u64
+    );
+    // f ≤ f̂ ≤ f + ε for every served counter.
+    for c in &answer.counters {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f, "underestimate on item {}", c.item);
+        assert!(
+            c.count - f <= answer.epsilon,
+            "overestimate {} > ε {} on item {}",
+            c.count - f,
+            answer.epsilon,
+            c.item
+        );
+        assert!(c.count - c.err <= f, "per-counter bound on item {}", c.item);
+    }
+    // Full recall above n/k: every true heavy item is being served.
+    let monitored: std::collections::HashSet<u64> =
+        answer.counters.iter().map(|c| c.item).collect();
+    let thresh = total / K as u64;
+    let mut heavy = 0;
+    for (item, f) in &truth {
+        if *f > thresh {
+            heavy += 1;
+            assert!(monitored.contains(item), "lost heavy item {item} (f={f})");
+        }
+    }
+    assert!(heavy > 0, "workload produced no heavy items — test is vacuous");
+
+    // Point queries agree with the oracle within the bound.
+    let mut by_count: Vec<_> = truth.iter().collect();
+    by_count.sort_by_key(|(_, f)| std::cmp::Reverse(**f));
+    for (item, f) in by_count.iter().take(5) {
+        let p = q.point(**item, 0).unwrap();
+        assert!(p.monitored, "top item {item} unmonitored");
+        assert!(p.estimate >= **f && p.estimate - **f <= answer.epsilon);
+        assert!(p.guaranteed <= **f, "lower bound {} above truth {f}", p.guaranteed);
+    }
+
+    // k-majority over the wire: guaranteed ⊆ truth, candidates complete.
+    let rep = q.k_majority(K_MAJORITY, 0).unwrap();
+    let maj_thresh = total / K_MAJORITY;
+    for c in &rep.guaranteed {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(f > maj_thresh, "false guaranteed item {} (f={f})", c.item);
+    }
+    let candidates: std::collections::HashSet<u64> = rep
+        .guaranteed
+        .iter()
+        .chain(&rep.possible)
+        .map(|c| c.item)
+        .collect();
+    for (item, f) in &truth {
+        if *f > maj_thresh {
+            assert!(candidates.contains(item), "k-majority missed {item} (f={f})");
+        }
+    }
+
+    // Drain; the final merged summary re-checks the bound off the wire,
+    // and the chunk-recycling steady state must have survived the
+    // socket hop (the acceptance criterion).
+    let (result, stats) = server.finish();
+    assert_eq!(result.stats.items, total);
+    assert_eq!(stats.ingest_connections, CLIENTS as u64);
+    assert_eq!(stats.proto_errors, 0);
+    assert!(
+        result.stats.buffers_recycled > 0,
+        "socket path must reuse chunk buffers, not allocate per frame"
+    );
+    for c in result.summary.counters() {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f && c.count - c.err <= f, "final summary bound");
+    }
+}
+
+/// Same oracle discipline over the runs (pre-aggregated) wire shape:
+/// weighted expansion server-side must reproduce the exact mass.
+#[test]
+fn runs_encoding_matches_oracle_mass() {
+    let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), serve_cfg()).unwrap();
+    let cfg = LoadgenConfig { runs: true, clients: 4, ..loadgen_cfg() };
+    let total = cfg.clients as u64 * cfg.items_per_client;
+    let report = run_loadgen(server.endpoint(), &cfg).unwrap();
+    assert_eq!(report.items_acked, total);
+
+    let truth = oracle(&cfg);
+    await_coverage(&server, total);
+    let mut q = QueryClient::connect(server.endpoint()).unwrap();
+    let answer = q.top_k(K as u32, 0).unwrap();
+    assert_eq!(answer.n, total, "weighted runs expand to the full mass");
+    for c in &answer.counters {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f && c.count - f <= answer.epsilon);
+    }
+    let (result, _) = server.finish();
+    assert_eq!(result.stats.items, total);
+}
+
+/// Raw-socket abuse: garbage kinds, truncated frames, and a bad hello
+/// each kill only their own connection. A well-behaved client ingests
+/// through the noise and the pool keeps answering queries.
+#[test]
+fn garbage_and_truncation_do_not_poison_the_pool() {
+    let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), serve_cfg()).unwrap();
+    let endpoint: Endpoint = server.endpoint().clone();
+
+    let read_error = |stream: &mut pss::serve::AnyStream| -> ErrorCode {
+        let mut scratch = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match read_frame(stream, &mut scratch) {
+                Ok(Some((k, body))) => match Frame::decode(k, body).unwrap() {
+                    Frame::Error { code, .. } => return code,
+                    other => panic!("expected error frame, got {other:?}"),
+                },
+                Ok(None) => panic!("closed without an error frame"),
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "no reply");
+                }
+            }
+        }
+    };
+
+    // 1. Garbage hello.
+    let mut s = endpoint.connect().unwrap();
+    s.write_all(b"NOTPSS00").unwrap();
+    assert_eq!(read_error(&mut s), ErrorCode::BadMagic);
+
+    // 2. Unknown frame kind after a valid ingest hello.
+    let mut s = endpoint.connect().unwrap();
+    s.write_all(&encode_hello(Role::Ingest)).unwrap();
+    let mut scratch = Vec::new();
+    let (k, body) = read_frame(&mut s, &mut scratch).unwrap().unwrap();
+    assert_eq!(Frame::decode(k, body).unwrap(), Frame::HelloOk { version: VERSION });
+    s.write_all(&[2, 0, 0, 0, 0xAA, 0x01]).unwrap(); // len=2, kind 0xAA
+    let code = read_error(&mut s);
+    assert!(
+        code == ErrorCode::Malformed || code == ErrorCode::WrongRole,
+        "unexpected code {code:?}"
+    );
+
+    // 3. Truncated frame: declare 64 bytes, send 8, slam the door.
+    let mut s = endpoint.connect().unwrap();
+    s.write_all(&encode_hello(Role::Ingest)).unwrap();
+    let (k, body) = read_frame(&mut s, &mut scratch).unwrap().unwrap();
+    assert_eq!(Frame::decode(k, body).unwrap(), Frame::HelloOk { version: VERSION });
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&64u32.to_le_bytes());
+    partial.push(kind::INGEST_ITEMS);
+    partial.extend_from_slice(&[0u8; 8]);
+    s.write_all(&partial).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    // The server notices the truncation and drops the connection; we
+    // only require that it stays up for everyone else.
+    drop(s);
+
+    // 4. A query frame on an ingest connection is a role error.
+    let mut s = endpoint.connect().unwrap();
+    s.write_all(&encode_hello(Role::Ingest)).unwrap();
+    let (k, body) = read_frame(&mut s, &mut scratch).unwrap().unwrap();
+    assert_eq!(Frame::decode(k, body).unwrap(), Frame::HelloOk { version: VERSION });
+    let mut wire = Vec::new();
+    write_frame(&mut s, &Frame::Stats, &mut wire).unwrap();
+    assert_eq!(read_error(&mut s), ErrorCode::WrongRole);
+
+    // After all that abuse, a legitimate client still gets served.
+    let mut ing = IngestClient::connect(&endpoint).unwrap();
+    ing.send_items(&[7; 1_000]).unwrap();
+    let (_, acked, _) = ing.finish().unwrap();
+    assert_eq!(acked, 1_000);
+    await_coverage(&server, 1_000);
+    let mut q = QueryClient::connect(&endpoint).unwrap();
+    let p = q.point(7, 0).unwrap();
+    assert_eq!(p.estimate, 1_000);
+    let s = q.stats().unwrap();
+    assert_eq!(s.items, 1_000, "only the clean frames were ingested");
+    assert!(s.proto_errors >= 3, "abuse was counted: {}", s.proto_errors);
+
+    let (result, stats) = server.finish();
+    assert_eq!(result.stats.items, 1_000);
+    assert!(stats.proto_errors >= 3);
+}
+
+/// The CI smoke path in-process: unix socket, loadgen burst,
+/// wire-initiated shutdown, clean drain.
+#[cfg(unix)]
+#[test]
+fn unix_socket_loadgen_and_wire_shutdown() {
+    let dir = pss::util::TempDir::new().unwrap();
+    let path = dir.path().join("pss-serve.sock");
+    let endpoint = Endpoint::Unix(path.clone());
+    let server = Server::bind(&endpoint, serve_cfg()).unwrap();
+
+    let cfg = LoadgenConfig { clients: 2, items_per_client: 10_000, ..loadgen_cfg() };
+    let report = run_loadgen(&endpoint, &cfg).unwrap();
+    assert_eq!(report.items_acked, 20_000);
+
+    QueryClient::connect(&endpoint).unwrap().shutdown_server().unwrap();
+    server.wait_shutdown(Some(Duration::from_secs(10)));
+    assert!(server.shutdown_requested());
+    let (result, stats) = server.finish();
+    assert_eq!(result.stats.items, 20_000);
+    assert_eq!(stats.ingest_connections, 2);
+    assert!(!path.exists(), "socket file removed on drain");
+}

@@ -775,3 +775,185 @@ fn prop_simulated_time_monotone() {
         }
     }
 }
+
+/// Random protocol frame covering every variant, sizes bounded so a
+/// trial stays fast.
+fn random_frame(rng: &mut SplitMix64) -> pss::serve::Frame {
+    use pss::serve::{ErrorCode, Frame, WireCounter, WireStats};
+    let counters = |rng: &mut SplitMix64| -> Vec<WireCounter> {
+        (0..rng.next_below(20))
+            .map(|_| WireCounter {
+                item: rng.next_u64(),
+                count: rng.next_u64(),
+                err: rng.next_u64(),
+            })
+            .collect()
+    };
+    match rng.next_below(15) {
+        0 => Frame::IngestItems {
+            seq: rng.next_u64(),
+            items: (0..rng.next_below(300)).map(|_| rng.next_u64()).collect(),
+        },
+        1 => Frame::IngestRuns {
+            seq: rng.next_u64(),
+            // Σ weight stays far below MAX_FRAME_MASS.
+            runs: (0..rng.next_below(40))
+                .map(|_| (rng.next_u64(), rng.next_below(1000)))
+                .collect(),
+        },
+        2 => Frame::IngestAck { seq: rng.next_u64(), items: rng.next_u64() },
+        3 => Frame::TopK {
+            m: rng.next_u64() as u32,
+            window_epochs: rng.next_u64() as u32,
+        },
+        4 => Frame::Point {
+            item: rng.next_u64(),
+            window_epochs: rng.next_u64() as u32,
+        },
+        5 => Frame::KMajority {
+            k: rng.next_u64(),
+            window_epochs: rng.next_u64() as u32,
+        },
+        6 => Frame::Stats,
+        7 => Frame::TopKResult {
+            n: rng.next_u64(),
+            epsilon: rng.next_u64(),
+            counters: counters(rng),
+        },
+        8 => Frame::PointResult {
+            estimate: rng.next_u64(),
+            guaranteed: rng.next_u64(),
+            monitored: rng.next_below(2) == 1,
+            n: rng.next_u64(),
+        },
+        9 => Frame::KMajorityResult {
+            n: rng.next_u64(),
+            epsilon: rng.next_u64(),
+            guaranteed: counters(rng),
+            possible: counters(rng),
+        },
+        10 => Frame::StatsResult(WireStats {
+            items: rng.next_u64(),
+            chunks: rng.next_u64(),
+            buffers_recycled: rng.next_u64(),
+            backpressure_events: rng.next_u64(),
+            epochs_published: rng.next_u64(),
+            ingest_connections: rng.next_u64(),
+            query_connections: rng.next_u64(),
+            proto_errors: rng.next_u64(),
+        }),
+        11 => Frame::HelloOk { version: rng.next_u64() as u16 },
+        12 => Frame::Shutdown,
+        13 => Frame::ShutdownAck,
+        _ => Frame::Error {
+            code: ErrorCode::from_u16(rng.next_u64() as u16),
+            message: (0..rng.next_below(60))
+                .map(|_| (b' ' + rng.next_below(95) as u8) as char)
+                .collect(),
+        },
+    }
+}
+
+/// Property 9 (wire protocol): every frame round-trips bit-exactly
+/// through encode → stream framing → decode, under both the blocking
+/// reader and the resumable [`FrameReader`] fed one byte at a time.
+#[test]
+fn prop_frame_roundtrip() {
+    use pss::serve::{Frame, FrameReader};
+    use pss::serve::proto::{read_frame, Poll};
+
+    /// Reader that returns at most one byte per call with a WouldBlock
+    /// between every byte — the adversarial fragmentation a socket with
+    /// a read timeout can produce.
+    struct Dribble {
+        bytes: Vec<u8>,
+        pos: usize,
+        stall: bool,
+    }
+    impl std::io::Read for Dribble {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.bytes.len() {
+                return Ok(0);
+            }
+            self.stall = !self.stall;
+            if self.stall {
+                return Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+            }
+            buf[0] = self.bytes[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    for seed in 700..700 + TRIALS {
+        let mut rng = SplitMix64::new(seed);
+        let frame = random_frame(&mut rng);
+        let bytes = frame.encode();
+
+        // Blocking path.
+        let mut cursor = std::io::Cursor::new(bytes.clone());
+        let mut scratch = Vec::new();
+        let (kind, body) = read_frame(&mut cursor, &mut scratch)
+            .unwrap_or_else(|e| panic!("seed {seed}: read failed: {e}"))
+            .unwrap_or_else(|| panic!("seed {seed}: eof before frame"));
+        let back = Frame::decode(kind, body)
+            .unwrap_or_else(|e| panic!("seed {seed}: decode failed: {e}"));
+        assert_eq!(back, frame, "seed {seed}: blocking roundtrip");
+
+        // Resumable path under maximal fragmentation.
+        let mut dribble = Dribble { bytes, pos: 0, stall: false };
+        let mut reader = FrameReader::new();
+        let back = loop {
+            match reader.poll(&mut dribble) {
+                Ok(Poll::Frame(kind, body)) => {
+                    break Frame::decode(kind, body)
+                        .unwrap_or_else(|e| panic!("seed {seed}: decode failed: {e}"));
+                }
+                Ok(Poll::Pending) => continue,
+                Ok(Poll::Eof) => panic!("seed {seed}: eof before frame"),
+                Err(e) => panic!("seed {seed}: poll failed: {e}"),
+            }
+        };
+        assert_eq!(back, frame, "seed {seed}: fragmented roundtrip");
+    }
+}
+
+/// Property 10 (wire robustness): truncating an encoded frame at any
+/// point yields a typed `Truncated` error (or clean EOF at the exact
+/// boundary), and arbitrary byte corruption never panics the decoder —
+/// it either still parses as *some* frame or fails with a typed error.
+#[test]
+fn prop_malformed_frames_never_panic() {
+    use pss::serve::Frame;
+    use pss::serve::proto::{read_frame, ProtoError};
+
+    for seed in 800..800 + TRIALS {
+        let mut rng = SplitMix64::new(seed);
+        let frame = random_frame(&mut rng);
+        let bytes = frame.encode();
+        let mut scratch = Vec::new();
+
+        // Every proper prefix is Truncated (or clean EOF with nothing).
+        let cut = rng.next_below(bytes.len() as u64) as usize;
+        let mut cursor = std::io::Cursor::new(bytes[..cut].to_vec());
+        match read_frame(&mut cursor, &mut scratch) {
+            Ok(None) => assert_eq!(cut, 0, "seed {seed}: eof only at boundary"),
+            Ok(Some(_)) => panic!("seed {seed}: prefix of {cut} bytes parsed"),
+            Err(ProtoError::Truncated) => {}
+            Err(e) => panic!("seed {seed}: expected Truncated, got {e}"),
+        }
+
+        // Corrupt a few random bytes past the length header (keeping
+        // the header valid keeps the framing layer in play) and make
+        // sure the decoder answers without panicking.
+        let mut bad = bytes.clone();
+        for _ in 0..1 + rng.next_below(8) {
+            let at = 4 + rng.next_below((bad.len() - 4) as u64) as usize;
+            bad[at] ^= 1 << rng.next_below(8);
+        }
+        let mut cursor = std::io::Cursor::new(bad);
+        if let Ok(Some((kind, body))) = read_frame(&mut cursor, &mut scratch) {
+            let _ = Frame::decode(kind, body); // Ok or typed Err; no panic.
+        }
+    }
+}
