@@ -27,7 +27,7 @@ use crate::summary::{ChunkAggregator, Counter};
 
 use super::proto::{
     encode_hello, encode_items_into, encode_runs_into, read_frame, write_frame, Frame, Role,
-    WireStats, MAX_FRAME_MASS, VERSION,
+    WireStats, MAX_FRAME_MASS, MAX_ITEMS_PER_FRAME, MAX_RUNS_PER_FRAME, VERSION,
 };
 use super::server::{AnyStream, Endpoint};
 
@@ -103,11 +103,14 @@ impl IngestClient {
         self
     }
 
-    /// Send one flat item chunk as an `IngestItems` frame.
+    /// Send one flat item chunk as an `IngestItems` frame. Chunks are
+    /// capped at [`MAX_ITEMS_PER_FRAME`] — the wire-length limit, which
+    /// for flat frames binds before the mass cap — so anything this
+    /// accepts the server accepts too.
     pub fn send_items(&mut self, items: &[u64]) -> crate::Result<()> {
         anyhow::ensure!(
-            items.len() as u64 <= MAX_FRAME_MASS,
-            "chunk of {} items exceeds the frame mass cap {MAX_FRAME_MASS}",
+            items.len() <= MAX_ITEMS_PER_FRAME,
+            "chunk of {} items exceeds the per-frame item cap {MAX_ITEMS_PER_FRAME}",
             items.len()
         );
         self.wire.clear();
@@ -118,7 +121,15 @@ impl IngestClient {
 
     /// Send pre-aggregated `(item, weight)` runs as an `IngestRuns`
     /// frame (the batched-ingest wire shape — compact under skew).
+    /// Both server-side caps are enforced here: the expanded mass
+    /// (Σ weights ≤ [`MAX_FRAME_MASS`]) and the wire image
+    /// (runs ≤ [`MAX_RUNS_PER_FRAME`]).
     pub fn send_runs(&mut self, runs: &[(u64, u64)]) -> crate::Result<()> {
+        anyhow::ensure!(
+            runs.len() <= MAX_RUNS_PER_FRAME,
+            "{} runs exceed the per-frame run cap {MAX_RUNS_PER_FRAME}",
+            runs.len()
+        );
         let mass: u64 = runs.iter().map(|&(_, w)| w).sum();
         anyhow::ensure!(
             mass <= MAX_FRAME_MASS,
@@ -271,16 +282,20 @@ impl QueryClient {
     }
 
     /// k-majority report (`f̂ > n/k`); `k < 2` uses the server's
-    /// configured default.
+    /// configured default. The report's `threshold` is the one the
+    /// server actually split against (echoed over the wire), so it is
+    /// faithful even when the server substituted its default k.
     pub fn k_majority(&mut self, k: u64, window_epochs: u32) -> crate::Result<ThresholdReport> {
         match self.request(&Frame::KMajority { k, window_epochs })? {
-            Frame::KMajorityResult { n, epsilon, guaranteed, possible } => Ok(ThresholdReport {
-                threshold: if k < 2 { 0 } else { n / k },
-                guaranteed: from_wire(guaranteed),
-                possible: from_wire(possible),
-                n,
-                epsilon,
-            }),
+            Frame::KMajorityResult { n, epsilon, threshold, guaranteed, possible } => {
+                Ok(ThresholdReport {
+                    threshold,
+                    guaranteed: from_wire(guaranteed),
+                    possible: from_wire(possible),
+                    n,
+                    epsilon,
+                })
+            }
             other => anyhow::bail!("unexpected k-majority reply: {other:?}"),
         }
     }
@@ -379,9 +394,18 @@ impl LoadgenReport {
 pub fn run_loadgen(endpoint: &Endpoint, cfg: &LoadgenConfig) -> crate::Result<LoadgenReport> {
     anyhow::ensure!(cfg.clients >= 1, "loadgen needs at least one client");
     anyhow::ensure!(cfg.chunk_len >= 1, "chunk_len must be positive");
+    // Bound chunk_len by the *wire* caps, which bind before the mass
+    // cap: a flat chunk is one item per 8 wire bytes, and a runs chunk
+    // can degenerate to one run per item (uniform workload), so both
+    // shapes must fit MAX_FRAME_LEN at chunk_len.
     anyhow::ensure!(
-        cfg.chunk_len as u64 <= MAX_FRAME_MASS,
-        "chunk_len {} exceeds the frame mass cap {MAX_FRAME_MASS}",
+        cfg.chunk_len <= MAX_ITEMS_PER_FRAME,
+        "chunk_len {} exceeds the per-frame item cap {MAX_ITEMS_PER_FRAME}",
+        cfg.chunk_len
+    );
+    anyhow::ensure!(
+        !cfg.runs || cfg.chunk_len <= MAX_RUNS_PER_FRAME,
+        "chunk_len {} with --runs can exceed the per-frame run cap {MAX_RUNS_PER_FRAME}",
         cfg.chunk_len
     );
     let t0 = Instant::now();
@@ -516,6 +540,12 @@ mod tests {
         assert!(p.monitored);
         let rep = q.k_majority(8, 0).unwrap();
         assert!(rep.guaranteed.iter().any(|c| c.item == 5));
+        assert_eq!(rep.threshold, rep.n / 8, "server echoes the real split threshold");
+        // k < 2 delegates to the server's configured default (8 here);
+        // the echoed threshold must reflect that default, not a guess.
+        let rep0 = q.k_majority(0, 0).unwrap();
+        assert_eq!(rep0.threshold, rep0.n / 8);
+        assert_eq!(rep0.guaranteed, rep.guaranteed);
         let s = q.stats().unwrap();
         assert_eq!(s.items, 1000);
         q.shutdown_server().unwrap();
@@ -573,6 +603,16 @@ mod tests {
         let mut c = IngestClient::connect(server.endpoint()).unwrap();
         let e = c.send_runs(&[(1, MAX_FRAME_MASS + 1)]).unwrap_err();
         assert!(e.to_string().contains("mass"), "{e}");
+        // The wire-length caps bind too: a flat chunk between
+        // MAX_ITEMS_PER_FRAME and MAX_FRAME_MASS items would pass the
+        // mass check yet exceed MAX_FRAME_LEN server-side, so the
+        // client must reject it before writing a byte.
+        let big = vec![0u64; MAX_ITEMS_PER_FRAME + 1];
+        let e = c.send_items(&big).unwrap_err();
+        assert!(e.to_string().contains("item cap"), "{e}");
+        let runs = vec![(0u64, 1u64); MAX_RUNS_PER_FRAME + 1];
+        let e = c.send_runs(&runs).unwrap_err();
+        assert!(e.to_string().contains("run cap"), "{e}");
         server.finish();
     }
 }

@@ -60,6 +60,18 @@ pub const MAX_FRAME_LEN: u32 = 16 << 20;
 /// the expanded chunk buffer never exceeds this many items.
 pub const MAX_FRAME_MASS: u64 = 4 << 20;
 
+/// Most items a flat [`Frame::IngestItems`] frame can carry without
+/// its wire image (`kind + seq + 8·items`) exceeding [`MAX_FRAME_LEN`]
+/// — the binding cap for flat frames (≈2M, tighter than
+/// [`MAX_FRAME_MASS`]). Senders must honor it or the server rejects
+/// the frame with [`ProtoError::FrameTooLarge`].
+pub const MAX_ITEMS_PER_FRAME: usize = (MAX_FRAME_LEN as usize - 9) / 8;
+
+/// Most `(item, weight)` runs a [`Frame::IngestRuns`] frame can carry
+/// within [`MAX_FRAME_LEN`] (`kind + seq + 16·runs`, ≈1M). The mass
+/// cap bounds the *expanded* chunk; this bounds the wire image.
+pub const MAX_RUNS_PER_FRAME: usize = (MAX_FRAME_LEN as usize - 9) / 16;
+
 /// Connection role declared in the hello.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Role {
@@ -95,22 +107,39 @@ impl std::fmt::Display for Role {
     }
 }
 
-/// Frame kind discriminants (the `kind` byte on the wire).
-mod kind {
+/// Frame kind discriminants (the `kind` byte on the wire). Public so
+/// tests and raw-frame tooling can hand-assemble wire images without
+/// going through [`Frame`].
+pub mod kind {
+    /// [`super::Frame::IngestItems`].
     pub const INGEST_ITEMS: u8 = 0x01;
+    /// [`super::Frame::IngestRuns`].
     pub const INGEST_RUNS: u8 = 0x02;
+    /// [`super::Frame::IngestAck`].
     pub const INGEST_ACK: u8 = 0x03;
+    /// [`super::Frame::TopK`].
     pub const TOP_K: u8 = 0x10;
+    /// [`super::Frame::Point`].
     pub const POINT: u8 = 0x11;
+    /// [`super::Frame::KMajority`].
     pub const K_MAJORITY: u8 = 0x12;
+    /// [`super::Frame::Stats`].
     pub const STATS: u8 = 0x13;
+    /// [`super::Frame::TopKResult`].
     pub const TOP_K_RESULT: u8 = 0x20;
+    /// [`super::Frame::PointResult`].
     pub const POINT_RESULT: u8 = 0x21;
+    /// [`super::Frame::KMajorityResult`].
     pub const K_MAJORITY_RESULT: u8 = 0x22;
+    /// [`super::Frame::StatsResult`].
     pub const STATS_RESULT: u8 = 0x23;
+    /// [`super::Frame::HelloOk`].
     pub const HELLO_OK: u8 = 0x30;
+    /// [`super::Frame::Shutdown`].
     pub const SHUTDOWN: u8 = 0x3E;
+    /// [`super::Frame::ShutdownAck`].
     pub const SHUTDOWN_ACK: u8 = 0x3F;
+    /// [`super::Frame::Error`].
     pub const ERROR: u8 = 0x40;
 }
 
@@ -279,6 +308,11 @@ pub enum Frame {
         n: u64,
         /// Error bound of the report.
         epsilon: u64,
+        /// The absolute threshold the split was computed against
+        /// (`n/k` for the *effective* k — the server substitutes its
+        /// configured default when the request carried `k < 2`, and
+        /// echoes the real threshold here so the client never guesses).
+        threshold: u64,
         /// Lower bound clears the threshold: true positives.
         guaranteed: Vec<WireCounter>,
         /// Estimate clears it, lower bound does not: candidates.
@@ -502,9 +536,10 @@ impl Frame {
                 out.push(u8::from(*monitored));
                 out.extend_from_slice(&n.to_le_bytes());
             }
-            Frame::KMajorityResult { n, epsilon, guaranteed, possible } => {
+            Frame::KMajorityResult { n, epsilon, threshold, guaranteed, possible } => {
                 out.extend_from_slice(&n.to_le_bytes());
                 out.extend_from_slice(&epsilon.to_le_bytes());
+                out.extend_from_slice(&threshold.to_le_bytes());
                 counters_bytes(guaranteed, out);
                 counters_bytes(possible, out);
             }
@@ -643,13 +678,14 @@ impl Frame {
             kind::K_MAJORITY_RESULT => {
                 let n = take_u64(body, 0).ok_or_else(bad)?;
                 let epsilon = take_u64(body, 8).ok_or_else(bad)?;
-                let mut off = 16;
+                let threshold = take_u64(body, 16).ok_or_else(bad)?;
+                let mut off = 24;
                 let guaranteed = read_counters(kind_byte, body, &mut off)?;
                 let possible = read_counters(kind_byte, body, &mut off)?;
                 if off != body.len() {
                     return Err(bad());
                 }
-                Ok(Frame::KMajorityResult { n, epsilon, guaranteed, possible })
+                Ok(Frame::KMajorityResult { n, epsilon, threshold, guaranteed, possible })
             }
             kind::STATS_RESULT => {
                 if body.len() != 64 {
@@ -1008,6 +1044,7 @@ mod tests {
             Frame::KMajorityResult {
                 n: 1000,
                 epsilon: 10,
+                threshold: 125,
                 guaranteed: vec![WireCounter { item: 1, count: 900, err: 0 }],
                 possible: vec![WireCounter { item: 2, count: 11, err: 5 }],
             },
@@ -1154,6 +1191,25 @@ mod tests {
             .unwrap()
             .is_none());
         assert_eq!(out, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn per_frame_caps_match_encoded_lengths() {
+        // A frame at exactly the item cap fits; one more item busts
+        // MAX_FRAME_LEN. (Checked on the length formula, not a real
+        // 16 MiB buffer.)
+        assert!(9 + 8 * MAX_ITEMS_PER_FRAME as u64 <= MAX_FRAME_LEN as u64);
+        assert!(9 + 8 * (MAX_ITEMS_PER_FRAME as u64 + 1) > MAX_FRAME_LEN as u64);
+        assert!(9 + 16 * MAX_RUNS_PER_FRAME as u64 <= MAX_FRAME_LEN as u64);
+        assert!(9 + 16 * (MAX_RUNS_PER_FRAME as u64 + 1) > MAX_FRAME_LEN as u64);
+        // The formulas mirror the hot-path encoders: frame len =
+        // kind(1) + seq(8) + payload.
+        let mut wire = Vec::new();
+        encode_items_into(1, &[7; 13], &mut wire);
+        assert_eq!(u32::from_le_bytes(wire[..4].try_into().unwrap()), 9 + 8 * 13);
+        wire.clear();
+        encode_runs_into(1, &[(7, 2); 13], &mut wire);
+        assert_eq!(u32::from_le_bytes(wire[..4].try_into().unwrap()), 9 + 16 * 13);
     }
 
     #[test]

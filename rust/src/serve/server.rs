@@ -610,6 +610,21 @@ fn greet(mut stream: AnyStream, shared: &Arc<Shared>, query_tx: &Sender<AnyStrea
 fn ingest_conn(stream: &mut AnyStream, shared: &Arc<Shared>, wire: &mut Vec<u8>) {
     let mut reader = FrameReader::new();
     loop {
+        // Honor the drain at every frame boundary — a peer streaming
+        // frames back-to-back keeps the socket readable, so the
+        // Pending arm alone would never observe the flag and the
+        // connection would ingest past the requested shutdown.
+        // Mid-frame the peer keeps the right to complete (and get the
+        // ack for) what it started.
+        if shared.shutting_down() && !reader.mid_frame() {
+            send_error(
+                stream,
+                wire,
+                ErrorCode::ShuttingDown,
+                "server is draining".into(),
+            );
+            return;
+        }
         match reader.poll(stream) {
             Ok(Poll::Frame(kind, body)) => {
                 shared.frames_in.fetch_add(1, Ordering::Relaxed);
@@ -656,19 +671,8 @@ fn ingest_conn(stream: &mut AnyStream, shared: &Arc<Shared>, wire: &mut Vec<u8>)
                     }
                 }
             }
-            Ok(Poll::Pending) => {
-                // Idle between frames: honor the drain. Mid-frame the
-                // peer keeps the right to complete what it started.
-                if shared.shutting_down() && !reader.mid_frame() {
-                    send_error(
-                        stream,
-                        wire,
-                        ErrorCode::ShuttingDown,
-                        "server is draining".into(),
-                    );
-                    return;
-                }
-            }
+            // Idle: loop back to the boundary check above.
+            Ok(Poll::Pending) => {}
             Ok(Poll::Eof) => return, // clean close
             Err(e) => {
                 shared.proto_errors.fetch_add(1, Ordering::Relaxed);
@@ -736,6 +740,18 @@ fn query_conn(stream: &mut AnyStream, shared: &Arc<Shared>) {
     let mut reader = FrameReader::new();
     let mut wire = Vec::new();
     loop {
+        // Same boundary check as `ingest_conn`: a pipelined query
+        // client keeps the socket readable, so only checking in the
+        // Pending arm would let queries run past the drain forever.
+        if shared.shutting_down() && !reader.mid_frame() {
+            send_error(
+                stream,
+                &mut wire,
+                ErrorCode::ShuttingDown,
+                "server is draining".into(),
+            );
+            return;
+        }
         match reader.poll(stream) {
             Ok(Poll::Frame(kind, body)) => {
                 shared.frames_in.fetch_add(1, Ordering::Relaxed);
@@ -770,17 +786,8 @@ fn query_conn(stream: &mut AnyStream, shared: &Arc<Shared>) {
                     return;
                 }
             }
-            Ok(Poll::Pending) => {
-                if shared.shutting_down() && !reader.mid_frame() {
-                    send_error(
-                        stream,
-                        &mut wire,
-                        ErrorCode::ShuttingDown,
-                        "server is draining".into(),
-                    );
-                    return;
-                }
-            }
+            // Idle: loop back to the boundary check above.
+            Ok(Poll::Pending) => {}
             Ok(Poll::Eof) => return,
             Err(e) => {
                 shared.proto_errors.fetch_add(1, Ordering::Relaxed);
@@ -854,6 +861,7 @@ fn answer_query(shared: &Arc<Shared>, frame: &Frame) -> Option<Frame> {
             Frame::KMajorityResult {
                 n: report.n,
                 epsilon: report.epsilon,
+                threshold: report.threshold,
                 guaranteed: counters_to_wire(&report.guaranteed),
                 possible: counters_to_wire(&report.possible),
             }

@@ -159,6 +159,7 @@ fn socket_ingest_preserves_guarantees_vs_oracle() {
     // k-majority over the wire: guaranteed ⊆ truth, candidates complete.
     let rep = q.k_majority(K_MAJORITY, 0).unwrap();
     let maj_thresh = total / K_MAJORITY;
+    assert_eq!(rep.threshold, rep.n / K_MAJORITY, "wire report echoes the split threshold");
     for c in &rep.guaranteed {
         let f = truth.get(&c.item).copied().unwrap_or(0);
         assert!(f > maj_thresh, "false guaranteed item {} (f={f})", c.item);

@@ -829,6 +829,7 @@ fn random_frame(rng: &mut SplitMix64) -> pss::serve::Frame {
         9 => Frame::KMajorityResult {
             n: rng.next_u64(),
             epsilon: rng.next_u64(),
+            threshold: rng.next_u64(),
             guaranteed: counters(rng),
             possible: counters(rng),
         },
