@@ -1,0 +1,92 @@
+//! The routing tier (`Routing::RoundRobin` vs `Keyed` vs
+//! `KeyedAdaptive`): end-to-end ingest on the skewed and single-hot-key
+//! workloads. Plain keyed routing serializes on the hot key's home
+//! shard — a p=0.6 hot key caps 4-shard throughput near the 1-shard
+//! rate — while the adaptive tier detects it online and splits it
+//! round-robin. Acceptance at 4 shards: adaptive ≥ 0.9× chunked on
+//! zipf-1.8, adaptive ≥ 2× plain keyed on the hot-key workload
+//! (`pss bench --suite routing` emits the same cells as JSON).
+
+use pss::coordinator::{Coordinator, CoordinatorConfig, QueryResult, Routing};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::util::benchkit::{black_box, run};
+
+const N: u64 = 1_000_000;
+const K: usize = 2000;
+const CHUNK: usize = 8_192;
+const HOT_P: f64 = 0.6;
+
+/// One full ingest session (pure write path: no epoch publication),
+/// producer reusing recycled buffers via `take_buffer`.
+fn session(routing: Routing, src: &GeneratedSource, shards: usize) -> QueryResult {
+    let mut c = Coordinator::start(CoordinatorConfig {
+        shards,
+        k: K,
+        k_majority: K as u64,
+        routing,
+        epoch_items: 0,
+        ..Default::default()
+    });
+    let n = src.len();
+    let mut pos = 0u64;
+    while pos < n {
+        let take = ((n - pos) as usize).min(CHUNK);
+        let mut buf = c.take_buffer();
+        buf.resize(take, 0);
+        src.fill(pos, &mut buf);
+        c.push(buf);
+        pos += take as u64;
+    }
+    c.finish()
+}
+
+fn main() {
+    println!("# bench_routing — chunked vs keyed vs keyed-adaptive, skewed and hot-key workloads");
+
+    let zipf18 = GeneratedSource::zipf(N, 1 << 20, 1.8, 7);
+    let hotkey = GeneratedSource::hot_key(N, 1 << 20, 1.1, HOT_P, 7);
+
+    // 1. End-to-end ingest: routing × workload at 1 and 4 shards.
+    for &shards in &[1usize, 4] {
+        for (label, routing) in [
+            ("chunks", Routing::RoundRobin),
+            ("keyed", Routing::Keyed),
+            ("adaptive", Routing::KeyedAdaptive),
+        ] {
+            run(&format!("ingest/zipf18/{label}/shards={shards}"), Some(N as f64), || {
+                black_box(session(routing, &zipf18, shards).stats.items);
+            });
+            run(&format!("ingest/hotkey/{label}/shards={shards}"), Some(N as f64), || {
+                black_box(session(routing, &hotkey, shards).stats.items);
+            });
+        }
+    }
+
+    // 2. Load balance: what the hot-key tier buys on the per-shard item
+    //    spread under the adversarial workload — printed, not timed.
+    let keyed = session(Routing::Keyed, &hotkey, 4);
+    let adaptive = session(Routing::KeyedAdaptive, &hotkey, 4);
+    let spread = |r: &QueryResult| {
+        let max = r.stats.per_shard_items.iter().copied().max().unwrap_or(0);
+        max as f64 / r.stats.items.max(1) as f64
+    };
+    println!(
+        "#   hot-key p={HOT_P} at 4 shards: max-shard share keyed={:.2} adaptive={:.2} \
+         (split {} items over {} rebalances)",
+        spread(&keyed),
+        spread(&adaptive),
+        adaptive.stats.split_items,
+        adaptive.stats.hot_rebalances,
+    );
+
+    // 3. Detection overhead on a stream with nothing to detect: the
+    //    adaptive producer's sketch/evaluation cost over plain keyed.
+    let uniform = GeneratedSource::uniform(N, 1 << 20, 7);
+    for (label, routing) in
+        [("keyed", Routing::Keyed), ("adaptive", Routing::KeyedAdaptive)]
+    {
+        run(&format!("ingest/uniform/{label}/shards=4"), Some(N as f64), || {
+            black_box(session(routing, &uniform, 4).stats.items);
+        });
+    }
+}

@@ -32,9 +32,11 @@ pub struct RunConfig {
     /// Bounded queue depth (chunks) per shard.
     pub queue_depth: usize,
     /// Chunk routing policy: `rr` (round-robin, default), `ll`
-    /// (least-loaded), or `keyed` (mix64 hash-partition items to their
+    /// (least-loaded), `keyed` (mix64 hash-partition items to their
     /// home shard — key-disjoint shard summaries, max-per-shard error
-    /// bound).
+    /// bound), or `keyed-adaptive` (keyed plus the hot-key tier:
+    /// detected heavy keys split round-robin across all shards and
+    /// recombined exactly at query time).
     pub routing: Routing,
     /// Producer→shard transport: `ring` (lock-free SPSC, default) or
     /// `mpsc` (the sync_channel benchmark baseline).
@@ -294,6 +296,14 @@ mod tests {
         std::fs::write(&p, c.to_json()).unwrap();
         let c2 = RunConfig::from_json_file(&p).unwrap();
         assert_eq!(c, c2);
+        // The adaptive tier parses and round-trips through its Display
+        // form, and the mapping hands it to the coordinator unchanged.
+        std::fs::write(&p, r#"{"routing": "keyed-adaptive"}"#).unwrap();
+        let c = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c.routing, Routing::KeyedAdaptive);
+        assert_eq!(c.coordinator().routing, Routing::KeyedAdaptive);
+        std::fs::write(&p, c.to_json()).unwrap();
+        assert_eq!(RunConfig::from_json_file(&p).unwrap().routing, Routing::KeyedAdaptive);
         // Unknown values are rejected, not silently defaulted.
         std::fs::write(&p, r#"{"routing": "teleport"}"#).unwrap();
         assert!(RunConfig::from_json_file(&p).is_err());

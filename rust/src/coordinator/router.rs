@@ -25,13 +25,42 @@ pub enum Routing {
     /// (`summary::merge_disjoint`) under the tighter max-per-shard
     /// error bound `maxᵢ ⌊nᵢ/k⌋` instead of the additive `⌊n/k⌋`.
     Keyed,
+    /// [`Routing::Keyed`] plus a skew-adaptive hot-key tier: the
+    /// producer detects heavy keys online (a small Space Saving sketch
+    /// over a sampled substream, seeded with the top counters of the
+    /// shards' own published snapshots) and splits detected hot keys
+    /// round-robin across *all* shards. Split-key occurrences are
+    /// counted **exactly** in per-shard side tables (never entering
+    /// the shards' Space Saving structures), so per-shard summaries
+    /// stay key-disjoint and the read side recombines a split key as
+    /// `home-shard estimate + Σ exact partials` — the max-per-shard
+    /// bound `maxᵢ ⌊nᵢ/k⌋` survives with at most one shard's ε of
+    /// over-estimation per key. The tier removes keyed routing's
+    /// hot-key cliff: one viral key no longer saturates a single
+    /// shard's ring.
+    KeyedAdaptive,
 }
 
 impl Routing {
     /// Whether this policy yields key-disjoint per-shard summaries
     /// (and therefore the disjoint merge + max-per-shard bound).
+    /// Keyed-adaptive qualifies: split keys bypass the Space Saving
+    /// structures entirely (exact side tables), so the *summaries*
+    /// remain disjoint.
     pub fn is_disjoint(&self) -> bool {
-        matches!(self, Routing::Keyed)
+        matches!(self, Routing::Keyed | Routing::KeyedAdaptive)
+    }
+
+    /// Whether items are hash-partitioned to home shards (either keyed
+    /// flavor) — i.e. the coordinator scatters per item instead of
+    /// routing whole chunks.
+    pub fn is_keyed(&self) -> bool {
+        matches!(self, Routing::Keyed | Routing::KeyedAdaptive)
+    }
+
+    /// Whether the hot-key detection/split tier is active.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, Routing::KeyedAdaptive)
     }
 }
 
@@ -41,6 +70,7 @@ impl std::fmt::Display for Routing {
             Routing::RoundRobin => "rr",
             Routing::LeastLoaded => "ll",
             Routing::Keyed => "keyed",
+            Routing::KeyedAdaptive => "keyed-adaptive",
         })
     }
 }
@@ -48,13 +78,17 @@ impl std::fmt::Display for Routing {
 impl std::str::FromStr for Routing {
     type Err = String;
 
-    /// `rr`/`chunks` (round-robin), `ll`/`least-loaded`, `keyed`.
+    /// `rr`/`chunks` (round-robin), `ll`/`least-loaded`, `keyed`,
+    /// `keyed-adaptive`/`adaptive`.
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "rr" | "chunks" | "round-robin" => Ok(Routing::RoundRobin),
             "ll" | "least-loaded" => Ok(Routing::LeastLoaded),
             "keyed" | "hash" => Ok(Routing::Keyed),
-            other => Err(format!("unknown routing '{other}' (rr|ll|keyed)")),
+            "keyed-adaptive" | "adaptive" => Ok(Routing::KeyedAdaptive),
+            other => Err(format!(
+                "unknown routing '{other}' (rr|ll|keyed|keyed-adaptive)"
+            )),
         }
     }
 }
@@ -103,7 +137,7 @@ impl Router {
                 .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
                 .map(|(i, _)| i)
                 .expect("at least one shard"),
-            Routing::Keyed => {
+            Routing::Keyed | Routing::KeyedAdaptive => {
                 unreachable!("keyed routing scatters per item in the coordinator")
             }
         };
@@ -155,15 +189,28 @@ mod tests {
             ("chunks", Routing::RoundRobin),
             ("ll", Routing::LeastLoaded),
             ("keyed", Routing::Keyed),
+            ("keyed-adaptive", Routing::KeyedAdaptive),
+            ("adaptive", Routing::KeyedAdaptive),
         ] {
             assert_eq!(s.parse::<Routing>().unwrap(), want, "{s}");
         }
         assert!("bogus".parse::<Routing>().is_err());
-        for r in [Routing::RoundRobin, Routing::LeastLoaded, Routing::Keyed] {
+        for r in [
+            Routing::RoundRobin,
+            Routing::LeastLoaded,
+            Routing::Keyed,
+            Routing::KeyedAdaptive,
+        ] {
             assert_eq!(r.to_string().parse::<Routing>().unwrap(), r);
         }
         assert!(Routing::Keyed.is_disjoint());
+        assert!(Routing::KeyedAdaptive.is_disjoint());
+        assert!(Routing::KeyedAdaptive.is_adaptive());
+        assert!(Routing::KeyedAdaptive.is_keyed());
+        assert!(Routing::Keyed.is_keyed());
+        assert!(!Routing::Keyed.is_adaptive());
         assert!(!Routing::RoundRobin.is_disjoint());
+        assert!(!Routing::RoundRobin.is_keyed());
     }
 
     #[test]

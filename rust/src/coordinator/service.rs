@@ -43,6 +43,25 @@
 //! ([`crate::summary::merge_disjoint`]) under the tighter
 //! max-per-shard bound `maxᵢ ⌊nᵢ/k⌋`.
 //!
+//! **Hot-key tier.** [`Routing::KeyedAdaptive`] removes keyed routing's
+//! skew cliff (one viral key saturating its home shard). The producer
+//! runs a small Space Saving sketch over a 1-in-[`HOT_SAMPLE_STRIDE`]
+//! sample of the scattered items and, every [`HOT_EVAL_ITEMS`] items,
+//! promotes keys whose share exceeds `1/(2·shards)` — candidates are
+//! seeded from the sketch *and* from the top counter of each shard's
+//! own published snapshot. Promoted keys are spread round-robin across
+//! all shards ([`crate::util::spread_of`]); every scattered sub-chunk
+//! carries the hot-set *generation* as its first element, so a worker
+//! classifies items against the exact immutable set the producer used
+//! (no producer/worker race across a rebalance). Split-key occurrences
+//! are counted **exactly** in per-shard side tables — they never enter
+//! any Space Saving structure — published with each epoch
+//! ([`crate::query::EpochSnapshot::hot`], [`DeltaSummary::hot`]) and
+//! recombined at read time ([`crate::summary::absorb_exact`]): a split
+//! key's estimate is `home-shard estimate + Σ exact partials`, so the
+//! max-per-shard bound survives with at most the home shard's ε of
+//! over-estimation.
+//!
 //! With [`CoordinatorConfig::batch_ingest`] on (the default) each shard
 //! first collapses an incoming chunk into `(item, weight)` runs with a
 //! reusable scratch map and applies weighted Space Saving updates — one
@@ -73,14 +92,34 @@ use crate::parallel::reduction::tree_reduce;
 use crate::parallel::spsc::{self, Backoff, PopTimeoutError, TryPushError};
 use crate::query::{EpochRegistry, QueryEngine};
 use crate::summary::batch::{offer_runs, ChunkAggregator};
-use crate::summary::{merge_disjoint, Counter, FrequencySummary, Summary, SummaryKind};
-use crate::util::shard_of;
+use crate::summary::{
+    absorb_exact, merge_disjoint, Counter, FrequencySummary, SpaceSaving, Summary, SummaryKind,
+};
+use crate::util::{shard_of, spread_of};
 use crate::window::{DeltaBuilder, WindowStore, WindowedQueryEngine};
 
 use super::router::{Router, Routing};
 
 /// How long an idle shard sleeps between checks for refresh requests.
 const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// Counter budget of the producer's hot-key detection sketch
+/// ([`Routing::KeyedAdaptive`]): tiny on purpose — it only has to
+/// surface keys with a Θ(1/shards) share, far coarser than the shard
+/// summaries' k.
+const HOT_SKETCH_K: usize = 64;
+
+/// Items scattered between hot-set evaluations.
+const HOT_EVAL_ITEMS: u64 = 65_536;
+
+/// Maximum keys in the hot set (splitting is for the catastrophic few,
+/// not the merely popular).
+const HOT_SET_CAP: usize = 8;
+
+/// Detection sampling stride: 1 in this many scattered items feeds the
+/// sketch, keeping the per-item scatter overhead a compare + rare
+/// offer.
+const HOT_SAMPLE_STRIDE: u64 = 8;
 
 /// Producer→shard chunk transport.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -131,6 +170,10 @@ pub struct CoordinatorConfig {
     /// Chunk routing policy. [`Routing::Keyed`] hash-partitions items
     /// to shards, making shard summaries key-disjoint and the merged
     /// error bound max-per-shard instead of additive.
+    /// [`Routing::KeyedAdaptive`] adds the hot-key tier: detected
+    /// heavy keys are split round-robin across all shards and counted
+    /// exactly in side tables, keeping the same bound under adversarial
+    /// skew (see the module docs).
     pub routing: Routing,
     /// Producer→shard transport ([`Transport::Ring`] by default;
     /// [`Transport::Mpsc`] is the benchmark baseline).
@@ -224,6 +267,12 @@ pub struct IngestStats {
     pub deltas_published: u64,
     /// Items processed per shard.
     pub per_shard_items: Vec<u64>,
+    /// Keyed-adaptive only: items routed through the hot-key split
+    /// tier ([`crate::util::spread_of`]) instead of their home shard.
+    pub split_items: u64,
+    /// Keyed-adaptive only: hot-set generations published (detection
+    /// promotions, demotions and [`Coordinator::force_hot_set`] calls).
+    pub hot_rebalances: u64,
 }
 
 /// Typed rejection from [`Coordinator::try_push`]: the chunk comes back
@@ -362,8 +411,62 @@ struct ShardOutcome {
     items: u64,
     /// Total mass of the deltas the shard published (must equal
     /// `items` when the delta ring is on — every item lands in exactly
-    /// one delta).
+    /// one delta; split-key mass is included via the deltas' `hot`
+    /// partials).
     delta_mass: u64,
+    /// Keyed-adaptive only: the shard's cumulative exact split-key
+    /// counts (its side table at drain).
+    hot: Vec<(u64, u64)>,
+}
+
+/// Producer-side hot-key detection state ([`Routing::KeyedAdaptive`]).
+struct AdaptiveState {
+    /// Detection sketch over the sampled scatter substream since the
+    /// last rebalance.
+    sketch: SpaceSaving,
+    /// Items the sketch has absorbed (the share denominator).
+    sampled: u64,
+    /// Scatter tick driving the 1-in-[`HOT_SAMPLE_STRIDE`] sample.
+    tick: u64,
+    /// Items scattered since the last hot-set evaluation.
+    since_eval: u64,
+    /// Current hot set, sorted ascending, ≤ [`HOT_SET_CAP`] keys.
+    hot: Vec<u64>,
+    /// Hot-set generation stamped onto every scattered sub-chunk
+    /// (index into the registry's append-only generation table).
+    generation: u64,
+    /// Round-robin split cursor ([`spread_of`]).
+    cursor: u64,
+}
+
+impl AdaptiveState {
+    fn new() -> Self {
+        Self {
+            sketch: SpaceSaving::new(HOT_SKETCH_K),
+            sampled: 0,
+            tick: 0,
+            since_eval: 0,
+            hot: Vec::new(),
+            generation: 0,
+            cursor: 0,
+        }
+    }
+}
+
+/// Fold one epoch's split-key counts into a cumulative side table
+/// (both tables are tiny — at most the union of the hot sets seen).
+fn fold_hot(cum: &mut Vec<(u64, u64)>, epoch: &[(u64, u64)]) {
+    for &(item, w) in epoch {
+        match cum.iter_mut().find(|e| e.0 == item) {
+            Some(e) => e.1 += w,
+            None => cum.push((item, w)),
+        }
+    }
+}
+
+/// Total mass of a split-key side table.
+fn hot_mass(table: &[(u64, u64)]) -> u64 {
+    table.iter().map(|&(_, w)| w).sum()
 }
 
 /// A running coordinator session.
@@ -384,6 +487,9 @@ pub struct Coordinator {
     /// Keyed-routing scatter buffers, one per shard (empty between
     /// pushes).
     scatter: Vec<Vec<u64>>,
+    /// Hot-key detection state; `Some` iff
+    /// [`Routing::KeyedAdaptive`].
+    adaptive: Option<AdaptiveState>,
 }
 
 impl Coordinator {
@@ -442,6 +548,7 @@ impl Coordinator {
             let epoch_items = cfg.epoch_items;
             let batch_ingest = cfg.batch_ingest;
             let structure = cfg.structure;
+            let adaptive = cfg.routing.is_adaptive();
             let loads = router.loads.clone();
             let registry = registry.clone();
             let window = store.clone();
@@ -460,29 +567,66 @@ impl Coordinator {
                 let mut items = 0u64;
                 let mut since_publish = 0u64;
                 let mut refresh_seen = 0u64;
+                // Keyed-adaptive side tables: split-key occurrences are
+                // counted exactly here, never offered to `ss` — the
+                // summary stays key-disjoint and its n excludes split
+                // mass. `hot_cum` is the cumulative table published
+                // with every landmark snapshot; `hot_epoch` holds just
+                // the current epoch's counts for the window delta.
+                let mut hot_cum: Vec<(u64, u64)> = Vec::new();
+                let mut hot_epoch: Vec<(u64, u64)> = Vec::new();
+                // Scratch for the non-split remainder of a sub-chunk.
+                let mut normal: Vec<u64> = Vec::new();
                 loop {
                     match rx.recv_timeout(IDLE_POLL) {
                         Recv::Chunk(mut chunk) => {
+                            if adaptive {
+                                // Sub-chunks carry the hot-set
+                                // generation as their first element;
+                                // classify against that *immutable*
+                                // set, so a rebalance mid-flight can
+                                // never disagree with the placement
+                                // the producer already made.
+                                let (gen, rest) =
+                                    chunk.split_first().expect("stamped sub-chunk");
+                                let hot_set = registry.hot_set(*gen);
+                                normal.clear();
+                                for &item in rest {
+                                    if hot_set.contains(&item) {
+                                        match hot_epoch.iter_mut().find(|e| e.0 == item) {
+                                            Some(e) => e.1 += 1,
+                                            None => hot_epoch.push((item, 1)),
+                                        }
+                                    } else {
+                                        normal.push(item);
+                                    }
+                                }
+                            }
+                            let data: &[u64] = if adaptive { &normal } else { &chunk };
                             match scratch.as_mut() {
                                 Some(agg) => {
                                     // Aggregate once, apply twice: the
                                     // runs feed the cumulative summary
                                     // and (one map probe per distinct
                                     // item) the pending delta.
-                                    let runs = agg.aggregate(&chunk);
+                                    let runs = agg.aggregate(data);
                                     offer_runs(&mut ss, runs);
                                     if let Some(db) = delta.as_mut() {
                                         db.absorb_runs(runs);
                                     }
                                 }
                                 None => {
-                                    ss.offer_all(&chunk);
+                                    ss.offer_all(data);
                                     if let Some(db) = delta.as_mut() {
-                                        db.absorb_items(&chunk);
+                                        db.absorb_items(data);
                                     }
                                 }
                             }
-                            let len = chunk.len();
+                            // The generation stamp is transport framing,
+                            // not stream mass: every accounting path
+                            // (items, loads, epoch cadence) sees the
+                            // body length.
+                            let len = chunk.len() - usize::from(adaptive);
                             items += len as u64;
                             since_publish += len as u64;
                             Router::drained(&loads, shard, len);
@@ -500,14 +644,30 @@ impl Coordinator {
                                 // a reader that observes the new landmark
                                 // epoch (e.g. staleness reaching 0) is then
                                 // guaranteed the matching window delta is
-                                // already in the ring.
+                                // already in the ring. Epoch split-key
+                                // partials fold into the cumulative table
+                                // and ride the window delta (a hot-only
+                                // epoch still publishes — its delta is an
+                                // empty summary plus exact partials).
+                                fold_hot(&mut hot_cum, &hot_epoch);
                                 if let (Some(db), Some(ws)) = (delta.as_mut(), window.as_ref()) {
-                                    if !db.is_empty() {
-                                        delta_mass += db.mass();
-                                        ws.publish(shard, db.cut(k), false);
+                                    if !db.is_empty() || !hot_epoch.is_empty() {
+                                        delta_mass += db.mass() + hot_mass(&hot_epoch);
+                                        ws.publish_with_hot(
+                                            shard,
+                                            db.cut(k),
+                                            false,
+                                            std::mem::take(&mut hot_epoch),
+                                        );
                                     }
                                 }
-                                registry.publish(shard, ss.freeze(), false);
+                                hot_epoch.clear();
+                                registry.publish_with_hot(
+                                    shard,
+                                    ss.freeze(),
+                                    false,
+                                    hot_cum.clone(),
+                                );
                                 since_publish = 0;
                                 refresh_seen = watermark;
                             }
@@ -517,13 +677,25 @@ impl Coordinator {
                             // readers are not stuck behind a quiet shard.
                             let watermark = registry.refresh_watermark();
                             if watermark > refresh_seen {
+                                fold_hot(&mut hot_cum, &hot_epoch);
                                 if let (Some(db), Some(ws)) = (delta.as_mut(), window.as_ref()) {
-                                    if !db.is_empty() {
-                                        delta_mass += db.mass();
-                                        ws.publish(shard, db.cut(k), false);
+                                    if !db.is_empty() || !hot_epoch.is_empty() {
+                                        delta_mass += db.mass() + hot_mass(&hot_epoch);
+                                        ws.publish_with_hot(
+                                            shard,
+                                            db.cut(k),
+                                            false,
+                                            std::mem::take(&mut hot_epoch),
+                                        );
                                     }
                                 }
-                                registry.publish(shard, ss.freeze(), false);
+                                hot_epoch.clear();
+                                registry.publish_with_hot(
+                                    shard,
+                                    ss.freeze(),
+                                    false,
+                                    hot_cum.clone(),
+                                );
                                 since_publish = 0;
                                 refresh_seen = watermark;
                             }
@@ -537,22 +709,29 @@ impl Coordinator {
                 // since the final cadence cut would be visible to landmark
                 // queries but silently missing from windowed ones.
                 let summary = ss.freeze();
+                fold_hot(&mut hot_cum, &hot_epoch);
                 if let (Some(db), Some(ws)) = (delta.as_mut(), window.as_ref()) {
-                    if db.is_empty() {
+                    if db.is_empty() && hot_epoch.is_empty() {
                         ws.finish_shard(shard);
                     } else {
-                        delta_mass += db.mass();
-                        ws.publish(shard, db.cut(k), true);
+                        delta_mass += db.mass() + hot_mass(&hot_epoch);
+                        ws.publish_with_hot(
+                            shard,
+                            db.cut(k),
+                            true,
+                            std::mem::take(&mut hot_epoch),
+                        );
                     }
                 }
-                registry.publish(shard, summary.clone(), true);
-                ShardOutcome { summary, items, delta_mass }
+                registry.publish_with_hot(shard, summary.clone(), true, hot_cum.clone());
+                ShardOutcome { summary, items, delta_mass, hot: hot_cum }
             }));
             links.push(ShardLink { tx, free: free_rx });
         }
         let coordinator = Self {
             stats: IngestStats { per_shard_items: vec![0; cfg.shards], ..Default::default() },
             scatter: (0..cfg.shards).map(|_| Vec::new()).collect(),
+            adaptive: cfg.routing.is_adaptive().then(AdaptiveState::new),
             cfg,
             links,
             handles,
@@ -672,23 +851,60 @@ impl Coordinator {
         }
     }
 
-    /// Scatter a chunk into the per-shard buffers by home shard.
+    /// Scatter a chunk into the per-shard buffers by home shard. In
+    /// adaptive mode every buffer is first stamped with the current
+    /// hot-set generation, hot items are spread round-robin instead of
+    /// going home, and a 1-in-[`HOT_SAMPLE_STRIDE`] sample feeds the
+    /// detection sketch.
     fn scatter_chunk(&mut self, chunk: &[u64]) {
         let shards = self.links.len();
-        for &item in chunk {
-            self.scatter[shard_of(item, shards)].push(item);
+        if let Some(ad) = self.adaptive.as_mut() {
+            for buf in &mut self.scatter {
+                debug_assert!(buf.is_empty(), "scatter buffers cleared between pushes");
+                buf.push(ad.generation);
+            }
+            for &item in chunk {
+                let dest = if ad.hot.contains(&item) {
+                    let d = spread_of(ad.cursor, shards);
+                    ad.cursor += 1;
+                    self.stats.split_items += 1;
+                    d
+                } else {
+                    shard_of(item, shards)
+                };
+                self.scatter[dest].push(item);
+                ad.tick += 1;
+                if ad.tick % HOT_SAMPLE_STRIDE == 0 {
+                    ad.sketch.offer(item);
+                    ad.sampled += 1;
+                }
+            }
+            ad.since_eval += chunk.len() as u64;
+        } else {
+            for &item in chunk {
+                self.scatter[shard_of(item, shards)].push(item);
+            }
         }
     }
 
+    /// Body length of shard `shard`'s pending scatter buffer (the
+    /// generation stamp is framing, not payload).
+    fn scatter_body_len(&self, shard: usize) -> usize {
+        self.scatter[shard]
+            .len()
+            .saturating_sub(usize::from(self.adaptive.is_some()))
+    }
+
     /// Ingest one chunk. Blocks when the target shard's queue is full
-    /// (counted as a backpressure event). Under [`Routing::Keyed`] the
-    /// chunk is hash-scattered and each non-empty sub-chunk pushed to
-    /// its home shard.
+    /// (counted as a backpressure event). Under keyed routing the chunk
+    /// is hash-scattered and each non-empty sub-chunk pushed to its
+    /// home shard (keyed-adaptive additionally spreads detected hot
+    /// keys across all shards).
     pub fn push(&mut self, chunk: Vec<u64>) {
         if chunk.is_empty() {
             return;
         }
-        if self.cfg.routing == Routing::Keyed {
+        if self.cfg.routing.is_keyed() {
             self.push_keyed(chunk);
             return;
         }
@@ -704,16 +920,23 @@ impl Coordinator {
         self.recycle(chunk);
         self.stats.chunks += 1;
         for shard in 0..self.links.len() {
-            if self.scatter[shard].is_empty() {
+            let len = self.scatter_body_len(shard);
+            if len == 0 {
+                // Nothing routed here; drop a bare generation stamp so
+                // the next scatter starts from a clean buffer.
+                self.scatter[shard].clear();
                 continue;
             }
             let replacement = self.take_buffer();
             let sub = std::mem::replace(&mut self.scatter[shard], replacement);
-            let len = sub.len();
             self.router.enqueued(shard, len);
             self.send_blocking(shard, sub);
             self.account_items(shard, len);
         }
+        // Evaluate only after every sub-chunk of this push is
+        // dispatched: they carry the pre-evaluation generation, and the
+        // classification baked into their placement matches it.
+        self.maybe_evaluate_hot_set();
     }
 
     /// Non-blocking ingest: route the chunk and enqueue it if the shard
@@ -726,7 +949,7 @@ impl Coordinator {
         if chunk.is_empty() {
             return Ok(());
         }
-        if self.cfg.routing == Routing::Keyed {
+        if self.cfg.routing.is_keyed() {
             return self.try_push_keyed(chunk);
         }
         let len = chunk.len();
@@ -751,33 +974,47 @@ impl Coordinator {
     }
 
     fn try_push_keyed(&mut self, chunk: Vec<u64>) -> Result<(), PushError> {
+        let adaptive = self.adaptive.is_some();
         self.scatter_chunk(&chunk);
         self.recycle(chunk);
         let mut rejected: Option<(usize, SendFailure, Vec<u64>)> = None;
         for shard in 0..self.links.len() {
-            if self.scatter[shard].is_empty() {
+            let len = self.scatter_body_len(shard);
+            if len == 0 {
+                self.scatter[shard].clear();
                 continue;
             }
             let replacement = self.take_buffer();
             let sub = std::mem::replace(&mut self.scatter[shard], replacement);
-            let len = sub.len();
             self.router.enqueued(shard, len);
             match self.links[shard].tx.try_send(sub) {
                 Ok(()) => {
                     self.account_items(shard, len);
                 }
-                Err((sub, failure)) => {
+                Err((mut sub, failure)) => {
                     Router::drained(&self.router.loads, shard, len);
+                    // The remainder goes back to the caller as a plain
+                    // chunk: strip the generation stamp (a re-offered
+                    // chunk is re-scattered and re-stamped; order is
+                    // irrelevant, counts are multisets).
                     rejected = match rejected.take() {
-                        None => Some((shard, failure, sub)),
+                        None => {
+                            if adaptive {
+                                sub.swap_remove(0);
+                            }
+                            Some((shard, failure, sub))
+                        }
                         Some((first_shard, first_failure, mut remainder)) => {
-                            remainder.extend_from_slice(&sub);
+                            remainder.extend_from_slice(&sub[usize::from(adaptive)..]);
                             self.recycle(sub);
                             Some((first_shard, first_failure, remainder))
                         }
                     };
                 }
             }
+        }
+        if adaptive {
+            self.maybe_evaluate_hot_set();
         }
         // A caller chunk counts once, on the attempt that accepts its
         // last item — a partially-accepted chunk whose remainder the
@@ -796,6 +1033,111 @@ impl Coordinator {
                 })
             }
         }
+    }
+
+    /// Run a hot-set evaluation if the cadence ([`HOT_EVAL_ITEMS`]) is
+    /// due.
+    fn maybe_evaluate_hot_set(&mut self) {
+        if self
+            .adaptive
+            .as_ref()
+            .is_some_and(|ad| ad.since_eval >= HOT_EVAL_ITEMS)
+        {
+            self.evaluate_hot_set();
+        }
+    }
+
+    /// Decide the next hot set from the detection sketch plus the top
+    /// published counter of every shard (the "seeded from the shards'
+    /// own snapshots" half: a key that saturated a shard *before* the
+    /// producer's sketch window saw it still becomes a candidate), and
+    /// install it if it differs from the current one.
+    ///
+    /// A key is promoted when its estimated share exceeds
+    /// `1/(2·shards)` — the point where one key materially unbalances
+    /// a hash partition — and an already-hot key is kept down to half
+    /// that (hysteresis, so borderline keys don't flap each window).
+    fn evaluate_hot_set(&mut self) {
+        let shards = self.links.len();
+        let (mut candidates, current) = {
+            let Some(ad) = self.adaptive.as_mut() else { return };
+            ad.since_eval = 0;
+            let mut c: Vec<(u64, f64)> = Vec::new();
+            if ad.sampled > 0 {
+                for ctr in ad.sketch.freeze().top_k(2 * HOT_SET_CAP) {
+                    c.push((ctr.item, ctr.count as f64 / ad.sampled as f64));
+                }
+            }
+            (c, ad.hot.clone())
+        };
+        let parts = self.engine.registry().latest();
+        let published: u64 = parts.iter().map(|p| p.summary.n() + p.hot_mass()).sum();
+        if published > 0 {
+            for p in &parts {
+                if let Some(top) = p.summary.top_k(1).first() {
+                    candidates.push((top.item, top.count as f64 / published as f64));
+                }
+            }
+        }
+        let hot_share = 1.0 / (2.0 * shards as f64);
+        candidates
+            .sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        let mut next: Vec<u64> = Vec::new();
+        for (item, share) in candidates {
+            if next.len() >= HOT_SET_CAP {
+                break;
+            }
+            if next.contains(&item) {
+                continue;
+            }
+            let threshold =
+                if current.contains(&item) { hot_share / 2.0 } else { hot_share };
+            if share > threshold {
+                next.push(item);
+            }
+        }
+        next.sort_unstable();
+        if next != current {
+            self.install_hot_set(next);
+        }
+    }
+
+    /// Publish `keys` as the next hot-set generation and reset the
+    /// detection window (the sketch restarts so drifted distributions
+    /// are re-measured from scratch).
+    fn install_hot_set(&mut self, keys: Vec<u64>) -> u64 {
+        let generation = self.engine.registry().publish_hot_set(keys.clone());
+        let ad = self.adaptive.as_mut().expect("adaptive routing");
+        ad.hot = keys;
+        ad.generation = generation;
+        ad.cursor = 0;
+        ad.sketch = SpaceSaving::new(HOT_SKETCH_K);
+        ad.sampled = 0;
+        ad.since_eval = 0;
+        self.stats.hot_rebalances += 1;
+        generation
+    }
+
+    /// Force the hot set to exactly `keys` (sorted, deduplicated),
+    /// bypassing detection — the deterministic handle the adversarial
+    /// tests drive rebalances with. Returns the published generation.
+    /// Subsequent pushes split these keys round-robin; detection keeps
+    /// running and may still replace the set at the next due
+    /// evaluation.
+    ///
+    /// # Panics
+    ///
+    /// If the session's routing is not [`Routing::KeyedAdaptive`].
+    pub fn force_hot_set(&mut self, keys: Vec<u64>) -> u64 {
+        assert!(
+            self.cfg.routing.is_adaptive(),
+            "force_hot_set requires keyed-adaptive routing"
+        );
+        let mut keys = keys;
+        keys.sort_unstable();
+        keys.dedup();
+        assert!(keys.len() <= HOT_SET_CAP, "hot set capped at {HOT_SET_CAP} keys");
+        self.install_hot_set(keys)
     }
 
     /// Current queued load per shard (items), for monitoring.
@@ -820,6 +1162,11 @@ impl Coordinator {
         let handles = std::mem::take(&mut self.handles);
         let mut summaries = Vec::with_capacity(handles.len());
         let mut stats = std::mem::take(&mut self.stats);
+        // Keyed-adaptive: sum the shards' exact split-key side tables
+        // (each shard's partial counts a disjoint sub-stream of the
+        // split key, so the sum is exact).
+        let mut hot_totals: std::collections::BTreeMap<u64, u64> =
+            std::collections::BTreeMap::new();
         for (shard, h) in handles.into_iter().enumerate() {
             let out = h.join().expect("shard panicked");
             debug_assert_eq!(out.items, stats.per_shard_items[shard]);
@@ -832,9 +1179,16 @@ impl Coordinator {
                     "shard {shard}: delta mass must cover every ingested item"
                 );
             }
+            for (item, w) in out.hot {
+                *hot_totals.entry(item).or_default() += w;
+            }
             summaries.push(out.summary);
         }
-        let summary = if self.cfg.routing.is_disjoint() {
+        // Per-shard min counts, captured before the merge consumes the
+        // summaries: the bound on a split key's evicted pre-split
+        // history when recombination has to insert it fresh.
+        let shard_mins: Vec<u64> = summaries.iter().map(Summary::min_count).collect();
+        let mut summary = if self.cfg.routing.is_disjoint() {
             // Keyed routing: shard summaries are key-disjoint —
             // concatenate instead of cross-charging mins.
             let refs: Vec<&Summary> = summaries.iter().collect();
@@ -842,6 +1196,15 @@ impl Coordinator {
         } else {
             tree_reduce(summaries)
         };
+        if !hot_totals.is_empty() {
+            // Recombine split keys: home estimate + Σ exact partials.
+            // Afterwards summary.n() covers the split mass again, so
+            // the prune threshold below sees the whole stream.
+            let extras: Vec<(u64, u64)> = hot_totals.into_iter().collect();
+            summary = absorb_exact(&summary, &extras, |item| {
+                shard_mins[shard_of(item, shard_mins.len())]
+            });
+        }
         let frequent = summary.prune(stats.items, self.cfg.k_majority);
         stats.epochs_published = self.engine.registry().epochs_published();
         stats.deltas_published = self
@@ -1425,5 +1788,175 @@ mod tests {
         // Everything not returned was accepted and fully accounted.
         assert_eq!(out.stats.items, sent - returned);
         assert_eq!(out.summary.n(), sent - returned);
+    }
+
+    #[test]
+    fn adaptive_cold_stream_matches_keyed() {
+        // No key near the 1/(2·shards) share: the hot tier must stay
+        // dormant and keyed-adaptive must behave exactly like keyed —
+        // disjoint summaries, items on their home shards, full recall.
+        let src = GeneratedSource::uniform(50_000, 5_000, 13);
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 4,
+            k: 256,
+            k_majority: 256,
+            routing: Routing::KeyedAdaptive,
+            ..Default::default()
+        });
+        let n = src.len();
+        let mut pos = 0u64;
+        while pos < n {
+            let take = ((n - pos) as usize).min(4096);
+            let mut buf = c.take_buffer();
+            buf.resize(take, 0);
+            src.fill(pos, &mut buf);
+            c.push(buf);
+            pos += take as u64;
+        }
+        let out = c.finish();
+        assert_eq!(out.stats.items, 50_000);
+        assert_eq!(out.stats.split_items, 0, "uniform stream has no hot keys");
+        assert_eq!(out.stats.hot_rebalances, 0);
+        assert_eq!(out.summary.n(), 50_000);
+        let parts = q.registry().latest();
+        let mut seen = std::collections::HashSet::new();
+        for p in &parts {
+            assert!(p.hot.is_empty(), "no split partials on a cold stream");
+            for ctr in p.summary.counters() {
+                assert!(seen.insert(ctr.item), "item {} on two shards", ctr.item);
+                assert_eq!(shard_of(ctr.item, 4), p.shard, "item off home shard");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_force_hot_set_splits_and_recombines_exactly() {
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 4,
+            k: 64,
+            k_majority: 8,
+            epoch_items: 0,
+            routing: Routing::KeyedAdaptive,
+            ..Default::default()
+        });
+        // Pre-split history: 100 occurrences of key 7 reach its home
+        // shard's Space Saving structure, filler 0..20 goes home too.
+        let mut pre: Vec<u64> = vec![7; 100];
+        pre.extend(0..20u64);
+        c.push(pre);
+        let generation = c.force_hot_set(vec![7]);
+        assert_eq!(generation, 1, "first rebalance publishes generation 1");
+        // Post-split: 400 occurrences spread round-robin from cursor 0
+        // — exactly 100 per shard — counted exactly in side tables.
+        let mut post: Vec<u64> = vec![7; 400];
+        post.extend(20..40u64);
+        c.push(post);
+        let out = c.finish();
+        assert_eq!(out.stats.items, 540);
+        assert_eq!(out.stats.split_items, 400);
+        assert_eq!(out.stats.hot_rebalances, 1);
+        // Per-shard placement is fully deterministic: home-routed items
+        // by shard_of, plus 100 split items everywhere.
+        let mut expect = [0u64; 4];
+        expect[shard_of(7, 4)] += 100;
+        for item in 0..40u64 {
+            expect[shard_of(item, 4)] += 1;
+        }
+        for e in &mut expect {
+            *e += 100;
+        }
+        assert_eq!(out.stats.per_shard_items, expect);
+        // k = 64 exceeds the distinct-item count, so every estimate is
+        // exact — the split key recombines to its true frequency.
+        assert_eq!(out.summary.n(), 540, "split mass folded back into n");
+        assert_eq!(out.summary.estimate(7), Some(500));
+        assert_eq!(out.frequent[0].item, 7);
+        assert_eq!(out.frequent[0].count, 500);
+        // The live read path agrees: home estimate + exact partials.
+        let p = q.point(7);
+        assert_eq!(p.estimate, 500);
+        assert_eq!(p.guaranteed, 500);
+        let snap = q.snapshot();
+        assert_eq!(snap.n(), 540);
+        assert_eq!(snap.summary().estimate(7), Some(500));
+    }
+
+    #[test]
+    fn adaptive_detects_and_splits_single_hot_key() {
+        // Adversarial single-hot-key workload: key H is 90% of the
+        // stream. Detection must fire without any force_hot_set, split
+        // mass must flow, and the recombined answer must keep the
+        // guarantee.
+        const H: u64 = 999_999;
+        const N: usize = 200_000;
+        let mut rng = crate::util::SplitMix64::new(4242);
+        let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 4,
+            k: 256,
+            k_majority: 64,
+            routing: Routing::KeyedAdaptive,
+            ..Default::default()
+        });
+        let mut true_h = 0u64;
+        let mut pushed = 0usize;
+        while pushed < N {
+            let take = 4096.min(N - pushed);
+            let mut buf = c.take_buffer();
+            for _ in 0..take {
+                if rng.next_f64() < 0.9 {
+                    buf.push(H);
+                    true_h += 1;
+                } else {
+                    buf.push(rng.next_below(10_000));
+                }
+            }
+            c.push(buf);
+            pushed += take;
+        }
+        let out = c.finish();
+        assert_eq!(out.stats.items, N as u64);
+        assert!(out.stats.hot_rebalances >= 1, "detection never fired");
+        assert!(out.stats.split_items > 0, "hot key never split");
+        // The split tier must have unloaded H's home shard: nobody
+        // carries the ~90% share a plain keyed partition would pin
+        // on one shard.
+        let max = *out.stats.per_shard_items.iter().max().unwrap();
+        assert!(
+            max < (N as u64) * 6 / 10,
+            "home shard still overloaded: {:?}",
+            out.stats.per_shard_items
+        );
+        // Guarantee intact through detection + split + recombination.
+        let est = out.summary.estimate(H).expect("hot key monitored");
+        assert!(est >= true_h, "under-estimate");
+        let eps = (out.stats.items / 256) as u64; // loosest per-shard bound
+        assert!(est - true_h <= eps, "over-estimate past ε");
+        assert_eq!(out.frequent[0].item, H);
+    }
+
+    #[test]
+    fn adaptive_window_covers_split_mass() {
+        let (mut c, _q) = Coordinator::spawn(CoordinatorConfig {
+            shards: 2,
+            k: 32,
+            k_majority: 8,
+            epoch_items: 0,
+            delta_ring: 8,
+            routing: Routing::KeyedAdaptive,
+            ..Default::default()
+        });
+        let w = c.windows().expect("delta ring on");
+        c.push(vec![5; 50]);
+        c.force_hot_set(vec![5]);
+        c.push(vec![5; 200]); // split 100 / 100
+        let out = c.finish();
+        assert_eq!(out.stats.items, 250);
+        assert_eq!(out.stats.split_items, 200);
+        // The windowed read path folds the deltas' exact partials: the
+        // full-ring window covers the whole stream, split mass included.
+        let snap = w.window(8);
+        assert_eq!(snap.n(), 250, "window covers split mass");
+        assert_eq!(snap.point(5).estimate, 250);
+        assert_eq!(out.summary.estimate(5), Some(250));
     }
 }

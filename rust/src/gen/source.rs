@@ -86,6 +86,21 @@ pub enum Distribution {
     Zipf(ZipfSampler),
     /// Uniform over `[1, universe]`.
     Uniform { universe: u64 },
+    /// Adversarial single-hot-key workload: one item id drawn with
+    /// probability `p`, a zipf tail over `[1, universe]` otherwise.
+    /// The worst case for keyed routing — a `p` fraction of the stream
+    /// hashes to one shard. `drift = Some((at, to))` switches the hot
+    /// identity to `to` at absolute position `at` (mid-stream drift).
+    HotKey {
+        /// Tail sampler for the non-hot draws.
+        tail: ZipfSampler,
+        /// The hot item id (outside the tail universe).
+        hot: u64,
+        /// Optional `(position, new_id)` identity switch.
+        drift: Option<(u64, u64)>,
+        /// Probability of drawing the hot id.
+        p: f64,
+    },
 }
 
 /// A stream synthesized on the fly: nothing is stored; any range
@@ -117,11 +132,65 @@ impl GeneratedSource {
         Self { dist: Distribution::Uniform { universe }, seed, n }
     }
 
+    /// Single-hot-key stream: item `universe + 1` with probability `p`,
+    /// a zipf tail of skew `s` over `universe` ranks otherwise.
+    pub fn hot_key(n: u64, universe: u64, s: f64, p: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p must be in [0, 1]");
+        Self {
+            dist: Distribution::HotKey {
+                tail: ZipfSampler::new(universe, s),
+                hot: universe + 1,
+                drift: None,
+                p,
+            },
+            seed,
+            n,
+        }
+    }
+
+    /// [`GeneratedSource::hot_key`] with mid-stream drift: the hot
+    /// identity switches from `universe + 1` to `universe + 2` at
+    /// absolute position `drift_at`.
+    pub fn hot_key_drift(
+        n: u64,
+        universe: u64,
+        s: f64,
+        p: f64,
+        drift_at: u64,
+        seed: u64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&p), "p must be in [0, 1]");
+        Self {
+            dist: Distribution::HotKey {
+                tail: ZipfSampler::new(universe, s),
+                hot: universe + 1,
+                drift: Some((drift_at, universe + 2)),
+                p,
+            },
+            seed,
+            n,
+        }
+    }
+
+    /// Draw the item at absolute position `pos`. The RNG consumption
+    /// pattern is position-independent (the position only selects the
+    /// hot *identity* under drift), so chunk-seeded regeneration stays
+    /// decomposition-independent.
     #[inline]
-    fn draw(&self, rng: &mut SplitMix64) -> u64 {
+    fn draw_at(&self, pos: u64, rng: &mut SplitMix64) -> u64 {
         match &self.dist {
             Distribution::Zipf(z) => z.sample(rng),
             Distribution::Uniform { universe } => 1 + rng.next_below(*universe),
+            Distribution::HotKey { tail, hot, drift, p } => {
+                if rng.next_f64() < *p {
+                    match drift {
+                        Some((at, to)) if pos >= *at => *to,
+                        _ => *hot,
+                    }
+                } else {
+                    tail.sample(rng)
+                }
+            }
         }
     }
 }
@@ -145,12 +214,12 @@ impl ItemSource for GeneratedSource {
             // Burn draws up to `pos` within the chunk.
             // (A draw consumes a variable number of RNG words under
             // rejection, so we re-draw items, not RNG words.)
-            for _ in chunk_start..pos {
-                self.draw(&mut rng);
+            for i in chunk_start..pos {
+                self.draw_at(i, &mut rng);
             }
             let take = ((chunk_end.min(end)) - pos) as usize;
-            for slot in &mut out[off..off + take] {
-                *slot = self.draw(&mut rng);
+            for (i, slot) in out[off..off + take].iter_mut().enumerate() {
+                *slot = self.draw_at(pos + i as u64, &mut rng);
             }
             off += take;
             pos += take as u64;
@@ -238,6 +307,46 @@ mod tests {
         let items = src.slice(0, 50_000);
         let ones = items.iter().filter(|&&x| x == 1).count();
         assert!(ones as f64 > 0.4 * 50_000.0, "rank 1 share {ones}");
+    }
+
+    #[test]
+    fn hot_key_share_tracks_p_and_drift_switches_identity() {
+        let n = 50_000u64;
+        let src = GeneratedSource::hot_key(n, 1_000, 1.1, 0.6, 11);
+        let items = src.slice(0, n);
+        let hot = 1_001u64;
+        let share =
+            items.iter().filter(|&&x| x == hot).count() as f64 / n as f64;
+        assert!((share - 0.6).abs() < 0.02, "hot share {share}");
+        assert!(items.iter().all(|&x| x <= hot), "ids beyond the universe");
+
+        // Drift at the midpoint: the old id never appears after, the
+        // new one never before.
+        let drift = GeneratedSource::hot_key_drift(n, 1_000, 1.1, 0.6, n / 2, 11);
+        let d = drift.slice(0, n);
+        let (pre, post) = d.split_at((n / 2) as usize);
+        assert!(pre.iter().any(|&x| x == hot));
+        assert!(pre.iter().all(|&x| x != 1_002));
+        assert!(post.iter().any(|&x| x == 1_002));
+        assert!(post.iter().all(|&x| x != hot));
+    }
+
+    #[test]
+    fn hot_key_is_decomposition_independent() {
+        // Drift makes draws position-dependent — exactly the case the
+        // position-threaded burn loop must keep bit-identical.
+        let src = GeneratedSource::hot_key_drift(20_000, 500, 1.1, 0.3, 9_999, 5);
+        let whole = src.slice(0, 20_000);
+        for p in [2u64, 3, 7, 16] {
+            let mut parts = Vec::new();
+            for r in 0..p {
+                let left = r * 20_000 / p;
+                let right = (r + 1) * 20_000 / p;
+                parts.extend(src.slice(left, right));
+            }
+            assert_eq!(parts, whole, "p={p} changed the stream");
+        }
+        assert_eq!(src.slice(4_095, 4_097), whole[4_095..4_097].to_vec());
     }
 
     #[test]

@@ -21,8 +21,9 @@
 //! * `bench` — machine-readable perf records: `--suite window` (delta
 //!   ring overhead, landmark vs windowed latency), `--suite transport`
 //!   (ring vs mpsc × routing), `--suite summary` (heap vs bucket vs
-//!   compact core × workload × write path + k-sweep); `--json` emits
-//!   `BENCH_*.json`-style records.
+//!   compact core × workload × write path + k-sweep), `--suite routing`
+//!   (chunked vs keyed vs keyed-adaptive on skewed and single-hot-key
+//!   workloads); `--json` emits `BENCH_*.json`-style records.
 //! * `repro` — regenerate a paper table/figure on the calibrated
 //!   cluster simulator (`--list` shows all experiment ids).
 //! * `verify` — offline exact verification of a run's candidates via
@@ -47,25 +48,28 @@ pss — Parallel Space Saving on multi- and many-core processors
 USAGE:
   pss generate --out <file.pssd> [--n N] [--universe U] [--skew R] [--seed S]
   pss run      [--input <file.pssd> | --n N --skew R] [--k K] [--threads T]
-               [--chunk-len C] [--queue-depth Q] [--routing rr|ll|keyed]
+               [--chunk-len C] [--queue-depth Q]
+               [--routing rr|ll|keyed|keyed-adaptive]
                [--transport ring|mpsc] [--structure heap|bucket|compact]
                [--batch-ingest true|false]
                [--config cfg.json] [--verify] [--artifacts DIR]
   pss query    [--n N] [--universe U] [--skew R] [--k K] [--threads T]
-               [--chunk-len C] [--routing rr|ll|keyed] [--transport ring|mpsc]
+               [--chunk-len C] [--routing rr|ll|keyed|keyed-adaptive]
+               [--transport ring|mpsc]
                [--structure heap|bucket|compact] [--batch-ingest true|false]
                [--epoch-items E] [--interval-ms I]
                [--window W] [--delta-ring R]
                [--top M] [--watch ITEM]
   pss serve    [--listen unix:/path|host:port] [--k K] [--threads T]
-               [--queue-depth Q] [--routing rr|ll|keyed] [--transport ring|mpsc]
+               [--queue-depth Q] [--routing rr|ll|keyed|keyed-adaptive]
+               [--transport ring|mpsc]
                [--structure heap|bucket|compact] [--batch-ingest true|false]
                [--epoch-items E] [--delta-ring R] [--window W]
                [--query-threads QT] [--max-ingest MI] [--duration-s S]
   pss loadgen  [--connect unix:/path|host:port] [--clients N] [--items M]
                [--chunk-len C] [--universe U] [--skew R] [--seed S]
                [--runs] [--inflight F] [--top M] [--window W] [--shutdown]
-  pss bench    [--suite window|transport|summary] [--n N] [--k K] [--threads T]
+  pss bench    [--suite window|transport|summary|routing] [--n N] [--k K] [--threads T]
                [--window W] [--delta-ring R] [--epoch-items E] [--repeat R]
                [--chunk-len C] [--json] [--out FILE]
   pss repro    --exp <id> [--scale D] [--seed S] [--out DIR]   (or --list)
@@ -289,9 +293,14 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         cfg.n, cfg.universe, cfg.skew, cfg.threads, cfg.k, epoch_items, cfg.routing,
         cfg.transport, cfg.structure
     );
-    if cfg.routing == Routing::Keyed {
+    if cfg.routing.is_keyed() {
         println!(
             "keyed routing: shards are key-disjoint — reported ε is the max-per-shard bound"
+        );
+    }
+    if cfg.routing.is_adaptive() {
+        println!(
+            "adaptive hot-key tier: detected heavy keys split across all shards, recombined exactly at query time"
         );
     }
     if cfg.delta_ring > 0 {
@@ -613,7 +622,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "window" => {}
         "transport" => return cmd_bench_transport(args),
         "summary" => return cmd_bench_summary(args),
-        other => anyhow::bail!("unknown bench suite '{other}' (window|transport|summary)"),
+        "routing" => return cmd_bench_routing(args),
+        other => anyhow::bail!(
+            "unknown bench suite '{other}' (window|transport|summary|routing)"
+        ),
     }
 
     let n: u64 = args.get_or("n", 2_000_000).map_err(anyhow::Error::msg)?;
@@ -832,6 +844,119 @@ fn cmd_bench_transport(args: &Args) -> anyhow::Result<()> {
     } else {
         println!(
             "ring vs mpsc speedup: {speedup_chunks:.2}x (chunks), {speedup_keyed:.2}x (keyed) — target ≥ 1.5x at {threads} shards"
+        );
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{record}\n"))?;
+        println!("[record written to {path}]");
+    }
+    Ok(())
+}
+
+/// `pss bench --suite routing` — the hot-key-tier acceptance sweep:
+/// routing (`chunked` round-robin vs `keyed` vs `keyed-adaptive`) ×
+/// workload (zipf-1.8 vs single-hot-key p=0.6 over a zipf-1.1 tail).
+/// Plain keyed routing collapses on the hot-key workload — one shard
+/// takes the whole hot fraction — while the adaptive tier detects the
+/// key online and splits it round-robin. Acceptance at 4 shards:
+/// adaptive ≥ 0.9× chunked on zipf-1.8, adaptive ≥ 2× keyed on the
+/// hot-key workload (`BENCH_routing.json`).
+fn cmd_bench_routing(args: &Args) -> anyhow::Result<()> {
+    use pss::coordinator::Coordinator;
+
+    let n: u64 = args.get_or("n", 2_000_000).map_err(anyhow::Error::msg)?;
+    let k: usize = args.get_or("k", 2_000).map_err(anyhow::Error::msg)?;
+    let threads: usize = args.get_or("threads", 4).map_err(anyhow::Error::msg)?;
+    let queue_depth: usize = args.get_or("queue-depth", 8).map_err(anyhow::Error::msg)?;
+    let repeat: usize = args.get_or("repeat", 3).map_err(anyhow::Error::msg)?;
+    let json = args.has("json");
+    let chunk_len = pss::parallel::batch_chunk_len_default();
+
+    let zipf18 = GeneratedSource::zipf(n, 1 << 20, 1.8, 7);
+    let hotkey = GeneratedSource::hot_key(n, 1 << 20, 1.1, 0.6, 7);
+    if !json {
+        println!(
+            "routing × workload sweep: {n} items, {threads} shards, k={k}, queue depth {queue_depth}"
+        );
+    }
+    let session = |routing: Routing, src: &GeneratedSource| {
+        let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+            shards: threads,
+            k,
+            k_majority: k as u64,
+            queue_depth,
+            routing,
+            epoch_items: 0, // pure write path
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        let mut pos = 0u64;
+        while pos < n {
+            let take = ((n - pos) as usize).min(chunk_len);
+            let mut buf = c.take_buffer();
+            buf.resize(take, 0);
+            src.fill(pos, &mut buf);
+            c.push(buf);
+            pos += take as u64;
+        }
+        let result = c.finish();
+        (t0.elapsed().as_secs_f64(), result, q)
+    };
+
+    let cells = [
+        ("chunked_zipf18", Routing::RoundRobin, &zipf18),
+        ("keyed_zipf18", Routing::Keyed, &zipf18),
+        ("adaptive_zipf18", Routing::KeyedAdaptive, &zipf18),
+        ("keyed_hotkey", Routing::Keyed, &hotkey),
+        ("adaptive_hotkey", Routing::KeyedAdaptive, &hotkey),
+    ];
+    let mut fields = String::new();
+    let mut best = std::collections::BTreeMap::new();
+    for (label, routing, src) in cells {
+        let mut best_s = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..repeat.max(1) {
+            let (t, result, q) = session(routing, src);
+            best_s = best_s.min(t);
+            last = Some((result, q));
+        }
+        let (result, q) = last.expect("repeat >= 1");
+        best.insert(label, best_s);
+        let snap = q.snapshot();
+        fields.push_str(&format!(
+            " \"ingest_s_{label}\": {best_s:.6}, \"mitems_per_s_{label}\": {:.3},\n \
+              \"split_items_{label}\": {}, \"hot_rebalances_{label}\": {},\n \
+              \"epsilon_{label}\": {},\n",
+            n as f64 / best_s / 1e6,
+            result.stats.split_items,
+            result.stats.hot_rebalances,
+            snap.epsilon(),
+        ));
+        if !json {
+            println!(
+                "  {label:<16} {best_s:.3}s ({:.1} M items/s)  split={} rebalances={} ε={}",
+                n as f64 / best_s / 1e6,
+                result.stats.split_items,
+                result.stats.hot_rebalances,
+                snap.epsilon(),
+            );
+        }
+    }
+    let vs_chunked = best["chunked_zipf18"] / best["adaptive_zipf18"];
+    let vs_keyed_hot = best["keyed_hotkey"] / best["adaptive_hotkey"];
+    let record = format!(
+        "{{\"bench\": \"routing\", \"n\": {n}, \"k\": {k}, \"shards\": {threads}, \"hot_p\": 0.6,\n \
+          \"queue_depth\": {queue_depth}, \"chunk_len\": {chunk_len}, \"repeat\": {repeat},\n\
+          {fields} \
+          \"adaptive_vs_chunked_zipf18\": {vs_chunked:.3},\n \
+          \"adaptive_vs_keyed_hotkey\": {vs_keyed_hot:.3}}}"
+    );
+    if json {
+        println!("{record}");
+    } else {
+        println!(
+            "adaptive vs chunked (zipf-1.8): {vs_chunked:.2}x — target ≥ 0.9x; \
+             adaptive vs keyed (hot-key): {vs_keyed_hot:.2}x — target ≥ 2x at {threads} shards"
         );
     }
     if let Some(path) = args.get("out") {

@@ -155,6 +155,34 @@ mod tests {
     }
 
     #[test]
+    fn hot_key_workload_recall_and_bounds() {
+        // The adversarial single-hot-key workload (and its mid-stream
+        // drift variant) through the chunk-parallel driver: block
+        // decomposition concentrates the hot key in every block, and
+        // the reduced result must still report it first with the
+        // bounds honored against exact truth.
+        for src in [
+            GeneratedSource::hot_key(120_000, 4_000, 1.1, 0.6, 23),
+            GeneratedSource::hot_key_drift(120_000, 4_000, 1.1, 0.6, 60_000, 23),
+        ] {
+            let mut exact = Exact::new();
+            exact.offer_all(&src.slice(0, src.len()));
+            for threads in [1usize, 4] {
+                let r = run_shared(&src, 256, 256, threads, SummaryKind::Heap);
+                assert_eq!(r.summary.n(), 120_000);
+                let acc = AccuracyReport::evaluate(&r.frequent, &exact, 256);
+                assert_eq!(acc.recall, 1.0, "threads={threads}");
+                // The top report is a hot identity: ≥ p·n before the
+                // drift, ≥ p·n/2 for each identity after it.
+                let top = &r.frequent[0];
+                let f = exact.count(top.item);
+                assert!(top.count >= f && top.count - top.err <= f);
+                assert!(f >= 120_000 * 25 / 100, "top item is not the hot key");
+            }
+        }
+    }
+
+    #[test]
     fn times_are_populated() {
         let src = GeneratedSource::zipf(50_000, 1_000, 1.1, 5);
         let r = run_shared(&src, 64, 64, 2, SummaryKind::Heap);

@@ -23,13 +23,22 @@
 //! by nothing. Point queries for unmonitored items likewise bound by
 //! the *home shard's* minimum count ([`crate::util::shard_of`]) rather
 //! than the global one.
+//!
+//! Under **keyed-adaptive routing** the per-shard snapshots also carry
+//! exact split-key partials ([`EpochSnapshot::hot`]): hot keys the
+//! coordinator spread across all shards, counted outside the Space
+//! Saving structures. The snapshot sums the partials per key and folds
+//! them into the merged summary as exact mass
+//! ([`crate::summary::absorb_exact`]); a split key's estimate is its
+//! home-shard estimate plus the exact sum, so `ε` keeps the
+//! max-per-shard bound of the Space Saving parts alone.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::metrics::{LatencyHistogram, LatencySummary};
 use crate::parallel::tree_reduce_refs;
-use crate::summary::{merge_disjoint, Counter, Summary};
+use crate::summary::{absorb_exact, merge_disjoint, Counter, Summary};
 use crate::util::shard_of;
 
 use super::epoch::{EpochRegistry, EpochSnapshot};
@@ -51,6 +60,10 @@ pub struct MergedSnapshot {
     /// The reported over-estimation bound: `⌊n/k⌋` of the merge, or
     /// the tighter `maxᵢ ⌊nᵢ/k⌋` in disjoint mode.
     epsilon: u64,
+    /// Exact split-key totals (keyed-adaptive), summed over the parts'
+    /// cumulative partials; sorted by key, already folded into
+    /// `merged`. Empty outside the hot tier.
+    hot_totals: Vec<(u64, u64)>,
     /// When the view was materialized.
     taken_at: Instant,
 }
@@ -118,7 +131,31 @@ impl MergedSnapshot {
             let epsilon = merged.epsilon();
             (merged, epsilon)
         };
-        Self { merged, parts, disjoint, epsilon, taken_at: Instant::now() }
+        // Keyed-adaptive: fold the shards' exact split-key partials
+        // into the merged view. ε stands as computed above — exact
+        // mass adds no over-estimation.
+        let mut hot_fold: std::collections::BTreeMap<u64, u64> =
+            std::collections::BTreeMap::new();
+        for p in &parts {
+            for &(item, w) in &p.hot {
+                *hot_fold.entry(item).or_default() += w;
+            }
+        }
+        let hot_totals: Vec<(u64, u64)> = hot_fold.into_iter().collect();
+        let merged = if hot_totals.is_empty() {
+            merged
+        } else {
+            // Inserted (home-evicted) split keys carry their home
+            // shard's min_count as the bound on pre-split history.
+            absorb_exact(&merged, &hot_totals, |item| {
+                let home = shard_of(item, parts.len());
+                parts
+                    .iter()
+                    .find(|p| p.shard == home)
+                    .map_or(0, |p| p.summary.min_count())
+            })
+        };
+        Self { merged, parts, disjoint, epsilon, hot_totals, taken_at: Instant::now() }
     }
 
     /// The merged summary itself.
@@ -151,7 +188,7 @@ impl MergedSnapshot {
             .map(|p| EpochInfo {
                 shard: p.shard,
                 epoch: p.epoch,
-                n: p.summary.n(),
+                n: p.summary.n() + p.hot_mass(),
                 finished: p.finished,
             })
             .collect()
@@ -193,6 +230,20 @@ impl MergedSnapshot {
                 .map(|p| &p.summary)
                 .expect("one snapshot per shard");
             let mut p = point_estimate(part, item);
+            // Split keys (keyed-adaptive): the home counter covers the
+            // pre-split prefix; the scattered occurrences live in the
+            // exact partials. Their sum is exact mass, so it lifts the
+            // lower bound too.
+            let extra = self
+                .hot_totals
+                .iter()
+                .find(|e| e.0 == item)
+                .map_or(0, |e| e.1);
+            if extra > 0 {
+                p.estimate += extra;
+                p.guaranteed += extra;
+                p.monitored = true;
+            }
             p.n = self.n(); // the answer is about the merged coverage
             p
         } else {
@@ -387,7 +438,8 @@ impl QueryEngine {
     /// Staleness and throughput accounting for dashboards.
     pub fn stats(&self) -> QueryEngineStats {
         let parts = self.registry.latest();
-        let items_published: u64 = parts.iter().map(|p| p.summary.n()).sum();
+        let items_published: u64 =
+            parts.iter().map(|p| p.summary.n() + p.hot_mass()).sum();
         let items_routed = self.registry.items_routed();
         QueryEngineStats {
             epochs: parts
@@ -395,7 +447,7 @@ impl QueryEngine {
                 .map(|p| EpochInfo {
                     shard: p.shard,
                     epoch: p.epoch,
-                    n: p.summary.n(),
+                    n: p.summary.n() + p.hot_mass(),
                     finished: p.finished,
                 })
                 .collect(),
@@ -595,6 +647,55 @@ mod tests {
         assert_eq!(p.estimate, frozen[0].min_count());
         // The k-majority report carries the tightened epsilon.
         assert_eq!(snap.k_majority(k as u64).epsilon, eps_max);
+    }
+
+    #[test]
+    fn adaptive_split_partials_fold_exactly() {
+        use crate::util::shard_of;
+        // Keyed-adaptive read path: one split key homed at shard 0 with
+        // 30 pre-split occurrences in its home Space Saving structure,
+        // plus exact scattered partials on both shards (25 + 35). The
+        // merged view must report home + Σ partials with no extra ε.
+        let k = 8;
+        let registry = EpochRegistry::new(2, k);
+        registry.set_disjoint(true);
+        let e = QueryEngine::new(registry, k as u64);
+        let hot = (0u64..).find(|&i| shard_of(i, 2) == 0).unwrap();
+        let filler0: Vec<u64> = (0u64..100)
+            .filter(|&i| i != hot && shard_of(i, 2) == 0)
+            .take(3)
+            .collect();
+        let filler1: Vec<u64> =
+            (0u64..100).filter(|&i| shard_of(i, 2) == 1).take(3).collect();
+        let mut s0: Vec<u64> = vec![hot; 30];
+        s0.extend_from_slice(&filler0);
+        let f0 = summary_of(&s0, k);
+        let f1 = summary_of(&filler1, k);
+        let eps = f0.epsilon().max(f1.epsilon());
+        e.registry().publish_with_hot(0, f0, false, vec![(hot, 25)]);
+        e.registry().publish_with_hot(1, f1, false, vec![(hot, 35)]);
+
+        let snap = e.snapshot();
+        assert!(snap.is_disjoint());
+        let total = 30 + 3 + 3 + 60u64;
+        assert_eq!(snap.n(), total, "coverage includes the split mass");
+        // Exact partials add no over-estimation: ε is that of the
+        // Space Saving parts alone.
+        assert_eq!(snap.epsilon(), eps);
+        // Point estimate = home counter + exact sum; exact mass lifts
+        // the lower bound too.
+        let p = snap.point(hot);
+        assert!(p.monitored);
+        assert_eq!(p.estimate, 90);
+        assert_eq!(p.guaranteed, 90);
+        assert_eq!(p.n, total);
+        // The merged summary itself folded the mass (top-k agrees).
+        assert_eq!(snap.summary().estimate(hot), Some(90));
+        assert_eq!(snap.top_k(1)[0].item, hot);
+        // Coverage accounting includes the split mass everywhere.
+        assert_eq!(snap.epochs()[0].n, 33 + 25);
+        assert_eq!(snap.epochs()[1].n, 3 + 35);
+        assert_eq!(e.stats().items_published, total);
     }
 
     #[test]

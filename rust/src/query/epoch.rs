@@ -26,6 +26,13 @@ pub struct EpochSnapshot {
     pub epoch: u64,
     /// The frozen summary (counters ascending, `n` = items covered).
     pub summary: Summary,
+    /// Exact cumulative counts of *split* (hot-tier) keys observed by
+    /// this shard under `Routing::KeyedAdaptive`, `(item, count)`
+    /// pairs. Split occurrences never enter the Space Saving structure
+    /// (so `summary` stays key-disjoint and its `n` excludes them);
+    /// the read side adds these partials back after the disjoint
+    /// merge. Empty in every other routing mode.
+    pub hot: Vec<(u64, u64)>,
     /// When the snapshot was published.
     pub published_at: Instant,
     /// Whether this is the shard's final (drain-time) snapshot.
@@ -39,9 +46,15 @@ impl EpochSnapshot {
             shard,
             epoch: 0,
             summary: Summary::empty(k),
+            hot: Vec::new(),
             published_at: Instant::now(),
             finished: false,
         }
+    }
+
+    /// Total split-key mass carried by this snapshot's exact partials.
+    pub fn hot_mass(&self) -> u64 {
+        self.hot.iter().map(|&(_, w)| w).sum()
     }
 }
 
@@ -88,6 +101,14 @@ pub struct EpochRegistry {
     /// routing): the engine then merges by concatenation and reports
     /// the max-per-shard error bound. Set once before ingestion starts.
     disjoint: AtomicBool,
+    /// Hot-set generations under `Routing::KeyedAdaptive`, indexed by
+    /// generation number; generation 0 is the empty set every session
+    /// starts in. The producer appends a new generation on every
+    /// rebalance; shard workers resolve the generation stamped into
+    /// each scattered sub-chunk against this table, so every
+    /// occurrence is classified against exactly the hot set its
+    /// producer scattered it under — no producer/worker race.
+    hot_sets: RwLock<Vec<Arc<Vec<u64>>>>,
 }
 
 impl EpochRegistry {
@@ -102,6 +123,7 @@ impl EpochRegistry {
             items_routed: AtomicU64::new(0),
             queries_served: AtomicU64::new(0),
             disjoint: AtomicBool::new(false),
+            hot_sets: RwLock::new(vec![Arc::new(Vec::new())]),
         })
     }
 
@@ -138,17 +160,53 @@ impl EpochRegistry {
     /// Publisher side: install shard `shard`'s next snapshot.
     /// `finished` marks the drain-time final publication.
     pub fn publish(&self, shard: usize, summary: Summary, finished: bool) -> u64 {
+        self.publish_with_hot(shard, summary, finished, Vec::new())
+    }
+
+    /// [`EpochRegistry::publish`] carrying the shard's cumulative
+    /// exact split-key partials (`Routing::KeyedAdaptive`; pass an
+    /// empty vec otherwise).
+    pub fn publish_with_hot(
+        &self,
+        shard: usize,
+        summary: Summary,
+        finished: bool,
+        hot: Vec<(u64, u64)>,
+    ) -> u64 {
         let slot = &self.slots[shard];
         let epoch = slot.load().epoch + 1;
         slot.store(Arc::new(EpochSnapshot {
             shard,
             epoch,
             summary,
+            hot,
             published_at: Instant::now(),
             finished,
         }));
         self.epochs_published.fetch_add(1, Ordering::Relaxed);
         epoch
+    }
+
+    /// Producer side: install a new hot-set generation (sorted key
+    /// list) and return its generation number. Generation 0 — the
+    /// empty set — always exists.
+    pub fn publish_hot_set(&self, keys: Vec<u64>) -> u64 {
+        let mut sets = self.hot_sets.write().expect("hot set table poisoned");
+        sets.push(Arc::new(keys));
+        (sets.len() - 1) as u64
+    }
+
+    /// The hot set of a given generation (a stale stamp resolves to
+    /// exactly the set it was scattered under — generations are only
+    /// ever appended).
+    pub fn hot_set(&self, generation: u64) -> Arc<Vec<u64>> {
+        let sets = self.hot_sets.read().expect("hot set table poisoned");
+        sets[generation as usize].clone()
+    }
+
+    /// The newest hot-set generation number (0 = empty initial set).
+    pub fn hot_generation(&self) -> u64 {
+        (self.hot_sets.read().expect("hot set table poisoned").len() - 1) as u64
     }
 
     /// Reader side: ask every shard to publish a fresh snapshot at its
@@ -228,6 +286,30 @@ mod tests {
         assert_eq!(reg.epochs_published(), 2);
         // Shard 0 untouched.
         assert_eq!(reg.slot(0).load().epoch, 0);
+    }
+
+    #[test]
+    fn hot_set_generations_append_and_resolve() {
+        let reg = EpochRegistry::new(2, 8);
+        // Generation 0 is the empty set.
+        assert_eq!(reg.hot_generation(), 0);
+        assert!(reg.hot_set(0).is_empty());
+        let g1 = reg.publish_hot_set(vec![42]);
+        let g2 = reg.publish_hot_set(vec![42, 99]);
+        assert_eq!((g1, g2), (1, 2));
+        assert_eq!(reg.hot_generation(), 2);
+        // Old generations stay resolvable — a worker holding a stale
+        // stamp classifies against exactly the set it was scattered
+        // under.
+        assert_eq!(*reg.hot_set(1), vec![42]);
+        assert_eq!(*reg.hot_set(2), vec![42, 99]);
+        // Partials ride publications; plain publish carries none.
+        reg.publish_with_hot(0, summary_of(&[1, 1], 8), false, vec![(42, 7)]);
+        reg.publish(1, summary_of(&[3], 8), false);
+        let parts = reg.latest();
+        assert_eq!(parts[0].hot, vec![(42, 7)]);
+        assert_eq!(parts[0].hot_mass(), 7);
+        assert!(parts[1].hot.is_empty());
     }
 
     #[test]

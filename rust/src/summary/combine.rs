@@ -312,6 +312,64 @@ pub fn merge_disjoint(parts: &[&Summary]) -> Summary {
     Summary::new(k, n, counters)
 }
 
+/// Fold **exact** extra mass into a summary: for each `(item, weight)`
+/// in `extras` (weights must be > 0 to matter; zero entries are
+/// skipped), add `weight` to the item's counter — keeping its `err`
+/// untouched, since the added mass is an exact count — or insert a
+/// fresh counter if the item is unmonitored. `n` grows by the folded
+/// mass.
+///
+/// `history_bound(item)` is consulted only on inserts: it must upper-
+/// bound the item's true count in the summary's *underlying* streams
+/// (history the structure may have evicted). The inserted counter is
+/// `count = weight + b, err = b` with `b = history_bound(item)`, which
+/// preserves both Space Saving invariants — `count ≥ f` (the evicted
+/// history is at most `b`) and `count − err ≤ f` (the exact mass is a
+/// true lower bound). Callers that know an item has no untracked
+/// history pass `|_| 0`; the engines pass the item's **home shard**
+/// `min_count()` (the Space Saving upper bound for an unmonitored
+/// item). For already-monitored items the bound is ignored — their
+/// history is tracked by the counter itself.
+///
+/// This is the read-side recombination step of the keyed-adaptive
+/// hot-key tier: split-key occurrences are counted exactly in
+/// per-shard side tables (never entering any Space Saving structure),
+/// and after the disjoint concatenation the engines fold those
+/// partials back in here. The resulting estimate for a split key is
+/// `home-shard estimate + Σ exact partials`, so its over-estimation is
+/// still bounded by the home shard's ε alone — the max-per-shard bound
+/// `maxᵢ ⌊nᵢ/k⌋` survives the split (`nᵢ` = the Space Saving mass of
+/// shard `i`, which *excludes* split mass; `min_count ≤ εᵢ` covers the
+/// inserted case).
+///
+/// The budget is widened to fit inserted counters when needed (the
+/// disjoint-merge budget `Σkᵢ` already exceeds the counter population,
+/// but a summary saturated at `k` counters plus a never-monitored
+/// split key would otherwise violate `len ≤ k`).
+pub fn absorb_exact(
+    summary: &Summary,
+    extras: &[(u64, u64)],
+    history_bound: impl Fn(u64) -> u64,
+) -> Summary {
+    let mut counters = summary.counters().to_vec();
+    let mut n = summary.n();
+    for &(item, weight) in extras {
+        if weight == 0 {
+            continue;
+        }
+        n += weight;
+        match counters.iter_mut().find(|c| c.item == item) {
+            Some(c) => c.count += weight,
+            None => {
+                let b = history_bound(item);
+                counters.push(Counter { item, count: weight + b, err: b });
+            }
+        }
+    }
+    let k = summary.k().max(counters.len());
+    Summary::new(k, n, counters)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -585,6 +643,94 @@ mod tests {
         for s in 0..5u64 {
             assert_eq!(m.estimate(s), Some(s + 1));
         }
+    }
+
+    #[test]
+    fn absorb_exact_adds_mass_without_err() {
+        // Monitored item: count grows, err untouched. Unmonitored:
+        // fresh exact counter. n grows by the folded mass; re-sorted.
+        let s = Summary::new(
+            4,
+            100,
+            vec![
+                Counter { item: 1, count: 10, err: 2 },
+                Counter { item: 2, count: 40, err: 0 },
+            ],
+        );
+        let out = absorb_exact(&s, &[(1, 50), (9, 5), (3, 0)], |_| 0);
+        assert_eq!(out.n(), 155);
+        assert_eq!(out.estimate(1), Some(60));
+        assert_eq!(out.estimate(9), Some(5));
+        assert_eq!(out.estimate(3), None, "zero-weight entries are skipped");
+        let c1 = out.counters().iter().find(|c| c.item == 1).unwrap();
+        assert_eq!(c1.err, 2, "exact mass never inflates err");
+        let c9 = out.counters().iter().find(|c| c.item == 9).unwrap();
+        assert_eq!(c9.err, 0);
+        assert!(out.counters().windows(2).all(|w| w[0].count <= w[1].count));
+        // Budget widens only when the insert would overflow it.
+        let full = Summary::new(
+            2,
+            10,
+            vec![
+                Counter { item: 1, count: 4, err: 0 },
+                Counter { item: 2, count: 6, err: 0 },
+            ],
+        );
+        let widened = absorb_exact(&full, &[(7, 3)], |_| 0);
+        assert_eq!(widened.k(), 3);
+        assert_eq!(widened.estimate(7), Some(3));
+    }
+
+    #[test]
+    fn absorb_exact_history_bound_covers_evicted_keys() {
+        // A split key whose pre-split history was evicted from its home
+        // structure: inserting with only the exact mass would
+        // under-estimate. The history bound (home min_count) restores
+        // `f ≤ count` while `count − err` stays the exact lower bound.
+        let s = Summary::new(
+            2,
+            20,
+            vec![
+                Counter { item: 1, count: 8, err: 3 },
+                Counter { item: 2, count: 12, err: 0 },
+            ],
+        );
+        // Key 9 had ≤ min_count(=8) evicted occurrences plus 5 exact.
+        let out = absorb_exact(&s, &[(9, 5)], |_| s.min_count());
+        let c9 = out.counters().iter().find(|c| c.item == 9).unwrap();
+        assert_eq!(c9.count, 13, "exact mass + history bound");
+        assert_eq!(c9.err, 8, "the bound is uncertain, the mass is not");
+        assert_eq!(c9.guaranteed(), 5);
+        assert_eq!(out.n(), 25, "n grows by the exact mass only");
+        // Monitored items never consult the bound.
+        let out = absorb_exact(&s, &[(1, 5)], |_| panic!("bound consulted"));
+        assert_eq!(out.estimate(1), Some(13));
+    }
+
+    #[test]
+    fn absorb_exact_after_disjoint_merge_bounds_hold() {
+        // The hot-key recombination in miniature: shard A holds the
+        // split key's pre-split history in its SS summary; both shards
+        // hold exact split partials on the side. After merge + absorb,
+        // the key's estimate must be (home estimate + Σ partials) and
+        // its over-estimate still ≤ the home shard's ε.
+        let mut a = SpaceSaving::new(4);
+        // Overflow shard A so ε_A > 0: 2 appears 5×, filler 4..12 once.
+        let stream_a: Vec<u64> = [vec![2u64; 5], (4..12).collect()].concat();
+        a.offer_all(&stream_a);
+        let mut b = SpaceSaving::new(4);
+        b.offer_all(&[3, 3, 13]);
+        let (fa, fb) = (a.freeze(), b.freeze());
+        let merged = fa.combine_disjoint(&fb);
+        // Split partials for key 2: 10 on "shard A", 12 on "shard B".
+        let out = absorb_exact(&merged, &[(2, 10), (2, 12)], |_| fa.min_count());
+        assert_eq!(out.n(), merged.n() + 22);
+        let est2 = out.estimate(2).unwrap();
+        let home2 = fa.estimate(2).unwrap();
+        assert_eq!(est2, home2 + 22, "sum of exacts plus the home estimate");
+        // True f(2) = 5 (SS stream) + 22 (split) = 27; over-estimate
+        // bounded by the home shard's ε alone.
+        assert!(est2 >= 27 && est2 - 27 <= fa.epsilon());
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod stream_summary;
 pub mod traits;
 
 pub use batch::{offer_batched, offer_runs, ChunkAggregator};
-pub use combine::{merge_disjoint, Summary};
+pub use combine::{absorb_exact, merge_disjoint, Summary};
 pub use compact::CompactSummary;
 pub use counter::Counter;
 pub use kind::{AnySummary, SummaryKind};

@@ -10,7 +10,7 @@ pub mod rng;
 pub mod testdir;
 
 pub use fastmap::FastMap;
-pub use hash::{fib_hash32, mix64, shard_of};
+pub use hash::{fib_hash32, mix64, shard_of, spread_of};
 pub use json::Json;
 pub use rng::SplitMix64;
 pub use testdir::TempDir;

@@ -34,6 +34,14 @@
 //! bound tightens from `⌊W/k⌋` to the max-per-shard `maxᵢ ⌊Wᵢ/k⌋`
 //! (`Wᵢ` = shard `i`'s in-window mass), and unmonitored point queries
 //! bound by the item's home-shard window instead of the global one.
+//!
+//! Under **keyed-adaptive** routing, deltas additionally carry exact
+//! split-key partials ([`DeltaSummary::hot`]): the snapshot sums the
+//! in-window partials per key and folds them into the merged summary
+//! as exact mass ([`crate::summary::absorb_exact`]), so a split key's
+//! windowed estimate is `home-shard window estimate + Σ in-window
+//! partials`. Exact counts add no over-estimation, so `ε` stays the
+//! max-per-shard bound of the Space Saving parts alone.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -42,7 +50,7 @@ use crate::metrics::{LatencyHistogram, LatencySummary};
 use crate::parallel::tree_reduce_refs;
 use crate::query::engine::{point_estimate, threshold_split};
 use crate::query::{PointEstimate, ThresholdReport};
-use crate::summary::{merge_disjoint, Counter, Summary};
+use crate::summary::{absorb_exact, merge_disjoint, Counter, Summary};
 use crate::util::shard_of;
 
 use super::store::{DeltaSummary, WindowStore};
@@ -69,6 +77,10 @@ pub struct WindowSnapshot {
     shards: usize,
     /// The reported bound: `⌊W/k⌋`, or `maxᵢ ⌊Wᵢ/k⌋` in disjoint mode.
     epsilon: u64,
+    /// In-window exact split-key totals (keyed-adaptive), summed over
+    /// the merged deltas' partials; sorted by key, already folded into
+    /// `merged`. Empty outside the hot tier.
+    hot_totals: Vec<(u64, u64)>,
     /// When the view was materialized.
     taken_at: Instant,
 }
@@ -116,6 +128,32 @@ impl WindowSnapshot {
             let epsilon = merged.epsilon();
             (merged, epsilon)
         };
+        // Keyed-adaptive: sum the in-window deltas' exact split-key
+        // partials and fold them into the merged summary. ε stands as
+        // computed above — exact mass adds no over-estimation.
+        let mut hot_fold: std::collections::BTreeMap<u64, u64> =
+            std::collections::BTreeMap::new();
+        for p in &parts {
+            for &(item, w) in &p.hot {
+                *hot_fold.entry(item).or_default() += w;
+            }
+        }
+        let hot_totals: Vec<(u64, u64)> = hot_fold.into_iter().collect();
+        let merged = if hot_totals.is_empty() {
+            merged
+        } else {
+            // A split key absent from the merged summary may still have
+            // in-window pre-split history that its home shard's window
+            // evicted; that history is bounded by the home window's min
+            // count, which seeds the inserted counter's count and err.
+            absorb_exact(&merged, &hot_totals, |item| {
+                let home = shard_of(item, shards);
+                shard_merged
+                    .iter()
+                    .find(|(s, _)| *s == home)
+                    .map_or(0, |(_, s)| s.min_count())
+            })
+        };
         Self {
             merged,
             parts,
@@ -123,6 +161,7 @@ impl WindowSnapshot {
             disjoint,
             shards,
             epsilon,
+            hot_totals,
             taken_at: Instant::now(),
         }
     }
@@ -162,7 +201,7 @@ impl WindowSnapshot {
             .map(|p| DeltaInfo {
                 shard: p.shard,
                 seq: p.seq,
-                n: p.summary.n(),
+                n: p.summary.n() + p.hot_mass(),
                 finished: p.finished,
             })
             .collect()
@@ -219,6 +258,18 @@ impl WindowSnapshot {
                     n: 0,
                 },
             };
+            // Split-key recombination: the window's exact partials add
+            // to both the estimate and the lower bound.
+            let extra = self
+                .hot_totals
+                .iter()
+                .find(|e| e.0 == item)
+                .map_or(0, |e| e.1);
+            if extra > 0 {
+                p.estimate += extra;
+                p.guaranteed += extra;
+                p.monitored = true;
+            }
             p.n = self.n(); // the answer is about the whole window mass
             p
         } else {
@@ -531,6 +582,48 @@ mod tests {
             .expect("some item homes on shard 1");
         let p = snap2.point(other);
         assert_eq!((p.estimate, p.guaranteed, p.monitored), (0, 0, false));
+    }
+
+    #[test]
+    fn adaptive_window_folds_exact_split_partials() {
+        use crate::util::shard_of;
+        let k = 8;
+        let store = WindowStore::new(2, 4, k);
+        store.set_disjoint(true);
+        let engine = WindowedQueryEngine::new(store.clone(), 2, k as u64);
+        let hot = 77u64;
+        let home = shard_of(hot, 2);
+        // Epoch 1: the hot key's pre-split history lives in its home
+        // shard's delta; epoch 2: split partials on both shards, the
+        // non-home shard contributing a hot-only (empty-summary) delta.
+        store.publish(home, summary_of(&vec![hot; 30], k), false);
+        store.publish(1 - home, summary_of(&[500, 501], k), false);
+        store.publish_with_hot(home, summary_of(&[1000], k), false, vec![(hot, 25)]);
+        store.publish_with_hot(1 - home, Summary::empty(k), false, vec![(hot, 35)]);
+        let snap = engine.window(2);
+        assert!(snap.is_disjoint());
+        // Window mass includes the 60 split occurrences.
+        assert_eq!(snap.n(), 30 + 2 + 1 + 60);
+        // Point: home window estimate (30) + in-window partials (60),
+        // with the exact mass hardening the lower bound too.
+        let p = snap.point(hot);
+        assert_eq!(p.estimate, 90);
+        assert_eq!(p.guaranteed, 90);
+        assert!(p.monitored);
+        assert_eq!(p.n, snap.n());
+        // The merged summary agrees, and the split key tops the window.
+        assert_eq!(snap.summary().estimate(hot), Some(90));
+        assert_eq!(snap.top_k(1)[0].item, hot);
+        // ε still comes from the Space Saving parts alone (all
+        // under-full here → 33/8 = 4 at worst per shard).
+        assert!(snap.epsilon() <= 33 / k as u64);
+        // DeltaInfo reports epoch mass including the hot share.
+        let infos = snap.deltas();
+        let hot_only = infos
+            .iter()
+            .find(|d| d.shard == 1 - home && d.seq == 2)
+            .expect("hot-only delta in window");
+        assert_eq!(hot_only.n, 35);
     }
 
     #[test]

@@ -33,6 +33,21 @@ pub struct DeltaSummary {
     pub published_at: Instant,
     /// Whether this is the shard's final (drain-time) partial delta.
     pub finished: bool,
+    /// Keyed-adaptive only: **exact** split-key counts this shard
+    /// absorbed during this epoch (hot keys routed round-robin across
+    /// shards bypass the Space Saving structures; `summary.n()`
+    /// excludes this mass). Per-epoch, not cumulative — the windowed
+    /// read path sums the in-window deltas' partials. Empty in every
+    /// other routing mode.
+    pub hot: Vec<(u64, u64)>,
+}
+
+impl DeltaSummary {
+    /// Total exact split-key mass of this epoch (0 outside the
+    /// keyed-adaptive hot tier).
+    pub fn hot_mass(&self) -> u64 {
+        self.hot.iter().map(|&(_, w)| w).sum()
+    }
 }
 
 /// One shard's bounded delta ring.
@@ -117,6 +132,18 @@ impl WindowStore {
     /// the oldest one if the ring is full. Returns the delta's per-shard
     /// sequence number. `finished` marks the drain-time final delta.
     pub fn publish(&self, shard: usize, summary: Summary, finished: bool) -> u64 {
+        self.publish_with_hot(shard, summary, finished, Vec::new())
+    }
+
+    /// [`WindowStore::publish`] carrying this epoch's exact split-key
+    /// partials (keyed-adaptive hot tier; see [`DeltaSummary::hot`]).
+    pub fn publish_with_hot(
+        &self,
+        shard: usize,
+        summary: Summary,
+        finished: bool,
+        hot: Vec<(u64, u64)>,
+    ) -> u64 {
         let ring = &self.rings[shard];
         // Single publisher per shard: load+store needs no RMW.
         let seq = ring.seq.load(Ordering::Relaxed) + 1;
@@ -126,6 +153,7 @@ impl WindowStore {
             summary,
             published_at: Instant::now(),
             finished,
+            hot,
         });
         {
             let mut q = ring.deltas.write().expect("delta ring poisoned");
@@ -286,6 +314,18 @@ mod tests {
         store.finish_shard(1);
         assert!(store.shard_finished(1));
         assert_eq!(store.available(1), 0);
+    }
+
+    #[test]
+    fn publish_with_hot_carries_epoch_partials() {
+        let store = WindowStore::new(2, 4, 8);
+        store.publish_with_hot(0, summary_of(&[1], 8), false, vec![(99, 7), (5, 3)]);
+        store.publish(0, summary_of(&[2], 8), false);
+        let parts = store.latest(0, 2);
+        assert_eq!(parts[0].hot, vec![(99, 7), (5, 3)]);
+        assert_eq!(parts[0].hot_mass(), 10);
+        assert!(parts[1].hot.is_empty(), "plain publish carries no partials");
+        assert_eq!(parts[1].hot_mass(), 0);
     }
 
     #[test]

@@ -216,6 +216,87 @@ fn runs_encoding_matches_oracle_mass() {
     assert_eq!(result.stats.items, total);
 }
 
+/// The hot-key tier over real sockets: a skew-1.8 workload (rank-1
+/// share ≈ 0.53, far past the promote threshold `1/(2·shards)`) served
+/// under keyed-adaptive routing. Detection must fire from the socket
+/// ingest path on its own — no forced hot set — and the wire answers
+/// must still match the in-process oracle under the max-per-shard
+/// bound, with split keys recombined exactly and the allocation-free
+/// steady state intact.
+#[test]
+fn adaptive_routing_over_the_wire_matches_oracle() {
+    let mut serve = serve_cfg();
+    serve.coordinator.routing = pss::coordinator::Routing::KeyedAdaptive;
+    let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), serve).unwrap();
+    let cfg = LoadgenConfig { skew: 1.8, ..loadgen_cfg() };
+    let total = cfg.clients as u64 * cfg.items_per_client;
+
+    let report = run_loadgen(server.endpoint(), &cfg).unwrap();
+    assert_eq!(report.items_acked, total, "every frame acked");
+
+    let truth = oracle(&cfg);
+    await_coverage(&server, total);
+
+    let mut q = QueryClient::connect(server.endpoint()).unwrap();
+    let answer = q.top_k(K as u32, 0).unwrap();
+    assert_eq!(answer.n, total, "coverage includes the split mass");
+    assert!(
+        answer.epsilon <= total / K as u64,
+        "adaptive bound {} above n/k {}",
+        answer.epsilon,
+        total / K as u64
+    );
+    for c in &answer.counters {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f, "underestimate on item {}", c.item);
+        assert!(
+            c.count - f <= answer.epsilon,
+            "overestimate {} > ε {} on item {}",
+            c.count - f,
+            answer.epsilon,
+            c.item
+        );
+        assert!(c.count - c.err <= f, "per-counter bound on item {}", c.item);
+    }
+    // Recall above n/k survives the hot tier: a split key is always
+    // monitored (the read path inserts it), everything else holds its
+    // home shard's counter.
+    let monitored: std::collections::HashSet<u64> =
+        answer.counters.iter().map(|c| c.item).collect();
+    let thresh = total / K as u64;
+    for (item, f) in &truth {
+        if *f > thresh {
+            assert!(monitored.contains(item), "lost heavy item {item} (f={f})");
+        }
+    }
+    // The dominant key — the one the tier exists for — is served first
+    // and its point answer brackets the truth.
+    let (&top_true, &top_f) = truth.iter().max_by_key(|(_, f)| **f).unwrap();
+    assert_eq!(answer.counters[0].item, top_true, "wire top-1 disagrees with oracle");
+    let p = q.point(top_true, 0).unwrap();
+    assert!(p.monitored);
+    assert!(p.estimate >= top_f && p.estimate - top_f <= answer.epsilon);
+    assert!(p.guaranteed <= top_f, "lower bound above truth");
+
+    let (result, stats) = server.finish();
+    assert_eq!(result.stats.items, total);
+    assert_eq!(stats.proto_errors, 0);
+    assert!(
+        result.stats.hot_rebalances >= 1,
+        "skew 1.8 never tripped detection"
+    );
+    assert!(result.stats.split_items > 0, "hot key never split");
+    assert!(
+        result.stats.buffers_recycled > 0,
+        "adaptive scatter must keep the recycling steady state"
+    );
+    assert_eq!(result.summary.n(), total, "drain re-absorbs the split mass");
+    for c in result.summary.counters() {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f && c.count - c.err <= f, "final summary bound");
+    }
+}
+
 /// Raw-socket abuse: garbage kinds, truncated frames, and a bad hello
 /// each kill only their own connection. A well-behaved client ingests
 /// through the noise and the pool keeps answering queries.

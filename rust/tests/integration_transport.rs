@@ -249,6 +249,114 @@ fn keyed_try_push_remainder_retry_loses_nothing() {
     assert!(out.stats.rejected_chunks > 0, "depth-1 rings must reject");
 }
 
+/// Keyed-adaptive drift: the hot key changes mid-run (forced A → B,
+/// exactly the rebalance a detection promotion publishes) and the
+/// rebalance must not double-count or lose anything. `k` is large
+/// enough that no shard ever evicts, so every estimate must be
+/// *exact*: A's pre-drift occurrences live only in the split side
+/// tables, its post-drift occurrences only in its home shard's
+/// summary, and the read path's sum must equal the true count — any
+/// occurrence counted both ways (or dropped by the cursor reset at
+/// the rebalance) shifts the total. Per-shard accounting is checked
+/// as a multiset balance: each shard's published Space Saving mass
+/// plus its exact side-table mass equals the items the producer
+/// routed to it.
+#[test]
+fn adaptive_drift_rebalance_never_double_counts() {
+    let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+        shards: 4,
+        k: 2048,
+        k_majority: 8,
+        routing: Routing::KeyedAdaptive,
+        epoch_items: 0,
+        ..Default::default()
+    });
+    let (a, b) = (111_111u64, 222_222u64);
+
+    // Phase 1: A is hot — 6000 A spread round-robin, 2000 tail items
+    // home-routed. (Total stays far below the 65,536-item detection
+    // cadence, so the forced sets are the only rebalances.)
+    c.force_hot_set(vec![a]);
+    let mut chunk = Vec::new();
+    for t in 0..2_000u64 {
+        chunk.extend_from_slice(&[a, a, a, t]);
+        if chunk.len() >= 800 {
+            c.push(std::mem::take(&mut chunk));
+        }
+    }
+    c.push(std::mem::take(&mut chunk));
+
+    // Phase 2: the distribution drifts — B is hot now, A demoted. A's
+    // 1500 further occurrences must flow to its home shard while its
+    // side-table partials stay frozen.
+    c.force_hot_set(vec![b]);
+    for t in 0..1_500u64 {
+        chunk.extend_from_slice(&[b, b, b, b, a, 2_000 + t]);
+        if chunk.len() >= 900 {
+            c.push(std::mem::take(&mut chunk));
+        }
+    }
+    c.push(std::mem::take(&mut chunk));
+
+    let out = c.finish();
+    let n = 8_000 + 9_000u64;
+    assert_eq!(out.stats.items, n);
+    assert_eq!(out.summary.n(), n, "split mass re-absorbed at drain");
+    assert_eq!(out.stats.split_items, 6_000 + 6_000, "both hot phases split");
+    assert_eq!(out.stats.hot_rebalances, 2, "one per forced install");
+
+    // Exact totals: 7500 A (6000 split + 1500 home-routed after the
+    // drift), 6000 B (all split), every tail key once. Over- or
+    // under-counting across the rebalance would shift these.
+    assert_eq!(out.summary.estimate(a), Some(7_500), "A double-counted or lost");
+    assert_eq!(out.summary.estimate(b), Some(6_000), "B double-counted or lost");
+    assert_eq!(out.summary.estimate(0), Some(1));
+    assert_eq!(out.summary.estimate(3_499), Some(1));
+
+    // The live read path agrees, with the exact split mass hardening
+    // the lower bounds.
+    let snap = q.snapshot();
+    assert!(snap.is_disjoint());
+    assert_eq!(snap.n(), n);
+    let pa = snap.point(a);
+    assert_eq!((pa.estimate, pa.guaranteed, pa.monitored), (7_500, 7_500, true));
+    let pb = snap.point(b);
+    assert_eq!((pb.estimate, pb.guaranteed, pb.monitored), (6_000, 6_000, true));
+
+    // Per-shard multiset balance: published Space Saving mass + exact
+    // side-table mass == items routed to that shard; the spread cursor
+    // dealt each hot phase's 6000 occurrences evenly (1500 per shard,
+    // cursor reset at each install); summaries stay key-disjoint.
+    let parts = q.registry().latest();
+    let mut seen = std::collections::HashSet::new();
+    let mut covered = 0u64;
+    for p in &parts {
+        assert!(p.finished, "drain snapshot");
+        let routed = out.stats.per_shard_items[p.shard];
+        assert_eq!(
+            p.summary.n() + p.hot_mass(),
+            routed,
+            "shard {} out of balance",
+            p.shard
+        );
+        covered += routed;
+        for &(key, w) in &p.hot {
+            assert!(key == a || key == b, "unexpected split key {key}");
+            assert_eq!(w, 1_500, "round-robin spread of {key} uneven");
+        }
+        assert_eq!(p.hot.len(), 2, "both hot keys on every shard");
+        for ctr in p.summary.counters() {
+            assert!(seen.insert(ctr.item), "item {} on two shards", ctr.item);
+            assert_eq!(shard_of(ctr.item, 4), p.shard, "item off home shard");
+        }
+    }
+    assert_eq!(covered, n, "per-shard routing covers the stream");
+    // A sits in its home summary (post-drift occurrences only); B
+    // never routed home and lives purely in the side tables.
+    assert!(seen.contains(&a), "A's post-drift occurrences missing from home");
+    assert!(!seen.contains(&b), "B must never enter a Space Saving structure");
+}
+
 /// Buffer recycling keeps working across a whole session: with the
 /// producer using take_buffer, a long ring session reuses buffers.
 #[test]

@@ -958,3 +958,204 @@ fn prop_malformed_frames_never_panic() {
         }
     }
 }
+
+/// Property 15 (keyed-adaptive hot-key tier): forcing arbitrary hot
+/// sets — including a mid-stream rebalance to a different set — over
+/// random streams, shard counts, `k`, chunking and either write path
+/// never weakens keyed routing's guarantees. Split occurrences are
+/// spread round-robin ([`pss::util::spread_of`]) into exact per-shard
+/// side tables and **never** enter a Space Saving structure, so:
+///
+/// * the shards' Space Saving summaries stay key-disjoint with every
+///   counter on its home shard;
+/// * the engine's merged view covers the whole stream
+///   (`snap.n() == n`) and reports the max-per-shard bound
+///   `ε = maxᵢ ⌊nᵢ/k⌋` of the Space Saving parts alone — exact
+///   partials add no over-estimation;
+/// * every split key reconstructs exactly: `point(h).estimate ==
+///   home-shard estimate + Σ partials`, monitored, with the exact mass
+///   hardening the lower bound (`guaranteed ≥ Σ partials`);
+/// * every merged counter honors `f ≤ f̂ ≤ f + ε` and
+///   `f̂ − err ≤ f`, and recall holds: split keys are always
+///   monitored, other items above their home-shard threshold too.
+///
+/// Hand-traced oracle (the shape every trial generalizes): shards = 2,
+/// hot set {h} from item one, h drawn 6 times, 4 tail items. The
+/// spread cursor alternates 0,1,0,1,… so the side tables carry
+/// (h,3) + (h,3) and h's home summary never sees it. At read time
+/// [`pss::summary::absorb_exact`] finds h unmonitored in the merged
+/// summary and inserts `count = 6 + b, err = b` with `b` = h's
+/// home-shard min count (the bound on evicted pre-split history; 0
+/// for an under-full summary) — so `point(h) = b + 6 = f̂`, and with
+/// `f = 6 ≤ f̂ ≤ f + b ≤ f + ε` both bounds hold. Had h also been
+/// routed to its home shard before promotion (a counter exists), the
+/// absorb adds 6 to that counter instead and the home counter's own
+/// `f ≤ count ≤ f + ⌊n_home/k⌋` carries through unchanged. Note one
+/// deliberate non-assertion: Σ counter counts == n does **not**
+/// survive the absorb (inserted counters carry the history base `b`
+/// on top of the stream mass), so coverage is asserted on `snap.n()`,
+/// which counts only real items.
+///
+/// A mid-stream rebalance (hot set A → B at the half-way chunk, spread
+/// cursor reset, exactly what `install_hot_set` does) must not
+/// double-count: a demoted key's later occurrences flow to its home
+/// summary while its side-table partials stay exact, and the same
+/// reconstruction identity still holds.
+#[test]
+fn prop_adaptive_routing_bounds() {
+    use pss::query::{EpochRegistry, QueryEngine};
+    use pss::summary::{offer_batched, ChunkAggregator};
+    use pss::util::{shard_of, spread_of};
+
+    for seed in 1700..1700 + TRIALS / 2 {
+        let mut rng = SplitMix64::new(seed);
+        let items = random_stream(&mut rng);
+        let shards = 1 + rng.next_below(4) as usize;
+        let k = 4 + rng.next_below(128) as usize;
+        let chunk = 1 + rng.next_below(700) as usize;
+        let batched = rng.next_f64() < 0.5;
+
+        // Forced hot sets over the stream's heavy band (ids < 8): a
+        // random subset before the mid-stream rebalance, an independent
+        // one after — adversarial in that nothing guarantees a forced
+        // key is actually heavy, or that a heavy key is forced.
+        let pick = |rng: &mut SplitMix64| -> HashSet<u64> {
+            (0u64..8).filter(|_| rng.next_f64() < 0.4).take(4).collect()
+        };
+        let hot_a = pick(&mut rng);
+        let hot_b = pick(&mut rng);
+
+        // Deterministic emulation of the adaptive write path: split
+        // keys spread round-robin into exact side tables, everything
+        // else scattered to its home shard's Space Saving worker.
+        let mut workers: Vec<StreamSummary> =
+            (0..shards).map(|_| StreamSummary::new(k)).collect();
+        let mut agg = ChunkAggregator::new();
+        let mut scatter: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        let mut ss_routed = vec![0u64; shards];
+        let mut partials: Vec<HashMap<u64, u64>> = vec![HashMap::new(); shards];
+        let mut split_sum: HashMap<u64, u64> = HashMap::new();
+        let mut cursor = 0u64;
+        let n_chunks = (items.len() + chunk - 1) / chunk;
+        let rebalance_at = n_chunks / 2;
+        for (ci, block) in items.chunks(chunk).enumerate() {
+            if ci == rebalance_at {
+                cursor = 0; // install_hot_set resets the spread cursor
+            }
+            let hot = if ci < rebalance_at { &hot_a } else { &hot_b };
+            for &it in block {
+                if hot.contains(&it) {
+                    let s = spread_of(cursor, shards);
+                    cursor += 1;
+                    *partials[s].entry(it).or_default() += 1;
+                    *split_sum.entry(it).or_default() += 1;
+                } else {
+                    scatter[shard_of(it, shards)].push(it);
+                }
+            }
+            for (s, sub) in scatter.iter_mut().enumerate() {
+                if sub.is_empty() {
+                    continue;
+                }
+                ss_routed[s] += sub.len() as u64;
+                if batched {
+                    offer_batched(&mut workers[s], &mut agg, sub);
+                } else {
+                    workers[s].offer_all(sub);
+                }
+                sub.clear();
+            }
+        }
+        let snapshots: Vec<Summary> = workers.iter().map(|w| w.freeze()).collect();
+
+        // The hot tier must not disturb key-disjointness: split items
+        // never entered any Space Saving structure, every counter still
+        // sits on its home shard, and each summary covers exactly the
+        // shard's non-split substream.
+        let mut seen = HashSet::new();
+        for (s, snap) in snapshots.iter().enumerate() {
+            assert_eq!(snap.n(), ss_routed[s], "seed {seed}: shard SS coverage");
+            for c in snap.counters() {
+                assert!(
+                    seen.insert(c.item),
+                    "seed {seed}: item {} on two shards",
+                    c.item
+                );
+                assert_eq!(shard_of(c.item, shards), s, "seed {seed}: off home shard");
+            }
+        }
+
+        // The real read path: publish each shard's summary plus its
+        // exact side table, then snapshot through the query engine.
+        let registry = EpochRegistry::new(shards, k);
+        registry.set_disjoint(true);
+        let engine = QueryEngine::new(registry, k as u64);
+        for (s, snap) in snapshots.iter().enumerate() {
+            let mut hot: Vec<(u64, u64)> =
+                partials[s].iter().map(|(&i, &w)| (i, w)).collect();
+            hot.sort_unstable();
+            engine.registry().publish_with_hot(s, snap.clone(), true, hot);
+        }
+        let snap = engine.snapshot();
+        assert!(snap.is_disjoint(), "seed {seed}: adaptive is keyed");
+        let n = items.len() as u64;
+        assert_eq!(snap.n(), n, "seed {seed}: merged coverage includes split mass");
+        let eps_max = snapshots.iter().map(|s| s.epsilon()).max().unwrap();
+        assert_eq!(snap.epsilon(), eps_max, "seed {seed}: ε from SS parts alone");
+
+        let t = truth(&items);
+        // Exact-sum reconstruction of every split key, through both the
+        // point path and the folded merged summary.
+        for (&h, &split) in &split_sum {
+            let home = &snapshots[shard_of(h, shards)];
+            let expected = home.estimate(h).unwrap_or_else(|| home.min_count()) + split;
+            let p = snap.point(h);
+            assert!(p.monitored, "seed {seed}: split key {h} unmonitored");
+            assert_eq!(
+                p.estimate, expected,
+                "seed {seed}: split key {h} ≠ home + Σ partials"
+            );
+            assert!(
+                p.guaranteed >= split,
+                "seed {seed}: exact mass must floor the lower bound of {h}"
+            );
+            assert_eq!(
+                snap.summary().estimate(h),
+                Some(expected),
+                "seed {seed}: merged summary disagrees with point({h})"
+            );
+        }
+        // Every merged counter holds the adaptive bounds against the
+        // whole-stream truth.
+        for c in snap.summary().counters() {
+            let f = t.get(&c.item).copied().unwrap_or(0);
+            assert!(c.count >= f, "seed {seed}: under-estimate of {}", c.item);
+            assert!(
+                c.count - f <= eps_max,
+                "seed {seed}: bound broken on {} (f̂={} f={f} ε={eps_max})",
+                c.item,
+                c.count
+            );
+            assert!(c.count - c.err <= f, "seed {seed}: err bound of {}", c.item);
+        }
+        // Recall: split keys are always monitored (the absorb inserts
+        // them); everything else at the home-shard threshold over the
+        // shard's *non-split* substream.
+        let monitored: HashSet<u64> =
+            snap.summary().counters().iter().map(|c| c.item).collect();
+        for (item, f) in &t {
+            let split = split_sum.get(item).copied().unwrap_or(0);
+            if split > 0 {
+                assert!(
+                    monitored.contains(item),
+                    "seed {seed}: lost split key {item}"
+                );
+            } else if *f > ss_routed[shard_of(*item, shards)] / k as u64 {
+                assert!(
+                    monitored.contains(item),
+                    "seed {seed}: lost item {item} (f={f} > home threshold)"
+                );
+            }
+        }
+    }
+}
