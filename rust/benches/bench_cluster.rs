@@ -1,0 +1,110 @@
+//! Cluster merge strategies — the paper's Figure 4 on real data
+//! structures: flat gather (`P − 1` sequential combines at the head)
+//! vs recursive-halving tree (`⌈log₂P⌉` rounds), plus the wire hop —
+//! one `SummarySnapshot` round trip through an in-process worker on a
+//! unix socket — and the distsim-predicted figures for the same
+//! topology. `pss bench --suite cluster --json` emits the
+//! machine-readable record (`BENCH_cluster.json`); this bench is the
+//! interactive view of the same costs.
+
+use pss::cluster::{flat_combine, run_worker, tree_combine};
+use pss::coordinator::CoordinatorConfig;
+use pss::distsim::{predict_flat, predict_tree, snapshot_bytes, MachineModel, NetworkModel};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::serve::{Endpoint, IngestClient, ServeConfig, SnapshotClient};
+use pss::summary::{FrequencySummary, SpaceSaving, Summary};
+use pss::util::benchkit::{black_box, run};
+
+/// Block-partition a zipf stream over `p` leaves, one saturated
+/// k-counter summary each.
+fn leaves(n: u64, p: usize, k: usize) -> Vec<Summary> {
+    let src = GeneratedSource::zipf(n, 1 << 20, 1.1, 42);
+    let per = n / p as u64;
+    let mut out = Vec::with_capacity(p);
+    for w in 0..p {
+        let start = w as u64 * per;
+        let end = if w + 1 == p { n } else { start + per };
+        let mut ss = SpaceSaving::new(k);
+        ss.offer_all(&src.slice(start, end));
+        out.push(ss.freeze());
+    }
+    out
+}
+
+fn main() {
+    println!("# bench_cluster — flat vs tree merge, measured vs distsim-predicted");
+    let machine = MachineModel::xeon_e5_2630_v3();
+    let net = NetworkModel::shared_memory();
+
+    for &(p, k) in &[(4usize, 2000usize), (8, 2000), (16, 2000), (8, 8000)] {
+        let parts = leaves(2_000_000, p, k);
+        let refs: Vec<&Summary> = parts.iter().collect();
+        run(&format!("merge/flat/p={p}/k={k}"), Some((p - 1) as f64), || {
+            black_box(flat_combine(&refs));
+        });
+        run(&format!("merge/tree/p={p}/k={k}"), Some((p - 1) as f64), || {
+            black_box(tree_combine(&refs));
+        });
+        let bytes = snapshot_bytes(k as u64, 0);
+        let pf = predict_flat(p, bytes, k as u64, &machine, &net);
+        let pt = predict_tree(p, bytes, k as u64, &machine, &net);
+        println!(
+            "  predicted p={p} k={k}: flat {:.3} ms, tree {:.3} ms (critical path; tree speedup {:.2}x)",
+            pf.total_s() * 1e3,
+            pt.total_s() * 1e3,
+            pf.total_s() / pt.total_s(),
+        );
+    }
+
+    // The wire hop: one snapshot round trip (encode + socket + decode)
+    // against a live worker holding 2000 saturated counters.
+    let k = 2000usize;
+    let dir = pss::util::TempDir::new().expect("temp dir");
+    let endpoint = Endpoint::Unix(dir.path().join("bench.sock"));
+    let wep = endpoint.clone();
+    let worker = std::thread::spawn(move || {
+        run_worker(
+            &wep,
+            ServeConfig {
+                coordinator: CoordinatorConfig {
+                    shards: 1,
+                    k,
+                    epoch_items: 512,
+                    ..Default::default()
+                },
+                query_threads: 1,
+                ..Default::default()
+            },
+            |_| {},
+        )
+    });
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut ing = loop {
+        match IngestClient::connect(&endpoint) {
+            Ok(c) => break c,
+            Err(e) => {
+                assert!(std::time::Instant::now() < deadline, "bench worker never bound: {e}");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    };
+    let runs_data: Vec<(u64, u64)> = (0..k as u64).map(|i| (i, 2)).collect();
+    ing.send_runs(&runs_data).expect("ingest");
+    ing.finish().expect("acks");
+    let mut sc = SnapshotClient::connect(&endpoint).expect("snapshot client");
+    // Wait until the published table is full so every timed fetch moves
+    // the complete k-counter body.
+    loop {
+        if sc.fetch(false).expect("fetch").counters.len() >= k {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "snapshot never saturated");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    run(&format!("wire/snapshot-roundtrip/k={k}"), Some(1.0), || {
+        black_box(sc.fetch(false).expect("fetch"));
+    });
+    let fin = sc.drain().expect("drain");
+    assert!(fin.finished);
+    worker.join().expect("worker thread").expect("worker result");
+}

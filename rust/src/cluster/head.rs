@@ -1,0 +1,283 @@
+//! The cluster head: owns one connection pair per worker process
+//! (ingest + snapshot), partitions the stream, and merges worker
+//! snapshots into a [`ClusterView`].
+//!
+//! Workers are plain `serve::Server` processes — the head either
+//! spawns them locally over unix sockets ([`ClusterHead::spawn_local`],
+//! the `pss cluster --processes P` path) or connects to already-running
+//! ones ([`ClusterHead::connect`], `--workers host:port,...`). Either
+//! way the wire is the same: `IngestItems`/`IngestRuns` down, v2
+//! `SummaryRequest` → `SummarySnapshot` back, and a final
+//! `drain: true` exchange that stops each worker and collects its
+//! drained state.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::snapshot::{ClusterRouting, ClusterView, WorkerSummary};
+use crate::serve::{Endpoint, IngestClient, SnapshotClient, WireSnapshot};
+use crate::util::shard_of;
+
+/// One worker process as the head sees it: its endpoint, the two live
+/// connections, and — when the head spawned it — the child process
+/// handle.
+struct WorkerLink {
+    endpoint: Endpoint,
+    ingest: Option<IngestClient>,
+    snap: Option<SnapshotClient>,
+    child: Option<Child>,
+}
+
+impl Drop for WorkerLink {
+    fn drop(&mut self) {
+        // A worker that was drained cleanly has already exited; this
+        // is the abnormal path (head error / panic) — don't leave
+        // orphan processes behind.
+        if let Some(mut child) = self.child.take() {
+            if child.try_wait().ok().flatten().is_none() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+/// The final state of one worker after a head-initiated drain.
+#[derive(Debug)]
+pub struct WorkerExit {
+    /// The worker's endpoint (for reporting).
+    pub endpoint: Endpoint,
+    /// Its final (`finished: true`) snapshot.
+    pub snapshot: WireSnapshot,
+    /// Exit status, for workers the head spawned (`None` for workers
+    /// it only connected to — they own their own lifecycle).
+    pub status: Option<std::process::ExitStatus>,
+}
+
+/// The result of draining a cluster: the merged final view plus each
+/// worker's exit record.
+#[derive(Debug)]
+pub struct ClusterDrain {
+    /// Merged view over every worker's final snapshot.
+    pub view: ClusterView,
+    /// Per-worker final snapshots and exit statuses.
+    pub workers: Vec<WorkerExit>,
+}
+
+/// Head-side handle over `P` worker processes.
+pub struct ClusterHead {
+    workers: Vec<WorkerLink>,
+    routing: ClusterRouting,
+    /// Round-robin cursor (block routing).
+    next: usize,
+    /// Per-worker staging buffers (keyed routing).
+    staged: Vec<Vec<(u64, u64)>>,
+}
+
+impl ClusterHead {
+    /// Connect to already-running workers.
+    pub fn connect(endpoints: &[Endpoint], routing: ClusterRouting) -> crate::Result<ClusterHead> {
+        anyhow::ensure!(!endpoints.is_empty(), "a cluster needs at least one worker");
+        let mut workers = Vec::with_capacity(endpoints.len());
+        for ep in endpoints {
+            workers.push(WorkerLink {
+                endpoint: ep.clone(),
+                ingest: Some(IngestClient::connect(ep)?),
+                snap: Some(SnapshotClient::connect(ep)?),
+                child: None,
+            });
+        }
+        let staged = vec![Vec::new(); workers.len()];
+        Ok(ClusterHead { workers, routing, next: 0, staged })
+    }
+
+    /// Spawn `processes` local workers (`program cluster --worker
+    /// --listen unix:<dir>/pss-worker-<i>.sock <worker_args...>`) and
+    /// connect to them. `program` is the `pss` binary to exec —
+    /// callers pass `std::env::current_exe()` (the CLI) or
+    /// `env!("CARGO_BIN_EXE_pss")` (tests); taking it as a parameter
+    /// keeps this spawnable from test binaries, whose own
+    /// `current_exe` is not `pss`.
+    pub fn spawn_local(
+        program: &Path,
+        dir: &Path,
+        processes: usize,
+        routing: ClusterRouting,
+        worker_args: &[String],
+    ) -> crate::Result<ClusterHead> {
+        anyhow::ensure!(processes >= 1, "a cluster needs at least one worker");
+        let mut links: Vec<(PathBuf, Child)> = Vec::with_capacity(processes);
+        for i in 0..processes {
+            let sock = dir.join(format!("pss-worker-{i}.sock"));
+            let _ = std::fs::remove_file(&sock);
+            let child = Command::new(program)
+                .arg("cluster")
+                .arg("--worker")
+                .arg("--listen")
+                .arg(format!("unix:{}", sock.display()))
+                .args(worker_args)
+                .stdin(Stdio::null())
+                .spawn()
+                .map_err(|e| anyhow::Error::msg(format!("spawning worker {i}: {e}")))?;
+            links.push((sock, child));
+        }
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut workers = Vec::with_capacity(processes);
+        for (i, (sock, mut child)) in links.into_iter().enumerate() {
+            // The worker binds before it prints anything, so readiness
+            // is simply "the socket accepts" — retry until the
+            // deadline, failing fast if the child already died.
+            let endpoint = Endpoint::Unix(sock);
+            let ingest = loop {
+                match IngestClient::connect(&endpoint) {
+                    Ok(c) => break c,
+                    Err(e) => {
+                        if let Some(status) = child.try_wait().ok().flatten() {
+                            anyhow::bail!("worker {i} exited before accepting: {status}");
+                        }
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "worker {i} never came up: {e}"
+                        );
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            };
+            let snap = SnapshotClient::connect(&endpoint)?;
+            workers.push(WorkerLink {
+                endpoint,
+                ingest: Some(ingest),
+                snap: Some(snap),
+                child: Some(child),
+            });
+        }
+        let staged = vec![Vec::new(); workers.len()];
+        Ok(ClusterHead { workers, routing, next: 0, staged })
+    }
+
+    /// Number of workers.
+    pub fn processes(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// How ingest is partitioned.
+    pub fn routing(&self) -> ClusterRouting {
+        self.routing
+    }
+
+    /// Worker endpoints, in worker order.
+    pub fn endpoints(&self) -> Vec<Endpoint> {
+        self.workers.iter().map(|w| w.endpoint.clone()).collect()
+    }
+
+    /// Route one chunk of weighted runs to the cluster. Keyed routing
+    /// partitions each run to its item's home worker
+    /// (`shard_of(item, P)` — the same hash the in-process keyed
+    /// router uses); block routing ships the whole chunk to the next
+    /// worker round-robin.
+    pub fn send_runs(&mut self, runs: &[(u64, u64)]) -> crate::Result<()> {
+        match self.routing {
+            ClusterRouting::Block => {
+                let w = self.next;
+                self.next = (self.next + 1) % self.workers.len();
+                self.ingest_mut(w)?.send_runs(runs)
+            }
+            ClusterRouting::Keyed => {
+                let p = self.workers.len();
+                for buf in &mut self.staged {
+                    buf.clear();
+                }
+                for &(item, weight) in runs {
+                    self.staged[shard_of(item, p)].push((item, weight));
+                }
+                // take/put-back so the staged buffers and the clients
+                // can be borrowed simultaneously.
+                let staged = std::mem::take(&mut self.staged);
+                let mut res = Ok(());
+                for (w, buf) in staged.iter().enumerate() {
+                    if buf.is_empty() {
+                        continue;
+                    }
+                    res = self.ingest_mut(w).and_then(|c| c.send_runs(buf));
+                    if res.is_err() {
+                        break;
+                    }
+                }
+                self.staged = staged;
+                res
+            }
+        }
+    }
+
+    /// Route one chunk of unit-weight items ([`ClusterHead::send_runs`]
+    /// with weight 1 semantics, without materializing runs on the
+    /// block path).
+    pub fn send_items(&mut self, items: &[u64]) -> crate::Result<()> {
+        match self.routing {
+            ClusterRouting::Block => {
+                let w = self.next;
+                self.next = (self.next + 1) % self.workers.len();
+                self.ingest_mut(w)?.send_items(items)
+            }
+            ClusterRouting::Keyed => {
+                let runs: Vec<(u64, u64)> = items.iter().map(|&i| (i, 1)).collect();
+                self.send_runs(&runs)
+            }
+        }
+    }
+
+    /// Pull a live snapshot from every worker and merge. Workers
+    /// refresh their epoch view on each request, so repeated polls
+    /// converge on the ingested mass once epochs publish.
+    pub fn poll(&mut self) -> crate::Result<ClusterView> {
+        let routing = self.routing;
+        let mut parts = Vec::with_capacity(self.workers.len());
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let snap = w
+                .snap
+                .as_mut()
+                .ok_or_else(|| anyhow::Error::msg(format!("worker {i} already drained")))?
+                .fetch(false)?;
+            parts.push(WorkerSummary::try_from(snap).map_err(anyhow::Error::msg)?);
+        }
+        ClusterView::build(&parts, routing).map_err(anyhow::Error::msg)
+    }
+
+    /// Drain the cluster: flush and close every ingest connection,
+    /// issue `SummaryRequest { drain: true }` to every worker, merge
+    /// the final snapshots, and reap spawned children — asserting
+    /// nothing ingested was lost (each worker's final snapshot is its
+    /// drained coordinator state).
+    pub fn drain(mut self) -> crate::Result<ClusterDrain> {
+        let routing = self.routing;
+        let mut exits = Vec::with_capacity(self.workers.len());
+        let mut parts = Vec::with_capacity(self.workers.len());
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            if let Some(ingest) = w.ingest.take() {
+                ingest.finish()?;
+            }
+            let snap = w
+                .snap
+                .take()
+                .ok_or_else(|| anyhow::Error::msg(format!("worker {i} already drained")))?
+                .drain()?;
+            let status = match w.child.take() {
+                Some(mut child) => Some(child.wait()?),
+                None => None,
+            };
+            parts.push(WorkerSummary::try_from(snap.clone()).map_err(anyhow::Error::msg)?);
+            exits.push(WorkerExit { endpoint: w.endpoint.clone(), snapshot: snap, status });
+        }
+        let view = ClusterView::build(&parts, routing).map_err(anyhow::Error::msg)?;
+        Ok(ClusterDrain { view, workers: exits })
+    }
+
+    fn ingest_mut(&mut self, w: usize) -> crate::Result<&mut IngestClient> {
+        self.workers[w]
+            .ingest
+            .as_mut()
+            .ok_or_else(|| anyhow::Error::msg(format!("worker {w} ingest already closed")))
+    }
+}

@@ -1,0 +1,136 @@
+//! Multi-process hierarchical aggregation — the paper's hybrid
+//! MPI/OpenMP decomposition, running for real.
+//!
+//! The in-process stack already implements the "OpenMP node": a
+//! `Coordinator` fans a stream across shared-memory shards and the
+//! query engine merges their epoch summaries. This module adds the
+//! outer level: a **head** process drives `P` **worker** processes,
+//! each a full serve-layer server, and aggregates their summaries over
+//! the wire.
+//!
+//! ```text
+//!                 ┌──────────── head ────────────┐
+//!                 │ partition → P ingest streams │
+//!                 │ poll/drain ← P snapshots     │
+//!                 │ merge_disjoint / tree combine│
+//!                 │ + absorb exact hot partials  │
+//!                 └──┬────────────┬───────────┬──┘
+//!          IngestRuns│ Summary    │           │
+//!                    ▼ Snapshot   ▼           ▼
+//!               worker 0      worker 1 …  worker P−1
+//!             (Coordinator  (Coordinator (Coordinator
+//!              × shards)     × shards)    × shards)
+//! ```
+//!
+//! * [`snapshot`] — [`WorkerSummary`] (validated wire state),
+//!   [`ClusterView`] (the merged, queryable cluster answer) and the
+//!   [`flat_combine`]/[`tree_combine`] merge strategies with the
+//!   routing-dependent ε bound (`maxᵢ εᵢ` keyed, `Σᵢ εᵢ` block).
+//! * [`head`] — [`ClusterHead`]: spawn or connect workers, partition
+//!   ingest, poll live views, drain to a final [`ClusterDrain`].
+//! * [`worker`] — [`run_worker`]: bind a server, serve until the head
+//!   drains it.
+
+pub mod head;
+pub mod snapshot;
+pub mod worker;
+
+pub use head::{ClusterDrain, ClusterHead, WorkerExit};
+pub use snapshot::{
+    flat_combine, tree_combine, ClusterError, ClusterRouting, ClusterView, SnapshotError,
+    WorkerSummary,
+};
+pub use worker::run_worker;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::serve::{Endpoint, ServeConfig};
+
+    fn worker_thread(
+        sock: std::path::PathBuf,
+    ) -> std::thread::JoinHandle<crate::Result<(crate::coordinator::QueryResult, crate::serve::ServeStats)>>
+    {
+        std::thread::spawn(move || {
+            run_worker(
+                &Endpoint::Unix(sock),
+                ServeConfig {
+                    coordinator: CoordinatorConfig {
+                        shards: 2,
+                        k: 64,
+                        k_majority: 8,
+                        epoch_items: 100,
+                        ..Default::default()
+                    },
+                    query_threads: 1,
+                    ..Default::default()
+                },
+                |_| {},
+            )
+        })
+    }
+
+    fn wait_ready(eps: &[Endpoint]) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        for ep in eps {
+            loop {
+                match ep.connect() {
+                    Ok(_) => break,
+                    Err(e) => {
+                        assert!(std::time::Instant::now() < deadline, "worker never bound: {e}");
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Head ↔ two in-process workers over unix sockets, keyed routing:
+    /// keys partition by `shard_of(item, 2)`, the drained view
+    /// conserves mass, and both worker servers return cleanly.
+    #[test]
+    fn head_drives_two_workers_end_to_end() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let socks = [dir.path().join("w0.sock"), dir.path().join("w1.sock")];
+        let h0 = worker_thread(socks[0].clone());
+        let h1 = worker_thread(socks[1].clone());
+        let eps = [Endpoint::Unix(socks[0].clone()), Endpoint::Unix(socks[1].clone())];
+        wait_ready(&eps);
+
+        let mut head = ClusterHead::connect(&eps, ClusterRouting::Keyed).unwrap();
+        assert_eq!(head.processes(), 2);
+        // 2000 items over a small universe; weights make the heavy
+        // hitters unambiguous.
+        let runs: Vec<(u64, u64)> = (0..20u64).map(|i| (i, 100 - i)).collect();
+        let total: u64 = runs.iter().map(|r| r.1).sum();
+        head.send_runs(&runs).unwrap();
+
+        let drained = head.drain().unwrap();
+        assert_eq!(drained.view.n(), total, "no mass lost across processes");
+        assert!(drained.view.all_finished());
+        assert_eq!(drained.workers.len(), 2);
+        for w in &drained.workers {
+            assert!(w.snapshot.finished);
+            assert!(w.status.is_none(), "connected (not spawned) workers have no status");
+        }
+        // Under-full everywhere → every estimate is exact.
+        let top = drained.view.top_k(3);
+        assert_eq!(top[0].item, 0);
+        assert_eq!(top[0].count, 100);
+        assert_eq!(top[0].err, 0);
+        let p = drained.view.point(5);
+        assert_eq!(p.estimate, 95);
+
+        let (r0, _) = h0.join().unwrap().unwrap();
+        let (r1, _) = h1.join().unwrap().unwrap();
+        assert_eq!(r0.stats.items + r1.stats.items, total);
+        // Keyed partition really was disjoint: each item landed on its
+        // shard_of home only.
+        for (items, worker) in [(&r0, 0usize), (&r1, 1usize)] {
+            for c in items.summary.counters() {
+                assert_eq!(crate::util::shard_of(c.item, 2), worker);
+            }
+        }
+    }
+}

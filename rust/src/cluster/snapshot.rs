@@ -1,0 +1,589 @@
+//! Wire snapshots → validated worker summaries → the merged cluster
+//! view.
+//!
+//! A worker ships its **pre-absorb** merged summary plus its exact hot
+//! side table ([`crate::serve::WireSnapshot`]); the head validates the
+//! frame into a [`WorkerSummary`], merges all workers with the summary
+//! algebra from `summary/` and replays the exact-mass absorb *once, at
+//! the top* — so a hot key's estimate is `home estimate + Σ exact
+//! partials` and the worker-computed ε bounds survive the cross-process
+//! hop.
+//!
+//! ## The ε bound across processes
+//!
+//! Which merge (and which bound) is sound depends on how the head
+//! routed the stream ([`ClusterRouting`]):
+//!
+//! * **Keyed** — the head partitions by `shard_of(item, P)`, so worker
+//!   substreams are pairwise key-disjoint. The merge is concatenation
+//!   ([`merge_disjoint`]) and every counter keeps its home worker's
+//!   error, so the view-wide bound is `ε = maxᵢ ⌊nᵢ/kᵢ⌋` — each
+//!   worker's own bound, not the sum.
+//! * **Block** — whole chunks round-robin across workers and any key
+//!   may appear anywhere. The merge is the paper's Algorithm 2
+//!   [`Summary::combine`] over a recursive-halving tree, whose error
+//!   adds one `min_count ≤ εᵢ` per combine, so the sound view-wide
+//!   bound is `ε = Σᵢ ⌊nᵢ/k⌋`.
+//!
+//! Both use the *worker-computed* ε shipped in the snapshot (itself the
+//! max-per-shard bound when the worker routes keyed internally) rather
+//! than recomputing `n/k` at the head: the post-absorb `n` is inflated
+//! by exact hot mass and the absorb may widen `k`, so a head-side
+//! `n/k` would *understate* the true bound.
+
+use crate::query::engine::{point_estimate, threshold_split, PointEstimate, ThresholdReport};
+use crate::serve::WireSnapshot;
+use crate::summary::{absorb_exact, merge_disjoint, Counter, Summary};
+use std::collections::HashMap;
+
+/// How the head partitions ingest across worker processes. Mirrors the
+/// in-process `Routing` split: `Keyed` is the hybrid decomposition the
+/// paper's MPI level uses (hash-partitioned ranks), `Block` is the
+/// throughput-first round-robin that needs the additive combine bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClusterRouting {
+    /// Hash-partition by item: worker `shard_of(item, P)` owns the key.
+    #[default]
+    Keyed,
+    /// Round-robin whole chunks: any worker may see any key.
+    Block,
+}
+
+impl std::fmt::Display for ClusterRouting {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterRouting::Keyed => write!(f, "keyed"),
+            ClusterRouting::Block => write!(f, "block"),
+        }
+    }
+}
+
+impl std::str::FromStr for ClusterRouting {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "keyed" => Ok(ClusterRouting::Keyed),
+            "block" => Ok(ClusterRouting::Block),
+            other => Err(format!("unknown cluster routing '{other}' (keyed|block)")),
+        }
+    }
+}
+
+/// A snapshot that decoded cleanly off the wire but does not describe a
+/// valid Space Saving state. Kept separate from
+/// [`crate::serve::ProtoError`]: the frame was well-formed, the
+/// *semantics* were not — a malicious or buggy worker must not be able
+/// to panic the head (e.g. `Summary::new` asserts `len ≤ k`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// `k = 0` — no Space Saving summary has zero budget.
+    ZeroBudget,
+    /// More counters than the budget admits (`len > k`).
+    Overfull { len: usize, k: u64 },
+    /// A counter claiming `err > count` (its guaranteed lower bound
+    /// would underflow).
+    NegativeGuarantee { item: u64 },
+    /// Σ counter counts exceeds the claimed stream mass `n` is allowed
+    /// to support — specifically a single counter with `count > n`.
+    CountExceedsMass { item: u64 },
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::ZeroBudget => write!(f, "snapshot has k = 0"),
+            SnapshotError::Overfull { len, k } => {
+                write!(f, "snapshot has {len} counters but budget k = {k}")
+            }
+            SnapshotError::NegativeGuarantee { item } => {
+                write!(f, "counter for item {item} has err > count")
+            }
+            SnapshotError::CountExceedsMass { item } => {
+                write!(f, "counter for item {item} exceeds the snapshot's stream mass")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// One worker's validated contribution to a cluster merge: the
+/// pre-absorb summary, the exact hot partials (as [`Counter`]s whose
+/// `err` carries the home-shard history bound), and the derived
+/// quantities the head must take from the worker instead of
+/// recomputing.
+#[derive(Debug, Clone)]
+pub struct WorkerSummary {
+    /// Newest epoch covered by any shard of this worker.
+    pub epoch: u64,
+    /// The worker's merged summary *before* hot-mass absorption.
+    pub summary: Summary,
+    /// Exact hot partials: `item`, `count` = exact weight, `err` = the
+    /// home-shard history bound to use if the item must be inserted.
+    pub hot: Vec<Counter>,
+    /// The worker-computed over-estimation bound for its view.
+    pub epsilon: u64,
+    /// The worker's upper bound for items it does not monitor.
+    pub min_count: u64,
+    /// Whether the worker's internal shards were key-disjoint.
+    pub disjoint: bool,
+    /// Whether this is the worker's *final* (drained) state.
+    pub finished: bool,
+}
+
+impl WorkerSummary {
+    /// Total stream mass this worker accounts for (Space Saving mass
+    /// plus exact hot mass).
+    pub fn total_mass(&self) -> u64 {
+        self.summary.n() + self.hot.iter().map(|c| c.count).sum::<u64>()
+    }
+}
+
+impl TryFrom<WireSnapshot> for WorkerSummary {
+    type Error = SnapshotError;
+
+    fn try_from(w: WireSnapshot) -> Result<Self, SnapshotError> {
+        if w.k == 0 {
+            return Err(SnapshotError::ZeroBudget);
+        }
+        if w.counters.len() as u64 > w.k {
+            return Err(SnapshotError::Overfull { len: w.counters.len(), k: w.k });
+        }
+        let mut counters = Vec::with_capacity(w.counters.len());
+        for c in &w.counters {
+            if c.err > c.count {
+                return Err(SnapshotError::NegativeGuarantee { item: c.item });
+            }
+            if c.count > w.n {
+                return Err(SnapshotError::CountExceedsMass { item: c.item });
+            }
+            counters.push(Counter { item: c.item, count: c.count, err: c.err });
+        }
+        let mut hot = Vec::with_capacity(w.hot.len());
+        for c in &w.hot {
+            if c.err > c.count {
+                return Err(SnapshotError::NegativeGuarantee { item: c.item });
+            }
+            hot.push(Counter { item: c.item, count: c.count, err: c.err });
+        }
+        Ok(WorkerSummary {
+            epoch: w.epoch,
+            summary: Summary::new(w.k as usize, w.n, counters),
+            hot,
+            epsilon: w.epsilon,
+            min_count: w.min_count,
+            disjoint: w.disjoint,
+            finished: w.finished,
+        })
+    }
+}
+
+/// A cluster-level merge failure (distinct from per-snapshot
+/// validation: the inputs were individually valid but cannot be merged
+/// under the requested routing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterError {
+    /// No worker snapshots to merge.
+    NoWorkers,
+    /// Block-routing combine requires every worker to run the same
+    /// budget `k` (the paper's Algorithm 2 precondition).
+    MismatchedBudget { expected: usize, got: usize, worker: usize },
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::NoWorkers => write!(f, "no worker snapshots to merge"),
+            ClusterError::MismatchedBudget { expected, got, worker } => write!(
+                f,
+                "block combine needs equal budgets: worker {worker} has k = {got}, expected {expected}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// Fold `parts` left to right with [`Summary::combine`] — the head
+/// merges every leaf itself, `P − 1` sequential combines. The flat
+/// strategy the paper's Figure 4 compares against.
+pub fn flat_combine(parts: &[&Summary]) -> Summary {
+    assert!(!parts.is_empty(), "nothing to combine");
+    let mut acc = parts[0].clone();
+    for p in &parts[1..] {
+        acc = acc.combine(p);
+    }
+    acc
+}
+
+/// Recursive-halving combine: split the leaf set in half, merge each
+/// half, combine the two results — `⌈log₂ P⌉` rounds of pairwise
+/// [`Summary::combine`], the tree strategy of the paper's hybrid
+/// decomposition. Same result mass as [`flat_combine`] (combine is
+/// associative in `n`), but the critical path is logarithmic when the
+/// pairwise merges run on different ranks.
+pub fn tree_combine(parts: &[&Summary]) -> Summary {
+    assert!(!parts.is_empty(), "nothing to combine");
+    if parts.len() == 1 {
+        return parts[0].clone();
+    }
+    let mid = parts.len() / 2;
+    tree_combine(&parts[..mid]).combine(&tree_combine(&parts[mid..]))
+}
+
+/// The head's merged, queryable view of the whole cluster — the same
+/// read API shape as the in-process `MergedSnapshot` (top-k, point,
+/// k-majority) with cluster-scope bounds.
+#[derive(Debug, Clone)]
+pub struct ClusterView {
+    merged: Summary,
+    routing: ClusterRouting,
+    epsilon: u64,
+    unmonitored: u64,
+    workers: usize,
+    finished: bool,
+    max_epoch: u64,
+}
+
+impl ClusterView {
+    /// Merge validated worker summaries under `routing`.
+    ///
+    /// Keyed: concatenate ([`merge_disjoint`] — debug builds assert the
+    /// caller really did key-partition), `ε = maxᵢ εᵢ`. Block:
+    /// recursive-halving [`tree_combine`] (equal `k` required),
+    /// `ε = Σᵢ εᵢ`. Either way the exact hot partials are summed per
+    /// item across workers and absorbed once at the top, with the
+    /// summed history bounds.
+    pub fn build(
+        workers: &[WorkerSummary],
+        routing: ClusterRouting,
+    ) -> Result<ClusterView, ClusterError> {
+        if workers.is_empty() {
+            return Err(ClusterError::NoWorkers);
+        }
+        let leaves: Vec<&Summary> = workers.iter().map(|w| &w.summary).collect();
+        let (ss, epsilon, unmonitored) = match routing {
+            ClusterRouting::Keyed => (
+                merge_disjoint(&leaves),
+                workers.iter().map(|w| w.epsilon).max().unwrap_or(0),
+                workers.iter().map(|w| w.min_count).max().unwrap_or(0),
+            ),
+            ClusterRouting::Block => {
+                let expected = leaves[0].k();
+                for (i, l) in leaves.iter().enumerate() {
+                    if l.k() != expected {
+                        return Err(ClusterError::MismatchedBudget {
+                            expected,
+                            got: l.k(),
+                            worker: i,
+                        });
+                    }
+                }
+                (
+                    tree_combine(&leaves),
+                    workers.iter().map(|w| w.epsilon).sum(),
+                    workers.iter().map(|w| w.min_count).sum(),
+                )
+            }
+        };
+
+        // Exact hot partials: sum weights per item across workers
+        // (keyed routing puts an item on one worker only; block may
+        // split it). History bounds add — each worker's bound covers
+        // the history *it* may have evicted.
+        let mut extras: Vec<(u64, u64)> = Vec::new();
+        let mut bounds: HashMap<u64, u64> = HashMap::new();
+        for w in workers {
+            for c in &w.hot {
+                match extras.iter_mut().find(|(item, _)| *item == c.item) {
+                    Some((_, weight)) => *weight += c.count,
+                    None => extras.push((c.item, c.count)),
+                }
+                *bounds.entry(c.item).or_insert(0) += c.err;
+            }
+        }
+        let merged = if extras.is_empty() {
+            ss
+        } else {
+            absorb_exact(&ss, &extras, |item| bounds.get(&item).copied().unwrap_or(0))
+        };
+
+        Ok(ClusterView {
+            merged,
+            routing,
+            epsilon,
+            unmonitored,
+            workers: workers.len(),
+            finished: workers.iter().all(|w| w.finished),
+            max_epoch: workers.iter().map(|w| w.epoch).max().unwrap_or(0),
+        })
+    }
+
+    /// The merged cluster summary (post-absorb).
+    pub fn summary(&self) -> &Summary {
+        &self.merged
+    }
+
+    /// Total stream mass across the cluster.
+    pub fn n(&self) -> u64 {
+        self.merged.n()
+    }
+
+    /// The bound every estimate honors: `maxᵢ εᵢ` (keyed) or `Σᵢ εᵢ`
+    /// (block) — see the module docs for why the head must not
+    /// recompute `n/k`.
+    pub fn epsilon(&self) -> u64 {
+        self.epsilon
+    }
+
+    /// How the merged substreams were routed.
+    pub fn routing(&self) -> ClusterRouting {
+        self.routing
+    }
+
+    /// Number of workers merged into this view.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Whether every worker contributed its *final* (drained) state.
+    pub fn all_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Newest epoch covered by any worker.
+    pub fn max_epoch(&self) -> u64 {
+        self.max_epoch
+    }
+
+    /// Top-`m` by estimate, descending.
+    pub fn top_k(&self, m: usize) -> Vec<Counter> {
+        self.merged.top_k(m)
+    }
+
+    /// The certainly-ordered prefix of [`ClusterView::top_k`].
+    pub fn top_k_guaranteed(&self, m: usize) -> Vec<Counter> {
+        self.merged.top_k_guaranteed(m)
+    }
+
+    /// Point estimate for one item. For unmonitored items the upper
+    /// bound is the cluster-scope unmonitored bound (max worker
+    /// `min_count` under keyed routing — the item's home worker bound
+    /// dominates; their sum under block — it could hide on any worker).
+    pub fn point(&self, item: u64) -> PointEstimate {
+        let mut p = point_estimate(&self.merged, item);
+        if !p.monitored {
+            p.estimate = self.unmonitored;
+        }
+        p
+    }
+
+    /// The paper's k-majority query at cluster scope: items with
+    /// `f̂ > N/k` over the *cluster-wide* mass `N`, split into
+    /// guaranteed and possible.
+    pub fn k_majority(&self, k_majority: u64) -> ThresholdReport {
+        assert!(k_majority >= 2, "k_majority must be >= 2");
+        threshold_split(&self.merged, self.n() / k_majority, self.epsilon)
+    }
+
+    /// Relative threshold `phi` ∈ `[0, 1)`: `f̂ > phi·N`.
+    pub fn threshold(&self, phi: f64) -> ThresholdReport {
+        assert!((0.0..1.0).contains(&phi), "phi must be in [0, 1)");
+        threshold_split(
+            &self.merged,
+            (phi * self.n() as f64).floor() as u64,
+            self.epsilon,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::WireCounter;
+
+    fn wire(
+        n: u64,
+        k: u64,
+        counters: &[(u64, u64, u64)],
+        hot: &[(u64, u64, u64)],
+    ) -> WireSnapshot {
+        WireSnapshot {
+            epoch: 1,
+            n,
+            k,
+            epsilon: if k == 0 { 0 } else { n / k },
+            min_count: if counters.len() as u64 == k {
+                counters.iter().map(|c| c.1).min().unwrap_or(0)
+            } else {
+                0
+            },
+            disjoint: false,
+            finished: false,
+            counters: counters
+                .iter()
+                .map(|&(item, count, err)| WireCounter { item, count, err })
+                .collect(),
+            hot: hot
+                .iter()
+                .map(|&(item, count, err)| WireCounter { item, count, err })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn invalid_snapshots_are_typed_errors_not_panics() {
+        let e = WorkerSummary::try_from(wire(10, 0, &[], &[])).unwrap_err();
+        assert_eq!(e, SnapshotError::ZeroBudget);
+
+        // 3 counters into a k=2 budget would trip Summary::new's
+        // assert — must surface as Overfull instead.
+        let e = WorkerSummary::try_from(wire(
+            30,
+            2,
+            &[(1, 10, 0), (2, 10, 0), (3, 10, 0)],
+            &[],
+        ))
+        .unwrap_err();
+        assert_eq!(e, SnapshotError::Overfull { len: 3, k: 2 });
+
+        let e = WorkerSummary::try_from(wire(10, 4, &[(1, 3, 5)], &[])).unwrap_err();
+        assert_eq!(e, SnapshotError::NegativeGuarantee { item: 1 });
+
+        let e = WorkerSummary::try_from(wire(10, 4, &[(1, 11, 0)], &[])).unwrap_err();
+        assert_eq!(e, SnapshotError::CountExceedsMass { item: 1 });
+
+        let e = WorkerSummary::try_from(wire(10, 4, &[(1, 5, 0)], &[(2, 3, 7)])).unwrap_err();
+        assert_eq!(e, SnapshotError::NegativeGuarantee { item: 2 });
+    }
+
+    /// Hand-traced keyed-merge oracle.
+    ///
+    /// Worker 0 (keys ≡ 0 mod 2): n=100, k=10, ε=10, counters
+    /// {2: (60, 4), 4: (30, 0)}, hot {8: weight 25, bound 4}.
+    /// Worker 1 (keys ≡ 1 mod 2): n=40, k=10, ε=4, counters
+    /// {3: (25, 2), 5: (10, 0)}.
+    ///
+    /// Keyed merge: concatenation → n = 140, every counter keeps its
+    /// home (count, err); absorb folds hot key 8 in as
+    /// count = 25 + 4 = 29, err = 4. Cluster ε = max(10, 4) = 10,
+    /// N = 140 + 25 = 165.
+    #[test]
+    fn keyed_merge_matches_hand_trace() {
+        let w0 = WorkerSummary::try_from(wire(
+            100,
+            10,
+            &[(4, 30, 0), (2, 60, 4)],
+            &[(8, 25, 4)],
+        ))
+        .unwrap();
+        let w1 = WorkerSummary::try_from(wire(40, 10, &[(5, 10, 0), (3, 25, 2)], &[])).unwrap();
+        assert_eq!(w0.total_mass(), 125);
+
+        let view = ClusterView::build(&[w0, w1], ClusterRouting::Keyed).unwrap();
+        assert_eq!(view.n(), 165);
+        assert_eq!(view.epsilon(), 10);
+        assert_eq!(view.workers(), 2);
+        assert!(!view.all_finished());
+
+        let top = view.top_k(5);
+        assert_eq!(top[0], Counter { item: 2, count: 60, err: 4 });
+        assert_eq!(top[1], Counter { item: 4, count: 30, err: 0 });
+        assert_eq!(top[2], Counter { item: 8, count: 29, err: 4 });
+        assert_eq!(top[3], Counter { item: 3, count: 25, err: 2 });
+
+        let p = view.point(8);
+        assert!(p.monitored);
+        assert_eq!(p.estimate, 29);
+        assert_eq!(p.guaranteed, 25);
+        // Unmonitored: both workers under-full → bound 0.
+        let p = view.point(99);
+        assert!(!p.monitored);
+        assert_eq!(p.estimate, 0);
+
+        // k-majority at k=5: threshold = 165/5 = 33. Guaranteed needs
+        // lower bound > 33: item 2 (60−4=56) qualifies; item 4
+        // (estimate 30) is below threshold entirely.
+        let rep = view.k_majority(5);
+        assert_eq!(rep.threshold, 33);
+        assert_eq!(rep.guaranteed.len(), 1);
+        assert_eq!(rep.guaranteed[0].item, 2);
+        assert!(rep.possible.is_empty());
+    }
+
+    /// Hand-traced block-merge oracle.
+    ///
+    /// Both workers k=2, saturated. Worker 0: n=20, counters
+    /// {1: (12, 0), 2: (8, 0)} → min_count 8. Worker 1: n=15, counters
+    /// {1: (9, 0), 3: (6, 0)} → min_count 6.
+    ///
+    /// Algorithm 2 combine: item 1 in both → 12 + 9 = 21, err 0;
+    /// item 2 only in S1 → 8 + m2 = 8 + 6 = 14, err 6 + 0 = 6;
+    /// item 3 only in S2 → 6 + m1 = 6 + 8 = 14, err 8 + 0 = 8.
+    /// k=2 keeps the top two by count: 21 and one of the 14s — combine
+    /// breaks the tie deterministically (item id). n = 35.
+    /// Cluster ε = 20/2 + 15/2 = 10 + 7 = 17; unmonitored bound
+    /// = 8 + 6 = 14.
+    #[test]
+    fn block_merge_matches_hand_trace() {
+        let w0 = WorkerSummary::try_from(wire(20, 2, &[(2, 8, 0), (1, 12, 0)], &[])).unwrap();
+        let w1 = WorkerSummary::try_from(wire(15, 2, &[(3, 6, 0), (1, 9, 0)], &[])).unwrap();
+        let view = ClusterView::build(&[w0, w1], ClusterRouting::Block).unwrap();
+
+        assert_eq!(view.n(), 35);
+        assert_eq!(view.epsilon(), 17);
+        let top = view.top_k(2);
+        assert_eq!(top[0], Counter { item: 1, count: 21, err: 0 });
+        assert_eq!(top[1].count, 14);
+
+        let p = view.point(99);
+        assert!(!p.monitored);
+        assert_eq!(p.estimate, 14, "block unmonitored bound is the sum of worker bounds");
+    }
+
+    #[test]
+    fn block_merge_rejects_mismatched_budgets() {
+        let w0 = WorkerSummary::try_from(wire(20, 2, &[(1, 12, 0), (2, 8, 0)], &[])).unwrap();
+        let w1 = WorkerSummary::try_from(wire(15, 4, &[(1, 9, 0)], &[])).unwrap();
+        let e = ClusterView::build(&[w0, w1], ClusterRouting::Block).unwrap_err();
+        assert_eq!(e, ClusterError::MismatchedBudget { expected: 2, got: 4, worker: 1 });
+        assert_eq!(
+            ClusterView::build(&[], ClusterRouting::Keyed).unwrap_err(),
+            ClusterError::NoWorkers
+        );
+    }
+
+    /// Flat and tree combine agree on mass and on every estimate (the
+    /// per-counter `err` may differ — association order changes which
+    /// `min_count` each absorbed counter pays — but both stay within
+    /// the additive bound).
+    #[test]
+    fn flat_and_tree_combine_agree_on_mass() {
+        let mk = |n: u64, a: (u64, u64), b: (u64, u64)| {
+            Summary::new(
+                2,
+                n,
+                vec![Counter::exact(a.0, a.1), Counter::exact(b.0, b.1)],
+            )
+        };
+        let parts = [
+            mk(20, (1, 12), (2, 8)),
+            mk(15, (1, 9), (3, 6)),
+            mk(10, (2, 7), (4, 3)),
+            mk(12, (1, 8), (5, 4)),
+        ];
+        let refs: Vec<&Summary> = parts.iter().collect();
+        let flat = flat_combine(&refs);
+        let tree = tree_combine(&refs);
+        assert_eq!(flat.n(), 57);
+        assert_eq!(tree.n(), 57);
+        assert_eq!(flat.k(), 2);
+        assert_eq!(tree.k(), 2);
+        // Item 1 is monitored everywhere it appears: both strategies
+        // must estimate at least its true mass 29.
+        let est = |s: &Summary| s.counters().iter().find(|c| c.item == 1).map(|c| c.count);
+        assert!(est(&flat).unwrap() >= 29);
+        assert!(est(&tree).unwrap() >= 29);
+    }
+}

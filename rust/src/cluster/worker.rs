@@ -1,0 +1,80 @@
+//! The worker side of cluster mode — a thin lifecycle wrapper around
+//! `serve::Server`.
+//!
+//! A worker *is* a full serve-layer server (it accepts ingest and
+//! query connections like any other), plus the v2 worker role: the
+//! head's `SummaryRequest { drain: true }` takes the coordinator,
+//! drains it, replies with the final snapshot and flips the server's
+//! shutdown flag — so "run until the head drains me" is just bind,
+//! wait, finish.
+
+use crate::coordinator::QueryResult;
+use crate::serve::{Endpoint, ServeConfig, ServeStats, Server};
+
+/// Bind a worker on `endpoint` and run it until a cluster head drains
+/// it (or `Server::request_shutdown` fires from another thread).
+/// `announce` is called once with the bound endpoint — the CLI prints
+/// it, tests capture it.
+pub fn run_worker(
+    endpoint: &Endpoint,
+    cfg: ServeConfig,
+    mut announce: impl FnMut(&Endpoint),
+) -> crate::Result<(QueryResult, ServeStats)> {
+    let server = Server::bind(endpoint, cfg)?;
+    announce(server.endpoint());
+    server.wait_shutdown(None);
+    Ok(server.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::serve::SnapshotClient;
+
+    /// The full worker lifecycle in-process: run_worker blocks until a
+    /// head-style drain arrives, then returns the drained result.
+    #[test]
+    fn run_worker_lives_until_drained() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let sock = dir.path().join("w.sock");
+        let endpoint = Endpoint::Unix(sock);
+        let cfg = ServeConfig {
+            coordinator: CoordinatorConfig {
+                shards: 2,
+                k: 32,
+                k_majority: 8,
+                epoch_items: 100,
+                ..Default::default()
+            },
+            query_threads: 1,
+            ..Default::default()
+        };
+
+        let ep = endpoint.clone();
+        let worker = std::thread::spawn(move || run_worker(&ep, cfg, |_| {}));
+
+        // The worker binds asynchronously; retry until it accepts.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let mut ing = loop {
+            match crate::serve::IngestClient::connect(&endpoint) {
+                Ok(c) => break c,
+                Err(e) => {
+                    assert!(std::time::Instant::now() < deadline, "worker never bound: {e}");
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }
+        };
+        ing.send_runs(&[(3, 70), (9, 30)]).unwrap();
+        ing.finish().unwrap();
+
+        let fin = SnapshotClient::connect(&endpoint).unwrap().drain().unwrap();
+        assert!(fin.finished);
+        assert_eq!(fin.total_mass(), 100);
+
+        let (result, stats) = worker.join().unwrap().unwrap();
+        assert_eq!(result.stats.items, 100);
+        assert_eq!(stats.worker_connections, 1);
+        assert_eq!(result.summary.counters().iter().find(|c| c.item == 3).unwrap().count, 70);
+    }
+}

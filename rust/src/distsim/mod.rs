@@ -28,9 +28,11 @@ pub mod cost;
 pub mod machine;
 pub mod mpisim;
 pub mod network;
+pub mod predict;
 pub mod topology;
 
 pub use machine::MachineModel;
 pub use mpisim::{simulate, SimOutcome, SimWorkload};
 pub use network::NetworkModel;
+pub use predict::{predict_flat, predict_tree, snapshot_bytes, MergePrediction};
 pub use topology::{ClusterSpec, Flavor};

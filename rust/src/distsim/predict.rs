@@ -1,0 +1,124 @@
+//! Cross-process merge-latency prediction — the calibrated cost model
+//! repurposed for the *real* cluster (`rust/src/cluster`).
+//!
+//! The simulator charges a recursive-halving reduction
+//! `⌈log₂P⌉ · (α + bytes/β + combine)` and a flat gather
+//! `(P−1) · (α + bytes/β + combine)`; the cluster bench
+//! (`pss bench --suite cluster`) measures both strategies on real
+//! snapshots and reports measured-vs-predicted side by side — the
+//! paper's Figure 4 comparison, with the model as the yardstick
+//! instead of a second cluster.
+
+use super::machine::MachineModel;
+use super::network::NetworkModel;
+
+/// Predicted latency split for one merge strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MergePrediction {
+    /// Time spent moving summaries (α–β model).
+    pub transfer_s: f64,
+    /// Time spent in `combine` calls on the critical path.
+    pub combine_s: f64,
+}
+
+impl MergePrediction {
+    /// Total predicted wall time.
+    pub fn total_s(&self) -> f64 {
+        self.transfer_s + self.combine_s
+    }
+}
+
+/// Wire size of one k-counter summary snapshot (the serve-protocol
+/// `SummarySnapshot` body: 41-byte header + 4-byte table length +
+/// 24 bytes per counter; the hot table is typically tiny and charged
+/// to the same figure via `extra_counters`).
+pub fn snapshot_bytes(k: u64, extra_counters: u64) -> u64 {
+    41 + 4 + 4 + (k + extra_counters) * 24
+}
+
+/// Flat gather: the head receives `P − 1` summaries and folds each in
+/// sequentially — both the transfers (one head NIC) and the combines
+/// (one head core) serialize, so the critical path is
+/// `(P−1) · (transfer + combine)`.
+pub fn predict_flat(
+    p: usize,
+    bytes_per_summary: u64,
+    k: u64,
+    machine: &MachineModel,
+    net: &NetworkModel,
+) -> MergePrediction {
+    if p <= 1 {
+        return MergePrediction { transfer_s: 0.0, combine_s: 0.0 };
+    }
+    let rounds = (p - 1) as f64;
+    MergePrediction {
+        transfer_s: rounds * net.transfer_seconds(bytes_per_summary),
+        combine_s: rounds * machine.combine_seconds(k),
+    }
+}
+
+/// Recursive-halving tree: pairs merge in parallel rounds, so the
+/// critical path is `⌈log₂P⌉ · (transfer + combine)` — the advantage
+/// the paper's Figure 4 shows over flat merging once `P` grows.
+/// Block-routing combine keeps the summary at `k` counters every
+/// round, so per-round cost is constant.
+pub fn predict_tree(
+    p: usize,
+    bytes_per_summary: u64,
+    k: u64,
+    machine: &MachineModel,
+    net: &NetworkModel,
+) -> MergePrediction {
+    if p <= 1 {
+        return MergePrediction { transfer_s: 0.0, combine_s: 0.0 };
+    }
+    let rounds = (p as f64).log2().ceil();
+    MergePrediction {
+        transfer_s: rounds * net.transfer_seconds(bytes_per_summary),
+        combine_s: rounds * machine.combine_seconds(k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-traced: P = 8, k = 2000, shared-memory transport.
+    /// bytes = 49 + 2000·24 = 48_049.
+    /// transfer = 0.3 µs + 48_049/12e9 ≈ 4.304 µs.
+    /// combine(Xeon, k=2000) = (2000·55 + 2000·log2(2000)·9)·1e-9
+    /// ≈ 0.110 ms + 0.1974 ms ≈ 0.3074 ms.
+    /// Flat: 7 rounds; tree: ⌈log₂8⌉ = 3 rounds — the ratio is 7/3.
+    #[test]
+    fn tree_beats_flat_by_log_over_linear() {
+        let m = MachineModel::xeon_e5_2630_v3();
+        let net = NetworkModel::shared_memory();
+        let bytes = snapshot_bytes(2000, 0);
+        assert_eq!(bytes, 48_049);
+
+        let flat = predict_flat(8, bytes, 2000, &m, &net);
+        let tree = predict_tree(8, bytes, 2000, &m, &net);
+        assert!(flat.total_s() > 0.0);
+        let ratio = flat.total_s() / tree.total_s();
+        assert!((ratio - 7.0 / 3.0).abs() < 1e-9, "ratio {ratio}");
+
+        // Per-round figures match the hand trace.
+        assert!((tree.transfer_s / 3.0 - net.transfer_seconds(bytes)).abs() < 1e-15);
+        assert!((tree.combine_s / 3.0 - m.combine_seconds(2000)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn degenerate_clusters_cost_nothing() {
+        let m = MachineModel::xeon_e5_2630_v3();
+        let net = NetworkModel::qdr_infiniband();
+        for p in [0, 1] {
+            assert_eq!(predict_flat(p, 1000, 100, &m, &net).total_s(), 0.0);
+            assert_eq!(predict_tree(p, 1000, 100, &m, &net).total_s(), 0.0);
+        }
+        // P = 2: one round either way — the strategies only diverge
+        // beyond two workers.
+        let f = predict_flat(2, 1000, 100, &m, &net);
+        let t = predict_tree(2, 1000, 100, &m, &net);
+        assert_eq!(f, t);
+    }
+}

@@ -42,6 +42,13 @@
 //!   connection = one producer feeding the recycled chunk buffers, a
 //!   query reader pool over the epoch snapshots, and the `pss loadgen`
 //!   multi-client load generator.
+//! * [`cluster`] — multi-process hierarchical aggregation (the hybrid
+//!   decomposition running for real): a head process partitions the
+//!   stream across P worker processes (each a full serve-layer
+//!   server), pulls their summary snapshots over protocol-v2 worker
+//!   frames, and merges them — `merge_disjoint` under keyed routing,
+//!   a recursive-halving combine tree under block routing — into a
+//!   cluster-scope [`cluster::ClusterView`].
 //! * [`window`] — the sliding-window read path: shards additionally
 //!   publish per-epoch *delta* summaries into bounded rings; the
 //!   [`window::WindowedQueryEngine`] merges the last `w` deltas and
@@ -53,6 +60,7 @@
 pub mod baselines;
 pub mod bench_harness;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod distsim;

@@ -18,6 +18,14 @@
 //!   N concurrent ingest connections streaming `gen/` workloads,
 //!   reporting end-to-end items/s and per-frame ack latency, then
 //!   querying the served top-k over the wire.
+//! * `cluster` — multi-process hierarchical aggregation: `--processes
+//!   P` spawns P local worker processes (each a full coordinator shard
+//!   group behind a serve-layer server) over unix sockets, or
+//!   `--workers a,b,...` connects to running ones; the head partitions
+//!   a generated stream across them, polls their summary snapshots,
+//!   and reports the merged cluster-scope top-k / k-majority with the
+//!   routing-dependent ε bound. `--worker --listen E` is the worker
+//!   side (spawned by the head, or run by hand on remote hosts).
 //! * `bench` — machine-readable perf records: `--suite window` (delta
 //!   ring overhead, landmark vs windowed latency), `--suite transport`
 //!   (ring vs mpsc × routing), `--suite summary` (heap vs bucket vs
@@ -69,8 +77,16 @@ USAGE:
   pss loadgen  [--connect unix:/path|host:port] [--clients N] [--items M]
                [--chunk-len C] [--universe U] [--skew R] [--seed S]
                [--runs] [--inflight F] [--top M] [--window W] [--shutdown]
-  pss bench    [--suite window|transport|summary|routing] [--n N] [--k K] [--threads T]
-               [--window W] [--delta-ring R] [--epoch-items E] [--repeat R]
+  pss cluster  [--processes P | --workers ep1,ep2,...]
+               [--cluster-routing keyed|block] [--n N] [--universe U]
+               [--skew R] [--seed S] [--chunk-len C] [--k K] [--threads T]
+               [--epoch-items E] [--interval-ms I] [--top M]
+  pss cluster  --worker --listen unix:/path|host:port [--k K] [--threads T]
+               [--epoch-items E] [--routing rr|ll|keyed|keyed-adaptive]
+               [--structure heap|bucket|compact]
+  pss bench    [--suite window|transport|summary|routing|cluster] [--n N] [--k K]
+               [--threads T] [--processes P] [--window W] [--delta-ring R]
+               [--epoch-items E] [--repeat R]
                [--chunk-len C] [--json] [--out FILE]
   pss repro    --exp <id> [--scale D] [--seed S] [--out DIR]   (or --list)
   pss verify   --input <file.pssd> [--k K] [--artifacts DIR]
@@ -92,6 +108,7 @@ fn main() {
         "query" => cmd_query(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "cluster" => cmd_cluster(&args),
         "bench" => cmd_bench(&args),
         "repro" => cmd_repro(&args),
         "verify" => cmd_verify(&args),
@@ -310,19 +327,7 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         );
     }
 
-    let (mut coord, engine) = Coordinator::spawn(CoordinatorConfig {
-        shards: cfg.threads,
-        k: cfg.k,
-        k_majority: cfg.k_majority,
-        queue_depth: cfg.queue_depth,
-        routing: cfg.routing,
-        transport: cfg.transport,
-        structure: cfg.structure,
-        epoch_items,
-        batch_ingest: cfg.batch_ingest,
-        delta_ring: cfg.delta_ring,
-        window_epochs: cfg.window_epochs,
-    });
+    let (mut coord, engine) = Coordinator::spawn(cfg.coordinator());
     let windows = coord.windows();
 
     let t0 = std::time::Instant::now();
@@ -607,6 +612,378 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `pss cluster` — the hybrid two-level decomposition running across
+/// real processes. Worker mode (`--worker --listen E`) binds a full
+/// serve-layer server and runs until a head drains it over the wire.
+/// Head mode spawns `--processes P` local workers over unix sockets
+/// (or connects to `--workers e1,e2,...`), partitions a generated
+/// stream across them (`--cluster-routing keyed` hash-partitions by
+/// item — ε = maxᵢ εᵢ; `block` round-robins whole chunks — ε = Σᵢ εᵢ),
+/// polls live merged views while streaming, then drains every worker
+/// and reports the cluster-scope top-k / k-majority.
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    use pss::cluster::{run_worker, ClusterHead, ClusterRouting};
+    use pss::serve::{Endpoint, ServeConfig};
+
+    if args.has("worker") {
+        let cfg = load_config(args)?;
+        anyhow::ensure!(
+            cfg.epoch_items > 0,
+            "cluster workers publish epoch snapshots; --epoch-items must be > 0"
+        );
+        let endpoint: Endpoint = args
+            .require::<String>("listen")
+            .map_err(anyhow::Error::msg)?
+            .parse()
+            .map_err(anyhow::Error::msg)?;
+        let query_threads: usize = args.get_or("query-threads", 1).map_err(anyhow::Error::msg)?;
+        let (result, stats) = run_worker(
+            &endpoint,
+            ServeConfig {
+                coordinator: cfg.coordinator(),
+                query_threads,
+                ..Default::default()
+            },
+            |ep| {
+                println!(
+                    "pss worker on {ep}: {} shards, k={}, epoch={} items, routing={}",
+                    cfg.threads, cfg.k, cfg.epoch_items, cfg.routing
+                );
+            },
+        )?;
+        println!(
+            "worker drained: {} items in {} chunks, {} epochs, {} head connections",
+            result.stats.items, result.stats.chunks, result.stats.epochs_published,
+            stats.worker_connections,
+        );
+        return Ok(());
+    }
+
+    let routing: ClusterRouting =
+        args.get_or("cluster-routing", ClusterRouting::Keyed).map_err(anyhow::Error::msg)?;
+    let n: u64 = args.get_or("n", 2_000_000).map_err(anyhow::Error::msg)?;
+    let universe: u64 = args.get_or("universe", 1 << 20).map_err(anyhow::Error::msg)?;
+    let skew: f64 = args.get_or("skew", 1.1).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let chunk_len: usize = args
+        .get_or("chunk-len", pss::parallel::batch_chunk_len_default())
+        .map_err(anyhow::Error::msg)?;
+    let top: usize = args.get_or("top", 10).map_err(anyhow::Error::msg)?;
+    let interval_ms: u64 = args.get_or("interval-ms", 500).map_err(anyhow::Error::msg)?;
+    let k_majority: u64 = args.get_or("k-majority", 1000).map_err(anyhow::Error::msg)?;
+
+    let mut head = if let Some(list) = args.get("workers") {
+        let endpoints: Vec<Endpoint> = list
+            .split(',')
+            .map(|s| s.trim().parse())
+            .collect::<Result<_, _>>()
+            .map_err(anyhow::Error::msg)?;
+        println!("pss cluster: connecting to {} workers ({routing} routing)", endpoints.len());
+        ClusterHead::connect(&endpoints, routing)?
+    } else {
+        let processes: usize = args.get_or("processes", 2).map_err(anyhow::Error::msg)?;
+        // Forward the coordinator-shape flags to the spawned workers so
+        // `pss cluster --k 4000 --threads 2` means per-worker sessions
+        // of that shape.
+        let mut worker_args: Vec<String> = Vec::new();
+        for flag in
+            ["k", "k-majority", "threads", "epoch-items", "routing", "transport", "structure"]
+        {
+            if let Some(v) = args.get(flag) {
+                worker_args.push(format!("--{flag}"));
+                worker_args.push(v.to_string());
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("pss-cluster-{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        let exe = std::env::current_exe()?;
+        println!(
+            "pss cluster: spawning {processes} local workers over unix sockets in {} ({routing} routing)",
+            dir.display()
+        );
+        ClusterHead::spawn_local(&exe, &dir, processes, routing, &worker_args)?
+    };
+
+    let source: Box<dyn ItemSource> = if skew > 0.0 {
+        Box::new(GeneratedSource::zipf_mandelbrot(n, universe, skew, 0.0, seed))
+    } else {
+        Box::new(GeneratedSource::uniform(n, universe, seed))
+    };
+    let t0 = std::time::Instant::now();
+    let interval = std::time::Duration::from_millis(interval_ms);
+    let mut next_poll = t0 + interval;
+    let mut buf = vec![0u64; chunk_len];
+    let mut pos = 0u64;
+    while pos < n {
+        let take = ((n - pos) as usize).min(chunk_len);
+        source.fill(pos, &mut buf[..take]);
+        head.send_items(&buf[..take])?;
+        pos += take as u64;
+        if std::time::Instant::now() >= next_poll {
+            next_poll += interval;
+            let view = head.poll()?;
+            let line: Vec<String> =
+                view.top_k(top).iter().map(|c| format!("{}:{}", c.item, c.count)).collect();
+            println!(
+                "[{:6.2}s] N={} ({}% of sent) ε={} top{top}=[{}]",
+                t0.elapsed().as_secs_f64(),
+                view.n(),
+                view.n() * 100 / pos.max(1),
+                view.epsilon(),
+                line.join(" "),
+            );
+        }
+    }
+
+    println!("draining {} workers ...", head.processes());
+    let drained = head.drain()?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        drained.view.n() == n,
+        "mass lost across processes: merged N={} of {n} sent",
+        drained.view.n()
+    );
+    println!(
+        "cluster drained {n} items in {elapsed:.3}s ({:.2} M items/s) across {} workers — merged N={}, ε={} ({routing} routing)",
+        n as f64 / elapsed / 1e6,
+        drained.workers.len(),
+        drained.view.n(),
+        drained.view.epsilon(),
+    );
+    for c in drained.view.top_k(top) {
+        println!("  item {:>12}  f̂={:<12} ε≤{}", c.item, c.count, c.err);
+    }
+    let rep = drained.view.k_majority(k_majority);
+    println!(
+        "k-majority (f̂ > N/{k_majority} = {}): {} guaranteed, {} possible",
+        rep.threshold,
+        rep.guaranteed.len(),
+        rep.possible.len(),
+    );
+    for w in &drained.workers {
+        let status = match &w.status {
+            Some(s) if s.success() => "exit 0".to_string(),
+            Some(s) => format!("EXIT {s}"),
+            None => "remote".to_string(),
+        };
+        println!(
+            "  worker {}: mass={} epoch={} [{status}]",
+            w.endpoint,
+            w.snapshot.total_mass(),
+            w.snapshot.epoch,
+        );
+    }
+    if let Some(w) = drained.workers.iter().find(|w| w.status.as_ref().is_some_and(|s| !s.success()))
+    {
+        anyhow::bail!("worker {} exited abnormally", w.endpoint);
+    }
+    Ok(())
+}
+
+/// `pss bench --suite cluster` — the paper's Figure 4 on real merges:
+/// flat (head folds all P leaves, `(P−1)·(transfer + combine)`) vs
+/// recursive-halving tree (`⌈log₂P⌉` rounds), measured against the
+/// distsim-calibrated prediction for the same topology. Measured
+/// per-round costs are real: `combine` over saturated k-counter
+/// summaries built from a block-partitioned zipf stream, and the wire
+/// transfer as a live `SummarySnapshot` round trip through an
+/// in-process worker on a unix socket. Both strategies then compose
+/// those rounds exactly as the predictor does, so
+/// predicted-vs-measured isolates the cost model's α–β + combine
+/// calibration (`BENCH_cluster.json`).
+fn cmd_bench_cluster(args: &Args) -> anyhow::Result<()> {
+    use pss::cluster::{flat_combine, run_worker, tree_combine};
+    use pss::distsim::{predict_flat, predict_tree, snapshot_bytes, MachineModel, NetworkModel};
+    use pss::serve::{Endpoint, ServeConfig, SnapshotClient};
+    use pss::summary::Summary;
+
+    let n: u64 = args.get_or("n", 2_000_000).map_err(anyhow::Error::msg)?;
+    let k: usize = args.get_or("k", 2_000).map_err(anyhow::Error::msg)?;
+    let processes: usize = args.get_or("processes", 8).map_err(anyhow::Error::msg)?;
+    let repeat: usize = args.get_or("repeat", 5).map_err(anyhow::Error::msg)?;
+    let json = args.has("json");
+    anyhow::ensure!(processes >= 2, "--processes must be >= 2");
+
+    if !json {
+        println!(
+            "cluster merge bench: {n} items block-partitioned over {processes} leaves, k={k}"
+        );
+    }
+
+    // P per-leaf summaries from a block-partitioned zipf stream (every
+    // leaf saturates its k counters — worst-case merge width).
+    let src = GeneratedSource::zipf(n, 1 << 20, 1.1, 42);
+    let per = n / processes as u64;
+    let mut buf = vec![0u64; 1 << 16];
+    let mut parts: Vec<Summary> = Vec::with_capacity(processes);
+    for w in 0..processes {
+        let mut ss = pss::summary::SpaceSaving::new(k);
+        let start = w as u64 * per;
+        let end = if w + 1 == processes { n } else { start + per };
+        let mut pos = start;
+        while pos < end {
+            let take = ((end - pos) as usize).min(buf.len());
+            src.fill(pos, &mut buf[..take]);
+            ss.offer_all(&buf[..take]);
+            pos += take as u64;
+        }
+        parts.push(ss.freeze());
+    }
+    let refs: Vec<&Summary> = parts.iter().collect();
+
+    // Measured per-round combine: one Algorithm 2 merge of two
+    // saturated k summaries, best of `20·repeat` runs.
+    let mut combine_s = f64::INFINITY;
+    let mut sink = 0u64;
+    for _ in 0..20 * repeat.max(1) {
+        let t0 = std::time::Instant::now();
+        let c = refs[0].combine(refs[1]);
+        combine_s = combine_s.min(t0.elapsed().as_secs_f64());
+        sink ^= c.n();
+    }
+    // Full-fold sanity walls (sequential execution of each strategy —
+    // the tree's rounds would overlap across real ranks).
+    let t0 = std::time::Instant::now();
+    let flat = flat_combine(&refs);
+    let flat_fold_wall_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let tree = tree_combine(&refs);
+    let tree_fold_wall_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(flat.n() == n && tree.n() == n, "combine lost mass");
+
+    // Measured per-round transfer: a live SummarySnapshot round trip
+    // (encode + unix socket + decode) against an in-process worker
+    // holding k saturated counters.
+    let dir = pss::util::TempDir::new()?;
+    let sock = dir.path().join("bench.sock");
+    let endpoint = Endpoint::Unix(sock);
+    let wep = endpoint.clone();
+    let wk = k;
+    let worker = std::thread::spawn(move || {
+        run_worker(
+            &wep,
+            ServeConfig {
+                coordinator: pss::coordinator::CoordinatorConfig {
+                    shards: 1,
+                    k: wk,
+                    epoch_items: 512,
+                    ..Default::default()
+                },
+                query_threads: 1,
+                ..Default::default()
+            },
+            |_| {},
+        )
+    });
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut ing = loop {
+        match pss::serve::IngestClient::connect(&endpoint) {
+            Ok(c) => break c,
+            Err(e) => {
+                anyhow::ensure!(std::time::Instant::now() < deadline, "bench worker: {e}");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    };
+    // k distinct weighted runs saturate the worker's summary so the
+    // snapshot body carries the full k-counter table.
+    let runs: Vec<(u64, u64)> = (0..k as u64).map(|i| (i, 2)).collect();
+    ing.send_runs(&runs)?;
+    ing.finish()?;
+    let mut sc = SnapshotClient::connect(&endpoint)?;
+    let mut fetch_s = f64::INFINITY;
+    let mut width = 0usize;
+    let fetch_deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let t0 = std::time::Instant::now();
+        let snap = sc.fetch(false)?;
+        let dt = t0.elapsed().as_secs_f64();
+        if snap.counters.len() >= k {
+            fetch_s = fetch_s.min(dt);
+            width = snap.counters.len();
+        }
+        if width >= k && fetch_s.is_finite() {
+            // One timed pass per repeat once the table is full.
+            let mut left = 20 * repeat.max(1);
+            while left > 0 {
+                let t0 = std::time::Instant::now();
+                let s = sc.fetch(false)?;
+                fetch_s = fetch_s.min(t0.elapsed().as_secs_f64());
+                sink ^= s.n;
+                left -= 1;
+            }
+            break;
+        }
+        anyhow::ensure!(
+            std::time::Instant::now() < fetch_deadline,
+            "bench worker never published {k} counters"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let fin = sc.drain()?;
+    sink ^= fin.n;
+    worker.join().expect("bench worker panicked")?;
+
+    // Compose measured rounds exactly as the predictor composes model
+    // rounds.
+    let flat_rounds = (processes - 1) as f64;
+    let tree_rounds = (processes as f64).log2().ceil();
+    let measured_flat_s = flat_rounds * (fetch_s + combine_s);
+    let measured_tree_s = tree_rounds * (fetch_s + combine_s);
+    let machine = MachineModel::xeon_e5_2630_v3();
+    let net = NetworkModel::shared_memory();
+    let bytes = snapshot_bytes(k as u64, 0);
+    let pred_flat = predict_flat(processes, bytes, k as u64, &machine, &net);
+    let pred_tree = predict_tree(processes, bytes, k as u64, &machine, &net);
+
+    let record = format!(
+        "{{\"bench\": \"cluster\", \"n\": {n}, \"k\": {k}, \"processes\": {processes}, \"repeat\": {repeat},\n \
+          \"snapshot_counters\": {width}, \"wire_bytes_per_snapshot\": {bytes},\n \
+          \"measured_combine_round_s\": {combine_s:.9}, \"measured_fetch_round_s\": {fetch_s:.9},\n \
+          \"measured_flat_s\": {measured_flat_s:.9}, \"measured_tree_s\": {measured_tree_s:.9},\n \
+          \"flat_fold_wall_s\": {flat_fold_wall_s:.9}, \"tree_fold_wall_s\": {tree_fold_wall_s:.9},\n \
+          \"predicted_flat_s\": {:.9}, \"predicted_tree_s\": {:.9},\n \
+          \"tree_speedup_measured\": {:.3}, \"tree_speedup_predicted\": {:.3},\n \
+          \"predicted_over_measured_flat\": {:.3}, \"predicted_over_measured_tree\": {:.3},\n \
+          \"sink\": {sink}}}",
+        pred_flat.total_s(),
+        pred_tree.total_s(),
+        measured_flat_s / measured_tree_s,
+        pred_flat.total_s() / pred_tree.total_s(),
+        pred_flat.total_s() / measured_flat_s,
+        pred_tree.total_s() / measured_tree_s,
+    );
+    if json {
+        println!("{record}");
+    } else {
+        println!(
+            "per round: combine {:.1} µs, wire fetch {:.1} µs ({} counters, {} wire bytes)",
+            combine_s * 1e6,
+            fetch_s * 1e6,
+            width,
+            bytes,
+        );
+        println!(
+            "flat  ({} rounds): measured {:.3} ms, predicted {:.3} ms",
+            processes - 1,
+            measured_flat_s * 1e3,
+            pred_flat.total_s() * 1e3,
+        );
+        println!(
+            "tree  ({tree_rounds:.0} rounds): measured {:.3} ms, predicted {:.3} ms — tree speedup {:.2}x measured vs {:.2}x predicted",
+            measured_tree_s * 1e3,
+            pred_tree.total_s() * 1e3,
+            measured_flat_s / measured_tree_s,
+            pred_flat.total_s() / pred_tree.total_s(),
+        );
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{record}\n"))?;
+        println!("[record written to {path}]");
+    }
+    Ok(())
+}
+
 /// `pss bench` — machine-readable perf records for the repo's bench
 /// trajectory. `--suite window` (default): ingest throughput with the
 /// delta ring off vs on and landmark vs windowed query latency
@@ -623,8 +1000,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "transport" => return cmd_bench_transport(args),
         "summary" => return cmd_bench_summary(args),
         "routing" => return cmd_bench_routing(args),
+        "cluster" => return cmd_bench_cluster(args),
         other => anyhow::bail!(
-            "unknown bench suite '{other}' (window|transport|summary|routing)"
+            "unknown bench suite '{other}' (window|transport|summary|routing|cluster)"
         ),
     }
 

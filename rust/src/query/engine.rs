@@ -51,8 +51,16 @@ use super::epoch::{EpochRegistry, EpochSnapshot};
 #[derive(Debug, Clone)]
 pub struct MergedSnapshot {
     /// The merge of every shard's published summary (combine tree, or
-    /// concatenation when the shards are key-disjoint).
+    /// concatenation when the shards are key-disjoint), with any exact
+    /// split-key partials already absorbed.
     merged: Summary,
+    /// The pre-absorb merge — the pure Space Saving state before the
+    /// exact hot partials were folded in. `None` when there were no
+    /// partials (then `merged` *is* the pre-absorb state). Kept for
+    /// the cluster snapshot export ([`MergedSnapshot::ss_summary`]):
+    /// the head replays the absorb itself, so it needs the state from
+    /// *before* it.
+    ss_merged: Option<Summary>,
     /// The per-shard snapshots this view was built from.
     parts: Vec<Arc<EpochSnapshot>>,
     /// Key-disjoint shards (keyed routing)?
@@ -142,20 +150,17 @@ impl MergedSnapshot {
             }
         }
         let hot_totals: Vec<(u64, u64)> = hot_fold.into_iter().collect();
-        let merged = if hot_totals.is_empty() {
-            merged
+        let (merged, ss_merged) = if hot_totals.is_empty() {
+            (merged, None)
         } else {
             // Inserted (home-evicted) split keys carry their home
             // shard's min_count as the bound on pre-split history.
-            absorb_exact(&merged, &hot_totals, |item| {
-                let home = shard_of(item, parts.len());
-                parts
-                    .iter()
-                    .find(|p| p.shard == home)
-                    .map_or(0, |p| p.summary.min_count())
-            })
+            let absorbed = absorb_exact(&merged, &hot_totals, |item| {
+                home_history_bound(&parts, item)
+            });
+            (absorbed, Some(merged))
         };
-        Self { merged, parts, disjoint, epsilon, hot_totals, taken_at: Instant::now() }
+        Self { merged, ss_merged, parts, disjoint, epsilon, hot_totals, taken_at: Instant::now() }
     }
 
     /// The merged summary itself.
@@ -268,6 +273,71 @@ impl MergedSnapshot {
     fn threshold_abs(&self, threshold: u64) -> ThresholdReport {
         threshold_split(&self.merged, threshold, self.epsilon)
     }
+
+    // -----------------------------------------------------------------
+    // Cluster snapshot export: the pieces a worker process ships to the
+    // cluster head so it can replay this node's merge *exactly*
+    // (`rust/src/cluster`).
+
+    /// The pre-absorb Space Saving merge — the node's merged summary
+    /// *before* any exact split-key partials were folded in (identical
+    /// to [`MergedSnapshot::summary`] when there were none). The
+    /// cluster head ships this plus [`MergedSnapshot::hot_exports`]
+    /// and replays the absorb itself after the cross-worker merge, so
+    /// exact mass is folded exactly once, at the top.
+    pub fn ss_summary(&self) -> &Summary {
+        self.ss_merged.as_ref().unwrap_or(&self.merged)
+    }
+
+    /// Exact split-key totals with their home-shard history bounds:
+    /// `(item, exact weight, bound on the pre-split prefix)` per hot
+    /// key. Feeding these to [`crate::summary::absorb_exact`] over
+    /// [`MergedSnapshot::ss_summary`] reproduces
+    /// [`MergedSnapshot::summary`] bit for bit.
+    pub fn hot_exports(&self) -> Vec<(u64, u64, u64)> {
+        self.hot_totals
+            .iter()
+            .map(|&(item, w)| (item, w, home_history_bound(&self.parts, item)))
+            .collect()
+    }
+
+    /// Upper bound on the true count of any item monitored *nowhere*
+    /// in this view (neither a summary counter nor a hot key): the
+    /// home-shard min-count maximized over shards in disjoint mode,
+    /// the merged summary's min count otherwise. 0 while under-full.
+    pub fn unmonitored_bound(&self) -> u64 {
+        if self.disjoint {
+            self.parts
+                .iter()
+                .map(|p| p.summary.min_count())
+                .max()
+                .unwrap_or(0)
+        } else {
+            self.ss_summary().min_count()
+        }
+    }
+
+    /// Whether every constituent shard snapshot is a drain-time final.
+    pub fn all_finished(&self) -> bool {
+        self.parts.iter().all(|p| p.finished)
+    }
+
+    /// The newest per-shard publication sequence number in this view.
+    pub fn max_epoch(&self) -> u64 {
+        self.parts.iter().map(|p| p.epoch).max().unwrap_or(0)
+    }
+}
+
+/// The home shard's minimum count for `item` — the bound on any
+/// history a split key accumulated in its home Space Saving structure
+/// before detection evicted it (shared by the absorb in
+/// [`MergedSnapshot::build`] and the cluster export).
+fn home_history_bound(parts: &[Arc<EpochSnapshot>], item: u64) -> u64 {
+    let home = shard_of(item, parts.len());
+    parts
+        .iter()
+        .find(|p| p.shard == home)
+        .map_or(0, |p| p.summary.min_count())
 }
 
 /// Point query over any merged summary — shared by the landmark
@@ -696,6 +766,58 @@ mod tests {
         assert_eq!(snap.epochs()[0].n, 33 + 25);
         assert_eq!(snap.epochs()[1].n, 3 + 35);
         assert_eq!(e.stats().items_published, total);
+    }
+
+    #[test]
+    fn export_hook_reproduces_merge_from_preabsorb_state() {
+        use crate::util::shard_of;
+        // Same setup as the adaptive fold test: one split key with
+        // exact partials on both shards. The export pieces must let a
+        // third party (the cluster head) rebuild the merged summary
+        // bit for bit: absorb_exact(ss_summary, hot_exports) == summary.
+        let k = 8;
+        let registry = EpochRegistry::new(2, k);
+        registry.set_disjoint(true);
+        let e = QueryEngine::new(registry, k as u64);
+        let hot = (0u64..).find(|&i| shard_of(i, 2) == 0).unwrap();
+        let mut s0: Vec<u64> = vec![hot; 30];
+        s0.extend((0u64..100).filter(|&i| i != hot && shard_of(i, 2) == 0).take(3));
+        let s1: Vec<u64> =
+            (0u64..100).filter(|&i| shard_of(i, 2) == 1).take(3).collect();
+        e.registry().publish_with_hot(0, summary_of(&s0, k), false, vec![(hot, 25)]);
+        e.registry().publish_with_hot(1, summary_of(&s1, k), true, vec![(hot, 35)]);
+
+        let snap = e.snapshot();
+        // Pre-absorb state excludes the exact partial mass...
+        assert_eq!(snap.ss_summary().n(), 36);
+        assert_eq!(snap.summary().n(), 96);
+        // ...and replaying the absorb from the exports reproduces the
+        // final merged summary exactly.
+        let exports = snap.hot_exports();
+        assert_eq!(exports.len(), 1);
+        assert_eq!((exports[0].0, exports[0].1), (hot, 60));
+        let pairs: Vec<(u64, u64)> = exports.iter().map(|e| (e.0, e.1)).collect();
+        let replayed = absorb_exact(snap.ss_summary(), &pairs, |item| {
+            exports.iter().find(|e| e.0 == item).map_or(0, |e| e.2)
+        });
+        assert_eq!(replayed.counters(), snap.summary().counters());
+        assert_eq!(replayed.n(), snap.summary().n());
+        // Metadata accessors.
+        assert!(!snap.all_finished(), "shard 0 not drained");
+        assert_eq!(snap.max_epoch(), 1);
+        // Under-full shards: nothing evicted anywhere, bound is 0.
+        assert_eq!(snap.unmonitored_bound(), 0);
+
+        // A view with no hot partials exports its summary verbatim.
+        let e2 = engine(1, 2);
+        e2.registry().publish(0, summary_of(&[1, 1, 1, 2, 2, 3], 2), true);
+        let snap2 = e2.snapshot();
+        assert_eq!(snap2.ss_summary().counters(), snap2.summary().counters());
+        assert!(snap2.hot_exports().is_empty());
+        assert!(snap2.all_finished());
+        // Overfull single shard: the unmonitored bound is min_count.
+        assert_eq!(snap2.unmonitored_bound(), snap2.summary().min_count());
+        assert!(snap2.unmonitored_bound() > 0);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::summary::{ChunkAggregator, Counter};
 
 use super::proto::{
     encode_hello, encode_items_into, encode_runs_into, read_frame, write_frame, Frame, Role,
-    WireStats, MAX_FRAME_MASS, MAX_ITEMS_PER_FRAME, MAX_RUNS_PER_FRAME, VERSION,
+    WireSnapshot, WireStats, MAX_FRAME_MASS, MAX_ITEMS_PER_FRAME, MAX_RUNS_PER_FRAME, VERSION,
 };
 use super::server::{AnyStream, Endpoint};
 
@@ -318,6 +318,56 @@ impl QueryClient {
     }
 }
 
+/// The cluster head's connection to one worker process: pulls full
+/// summary snapshots over the [`Role::Worker`] exchange
+/// ([`Frame::SummaryRequest`] → [`Frame::SummarySnapshot`]).
+pub struct SnapshotClient {
+    stream: AnyStream,
+    wire: Vec<u8>,
+    scratch: Vec<u8>,
+}
+
+impl SnapshotClient {
+    /// Connect and handshake as a cluster head.
+    pub fn connect(endpoint: &Endpoint) -> crate::Result<SnapshotClient> {
+        Ok(SnapshotClient {
+            stream: handshake(endpoint, Role::Worker)?,
+            wire: Vec::new(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// One snapshot round trip. `drain: true` asks the worker to stop
+    /// ingesting, drain its coordinator and reply with the *final*
+    /// state (`finished: true`) before shutting down — after which this
+    /// connection is spent.
+    pub fn fetch(&mut self, drain: bool) -> crate::Result<WireSnapshot> {
+        write_frame(&mut self.stream, &Frame::SummaryRequest { drain }, &mut self.wire)?;
+        match read_frame(&mut self.stream, &mut self.scratch)? {
+            Some((kind, body)) => match Frame::decode(kind, body)? {
+                Frame::SummarySnapshot(s) => Ok(s),
+                Frame::Error { code, message } => {
+                    anyhow::bail!("worker error ({code:?}): {message}")
+                }
+                other => anyhow::bail!("unexpected snapshot reply: {other:?}"),
+            },
+            None => anyhow::bail!("worker closed mid-snapshot"),
+        }
+    }
+
+    /// Drain the worker and return its final snapshot (consumes the
+    /// connection — the worker shuts down after replying).
+    pub fn drain(mut self) -> crate::Result<WireSnapshot> {
+        let snap = self.fetch(true)?;
+        anyhow::ensure!(
+            snap.finished,
+            "worker answered a drain request with a non-final snapshot"
+        );
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        Ok(snap)
+    }
+}
+
 /// Shape of one `pss loadgen` run.
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
@@ -595,6 +645,45 @@ mod tests {
         assert_eq!(report.items_acked, 2_000, "runs expand to full mass server-side");
         let (result, _) = server.finish();
         assert_eq!(result.stats.items, 2_000);
+    }
+
+    #[test]
+    fn snapshot_client_fetches_and_drains() {
+        let server = tiny_server();
+        let mut ing = IngestClient::connect(server.endpoint()).unwrap();
+        ing.send_runs(&[(42, 600), (7, 400)]).unwrap();
+        ing.finish().unwrap();
+        server.queries().refresh();
+
+        let mut sc = SnapshotClient::connect(server.endpoint()).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let snap = sc.fetch(false).unwrap();
+            if snap.total_mass() >= 1000 {
+                assert!(!snap.finished, "live poll must not report a final state");
+                assert!(snap.k >= 1);
+                let c42 = snap
+                    .counters
+                    .iter()
+                    .chain(snap.hot.iter())
+                    .find(|c| c.item == 42)
+                    .expect("heavy item visible in snapshot");
+                assert_eq!(c42.count, 600);
+                break;
+            }
+            assert!(Instant::now() < deadline, "epochs never covered ingest");
+            std::thread::sleep(Duration::from_millis(5));
+            server.queries().refresh();
+        }
+
+        let fin = sc.drain().unwrap();
+        assert!(fin.finished);
+        assert_eq!(fin.total_mass(), 1000);
+        assert!(server.shutdown_requested());
+        let (result, stats) = server.finish();
+        assert_eq!(result.stats.items, 1000);
+        assert_eq!(stats.worker_connections, 1);
+        assert_eq!(stats.proto_errors, 0);
     }
 
     #[test]

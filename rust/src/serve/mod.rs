@@ -16,15 +16,27 @@
 //!   ingest connection = one producer, a fixed query reader pool, and
 //!   a drain-then-join shutdown protocol.
 //! * [`client`] — [`client::IngestClient`] (pipelined acks + latency
-//!   attribution), [`client::QueryClient`] (engine-typed answers), and
-//!   [`client::run_loadgen`] behind `pss loadgen`.
+//!   attribution), [`client::QueryClient`] (engine-typed answers),
+//!   [`client::SnapshotClient`] (cluster-head pulls of full summary
+//!   state over the worker role), and [`client::run_loadgen`] behind
+//!   `pss loadgen`.
+//!
+//! Protocol v2 adds the worker role for cluster mode: a head process
+//! handshakes as [`Role::Worker`] and exchanges
+//! [`Frame::SummaryRequest`] / [`Frame::SummarySnapshot`] to pull each
+//! worker's *pre-absorb* merged summary plus its exact hot side table,
+//! so the head can replay the merge and keep the per-worker ε bounds
+//! honest (see `cluster/`).
 
 pub mod client;
 pub mod proto;
 pub mod server;
 
 pub use client::{
-    run_loadgen, IngestClient, LoadgenConfig, LoadgenReport, QueryClient, TopKAnswer,
+    run_loadgen, IngestClient, LoadgenConfig, LoadgenReport, QueryClient, SnapshotClient,
+    TopKAnswer,
 };
-pub use proto::{ErrorCode, Frame, FrameReader, ProtoError, Role, WireCounter, WireStats};
+pub use proto::{
+    ErrorCode, Frame, FrameReader, ProtoError, Role, WireCounter, WireSnapshot, WireStats,
+};
 pub use server::{AnyStream, Endpoint, ServeConfig, ServeStats, Server};

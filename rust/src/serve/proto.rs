@@ -7,7 +7,7 @@
 //! ```text
 //!  hello (client → server, once):
 //!  ┌─────────────┬────────────┬──────────┬───────────┐
-//!  │ magic: u32  │ version:u16│ role: u8 │ flags: u8 │   "PSS1", 1, ingest|query, 0
+//!  │ magic: u32  │ version:u16│ role: u8 │ flags: u8 │   "PSS1", 2, ingest|query|worker, 0
 //!  └─────────────┴────────────┴──────────┴───────────┘
 //!
 //!  frame (either direction, repeated):
@@ -42,14 +42,25 @@
 //! decode path returns a typed [`ProtoError`], which the server maps to
 //! a [`Frame::Error`] (code + message) before closing *that*
 //! connection only.
+//!
+//! Version 2 adds the **worker** role and the cluster snapshot
+//! exchange: a cluster head connects with [`Role::Worker`] and pulls
+//! [`Frame::SummarySnapshot`] replies to [`Frame::SummaryRequest`] —
+//! the worker's full merged Space Saving state ([`WireSnapshot`]:
+//! counters with per-counter error, the exact hot-key side table with
+//! its history bounds, `n`, `k`, the worker-computed ε and the
+//! unmonitored-item bound) so the head can replicate the worker's own
+//! read-path merge exactly and combine workers without weakening the
+//! `f ≤ f̂ ≤ f + ε` guarantee.
 
 use std::io::{Read, Write};
 
 /// Connection magic: `b"PSS1"` read as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"PSS1");
 
-/// Protocol version carried in the hello.
-pub const VERSION: u16 = 1;
+/// Protocol version carried in the hello. Version 2 added the worker
+/// role and the cluster snapshot frames.
+pub const VERSION: u16 = 2;
 
 /// Hard cap on `len` (kind + body), bytes. 16 MiB ≈ a 2M-item flat
 /// chunk — far past any sane chunk_len, small enough to bound a
@@ -79,6 +90,10 @@ pub enum Role {
     Ingest,
     /// This connection issues queries (served by the reader pool).
     Query,
+    /// This connection is a cluster head pulling summary snapshots
+    /// from a worker process ([`Frame::SummaryRequest`] /
+    /// [`Frame::SummarySnapshot`]).
+    Worker,
 }
 
 impl Role {
@@ -86,6 +101,7 @@ impl Role {
         match self {
             Role::Ingest => 0,
             Role::Query => 1,
+            Role::Worker => 2,
         }
     }
 
@@ -93,6 +109,7 @@ impl Role {
         match b {
             0 => Ok(Role::Ingest),
             1 => Ok(Role::Query),
+            2 => Ok(Role::Worker),
             other => Err(ProtoError::BadRole(other)),
         }
     }
@@ -103,6 +120,7 @@ impl std::fmt::Display for Role {
         f.write_str(match self {
             Role::Ingest => "ingest",
             Role::Query => "query",
+            Role::Worker => "worker",
         })
     }
 }
@@ -141,6 +159,10 @@ pub mod kind {
     pub const SHUTDOWN_ACK: u8 = 0x3F;
     /// [`super::Frame::Error`].
     pub const ERROR: u8 = 0x40;
+    /// [`super::Frame::SummaryRequest`].
+    pub const SUMMARY_REQUEST: u8 = 0x50;
+    /// [`super::Frame::SummarySnapshot`].
+    pub const SUMMARY_SNAPSHOT: u8 = 0x51;
 }
 
 /// Typed error codes carried by [`Frame::Error`].
@@ -230,11 +252,58 @@ pub struct WireStats {
     pub proto_errors: u64,
 }
 
+/// A worker's full merged Space Saving state, shipped to the cluster
+/// head in a [`Frame::SummarySnapshot`].
+///
+/// `counters` is the worker's **pre-hot-absorb** merged summary (the
+/// disjoint concatenation or combine tree over its shards), and `hot`
+/// the exact split-key side table — each hot entry's `count` is the
+/// key's exact observed weight and its `err` the home-shard history
+/// bound. The head replays the worker's own `absorb_exact` step from
+/// these two pieces, so a cluster query is *bit-identical in bound
+/// structure* to asking the worker directly. `epsilon` is
+/// worker-computed (max-per-shard under keyed routing, `n/k`
+/// otherwise): the head must take the max (key-disjoint workers) or
+/// sum (overlapping workers) of these rather than recompute `n/k` from
+/// the merged state, whose widened `k` would understate the bound.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct WireSnapshot {
+    /// Max per-shard epoch folded into this snapshot (0 = nothing
+    /// published yet).
+    pub epoch: u64,
+    /// Space Saving mass covered by `counters` (excludes hot mass).
+    pub n: u64,
+    /// Counter budget of the merged summary.
+    pub k: u64,
+    /// Worker-computed error bound every counter honors.
+    pub epsilon: u64,
+    /// Upper bound on any item *not* in `counters` or `hot` (the
+    /// merged summary's min count; 0 while under-full).
+    pub min_count: u64,
+    /// Whether this worker's shards were key-disjoint (keyed routing).
+    pub disjoint: bool,
+    /// Whether this is the worker's final, drained state.
+    pub finished: bool,
+    /// The merged summary's counters (`item`, `count` = f̂, `err`).
+    pub counters: Vec<WireCounter>,
+    /// Exact hot-key side table: `item`, `count` = exact split weight,
+    /// `err` = home-shard history bound for `absorb_exact`.
+    pub hot: Vec<WireCounter>,
+}
+
+impl WireSnapshot {
+    /// Total item mass this snapshot accounts for (Space Saving mass
+    /// plus the exact hot side-table mass).
+    pub fn total_mass(&self) -> u64 {
+        self.n + self.hot.iter().map(|c| c.count).sum::<u64>()
+    }
+}
+
 /// A decoded protocol frame.
 ///
 /// `Ingest*` frames flow client→server; `*Result`/`IngestAck`/`Error`
 /// flow server→client; `Shutdown` is the admin drain request (query
-/// role).
+/// role); `Summary*` frames are the worker-role snapshot exchange.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Flat item chunk.
@@ -336,6 +405,16 @@ pub enum Frame {
         /// Human-readable detail.
         message: String,
     },
+    /// Cluster head → worker: ship me your current merged summary.
+    /// `drain: true` additionally asks the worker to stop ingesting,
+    /// drain its coordinator, reply with the *final* snapshot
+    /// (`finished: true`) and shut down.
+    SummaryRequest {
+        /// Whether the worker should drain and exit after replying.
+        drain: bool,
+    },
+    /// Worker → cluster head: the full merged summary state.
+    SummarySnapshot(WireSnapshot),
 }
 
 /// Why a hello or frame failed to decode.
@@ -484,6 +563,8 @@ impl Frame {
             Frame::Shutdown => kind::SHUTDOWN,
             Frame::ShutdownAck => kind::SHUTDOWN_ACK,
             Frame::Error { .. } => kind::ERROR,
+            Frame::SummaryRequest { .. } => kind::SUMMARY_REQUEST,
+            Frame::SummarySnapshot(_) => kind::SUMMARY_SNAPSHOT,
         }
     }
 
@@ -563,6 +644,19 @@ impl Frame {
             Frame::Error { code, message } => {
                 out.extend_from_slice(&code.to_u16().to_le_bytes());
                 out.extend_from_slice(message.as_bytes());
+            }
+            Frame::SummaryRequest { drain } => {
+                out.push(u8::from(*drain));
+            }
+            Frame::SummarySnapshot(s) => {
+                out.extend_from_slice(&s.epoch.to_le_bytes());
+                out.extend_from_slice(&s.n.to_le_bytes());
+                out.extend_from_slice(&s.k.to_le_bytes());
+                out.extend_from_slice(&s.epsilon.to_le_bytes());
+                out.extend_from_slice(&s.min_count.to_le_bytes());
+                out.push(u8::from(s.disjoint) | (u8::from(s.finished) << 1));
+                counters_bytes(&s.counters, out);
+                counters_bytes(&s.hot, out);
             }
         }
         let len = (out.len() - start - 4) as u32;
@@ -727,6 +821,41 @@ impl Frame {
                     .map_err(|_| ProtoError::BadUtf8)?
                     .to_string();
                 Ok(Frame::Error { code, message })
+            }
+            kind::SUMMARY_REQUEST => {
+                if body.len() != 1 || body[0] > 1 {
+                    return Err(bad());
+                }
+                Ok(Frame::SummaryRequest { drain: body[0] != 0 })
+            }
+            kind::SUMMARY_SNAPSHOT => {
+                // Fixed prefix: 5 u64 fields + 1 flag byte = 41 bytes.
+                let epoch = take_u64(body, 0).ok_or_else(bad)?;
+                let n = take_u64(body, 8).ok_or_else(bad)?;
+                let k = take_u64(body, 16).ok_or_else(bad)?;
+                let epsilon = take_u64(body, 24).ok_or_else(bad)?;
+                let min_count = take_u64(body, 32).ok_or_else(bad)?;
+                let flags = *body.get(40).ok_or_else(bad)?;
+                if flags > 3 {
+                    return Err(bad());
+                }
+                let mut off = 41;
+                let counters = read_counters(kind_byte, body, &mut off)?;
+                let hot = read_counters(kind_byte, body, &mut off)?;
+                if off != body.len() {
+                    return Err(bad());
+                }
+                Ok(Frame::SummarySnapshot(WireSnapshot {
+                    epoch,
+                    n,
+                    k,
+                    epsilon,
+                    min_count,
+                    disjoint: flags & 1 != 0,
+                    finished: flags & 2 != 0,
+                    counters,
+                    hot,
+                }))
             }
             other => Err(ProtoError::UnknownKind(other)),
         }
@@ -1062,6 +1191,24 @@ mod tests {
             Frame::Shutdown,
             Frame::ShutdownAck,
             Frame::Error { code: ErrorCode::Malformed, message: "nope".into() },
+            Frame::SummaryRequest { drain: false },
+            Frame::SummaryRequest { drain: true },
+            Frame::SummarySnapshot(WireSnapshot {
+                epoch: 12,
+                n: 90_000,
+                k: 512,
+                epsilon: 175,
+                min_count: 40,
+                disjoint: true,
+                finished: false,
+                counters: vec![
+                    WireCounter { item: 3, count: 700, err: 20 },
+                    WireCounter { item: 9, count: 41, err: 41 },
+                ],
+                hot: vec![WireCounter { item: 1, count: 5000, err: 17 }],
+            }),
+            // Empty worker state (nothing published yet) encodes too.
+            Frame::SummarySnapshot(WireSnapshot { k: 16, ..WireSnapshot::default() }),
         ];
         for f in &frames {
             assert_eq!(&roundtrip(f), f, "{f:?}");
@@ -1070,7 +1217,7 @@ mod tests {
 
     #[test]
     fn hello_roundtrips_and_rejects() {
-        for role in [Role::Ingest, Role::Query] {
+        for role in [Role::Ingest, Role::Query, Role::Worker] {
             let h = encode_hello(role);
             let mut r = std::io::Cursor::new(h.to_vec());
             assert_eq!(read_hello(&mut r).unwrap(), role);
@@ -1235,6 +1382,9 @@ mod tests {
             (kind::STATS_RESULT, 63),
             (kind::HELLO_OK, 3),
             (kind::SHUTDOWN, 2),
+            (kind::SUMMARY_REQUEST, 0),
+            (kind::SUMMARY_REQUEST, 2),
+            (kind::SUMMARY_SNAPSHOT, 40),
         ] {
             let body = vec![0u8; len];
             assert!(
@@ -1258,6 +1408,62 @@ mod tests {
         let mut body = 3u16.to_le_bytes().to_vec();
         body.extend_from_slice(&[0xFF, 0xFE]);
         assert_eq!(Frame::decode(kind::ERROR, &body).unwrap_err(), ProtoError::BadUtf8);
+    }
+
+    #[test]
+    fn malformed_snapshot_bodies_are_typed_errors() {
+        let snap = Frame::SummarySnapshot(WireSnapshot {
+            epoch: 1,
+            n: 100,
+            k: 8,
+            epsilon: 12,
+            min_count: 3,
+            disjoint: false,
+            finished: true,
+            counters: vec![WireCounter { item: 5, count: 60, err: 2 }],
+            hot: vec![],
+        });
+        let wire = snap.encode();
+        let body = &wire[5..];
+        // The well-formed body decodes back.
+        assert_eq!(Frame::decode(kind::SUMMARY_SNAPSHOT, body).unwrap(), snap);
+        // Every strict prefix of the body is a typed error, not a panic.
+        for cut in 0..body.len() {
+            assert!(
+                matches!(
+                    Frame::decode(kind::SUMMARY_SNAPSHOT, &body[..cut]),
+                    Err(ProtoError::BadLength { kind: k, .. }) if k == kind::SUMMARY_SNAPSHOT
+                ),
+                "cut at {cut}"
+            );
+        }
+        // Trailing garbage after the hot list is rejected.
+        let mut long = body.to_vec();
+        long.push(0);
+        assert!(matches!(
+            Frame::decode(kind::SUMMARY_SNAPSHOT, &long),
+            Err(ProtoError::BadLength { .. })
+        ));
+        // A counter count lying past the body cannot drive a huge
+        // allocation: rejected before any reserve.
+        let mut lying = body.to_vec();
+        lying[41..45].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Frame::decode(kind::SUMMARY_SNAPSHOT, &lying),
+            Err(ProtoError::BadLength { .. })
+        ));
+        // Undefined flag bits are rejected (reserved for evolution).
+        let mut flagged = body.to_vec();
+        flagged[40] = 4;
+        assert!(matches!(
+            Frame::decode(kind::SUMMARY_SNAPSHOT, &flagged),
+            Err(ProtoError::BadLength { .. })
+        ));
+        // A drain byte other than 0/1 is rejected.
+        assert!(matches!(
+            Frame::decode(kind::SUMMARY_REQUEST, &[2]),
+            Err(ProtoError::BadLength { .. })
+        ));
     }
 
     /// A reader that yields one byte, then `WouldBlock`, alternating —
@@ -1301,6 +1507,39 @@ mod tests {
             got,
             vec![Frame::IngestAck { seq: 3, items: 64 }, Frame::Stats]
         );
+    }
+
+    #[test]
+    fn frame_reader_survives_dribbled_snapshot() {
+        // The snapshot exchange must survive worst-case fragmentation
+        // too: a request and a multi-counter snapshot, one byte per
+        // read with a timeout between every byte.
+        let snap = Frame::SummarySnapshot(WireSnapshot {
+            epoch: 4,
+            n: 50_000,
+            k: 128,
+            epsilon: 390,
+            min_count: 390,
+            disjoint: true,
+            finished: true,
+            counters: (0..128)
+                .map(|i| WireCounter { item: i, count: 1000 - i, err: i % 7 })
+                .collect(),
+            hot: vec![WireCounter { item: 999, count: 77, err: 3 }],
+        });
+        let mut wire = Frame::SummaryRequest { drain: true }.encode();
+        wire.extend(snap.encode());
+        let mut r = Dribble { data: wire, pos: 0, starve: false };
+        let mut fr = FrameReader::new();
+        let mut got = Vec::new();
+        loop {
+            match fr.poll(&mut r).unwrap() {
+                Poll::Frame(k, body) => got.push(Frame::decode(k, body).unwrap()),
+                Poll::Pending => continue,
+                Poll::Eof => break,
+            }
+        }
+        assert_eq!(got, vec![Frame::SummaryRequest { drain: true }, snap]);
     }
 
     #[test]

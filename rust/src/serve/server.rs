@@ -35,6 +35,19 @@
 //! embarrassingly parallel and completely decoupled from the ingest
 //! mutex.
 //!
+//! **Worker role (cluster mode).** A connection greeting with
+//! [`Role::Worker`] is a cluster head pulling this process's merged
+//! summary: each [`Frame::SummaryRequest`] is answered with a
+//! [`Frame::SummarySnapshot`] exporting the full
+//! [`MergedSnapshot`](crate::query::MergedSnapshot) state (pre-absorb
+//! summary, exact hot table with history bounds, worker-computed ε).
+//! A `drain: true` request additionally takes the coordinator, drains
+//! it ([`Coordinator::finish`]), stows the [`QueryResult`] for
+//! [`Server::finish`] to return, replies with the *final* snapshot
+//! (`finished: true`) and flips the shutdown flag — the wire-level
+//! equivalent of the local drain, so a head can stop its workers and
+//! still collect their exact final state in one round trip.
+//!
 //! **Shutdown protocol.** [`Server::request_shutdown`] (or a wire
 //! [`Frame::Shutdown`] from a query connection) flips one flag; the
 //! accept loop stops accepting, every connection thread finishes the
@@ -67,7 +80,7 @@ use crate::window::WindowedQueryEngine;
 
 use super::proto::{
     read_hello, write_frame, decode_ingest_into, ErrorCode, Frame, FrameReader, Poll,
-    ProtoError, Role, WireCounter, WireStats, VERSION,
+    ProtoError, Role, WireCounter, WireSnapshot, WireStats, VERSION,
 };
 
 /// Where the server listens (or a client connects).
@@ -263,6 +276,10 @@ impl Default for ServeConfig {
 /// query pool and the handle.
 struct Shared {
     coord: Mutex<Option<Coordinator>>,
+    /// The drained session result when a wire `SummaryRequest{drain}`
+    /// (worker role) finished the coordinator before [`Server::finish`]
+    /// could — `finish` falls back to this.
+    drained: Mutex<Option<QueryResult>>,
     engine: QueryEngine,
     windows: Option<WindowedQueryEngine>,
     k_majority: u64,
@@ -272,6 +289,7 @@ struct Shared {
     ingest_active: AtomicUsize,
     ingest_conns: AtomicU64,
     query_conns: AtomicU64,
+    worker_conns: AtomicU64,
     frames_in: AtomicU64,
     proto_errors: AtomicU64,
 }
@@ -314,7 +332,10 @@ pub struct ServeStats {
     pub ingest_connections: u64,
     /// Query connections accepted over the server's lifetime.
     pub query_connections: u64,
-    /// Frames received (both roles).
+    /// Worker (cluster-head) connections accepted over the server's
+    /// lifetime.
+    pub worker_connections: u64,
+    /// Frames received (all roles).
     pub frames: u64,
     /// Connections terminated with a protocol error.
     pub proto_errors: u64,
@@ -373,6 +394,7 @@ impl Server {
         let windows = coord.windows();
         let shared = Arc::new(Shared {
             coord: Mutex::new(Some(coord)),
+            drained: Mutex::new(None),
             engine,
             windows,
             k_majority,
@@ -382,6 +404,7 @@ impl Server {
             ingest_active: AtomicUsize::new(0),
             ingest_conns: AtomicU64::new(0),
             query_conns: AtomicU64::new(0),
+            worker_conns: AtomicU64::new(0),
             frames_in: AtomicU64::new(0),
             proto_errors: AtomicU64::new(0),
         });
@@ -483,20 +506,26 @@ impl Server {
         for h in self.pool.drain(..) {
             let _ = h.join();
         }
-        let coord = self
-            .shared
-            .coord
-            .lock()
-            .expect("coordinator lock")
-            .take()
-            .expect("server finished twice");
-        let result = coord.finish();
+        let coord = self.shared.coord.lock().expect("coordinator lock").take();
+        let result = match coord {
+            Some(c) => c.finish(),
+            // A wire-level drain (worker role, `SummaryRequest{drain}`)
+            // already finished the session; hand out its stored result.
+            None => self
+                .shared
+                .drained
+                .lock()
+                .expect("drained result lock")
+                .take()
+                .expect("server finished twice"),
+        };
         if let Some(path) = self.unix_path.take() {
             let _ = std::fs::remove_file(path);
         }
         let stats = ServeStats {
             ingest_connections: self.shared.ingest_conns.load(Ordering::Relaxed),
             query_connections: self.shared.query_conns.load(Ordering::Relaxed),
+            worker_connections: self.shared.worker_conns.load(Ordering::Relaxed),
             frames: self.shared.frames_in.load(Ordering::Relaxed),
             proto_errors: self.shared.proto_errors.load(Ordering::Relaxed),
         };
@@ -601,6 +630,10 @@ fn greet(mut stream: AnyStream, shared: &Arc<Shared>, query_tx: &Sender<AnyStrea
             if query_tx.send(stream).is_err() {
                 // Stream moved into the failed send; nothing to do.
             }
+        }
+        Role::Worker => {
+            shared.worker_conns.fetch_add(1, Ordering::Relaxed);
+            worker_conn(&mut stream, shared, &mut wire);
         }
     }
 }
@@ -875,6 +908,114 @@ fn answer_query(shared: &Arc<Shared>, frame: &Frame) -> Option<Frame> {
     })
 }
 
+/// Export the engine's current merged view as a wire snapshot: the
+/// pre-absorb summary, the exact hot table with its history bounds,
+/// and the worker-computed bound metadata. The head replays the absorb
+/// itself ([`MergedSnapshot::hot_exports`](crate::query::MergedSnapshot::hot_exports)),
+/// so the exported state reproduces this node's answers exactly.
+fn export_snapshot(shared: &Arc<Shared>) -> WireSnapshot {
+    let snap = shared.engine.snapshot();
+    let ss = snap.ss_summary();
+    WireSnapshot {
+        epoch: snap.max_epoch(),
+        n: ss.n(),
+        k: ss.k() as u64,
+        epsilon: snap.epsilon(),
+        min_count: snap.unmonitored_bound(),
+        disjoint: snap.is_disjoint(),
+        finished: snap.all_finished(),
+        counters: counters_to_wire(ss.counters()),
+        hot: snap
+            .hot_exports()
+            .into_iter()
+            .map(|(item, count, err)| WireCounter { item, count, err })
+            .collect(),
+    }
+}
+
+/// One cluster-head connection: answer [`Frame::SummaryRequest`]s with
+/// full summary exports; a `drain` request finishes the coordinator
+/// (stowing the [`QueryResult`] for [`Server::finish`]), replies with
+/// the final snapshot and initiates the server shutdown.
+fn worker_conn(stream: &mut AnyStream, shared: &Arc<Shared>, wire: &mut Vec<u8>) {
+    let mut reader = FrameReader::new();
+    loop {
+        // Same frame-boundary drain check as the other roles.
+        if shared.shutting_down() && !reader.mid_frame() {
+            send_error(
+                stream,
+                wire,
+                ErrorCode::ShuttingDown,
+                "server is draining".into(),
+            );
+            return;
+        }
+        match reader.poll(stream) {
+            Ok(Poll::Frame(kind, body)) => {
+                shared.frames_in.fetch_add(1, Ordering::Relaxed);
+                let frame = match Frame::decode(kind, body) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                        send_error(stream, wire, e.code(), e.to_string());
+                        return;
+                    }
+                };
+                match frame {
+                    Frame::SummaryRequest { drain: false } => {
+                        // Prompt the shards to republish (lands
+                        // asynchronously; the head polls), then export
+                        // the freshest published view.
+                        shared.engine.refresh();
+                        let snap = export_snapshot(shared);
+                        if write_frame(stream, &Frame::SummarySnapshot(snap), wire).is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Frame::SummaryRequest { drain: true } => {
+                        // Drain the session (idempotent: a second drain
+                        // request re-exports the already-final state).
+                        let coord =
+                            shared.coord.lock().expect("coordinator lock").take();
+                        if let Some(c) = coord {
+                            let result = c.finish();
+                            *shared.drained.lock().expect("drained result lock") =
+                                Some(result);
+                        }
+                        let snap = export_snapshot(shared);
+                        let _ = write_frame(stream, &Frame::SummarySnapshot(snap), wire);
+                        // Flip the flag last so the reply above is
+                        // never pre-empted by this conn's own boundary
+                        // check.
+                        shared.shutdown.store(true, Ordering::Release);
+                        let _ = stream.shutdown(std::net::Shutdown::Both);
+                        return;
+                    }
+                    _ => {
+                        shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                        send_error(
+                            stream,
+                            wire,
+                            ErrorCode::WrongRole,
+                            format!("frame kind {kind:#04x} not valid on a worker connection"),
+                        );
+                        return;
+                    }
+                }
+            }
+            // Idle: loop back to the boundary check above.
+            Ok(Poll::Pending) => {}
+            Ok(Poll::Eof) => return,
+            Err(e) => {
+                shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+                send_error(stream, wire, e.code(), e.to_string());
+                return;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1051,6 +1192,90 @@ mod tests {
         assert_eq!(read_one(&mut ok), Frame::HelloOk { version: VERSION });
         let (_, stats) = server.finish();
         assert_eq!(stats.proto_errors, 1);
+    }
+
+    #[test]
+    fn worker_conn_exports_snapshots_and_drains() {
+        let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), tiny_cfg()).unwrap();
+        let endpoint = server.endpoint().clone();
+        let mut wire = Vec::new();
+
+        // Feed a deterministic stream: 600×42, 400×7.
+        let mut ing = endpoint.connect().unwrap();
+        ing.write_all(&encode_hello(Role::Ingest)).unwrap();
+        assert_eq!(read_one(&mut ing), Frame::HelloOk { version: VERSION });
+        write_frame(
+            &mut ing,
+            &Frame::IngestRuns { seq: 1, runs: vec![(42, 600), (7, 400)] },
+            &mut wire,
+        )
+        .unwrap();
+        assert_eq!(read_one(&mut ing), Frame::IngestAck { seq: 1, items: 1000 });
+        drop(ing);
+
+        // Worker connection: poll until the published epochs cover the
+        // ingested mass, then drain.
+        let mut w = endpoint.connect().unwrap();
+        w.write_all(&encode_hello(Role::Worker)).unwrap();
+        assert_eq!(read_one(&mut w), Frame::HelloOk { version: VERSION });
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            write_frame(&mut w, &Frame::SummaryRequest { drain: false }, &mut wire)
+                .unwrap();
+            match read_one(&mut w) {
+                Frame::SummarySnapshot(s) if s.total_mass() >= 1000 => {
+                    assert!(!s.finished);
+                    assert!(s.epoch >= 1);
+                    // k=64 per shard, 2 shards under-full: exact counts.
+                    let c42 =
+                        s.counters.iter().find(|c| c.item == 42).expect("42 monitored");
+                    assert_eq!(c42.count, 600);
+                    break;
+                }
+                Frame::SummarySnapshot(_) => {
+                    assert!(Instant::now() < deadline, "epochs never covered ingest");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Drain: the final snapshot is finished and exact.
+        write_frame(&mut w, &Frame::SummaryRequest { drain: true }, &mut wire).unwrap();
+        match read_one(&mut w) {
+            Frame::SummarySnapshot(s) => {
+                assert!(s.finished, "drain reply must be the final state");
+                assert_eq!(s.total_mass(), 1000);
+                assert_eq!(
+                    s.counters.iter().find(|c| c.item == 7).map(|c| c.count),
+                    Some(400)
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The wire drain already finished the session; the handle's
+        // finish() hands out the stowed result instead of panicking.
+        assert!(server.shutdown_requested());
+        let (result, stats) = server.finish();
+        assert_eq!(result.stats.items, 1000);
+        assert_eq!(result.summary.estimate(42), Some(600));
+        assert_eq!(stats.worker_connections, 1);
+        assert_eq!(stats.proto_errors, 0);
+    }
+
+    #[test]
+    fn ingest_frame_on_worker_conn_is_role_error() {
+        let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), tiny_cfg()).unwrap();
+        let mut w = server.endpoint().connect().unwrap();
+        w.write_all(&encode_hello(Role::Worker)).unwrap();
+        assert_eq!(read_one(&mut w), Frame::HelloOk { version: VERSION });
+        let mut wire = Vec::new();
+        write_frame(&mut w, &Frame::IngestItems { seq: 1, items: vec![1] }, &mut wire)
+            .unwrap();
+        match read_one(&mut w) {
+            Frame::Error { code, .. } => assert_eq!(code, ErrorCode::WrongRole),
+            other => panic!("unexpected {other:?}"),
+        }
+        server.finish();
     }
 
     #[test]

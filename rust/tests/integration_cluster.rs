@@ -1,0 +1,158 @@
+//! Integration: real multi-process hierarchical aggregation —
+//! `pss cluster` worker processes spawned from the built binary over
+//! unix sockets, driven by an in-process head, checked against a
+//! single-process oracle fed the *same* seeded stream.
+//!
+//! ## Hand-traced oracle (per the no-toolchain convention)
+//!
+//! The workload is deterministic (`GeneratedSource::zipf_mandelbrot`
+//! with a fixed seed), so the single-process oracle — one `SpaceSaving`
+//! over the whole stream, plus an exact `HashMap` count — defines
+//! ground truth `f` per item. The cluster invariants under test:
+//!
+//! * **n conservation** — the drained cluster view's `N` equals the
+//!   items sent: every worker's final snapshot is its fully-drained
+//!   coordinator state (`Σᵢ massᵢ = N`), and both merge strategies sum
+//!   `n` (`merge_disjoint`: `n = Σnᵢ`; `combine`: `n = n₁ + n₂`).
+//! * **the Space Saving sandwich** — for every merged counter,
+//!   `f ≤ f̂ ≤ f + ε` with ε the routing-dependent cluster bound
+//!   (keyed: `maxᵢ εᵢ` — each counter keeps its home worker's error;
+//!   block: `Σᵢ εᵢ` — one `min_count ≤ εᵢ` per combine level).
+//! * **k-majority recall** — every item with true `f > N/kM` must be
+//!   reported (estimates never under-estimate, so `f̂ ≥ f > threshold`
+//!   ⇒ the item clears the threshold if monitored; with per-worker
+//!   budget k ≫ distinct heavy items, heavy items are always
+//!   monitored).
+//! * **clean shutdown** — head drain makes every worker process exit
+//!   with status 0.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use pss::cluster::{ClusterHead, ClusterRouting, ClusterView};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::summary::{FrequencySummary, SpaceSaving};
+
+const N: u64 = 200_000;
+const UNIVERSE: u64 = 1 << 14;
+const SKEW: f64 = 1.1;
+const SEED: u64 = 4242;
+const CHUNK: usize = 2_048;
+const K_MAJORITY: u64 = 200;
+
+fn exact_counts() -> HashMap<u64, u64> {
+    let src = GeneratedSource::zipf_mandelbrot(N, UNIVERSE, SKEW, 0.0, SEED);
+    let mut t: HashMap<u64, u64> = HashMap::new();
+    for item in src.slice(0, N) {
+        *t.entry(item).or_default() += 1;
+    }
+    t
+}
+
+/// Spawn two real `pss cluster --worker` processes, stream the seeded
+/// workload through a head, drain, and return the merged view plus the
+/// worker exit statuses.
+fn run_cluster(routing: ClusterRouting, dir: &Path) -> (ClusterView, Vec<bool>) {
+    let program = Path::new(env!("CARGO_BIN_EXE_pss"));
+    let worker_args: Vec<String> = [
+        "--k", "512", "--threads", "2", "--epoch-items", "10000", "--k-majority", "200",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let mut head =
+        ClusterHead::spawn_local(program, dir, 2, routing, &worker_args).expect("spawn workers");
+    assert_eq!(head.processes(), 2);
+
+    let src = GeneratedSource::zipf_mandelbrot(N, UNIVERSE, SKEW, 0.0, SEED);
+    let mut buf = vec![0u64; CHUNK];
+    let mut pos = 0u64;
+    while pos < N {
+        let take = ((N - pos) as usize).min(CHUNK);
+        src.fill(pos, &mut buf[..take]);
+        head.send_items(&buf[..take]).expect("ingest");
+        pos += take as u64;
+    }
+    // A mid-stream live poll must already merge cleanly (coverage may
+    // trail ingest — epochs publish asynchronously).
+    let live = head.poll().expect("live poll");
+    assert!(live.n() <= N, "live view cannot exceed what was sent");
+    assert_eq!(live.workers(), 2);
+
+    let drained = head.drain().expect("drain");
+    let ok: Vec<bool> = drained
+        .workers
+        .iter()
+        .map(|w| w.status.expect("spawned workers report exit status").success())
+        .collect();
+    (drained.view, ok)
+}
+
+fn check_against_oracle(view: &ClusterView, truth: &HashMap<u64, u64>) {
+    // n conservation: nothing lost across process boundaries.
+    assert_eq!(view.n(), N, "mass conservation across processes");
+    assert!(view.all_finished(), "drained view must be final");
+
+    // f ≤ f̂ ≤ f + ε for every merged counter.
+    let eps = view.epsilon();
+    for c in view.summary().counters() {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f, "under-estimate: item {} f̂={} < f={f}", c.item, c.count);
+        assert!(
+            c.count <= f + eps,
+            "bound violation: item {} f̂={} > f={f} + ε={eps}",
+            c.item,
+            c.count
+        );
+        assert!(c.guaranteed() <= f, "lower bound must be true: item {}", c.item);
+    }
+
+    // k-majority recall: every truly-frequent item is reported
+    // (guaranteed or possible — no false negatives).
+    let threshold = N / K_MAJORITY;
+    let rep = view.k_majority(K_MAJORITY);
+    assert_eq!(rep.threshold, threshold);
+    for (&item, &f) in truth {
+        if f > threshold {
+            let reported = rep.guaranteed.iter().chain(rep.possible.iter());
+            assert!(
+                reported.into_iter().any(|c| c.item == item),
+                "k-majority missed item {item} with f={f} > {threshold}"
+            );
+        }
+    }
+
+    // The single-process Space Saving oracle agrees on the heavy head:
+    // its top items' estimates also sandwich truth, and the cluster's
+    // guaranteed top-k items are all genuinely heavy.
+    let src = GeneratedSource::zipf_mandelbrot(N, UNIVERSE, SKEW, 0.0, SEED);
+    let mut oracle = SpaceSaving::new(512);
+    oracle.offer_all(&src.slice(0, N));
+    let oracle_summary = oracle.freeze();
+    assert_eq!(oracle_summary.n(), N);
+    let oracle_top: Vec<u64> = oracle_summary.top_k(5).iter().map(|c| c.item).collect();
+    for c in view.top_k_guaranteed(5) {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(
+            f > 0 && c.guaranteed() <= f,
+            "guaranteed top-k item {} not genuinely heavy",
+            c.item
+        );
+    }
+    // The heaviest item is unambiguous under zipf skew — both views
+    // must agree on it exactly.
+    assert_eq!(view.top_k(1)[0].item, oracle_top[0]);
+}
+
+#[test]
+fn cluster_matches_single_process_oracle() {
+    let truth = exact_counts();
+
+    for routing in [ClusterRouting::Keyed, ClusterRouting::Block] {
+        let dir = pss::util::TempDir::new().expect("temp dir");
+        let (view, exits) = run_cluster(routing, dir.path());
+        assert_eq!(view.routing(), routing);
+        assert_eq!(exits, vec![true, true], "workers must exit 0 on head drain ({routing})");
+        check_against_oracle(&view, &truth);
+    }
+}

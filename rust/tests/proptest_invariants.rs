@@ -779,7 +779,7 @@ fn prop_simulated_time_monotone() {
 /// Random protocol frame covering every variant, sizes bounded so a
 /// trial stays fast.
 fn random_frame(rng: &mut SplitMix64) -> pss::serve::Frame {
-    use pss::serve::{ErrorCode, Frame, WireCounter, WireStats};
+    use pss::serve::{ErrorCode, Frame, WireCounter, WireSnapshot, WireStats};
     let counters = |rng: &mut SplitMix64| -> Vec<WireCounter> {
         (0..rng.next_below(20))
             .map(|_| WireCounter {
@@ -789,7 +789,7 @@ fn random_frame(rng: &mut SplitMix64) -> pss::serve::Frame {
             })
             .collect()
     };
-    match rng.next_below(15) {
+    match rng.next_below(17) {
         0 => Frame::IngestItems {
             seq: rng.next_u64(),
             items: (0..rng.next_below(300)).map(|_| rng.next_u64()).collect(),
@@ -846,6 +846,18 @@ fn random_frame(rng: &mut SplitMix64) -> pss::serve::Frame {
         11 => Frame::HelloOk { version: rng.next_u64() as u16 },
         12 => Frame::Shutdown,
         13 => Frame::ShutdownAck,
+        14 => Frame::SummaryRequest { drain: rng.next_below(2) == 1 },
+        15 => Frame::SummarySnapshot(WireSnapshot {
+            epoch: rng.next_u64(),
+            n: rng.next_u64(),
+            k: rng.next_u64(),
+            epsilon: rng.next_u64(),
+            min_count: rng.next_u64(),
+            disjoint: rng.next_below(2) == 1,
+            finished: rng.next_below(2) == 1,
+            counters: counters(rng),
+            hot: counters(rng),
+        }),
         _ => Frame::Error {
             code: ErrorCode::from_u16(rng.next_u64() as u16),
             message: (0..rng.next_below(60))
