@@ -1,0 +1,150 @@
+//! The epoch-versioned read-path cache (`pss::query::QueryEngine` +
+//! `pss::window::WindowedQueryEngine`): cached vs uncached snapshot
+//! latency, the scaling story under concurrent readers, and what a
+//! publication costs the hit path.
+//!
+//! The serve query pool answers every wire query through these engines,
+//! so `cached/top10 ÷ uncached/top10` here is the in-process ceiling of
+//! the wire-level speedup `pss bench --suite query` measures end to end.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use pss::coordinator::{Coordinator, CoordinatorConfig};
+use pss::gen::{GeneratedSource, ItemSource};
+use pss::query::QueryEngine;
+use pss::util::benchkit::{black_box, run};
+
+const N: u64 = 1_000_000;
+const K: usize = 2000;
+const CHUNK: usize = 8_192;
+
+/// One full ingest session; returns the live engine (snapshots stay
+/// published after drain, so the engine keeps answering).
+fn session(shards: usize, snapshot_cache: bool, src: &GeneratedSource) -> QueryEngine {
+    let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+        shards,
+        k: K,
+        k_majority: K as u64,
+        epoch_items: 65_536,
+        snapshot_cache,
+        ..Default::default()
+    });
+    let n = src.len();
+    let mut pos = 0u64;
+    while pos < n {
+        let take = ((n - pos) as usize).min(CHUNK);
+        c.push(src.slice(pos, pos + take as u64));
+        pos += take as u64;
+    }
+    let _ = c.finish();
+    q
+}
+
+/// Aggregate top-10 queries/s from `readers` threads hammering clones
+/// of one engine for `window` — the shape of the serve query pool.
+fn reader_qps(engine: &QueryEngine, readers: usize, window: Duration) -> f64 {
+    let total = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..readers {
+            let engine = engine.clone();
+            let total = &total;
+            scope.spawn(move || {
+                let deadline = Instant::now() + window;
+                let mut count = 0u64;
+                while Instant::now() < deadline {
+                    black_box(engine.top_k(10));
+                    count += 1;
+                }
+                total.fetch_add(count, Ordering::Relaxed);
+            });
+        }
+    });
+    total.load(Ordering::Relaxed) as f64 / window.as_secs_f64()
+}
+
+fn main() {
+    println!("# bench_query_cache — epoch-versioned snapshot cache");
+    let src = GeneratedSource::zipf(N, 1 << 20, 1.1, 7);
+
+    // 1. Single-reader query latency, cached vs uncached. The cached
+    //    number is one relaxed version load + an Arc clone + the
+    //    hoisted-order slice; the uncached one re-runs the combine tree
+    //    per call.
+    for &shards in &[1usize, 4] {
+        let cached = session(shards, true, &src);
+        let uncached = session(shards, false, &src);
+        run(&format!("cached/top10/shards={shards}"), None, || {
+            black_box(cached.top_k(10));
+        });
+        run(&format!("uncached/top10/shards={shards}"), None, || {
+            black_box(uncached.top_k(10));
+        });
+        run(&format!("cached/point/shards={shards}"), None, || {
+            black_box(cached.point(1));
+        });
+        run(&format!("uncached/point/shards={shards}"), None, || {
+            black_box(uncached.point(1));
+        });
+        let s = cached.cache_stats();
+        println!(
+            "#   shards={shards}: cache {} ({}% hit rate)",
+            s,
+            (s.hit_rate() * 100.0) as u64
+        );
+    }
+
+    // 2. Concurrent-reader scaling at 4 shards: an idle publisher means
+    //    the cached engine serves every reader one shared Arc, while
+    //    the uncached engine pays a full merge per reader per query.
+    let cached = session(4, true, &src);
+    let uncached = session(4, false, &src);
+    let window = Duration::from_millis(300);
+    for &readers in &[1usize, 8, 64] {
+        let c = reader_qps(&cached, readers, window);
+        let u = reader_qps(&uncached, readers, window);
+        println!(
+            "# readers={readers:>2}: cached {c:>12.0}/s  uncached {u:>12.0}/s  ({:.1}x)",
+            c / u.max(1e-9)
+        );
+    }
+
+    // 3. Invalidation cost: queries racing a publisher that republishes
+    //    continuously — every version bump forces one re-merge, the
+    //    herd still reuses it.
+    let (mut c, q) = Coordinator::spawn(CoordinatorConfig {
+        shards: 4,
+        k: K,
+        k_majority: K as u64,
+        epoch_items: 4_096, // publish hard
+        snapshot_cache: true,
+        ..Default::default()
+    });
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let c = &mut c;
+        let stop = &stop;
+        let src = &src;
+        let writer = scope.spawn(move || {
+            'outer: loop {
+                let mut pos = 0u64;
+                while pos < N {
+                    if stop.load(Ordering::Relaxed) {
+                        break 'outer;
+                    }
+                    let take = ((N - pos) as usize).min(CHUNK);
+                    c.push(src.slice(pos, pos + take as u64));
+                    pos += take as u64;
+                }
+            }
+        });
+        run("cached/top10/active-publisher", None, || {
+            black_box(q.top_k(10));
+        });
+        stop.store(true, Ordering::Relaxed);
+        writer.join().expect("writer panicked");
+    });
+    let _ = c.finish();
+    let s = q.cache_stats();
+    println!("# active publisher: cache {s}");
+}

@@ -16,6 +16,7 @@ use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use super::snapshot::{ClusterRouting, ClusterView, WorkerSummary};
+use crate::metrics::{CacheCounters, CacheStats};
 use crate::serve::{Endpoint, IngestClient, SnapshotClient, WireSnapshot};
 use crate::util::shard_of;
 
@@ -73,6 +74,16 @@ pub struct ClusterHead {
     next: usize,
     /// Per-worker staging buffers (keyed routing).
     staged: Vec<Vec<(u64, u64)>>,
+    /// Last merged poll view, keyed by each worker's
+    /// `(epoch, n, finished)` triple. A worker whose coordinator
+    /// published nothing new answers the same snapshot again, so an
+    /// unchanged key vector proves re-validating and re-merging would
+    /// reproduce the cached view — the fetch still happens (it's the
+    /// staleness probe), only the merge is skipped.
+    poll_cache: Option<(Vec<(u64, u64, bool)>, ClusterView)>,
+    /// Poll-cache accounting (`merges_avoided == hits` here: `poll`
+    /// takes `&mut self`, so there is no concurrent-rebuild reuse).
+    poll_counters: CacheCounters,
 }
 
 impl ClusterHead {
@@ -89,7 +100,14 @@ impl ClusterHead {
             });
         }
         let staged = vec![Vec::new(); workers.len()];
-        Ok(ClusterHead { workers, routing, next: 0, staged })
+        Ok(ClusterHead {
+            workers,
+            routing,
+            next: 0,
+            staged,
+            poll_cache: None,
+            poll_counters: CacheCounters::new(),
+        })
     }
 
     /// Spawn `processes` local workers (`program cluster --worker
@@ -154,7 +172,14 @@ impl ClusterHead {
             });
         }
         let staged = vec![Vec::new(); workers.len()];
-        Ok(ClusterHead { workers, routing, next: 0, staged })
+        Ok(ClusterHead {
+            workers,
+            routing,
+            next: 0,
+            staged,
+            poll_cache: None,
+            poll_counters: CacheCounters::new(),
+        })
     }
 
     /// Number of workers.
@@ -231,18 +256,45 @@ impl ClusterHead {
     /// Pull a live snapshot from every worker and merge. Workers
     /// refresh their epoch view on each request, so repeated polls
     /// converge on the ingested mass once epochs publish.
+    ///
+    /// Polls always fetch (that is the staleness probe), but when every
+    /// worker answers the same `(epoch, n, finished)` triple as the
+    /// previous poll, the head skips validation + merge and clones the
+    /// cached [`ClusterView`] instead ([`ClusterHead::poll_cache_stats`]).
     pub fn poll(&mut self) -> crate::Result<ClusterView> {
         let routing = self.routing;
-        let mut parts = Vec::with_capacity(self.workers.len());
+        let mut snaps = Vec::with_capacity(self.workers.len());
         for (i, w) in self.workers.iter_mut().enumerate() {
             let snap = w
                 .snap
                 .as_mut()
                 .ok_or_else(|| anyhow::Error::msg(format!("worker {i} already drained")))?
                 .fetch(false)?;
+            snaps.push(snap);
+        }
+        let key: Vec<(u64, u64, bool)> =
+            snaps.iter().map(|s| (s.epoch, s.n, s.finished)).collect();
+        if let Some((cached_key, view)) = &self.poll_cache {
+            if *cached_key == key {
+                self.poll_counters.record_hit();
+                self.poll_counters.record_merge_avoided();
+                return Ok(view.clone());
+            }
+        }
+        let mut parts = Vec::with_capacity(snaps.len());
+        for snap in snaps {
             parts.push(WorkerSummary::try_from(snap).map_err(anyhow::Error::msg)?);
         }
-        ClusterView::build(&parts, routing).map_err(anyhow::Error::msg)
+        let view = ClusterView::build(&parts, routing).map_err(anyhow::Error::msg)?;
+        self.poll_counters.record_miss();
+        self.poll_cache = Some((key, view.clone()));
+        Ok(view)
+    }
+
+    /// Poll-cache accounting: hits are polls whose worker snapshots
+    /// were identical to the previous poll's (merge skipped).
+    pub fn poll_cache_stats(&self) -> CacheStats {
+        self.poll_counters.stats()
     }
 
     /// Drain the cluster: flush and close every ingest connection,

@@ -60,6 +60,9 @@ pub struct RunConfig {
     pub delta_ring: usize,
     /// Default windowed-query width, in epochs (`pss query --window`).
     pub window_epochs: usize,
+    /// Epoch-versioned snapshot caching on the read path (default on;
+    /// `--no-snapshot-cache` benchmarks the uncached baseline).
+    pub snapshot_cache: bool,
     /// Run the PJRT offline verification afterwards.
     pub verify: bool,
 }
@@ -86,6 +89,7 @@ impl Default for RunConfig {
             epoch_items: 65_536,
             delta_ring: 0,
             window_epochs: 8,
+            snapshot_cache: true,
             verify: false,
         }
     }
@@ -122,6 +126,7 @@ impl RunConfig {
         if let Some(v) = get_u("epoch_items") { c.epoch_items = v; }
         if let Some(v) = get_u("delta_ring") { c.delta_ring = v as usize; }
         if let Some(v) = get_u("window_epochs") { c.window_epochs = v as usize; }
+        if let Some(v) = j.get("snapshot_cache").and_then(|v| v.as_bool()) { c.snapshot_cache = v; }
         if let Some(v) = j.get("verify").and_then(|v| v.as_bool()) { c.verify = v; }
         c.validate()?;
         Ok(c)
@@ -147,11 +152,13 @@ impl RunConfig {
               \"k\": {}, \"k_majority\": {}, \"threads\": {}, \"chunk_len\": {},\n \
               \"queue_depth\": {}, \"routing\": \"{}\", \"transport\": \"{}\",\n \
               \"structure\": \"{}\", \"batch_ingest\": {}, \"epoch_items\": {},\n \
-              \"delta_ring\": {}, \"window_epochs\": {}, \"verify\": {}}}",
+              \"delta_ring\": {}, \"window_epochs\": {}, \"snapshot_cache\": {},\n \
+              \"verify\": {}}}",
             self.n, self.universe, self.skew, self.shift, self.seed, self.k,
             self.k_majority, self.threads, self.chunk_len, self.queue_depth,
             self.routing, self.transport, self.structure, self.batch_ingest,
-            self.epoch_items, self.delta_ring, self.window_epochs, self.verify
+            self.epoch_items, self.delta_ring, self.window_epochs,
+            self.snapshot_cache, self.verify
         )
     }
 
@@ -171,6 +178,7 @@ impl RunConfig {
             batch_ingest: self.batch_ingest,
             delta_ring: self.delta_ring,
             window_epochs: self.window_epochs,
+            snapshot_cache: self.snapshot_cache,
         }
     }
 }

@@ -213,6 +213,14 @@ pub struct CoordinatorConfig {
     /// `delta_ring > 0`; explicit widths can always be passed per
     /// query).
     pub window_epochs: usize,
+    /// Epoch-versioned snapshot caching on the read path (default on):
+    /// between publications concurrent readers share one merged view
+    /// (`Arc` clone + relaxed version check) instead of each re-running
+    /// the combine tree. Answers are bit-identical either way — the
+    /// cache only dedups merges over identical inputs. Turn off to
+    /// benchmark the uncached baseline
+    /// ([`QueryEngine::without_cache`]).
+    pub snapshot_cache: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -229,6 +237,7 @@ impl Default for CoordinatorConfig {
             batch_ingest: true,
             delta_ring: 0,
             window_epochs: 8,
+            snapshot_cache: true,
         }
     }
 }
@@ -516,10 +525,20 @@ impl Coordinator {
                 s.set_disjoint(true);
             }
         }
-        let windows = store
-            .as_ref()
-            .map(|s| WindowedQueryEngine::new(s.clone(), cfg.window_epochs, cfg.k_majority));
+        let windows = store.as_ref().map(|s| {
+            let w = WindowedQueryEngine::new(s.clone(), cfg.window_epochs, cfg.k_majority);
+            if cfg.snapshot_cache {
+                w
+            } else {
+                w.without_cache()
+            }
+        });
         let engine = QueryEngine::new(registry.clone(), cfg.k_majority);
+        let engine = if cfg.snapshot_cache {
+            engine
+        } else {
+            engine.without_cache()
+        };
         let mut links = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
         for shard in 0..cfg.shards {

@@ -66,13 +66,14 @@ USAGE:
                [--transport ring|mpsc]
                [--structure heap|bucket|compact] [--batch-ingest true|false]
                [--epoch-items E] [--interval-ms I]
-               [--window W] [--delta-ring R]
+               [--window W] [--delta-ring R] [--no-snapshot-cache]
                [--top M] [--watch ITEM]
   pss serve    [--listen unix:/path|host:port] [--k K] [--threads T]
                [--queue-depth Q] [--routing rr|ll|keyed|keyed-adaptive]
                [--transport ring|mpsc]
                [--structure heap|bucket|compact] [--batch-ingest true|false]
                [--epoch-items E] [--delta-ring R] [--window W]
+               [--no-snapshot-cache]
                [--query-threads QT] [--max-ingest MI] [--duration-s S]
   pss loadgen  [--connect unix:/path|host:port] [--clients N] [--items M]
                [--chunk-len C] [--universe U] [--skew R] [--seed S]
@@ -84,9 +85,10 @@ USAGE:
   pss cluster  --worker --listen unix:/path|host:port [--k K] [--threads T]
                [--epoch-items E] [--routing rr|ll|keyed|keyed-adaptive]
                [--structure heap|bucket|compact]
-  pss bench    [--suite window|transport|summary|routing|cluster] [--n N] [--k K]
+  pss bench    [--suite window|transport|summary|routing|cluster|query]
+               [--n N] [--k K]
                [--threads T] [--processes P] [--window W] [--delta-ring R]
-               [--epoch-items E] [--repeat R]
+               [--epoch-items E] [--repeat R] [--readers R1,R2,...]
                [--chunk-len C] [--json] [--out FILE]
   pss repro    --exp <id> [--scale D] [--seed S] [--out DIR]   (or --list)
   pss verify   --input <file.pssd> [--k K] [--artifacts DIR]
@@ -189,6 +191,7 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
         cfg.delta_ring = cfg.delta_ring.max(cfg.window_epochs.saturating_mul(2));
     }
     if let Some(v) = args.get("delta-ring") { cfg.delta_ring = v.parse()?; }
+    if args.has("no-snapshot-cache") { cfg.snapshot_cache = false; }
     if args.has("verify") { cfg.verify = true; }
     cfg.validate()?;
     Ok(cfg)
@@ -450,6 +453,7 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         "queries served: {} ({}), staleness at exit: {} items",
         s.queries_served, s.query_latency, s.staleness_items
     );
+    println!("snapshot cache: {}", s.cache);
     Ok(())
 }
 
@@ -527,6 +531,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         result.stats.backpressure_events,
         result.stats.epochs_published,
     );
+    println!("query cache: {}", stats.cache);
     println!(
         "final k-majority candidates (f̂ > n/{}): {}",
         cfg.k_majority,
@@ -587,9 +592,37 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     );
     println!("per-frame ack latency: {}", report.frame_latency);
 
-    // Read back what the server now serves, over the wire.
+    // Read back what the server now serves, over the wire — repeatedly,
+    // until a repeat of the same query is answered from the server's
+    // snapshot cache (visible in the stats below as cache hits).
+    // Acked ≠ fully published: shard workers may still drain queued
+    // chunks for a moment after the last ack, and each trailing
+    // publication bumps the registry version, so the first few repeats
+    // can legitimately miss.
     let mut q = QueryClient::connect(&endpoint)?;
-    let answer = q.top_k(top as u32, window)?;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut answer = q.top_k(top as u32, window)?;
+    let mut hits_seen = q.stats()?.cache_hits;
+    loop {
+        let again = q.top_k(top as u32, window)?;
+        let hits = q.stats()?.cache_hits;
+        if hits > hits_seen {
+            // This repeat was served from the cached view, so it must
+            // be byte-identical to the previous answer.
+            anyhow::ensure!(
+                answer == again,
+                "cached wire answer diverged from the fresh one"
+            );
+            answer = again;
+            break;
+        }
+        anyhow::ensure!(
+            std::time::Instant::now() < deadline,
+            "server never served a repeat query from the snapshot cache"
+        );
+        hits_seen = hits;
+        answer = again;
+    }
     println!(
         "served top{top}{}: n={} ε={}",
         if window > 0 { format!(" (window {window} epochs)") } else { String::new() },
@@ -604,6 +637,10 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         "server: {} items in {} chunks, {} buffers recycled, {} backpressure stalls, {} epochs, {} ingest conns",
         s.items, s.chunks, s.buffers_recycled, s.backpressure_events, s.epochs_published,
         s.ingest_connections,
+    );
+    println!(
+        "server query cache: {} hits / {} misses, {} merges avoided",
+        s.cache_hits, s.cache_misses, s.merges_avoided,
     );
     if args.has("shutdown") {
         q.shutdown_server()?;
@@ -1001,8 +1038,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "summary" => return cmd_bench_summary(args),
         "routing" => return cmd_bench_routing(args),
         "cluster" => return cmd_bench_cluster(args),
+        "query" => return cmd_bench_query(args),
         other => anyhow::bail!(
-            "unknown bench suite '{other}' (window|transport|summary|routing|cluster)"
+            "unknown bench suite '{other}' (window|transport|summary|routing|cluster|query)"
         ),
     }
 
@@ -1112,6 +1150,158 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             win.n(),
             result.stats.deltas_published
         );
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{record}\n"))?;
+        println!("[record written to {path}]");
+    }
+    Ok(())
+}
+
+/// `pss bench --suite query` — the read-path cache acceptance sweep:
+/// cached vs uncached query throughput (landmark `top_k(10)`, the
+/// query the serve pool answers per wire `TopK` frame) at
+/// `--readers` concurrent reader counts (default 1,8,64) × 1/4
+/// shards, measured twice per cell — under active publishing (a
+/// writer loops the stream, so every epoch publication invalidates
+/// the cached view) and with the publisher idle (drained session —
+/// pure cache-hit regime). Emits `cached_vs_uncached` speedups per
+/// cell plus the acceptance fields `speedup_idle_8readers` (target
+/// ≥ 5×) and `speedup_active_8readers` (target ≥ 1.5×), taken at the
+/// widest shard count (`BENCH_query.json`).
+fn cmd_bench_query(args: &Args) -> anyhow::Result<()> {
+    use pss::coordinator::Coordinator;
+    use pss::util::benchkit;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    let n: u64 = args.get_or("n", 1_000_000).map_err(anyhow::Error::msg)?;
+    let k: usize = args.get_or("k", 2_000).map_err(anyhow::Error::msg)?;
+    let epoch_items: u64 = args.get_or("epoch-items", 65_536).map_err(anyhow::Error::msg)?;
+    let json = args.has("json");
+    let readers: Vec<usize> = match args.get("readers") {
+        Some(v) => v
+            .split(',')
+            .map(|s| s.trim().parse())
+            .collect::<Result<_, _>>()?,
+        None => vec![1, 8, 64],
+    };
+    anyhow::ensure!(!readers.is_empty(), "--readers needs at least one count");
+    let shard_counts = [1usize, 4];
+    let measure = std::time::Duration::from_millis(300);
+    let chunk_len = pss::parallel::batch_chunk_len_default();
+
+    // The acceptance workload: zipf-1.1 (the paper's default skew).
+    let src = GeneratedSource::zipf(n, 1 << 20, 1.1, 7);
+
+    // One measurement: `r` reader threads hammer the engine's top-10
+    // for `measure`, returning aggregate queries/s. Clones share the
+    // engine's snapshot cache, exactly like the serve query pool.
+    let read_qps = |engine: &pss::query::QueryEngine, r: usize| -> f64 {
+        let total = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..r {
+                let engine = engine.clone();
+                let total = &total;
+                scope.spawn(move || {
+                    let deadline = std::time::Instant::now() + measure;
+                    let mut count = 0u64;
+                    while std::time::Instant::now() < deadline {
+                        benchkit::black_box(engine.top_k(10));
+                        count += 1;
+                    }
+                    total.fetch_add(count, Ordering::Relaxed);
+                });
+            }
+        });
+        total.load(Ordering::Relaxed) as f64 / measure.as_secs_f64()
+    };
+
+    // One session: measure every reader count under active publishing
+    // (writer loops the stream until told to stop), then again idle
+    // (drained). Returns (active qps, idle qps) per reader count.
+    let session = |shards: usize, cached: bool| -> (Vec<f64>, Vec<f64>) {
+        let (mut c, q) = Coordinator::spawn(pss::coordinator::CoordinatorConfig {
+            shards,
+            k,
+            k_majority: k as u64,
+            epoch_items,
+            snapshot_cache: cached,
+            ..Default::default()
+        });
+        let stop = AtomicBool::new(false);
+        let mut active = Vec::with_capacity(readers.len());
+        std::thread::scope(|scope| {
+            let c = &mut c;
+            let stop = &stop;
+            let src = &src;
+            let writer = scope.spawn(move || {
+                'outer: loop {
+                    let mut pos = 0u64;
+                    while pos < n {
+                        if stop.load(Ordering::Relaxed) {
+                            break 'outer;
+                        }
+                        let take = ((n - pos) as usize).min(chunk_len);
+                        c.push(src.slice(pos, pos + take as u64));
+                        pos += take as u64;
+                    }
+                }
+            });
+            for &r in &readers {
+                active.push(read_qps(&q, r));
+            }
+            stop.store(true, Ordering::Relaxed);
+            writer.join().expect("bench writer panicked");
+        });
+        let _ = c.finish();
+        let idle: Vec<f64> = readers.iter().map(|&r| read_qps(&q, r)).collect();
+        (active, idle)
+    };
+
+    if !json {
+        println!(
+            "query-cache sweep: {n} zipf-1.1 items, k={k}, epoch={epoch_items}, readers {readers:?}, shards {shard_counts:?}"
+        );
+    }
+    let mut cells = String::new();
+    let mut speedup_idle_8 = 0.0f64;
+    let mut speedup_active_8 = 0.0f64;
+    for shards in shard_counts {
+        let (act_c, idle_c) = session(shards, true);
+        let (act_u, idle_u) = session(shards, false);
+        for (i, &r) in readers.iter().enumerate() {
+            let idle_speedup = idle_c[i] / idle_u[i].max(1e-9);
+            let active_speedup = act_c[i] / act_u[i].max(1e-9);
+            // Acceptance cell: 8 readers at the widest shard count.
+            if r == 8 {
+                speedup_idle_8 = idle_speedup;
+                speedup_active_8 = active_speedup;
+            }
+            if !cells.is_empty() {
+                cells.push_str(",\n  ");
+            }
+            cells.push_str(&format!(
+                "{{\"shards\": {shards}, \"readers\": {r}, \
+                  \"idle_cached_qps\": {:.0}, \"idle_uncached_qps\": {:.0}, \"idle_speedup\": {idle_speedup:.2}, \
+                  \"active_cached_qps\": {:.0}, \"active_uncached_qps\": {:.0}, \"active_speedup\": {active_speedup:.2}}}",
+                idle_c[i], idle_u[i], act_c[i], act_u[i],
+            ));
+            if !json {
+                println!(
+                    "  {shards} shard(s) × {r:>2} readers: idle {:.0}/s vs {:.0}/s ({idle_speedup:.1}x), publishing {:.0}/s vs {:.0}/s ({active_speedup:.1}x)",
+                    idle_c[i], idle_u[i], act_c[i], act_u[i],
+                );
+            }
+        }
+    }
+    let record = format!(
+        "{{\"bench\": \"query\", \"n\": {n}, \"k\": {k}, \"skew\": 1.1, \"epoch_items\": {epoch_items},\n \
+          \"measure_ms\": {}, \"cells\": [\n  {cells}\n ],\n \
+          \"speedup_idle_8readers\": {speedup_idle_8:.2}, \"speedup_active_8readers\": {speedup_active_8:.2}}}",
+        measure.as_millis(),
+    );
+    if json {
+        println!("{record}");
     }
     if let Some(path) = args.get("out") {
         std::fs::write(path, format!("{record}\n"))?;

@@ -1,0 +1,145 @@
+//! Wait-free counters for the epoch-versioned read-path caches.
+//!
+//! The query engines ([`QueryEngine`](crate::query::QueryEngine), the
+//! windowed engine, the cluster head) cache their last merged view and
+//! revalidate it with a single relaxed version load per query. These
+//! counters make the cache observable: they are shared (behind an
+//! `Arc`) by every clone of an engine, so the serve layer's query pool
+//! reports one aggregate across all reader threads.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared hit/miss accounting for one snapshot cache.
+///
+/// All updates are relaxed `fetch_add`s — the counters are monitoring
+/// data, never part of the cache's coherence argument.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    merges_avoided: AtomicU64,
+}
+
+impl CacheCounters {
+    /// Fresh counters, all zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One fast-path hit: the cached view's version matched and the
+    /// reader served an `Arc` clone without taking any lock.
+    pub fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One miss: this reader ran the merge itself (first query, or the
+    /// version moved and this reader won the rebuild).
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One merge avoided: the query was answered from a view some
+    /// *other* reader built — either a fast-path hit or a slow-path
+    /// reuse of a concurrently rebuilt view. `merges_avoided ≥ hits`;
+    /// the difference counts readers that arrived during a rebuild and
+    /// reused its result instead of merging again (the thundering herd
+    /// the cache exists to prevent).
+    pub fn record_merge_avoided(&self) {
+        self.merges_avoided.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough point-in-time copy of the counters (each
+    /// field individually exact; relaxed relative to each other).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            merges_avoided: self.merges_avoided.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value snapshot of [`CacheCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Fast-path hits: version matched, served an `Arc` clone.
+    pub hits: u64,
+    /// Misses: the reader rebuilt the merged view itself.
+    pub misses: u64,
+    /// Queries served without running a merge (hits plus slow-path
+    /// reuses of a view another reader was concurrently building).
+    pub merges_avoided: u64,
+}
+
+impl CacheStats {
+    /// Fraction of queries served from cache, in `[0, 1]`; 0 when no
+    /// query has been served.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} hits / {} misses ({:.1}% hit rate), {} merges avoided",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            self.merges_avoided
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let c = CacheCounters::new();
+        assert_eq!(c.stats(), CacheStats::default());
+        c.record_hit();
+        c.record_hit();
+        c.record_merge_avoided();
+        c.record_merge_avoided();
+        c.record_merge_avoided();
+        c.record_miss();
+        let s = c.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.merges_avoided, 3);
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hit_rate_is_zero_when_idle() {
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn counters_are_shared_across_threads() {
+        let c = std::sync::Arc::new(CacheCounters::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.record_hit();
+                        c.record_merge_avoided();
+                    }
+                });
+            }
+        });
+        let s = c.stats();
+        assert_eq!(s.hits, 4000);
+        assert_eq!(s.merges_avoided, 4000);
+    }
+}

@@ -5,14 +5,18 @@
 //!   (Figure 3): overhead time / computational time.
 //! * [`latency`] — wait-free log₂-bucket latency histogram for the live
 //!   query path (per-query latency, snapshot staleness).
+//! * [`cache`] — hit/miss/merges-avoided counters for the
+//!   epoch-versioned snapshot caches on the read path.
 //! * [`report`] — paper-style ASCII tables and figure series (+ CSV).
 
 pub mod accuracy;
+pub mod cache;
 pub mod latency;
 pub mod report;
 pub mod timing;
 
 pub use accuracy::{average_relative_error, precision, recall, AccuracyReport};
+pub use cache::{CacheCounters, CacheStats};
 pub use latency::{LatencyHistogram, LatencySummary};
 pub use report::{Series, Table};
 pub use timing::{fractional_overhead, PhaseTimes};

@@ -33,13 +33,14 @@
 //! home-shard estimate plus the exact sum, so `ε` keeps the
 //! max-per-shard bound of the Space Saving parts alone.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::metrics::{CacheCounters, CacheStats, LatencyHistogram, LatencySummary};
 use crate::parallel::tree_reduce_refs;
 use crate::summary::{absorb_exact, merge_disjoint, Counter, Summary};
-use crate::util::shard_of;
+use crate::util::{shard_of, FastMap};
 
 use super::epoch::{EpochRegistry, EpochSnapshot};
 
@@ -72,6 +73,14 @@ pub struct MergedSnapshot {
     /// cumulative partials; sorted by key, already folded into
     /// `merged`. Empty outside the hot tier.
     hot_totals: Vec<(u64, u64)>,
+    /// The registry's read-path version this view was built at
+    /// ([`EpochRegistry::version`]); the snapshot cache's validity tag.
+    version: u64,
+    /// Lazily computed descending counter order, shared by all query
+    /// sugar on this view (`top_k`/`top_k_guaranteed`/`threshold`):
+    /// with the snapshot cache in front, repeated top-k queries pay
+    /// this once per *publication*, not once per call.
+    order: OnceLock<Vec<Counter>>,
     /// When the view was materialized.
     taken_at: Instant,
 }
@@ -126,7 +135,7 @@ pub struct ThresholdReport {
 }
 
 impl MergedSnapshot {
-    fn build(parts: Vec<Arc<EpochSnapshot>>, disjoint: bool) -> Self {
+    fn build(parts: Vec<Arc<EpochSnapshot>>, disjoint: bool, version: u64) -> Self {
         let leaves: Vec<&Summary> = parts.iter().map(|p| &p.summary).collect();
         let (merged, epsilon) = if disjoint {
             // Key-disjoint shards: concatenate, and report the
@@ -141,15 +150,32 @@ impl MergedSnapshot {
         };
         // Keyed-adaptive: fold the shards' exact split-key partials
         // into the merged view. ε stands as computed above — exact
-        // mass adds no over-estimation.
-        let mut hot_fold: std::collections::BTreeMap<u64, u64> =
-            std::collections::BTreeMap::new();
-        for p in &parts {
-            for &(item, w) in &p.hot {
-                *hot_fold.entry(item).or_default() += w;
+        // mass adds no over-estimation. The fold is skipped outright in
+        // every other routing mode (no part carries partials), and
+        // runs on a FastMap-indexed accumulator rather than a BTreeMap
+        // when it does — one probe per partial, one sort at the end.
+        let hot_totals: Vec<(u64, u64)> = if parts.iter().all(|p| p.hot.is_empty()) {
+            Vec::new()
+        } else {
+            let cap: usize = parts.iter().map(|p| p.hot.len()).sum();
+            let mut idx = FastMap::with_capacity(cap);
+            let mut acc: Vec<(u64, u64)> = Vec::with_capacity(cap);
+            for p in &parts {
+                for &(item, w) in &p.hot {
+                    match idx.get(item) {
+                        Some(i) => acc[i as usize].1 += w,
+                        None => {
+                            idx.insert(item, acc.len() as u32);
+                            acc.push((item, w));
+                        }
+                    }
+                }
             }
-        }
-        let hot_totals: Vec<(u64, u64)> = hot_fold.into_iter().collect();
+            // hot_totals is sorted by key (the absorb and the cluster
+            // export both rely on it).
+            acc.sort_unstable_by_key(|e| e.0);
+            acc
+        };
         let (merged, ss_merged) = if hot_totals.is_empty() {
             (merged, None)
         } else {
@@ -160,7 +186,37 @@ impl MergedSnapshot {
             });
             (absorbed, Some(merged))
         };
-        Self { merged, ss_merged, parts, disjoint, epsilon, hot_totals, taken_at: Instant::now() }
+        Self {
+            merged,
+            ss_merged,
+            parts,
+            disjoint,
+            epsilon,
+            hot_totals,
+            version,
+            order: OnceLock::new(),
+            taken_at: Instant::now(),
+        }
+    }
+
+    /// The registry read-path version this view was built at: the
+    /// snapshot cache serves this exact view for as long as
+    /// [`EpochRegistry::version`] still reads this value.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Counters in descending estimate order, computed once per
+    /// snapshot and shared by every query-sugar call on it.
+    fn ordered(&self) -> &[Counter] {
+        self.order.get_or_init(|| {
+            // `counters()` is ascending; the descending order is its
+            // reversal (ties keep the merge's relative order, exactly
+            // as `Summary::top_k` reported them before the hoist).
+            let mut desc: Vec<Counter> = self.merged.counters().to_vec();
+            desc.reverse();
+            desc
+        })
     }
 
     /// The merged summary itself.
@@ -208,14 +264,29 @@ impl MergedSnapshot {
             .unwrap_or_default()
     }
 
-    /// Top-`m` items by estimated frequency, descending.
+    /// Top-`m` items by estimated frequency, descending. A prefix copy
+    /// of the hoisted per-snapshot order — no per-call re-derivation.
     pub fn top_k(&self, m: usize) -> Vec<Counter> {
-        self.merged.top_k(m)
+        let desc = self.ordered();
+        desc[..m.min(desc.len())].to_vec()
     }
 
-    /// The prefix of [`MergedSnapshot::top_k`] whose order is certain.
+    /// The prefix of [`MergedSnapshot::top_k`] whose order is certain
+    /// (Metwally's guaranteed-top-k criterion: element `i`'s lower
+    /// bound must reach element `i+1`'s estimate).
     pub fn top_k_guaranteed(&self, m: usize) -> Vec<Counter> {
-        self.merged.top_k_guaranteed(m)
+        let desc = self.ordered();
+        let take = m.min(desc.len());
+        let mut out = Vec::with_capacity(take);
+        for i in 0..take {
+            let next_est = desc.get(i + 1).map_or(0, |c| c.count);
+            if desc[i].guaranteed() >= next_est {
+                out.push(desc[i]);
+            } else {
+                break;
+            }
+        }
+        out
     }
 
     /// Frequency estimate for one item, with its certainty bounds.
@@ -271,7 +342,27 @@ impl MergedSnapshot {
     }
 
     fn threshold_abs(&self, threshold: u64) -> ThresholdReport {
-        threshold_split(&self.merged, threshold, self.epsilon)
+        // Same split as [`threshold_split`], walking the hoisted
+        // descending order instead of reversing `counters()` per call.
+        let mut guaranteed = Vec::new();
+        let mut possible = Vec::new();
+        for c in self.ordered() {
+            if c.count <= threshold {
+                break;
+            }
+            if c.guaranteed() > threshold {
+                guaranteed.push(*c);
+            } else {
+                possible.push(*c);
+            }
+        }
+        ThresholdReport {
+            threshold,
+            guaranteed,
+            possible,
+            n: self.merged.n(),
+            epsilon: self.epsilon,
+        }
     }
 
     // -----------------------------------------------------------------
@@ -413,6 +504,76 @@ pub struct QueryEngineStats {
     pub queries_served: u64,
     /// Latency digest over every query served by this engine's registry.
     pub query_latency: LatencySummary,
+    /// Snapshot-cache accounting (hits / misses / merges avoided),
+    /// aggregated across every clone of this engine. All zero when the
+    /// cache is disabled ([`QueryEngine::without_cache`]).
+    pub cache: CacheStats,
+}
+
+/// The engine's epoch-versioned snapshot cache: one `Arc<MergedSnapshot>`
+/// shared by every reader between registry version bumps.
+///
+/// Coherence protocol (the version counter is
+/// [`EpochRegistry::version`], bumped after every publication and
+/// hot-set install):
+///
+/// * **Hit path** — one relaxed version load; if it equals the cached
+///   view's tag, the view is current and an `Arc` clone answers the
+///   query. The `RwLock` read below is held only for the refcount
+///   bump, same discipline as [`EpochSlot`](super::epoch::EpochSlot).
+/// * **Rebuild path** — exactly one reader merges at a time (the
+///   `rebuild` mutex); readers that lose the race wait and reuse the
+///   winner's view instead of merging again, so a version bump costs
+///   one merge total, never a thundering herd.
+/// * **Seqlock collection** — the rebuilder reads the version, collects
+///   [`EpochRegistry::latest`], and re-reads the version; only if the
+///   two reads agree is the view installed under that tag. A publish
+///   landing mid-collection would otherwise cache a mixed set of parts
+///   under a version that never described them. The retry is bounded:
+///   under a hard publisher race the reader serves its (individually
+///   consistent, merely uncacheable) view without installing it.
+///
+/// Staleness semantics are unchanged by all of this: the cache only
+/// dedups merges that would have produced identical views anyway.
+#[derive(Debug)]
+struct SnapshotCache {
+    /// Version tag of the cached view; `u64::MAX` = nothing cached yet
+    /// (the registry version itself starts at 0 and only grows).
+    version: AtomicU64,
+    /// The cached view; written only by a rebuild-lock holder.
+    view: RwLock<Option<Arc<MergedSnapshot>>>,
+    /// Serializes rebuilds (never held on the hit path).
+    rebuild: Mutex<()>,
+    /// Shared hit/miss accounting.
+    counters: CacheCounters,
+}
+
+impl SnapshotCache {
+    fn new() -> Self {
+        Self {
+            version: AtomicU64::new(u64::MAX),
+            view: RwLock::new(None),
+            rebuild: Mutex::new(()),
+            counters: CacheCounters::new(),
+        }
+    }
+
+    /// The cached view, if its tag matches registry version `v`.
+    fn lookup(&self, v: u64) -> Option<Arc<MergedSnapshot>> {
+        if self.version.load(Ordering::Acquire) != v {
+            return None;
+        }
+        let view = self.view.read().expect("snapshot cache poisoned").clone()?;
+        // The tag and the slot are written separately; the view's own
+        // version is the authoritative check.
+        (view.version() == v).then_some(view)
+    }
+
+    /// Install `view` as the cached answer for its version.
+    fn install(&self, view: &Arc<MergedSnapshot>) {
+        *self.view.write().expect("snapshot cache poisoned") = Some(view.clone());
+        self.version.store(view.version(), Ordering::Release);
+    }
 }
 
 /// Cheap-to-clone handle serving live queries over the shard epochs.
@@ -425,14 +586,33 @@ pub struct QueryEngineStats {
 pub struct QueryEngine {
     registry: Arc<EpochRegistry>,
     latency: Arc<LatencyHistogram>,
+    /// The shared epoch-versioned snapshot cache ([`SnapshotCache`]);
+    /// `None` = uncached, every query rebuilds the merge (the bench
+    /// baseline). Shared across clones, so the serve layer's whole
+    /// query pool reuses one merged view per registry version.
+    cache: Option<Arc<SnapshotCache>>,
     k_majority: u64,
 }
 
 impl QueryEngine {
     /// Attach an engine to a registry. `k_majority` parameterizes
-    /// [`QueryEngine::frequent`].
+    /// [`QueryEngine::frequent`]. The snapshot cache is on by default.
     pub fn new(registry: Arc<EpochRegistry>, k_majority: u64) -> Self {
-        Self { registry, latency: Arc::new(LatencyHistogram::new()), k_majority }
+        Self {
+            registry,
+            latency: Arc::new(LatencyHistogram::new()),
+            cache: Some(Arc::new(SnapshotCache::new())),
+            k_majority,
+        }
+    }
+
+    /// Disable the snapshot cache on this handle (and every clone made
+    /// from it afterwards): every query rebuilds the merge from the
+    /// latest shard epochs. Identical answers, none of the reuse — the
+    /// measurable baseline for `pss bench --suite query`.
+    pub fn without_cache(mut self) -> Self {
+        self.cache = None;
+        self
     }
 
     /// The shared registry (for publishers / the coordinator).
@@ -443,13 +623,72 @@ impl QueryEngine {
     /// Materialize a consistent merged view of the latest shard epochs.
     /// This is the only place merge work happens; all query sugar below
     /// goes through it.
-    pub fn snapshot(&self) -> MergedSnapshot {
+    ///
+    /// Between registry version bumps ([`EpochRegistry::version`]) the
+    /// merged state is immutable, so concurrent callers share one
+    /// `Arc<MergedSnapshot>` (see [`SnapshotCache`]); a publication
+    /// invalidates the cached view within one version check.
+    pub fn snapshot(&self) -> Arc<MergedSnapshot> {
         let t0 = Instant::now();
-        let snap =
-            MergedSnapshot::build(self.registry.latest(), self.registry.disjoint());
+        let snap = self.snapshot_inner();
         self.latency.record(t0.elapsed());
         self.registry.count_query();
         snap
+    }
+
+    fn snapshot_inner(&self) -> Arc<MergedSnapshot> {
+        let Some(cache) = &self.cache else {
+            return Arc::new(self.build_fresh().0);
+        };
+        // Fast path: one relaxed version load + Arc clone.
+        let v = self.registry.version();
+        if let Some(view) = cache.lookup(v) {
+            cache.counters.record_hit();
+            cache.counters.record_merge_avoided();
+            return view;
+        }
+        // Slow path: exactly one reader rebuilds.
+        let _rebuild = cache.rebuild.lock().expect("snapshot cache poisoned");
+        // Double-check: the winner of the race we just lost may have
+        // installed the view we need while we waited.
+        if let Some(view) = cache.lookup(self.registry.version()) {
+            cache.counters.record_merge_avoided();
+            return view;
+        }
+        let (snap, coherent) = self.build_fresh();
+        let snap = Arc::new(snap);
+        cache.counters.record_miss();
+        if coherent {
+            cache.install(&snap);
+        }
+        snap
+    }
+
+    /// Build a merged view, seqlock-validating that no publication
+    /// landed while the per-shard parts were being collected. Returns
+    /// `(view, coherent)`: an incoherent view (publisher racing hard)
+    /// is still a valid answer — each part is individually consistent
+    /// — but must not be installed in the cache, because its version
+    /// tag never described exactly this set of parts.
+    fn build_fresh(&self) -> (MergedSnapshot, bool) {
+        for _ in 0..2 {
+            let v1 = self.registry.version();
+            let parts = self.registry.latest();
+            if self.registry.version() == v1 {
+                return (
+                    MergedSnapshot::build(parts, self.registry.disjoint(), v1),
+                    true,
+                );
+            }
+        }
+        let v = self.registry.version();
+        let parts = self.registry.latest();
+        (MergedSnapshot::build(parts, self.registry.disjoint(), v), false)
+    }
+
+    /// Snapshot-cache accounting (all zero when the cache is off).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map_or_else(CacheStats::default, |c| c.counters.stats())
     }
 
     /// Top-`m` most frequent items right now, descending.
@@ -527,6 +766,7 @@ impl QueryEngine {
             epochs_published: self.registry.epochs_published(),
             queries_served: self.registry.queries_served(),
             query_latency: self.latency.summary(),
+            cache: self.cache_stats(),
         }
     }
 }
@@ -832,5 +1072,104 @@ mod tests {
         assert_eq!(s.epochs_published, 1);
         let _ = e.top_k(1);
         assert_eq!(e.stats().query_latency.count, 1);
+    }
+
+    #[test]
+    fn snapshot_cache_reuses_views_between_publications() {
+        let e = engine(2, 16);
+        e.registry().publish(0, summary_of(&[1, 1, 2], 16), false);
+        let a = e.snapshot();
+        let b = e.snapshot();
+        assert!(Arc::ptr_eq(&a, &b), "same version must share one view");
+        let s = e.cache_stats();
+        assert_eq!((s.hits, s.misses, s.merges_avoided), (1, 1, 1));
+        // A publication invalidates within one version check.
+        e.registry().publish(1, summary_of(&[3], 16), false);
+        let c = e.snapshot();
+        assert!(!Arc::ptr_eq(&b, &c), "stale view must not be served");
+        assert_eq!(c.point(3).estimate, 1);
+        assert_eq!(c.version(), e.registry().version());
+        assert_eq!(e.cache_stats().misses, 2);
+        // Clones share the cache and its accounting — the serve pool
+        // relies on this.
+        let d = e.clone().snapshot();
+        assert!(Arc::ptr_eq(&c, &d));
+        assert_eq!(e.cache_stats().hits, 2);
+        // Cache stats surface through the engine stats, and every
+        // query was still counted on both paths.
+        let stats = e.stats();
+        assert_eq!(stats.cache.hits, 2);
+        assert_eq!(stats.queries_served, 4);
+        assert_eq!(stats.query_latency.count, 4);
+    }
+
+    #[test]
+    fn hot_set_install_invalidates_cached_view() {
+        let e = engine(1, 8);
+        e.registry().publish(0, summary_of(&[1], 8), false);
+        let a = e.snapshot();
+        e.registry().publish_hot_set(vec![42]);
+        let b = e.snapshot();
+        assert!(!Arc::ptr_eq(&a, &b), "hot-set install must invalidate");
+        assert_eq!(e.cache_stats().misses, 2);
+    }
+
+    #[test]
+    fn uncached_engine_rebuilds_every_query() {
+        let e = engine(1, 8).without_cache();
+        e.registry().publish(0, summary_of(&[5, 5], 8), false);
+        let a = e.snapshot();
+        let b = e.snapshot();
+        assert!(!Arc::ptr_eq(&a, &b), "uncached queries build fresh views");
+        assert_eq!(a.summary().counters(), b.summary().counters());
+        assert_eq!(a.version(), b.version());
+        assert_eq!(e.cache_stats(), crate::metrics::CacheStats::default());
+        // Query accounting is path-independent.
+        assert_eq!(e.stats().queries_served, 2);
+        assert_eq!(e.stats().cache.merges_avoided, 0);
+    }
+
+    #[test]
+    fn cached_sugar_answers_match_uncached() {
+        // Same registry behind a cached and an uncached engine: every
+        // sugar query must agree exactly.
+        let registry = EpochRegistry::new(2, 16);
+        let cached = QueryEngine::new(registry.clone(), 8);
+        let uncached = QueryEngine::new(registry.clone(), 8).without_cache();
+        registry.publish(0, summary_of(&[1, 1, 1, 2, 2, 7], 16), false);
+        registry.publish(1, summary_of(&[1, 7, 7, 9], 16), false);
+        for _ in 0..3 {
+            assert_eq!(cached.top_k(4), uncached.top_k(4));
+            assert_eq!(cached.point(7), uncached.point(7));
+            assert_eq!(cached.point(999), uncached.point(999));
+            let (a, b) = (cached.frequent(), uncached.frequent());
+            assert_eq!(a.threshold, b.threshold);
+            assert_eq!(a.guaranteed, b.guaranteed);
+            assert_eq!(a.possible, b.possible);
+            let (a, b) = (cached.threshold(0.2), uncached.threshold(0.2));
+            assert_eq!(a.guaranteed, b.guaranteed);
+            assert_eq!(a.possible, b.possible);
+        }
+        assert!(cached.cache_stats().hits > 0);
+    }
+
+    #[test]
+    fn snapshot_sugar_shares_the_hoisted_order() {
+        let e = engine(1, 8);
+        e.registry()
+            .publish(0, summary_of(&[1, 1, 1, 1, 2, 2, 2, 3, 3, 4], 8), false);
+        let snap = e.snapshot();
+        // All sugar forms agree with the underlying Summary methods.
+        assert_eq!(snap.top_k(3), snap.summary().top_k(3));
+        assert_eq!(snap.top_k(99), snap.summary().top_k(99));
+        assert_eq!(snap.top_k_guaranteed(3), snap.summary().top_k_guaranteed(3));
+        assert_eq!(
+            snap.top_k_guaranteed(99),
+            snap.summary().top_k_guaranteed(99)
+        );
+        let t = snap.threshold(0.15);
+        let reference = threshold_split(snap.summary(), t.threshold, snap.epsilon());
+        assert_eq!(t.guaranteed, reference.guaranteed);
+        assert_eq!(t.possible, reference.possible);
     }
 }

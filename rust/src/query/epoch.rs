@@ -97,6 +97,19 @@ pub struct EpochRegistry {
     items_routed: AtomicU64,
     /// Queries served through engines attached to this registry.
     queries_served: AtomicU64,
+    /// Monotonic *read-path version*: bumped on every snapshot
+    /// publication and every hot-set install, i.e. on every event that
+    /// can change what a merged view would contain. Between bumps the
+    /// merged state is immutable, so a cached [`MergedSnapshot`]
+    /// (`super::MergedSnapshot`) tagged with this counter's value stays
+    /// valid for exactly as long as the value does — a single relaxed
+    /// load is the entire validity check on the cache hit path. The
+    /// bump happens strictly *after* the slot swap, so a reader that
+    /// observes version `v` both before and after collecting
+    /// [`latest`](Self::latest) is guaranteed its parts form one
+    /// coherent view for `v` (a concurrent publish would have moved
+    /// the version between the two reads).
+    version: AtomicU64,
     /// Whether the per-shard snapshots are key-disjoint (keyed
     /// routing): the engine then merges by concatenation and reports
     /// the max-per-shard error bound. Set once before ingestion starts.
@@ -122,6 +135,7 @@ impl EpochRegistry {
             epochs_published: AtomicU64::new(0),
             items_routed: AtomicU64::new(0),
             queries_served: AtomicU64::new(0),
+            version: AtomicU64::new(0),
             disjoint: AtomicBool::new(false),
             hot_sets: RwLock::new(vec![Arc::new(Vec::new())]),
         })
@@ -184,6 +198,11 @@ impl EpochRegistry {
             finished,
         }));
         self.epochs_published.fetch_add(1, Ordering::Relaxed);
+        // Version bump strictly after the slot swap (see the field
+        // doc): Release pairs with nothing in particular — the slot's
+        // RwLock already orders snapshot data — but keeps the bump
+        // from sinking below the store under any future refactor.
+        self.version.fetch_add(1, Ordering::Release);
         epoch
     }
 
@@ -191,9 +210,15 @@ impl EpochRegistry {
     /// list) and return its generation number. Generation 0 — the
     /// empty set — always exists.
     pub fn publish_hot_set(&self, keys: Vec<u64>) -> u64 {
-        let mut sets = self.hot_sets.write().expect("hot set table poisoned");
-        sets.push(Arc::new(keys));
-        (sets.len() - 1) as u64
+        let generation = {
+            let mut sets = self.hot_sets.write().expect("hot set table poisoned");
+            sets.push(Arc::new(keys));
+            (sets.len() - 1) as u64
+        };
+        // A hot-set install changes what future publications will
+        // carry; bump the read-path version so caches revalidate.
+        self.version.fetch_add(1, Ordering::Release);
+        generation
     }
 
     /// The hot set of a given generation (a stale stamp resolves to
@@ -235,6 +260,14 @@ impl EpochRegistry {
     /// Total snapshots published across all shards.
     pub fn epochs_published(&self) -> u64 {
         self.epochs_published.load(Ordering::Relaxed)
+    }
+
+    /// The current read-path version (see the `version` field): a
+    /// cached merged view tagged with this value is valid until the
+    /// value changes. Relaxed — validity comes from equality of two
+    /// reads around the snapshot collection, not from ordering.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Relaxed)
     }
 
     /// Count one served query.
@@ -310,6 +343,24 @@ mod tests {
         assert_eq!(parts[0].hot, vec![(42, 7)]);
         assert_eq!(parts[0].hot_mass(), 7);
         assert!(parts[1].hot.is_empty());
+    }
+
+    #[test]
+    fn version_bumps_on_publish_and_hot_set_install() {
+        let reg = EpochRegistry::new(2, 8);
+        assert_eq!(reg.version(), 0);
+        reg.publish(0, summary_of(&[1, 2], 8), false);
+        assert_eq!(reg.version(), 1);
+        reg.publish_with_hot(1, summary_of(&[3], 8), false, vec![(42, 5)]);
+        assert_eq!(reg.version(), 2);
+        // A hot-set install invalidates cached views too, even though
+        // no slot moved.
+        reg.publish_hot_set(vec![42]);
+        assert_eq!(reg.version(), 3);
+        // Refresh requests do NOT bump the version: they change
+        // nothing a merged view contains until a shard publishes.
+        reg.request_refresh();
+        assert_eq!(reg.version(), 3);
     }
 
     #[test]

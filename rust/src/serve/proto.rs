@@ -59,8 +59,9 @@ use std::io::{Read, Write};
 pub const MAGIC: u32 = u32::from_le_bytes(*b"PSS1");
 
 /// Protocol version carried in the hello. Version 2 added the worker
-/// role and the cluster snapshot frames.
-pub const VERSION: u16 = 2;
+/// role and the cluster snapshot frames; version 3 widened
+/// [`Frame::StatsResult`] with the query-cache counters.
+pub const VERSION: u16 = 3;
 
 /// Hard cap on `len` (kind + body), bytes. 16 MiB ≈ a 2M-item flat
 /// chunk — far past any sane chunk_len, small enough to bound a
@@ -250,6 +251,14 @@ pub struct WireStats {
     pub query_connections: u64,
     /// Frames rejected with a protocol error.
     pub proto_errors: u64,
+    /// Snapshot-cache fast-path hits on the server's query engines
+    /// (landmark + windowed), aggregated across the query pool.
+    pub cache_hits: u64,
+    /// Snapshot-cache misses: queries that ran a merge server-side.
+    pub cache_misses: u64,
+    /// Merges avoided (hits plus slow-path reuses of a view another
+    /// reader built concurrently); `≥ cache_hits`.
+    pub merges_avoided: u64,
 }
 
 /// A worker's full merged Space Saving state, shipped to the cluster
@@ -634,6 +643,9 @@ impl Frame {
                     s.ingest_connections,
                     s.query_connections,
                     s.proto_errors,
+                    s.cache_hits,
+                    s.cache_misses,
+                    s.merges_avoided,
                 ] {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
@@ -782,7 +794,7 @@ impl Frame {
                 Ok(Frame::KMajorityResult { n, epsilon, threshold, guaranteed, possible })
             }
             kind::STATS_RESULT => {
-                if body.len() != 64 {
+                if body.len() != 88 {
                     return Err(bad());
                 }
                 let f = |i: usize| take_u64(body, i * 8).unwrap();
@@ -795,6 +807,9 @@ impl Frame {
                     ingest_connections: f(5),
                     query_connections: f(6),
                     proto_errors: f(7),
+                    cache_hits: f(8),
+                    cache_misses: f(9),
+                    merges_avoided: f(10),
                 }))
             }
             kind::HELLO_OK => {
@@ -1186,6 +1201,9 @@ mod tests {
                 ingest_connections: 6,
                 query_connections: 7,
                 proto_errors: 8,
+                cache_hits: 9,
+                cache_misses: 10,
+                merges_avoided: 11,
             }),
             Frame::HelloOk { version: VERSION },
             Frame::Shutdown,
@@ -1379,7 +1397,8 @@ mod tests {
             (kind::K_MAJORITY, 0),
             (kind::STATS, 1),
             (kind::POINT_RESULT, 24),
-            (kind::STATS_RESULT, 63),
+            (kind::STATS_RESULT, 64),
+            (kind::STATS_RESULT, 87),
             (kind::HELLO_OK, 3),
             (kind::SHUTDOWN, 2),
             (kind::SUMMARY_REQUEST, 0),

@@ -311,6 +311,10 @@ impl Shared {
                 None => (0, 0, 0, 0),
             }
         };
+        // Landmark + windowed caches, aggregated: one pair of engines
+        // is shared by the whole query pool, so these counters already
+        // cover every reader thread.
+        let cache = self.cache_stats();
         WireStats {
             items,
             chunks,
@@ -320,6 +324,25 @@ impl Shared {
             ingest_connections: self.ingest_conns.load(Ordering::Relaxed),
             query_connections: self.query_conns.load(Ordering::Relaxed),
             proto_errors: self.proto_errors.load(Ordering::Relaxed),
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            merges_avoided: cache.merges_avoided,
+        }
+    }
+
+    /// Combined snapshot-cache accounting over the landmark engine and
+    /// (when a delta ring runs) the windowed engine.
+    fn cache_stats(&self) -> crate::metrics::CacheStats {
+        let l = self.engine.cache_stats();
+        let w = self
+            .windows
+            .as_ref()
+            .map(|e| e.cache_stats())
+            .unwrap_or_default();
+        crate::metrics::CacheStats {
+            hits: l.hits + w.hits,
+            misses: l.misses + w.misses,
+            merges_avoided: l.merges_avoided + w.merges_avoided,
         }
     }
 }
@@ -339,6 +362,9 @@ pub struct ServeStats {
     pub frames: u64,
     /// Connections terminated with a protocol error.
     pub proto_errors: u64,
+    /// Snapshot-cache accounting over the server's query engines
+    /// (landmark + windowed, summed across the query pool).
+    pub cache: crate::metrics::CacheStats,
 }
 
 /// A running `pss` server. Bind with [`Server::bind`], stop with
@@ -528,6 +554,7 @@ impl Server {
             worker_connections: self.shared.worker_conns.load(Ordering::Relaxed),
             frames: self.shared.frames_in.load(Ordering::Relaxed),
             proto_errors: self.shared.proto_errors.load(Ordering::Relaxed),
+            cache: self.shared.cache_stats(),
         };
         (result, stats)
     }
@@ -834,7 +861,7 @@ fn query_conn(stream: &mut AnyStream, shared: &Arc<Shared>) {
 /// Answer one query frame from the snapshot engines. `None` marks a
 /// frame that is not a query (role error).
 fn answer_query(shared: &Arc<Shared>, frame: &Frame) -> Option<Frame> {
-    let windowed = |w: u32| -> Result<crate::window::WindowSnapshot, Frame> {
+    let windowed = |w: u32| -> Result<Arc<crate::window::WindowSnapshot>, Frame> {
         match shared.windows.as_ref() {
             Some(eng) => Ok(eng.window(w as usize)),
             None => Err(Frame::Error {

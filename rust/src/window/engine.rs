@@ -43,15 +43,15 @@
 //! partials`. Exact counts add no over-estimation, so `ε` stays the
 //! max-per-shard bound of the Space Saving parts alone.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::metrics::{LatencyHistogram, LatencySummary};
+use crate::metrics::{CacheCounters, CacheStats, LatencyHistogram, LatencySummary};
 use crate::parallel::tree_reduce_refs;
 use crate::query::engine::{point_estimate, threshold_split};
 use crate::query::{PointEstimate, ThresholdReport};
 use crate::summary::{absorb_exact, merge_disjoint, Counter, Summary};
-use crate::util::shard_of;
+use crate::util::{shard_of, FastMap};
 
 use super::store::{DeltaSummary, WindowStore};
 
@@ -130,15 +130,30 @@ impl WindowSnapshot {
         };
         // Keyed-adaptive: sum the in-window deltas' exact split-key
         // partials and fold them into the merged summary. ε stands as
-        // computed above — exact mass adds no over-estimation.
-        let mut hot_fold: std::collections::BTreeMap<u64, u64> =
-            std::collections::BTreeMap::new();
-        for p in &parts {
-            for &(item, w) in &p.hot {
-                *hot_fold.entry(item).or_default() += w;
+        // computed above — exact mass adds no over-estimation. Skipped
+        // outright when no delta carries partials (every non-adaptive
+        // mode); FastMap-indexed accumulation otherwise.
+        let hot_totals: Vec<(u64, u64)> = if parts.iter().all(|p| p.hot.is_empty()) {
+            Vec::new()
+        } else {
+            let cap: usize = parts.iter().map(|p| p.hot.len()).sum();
+            let mut idx = FastMap::with_capacity(cap);
+            let mut acc: Vec<(u64, u64)> = Vec::with_capacity(cap);
+            for p in &parts {
+                for &(item, w) in &p.hot {
+                    match idx.get(item) {
+                        Some(i) => acc[i as usize].1 += w,
+                        None => {
+                            idx.insert(item, acc.len() as u32);
+                            acc.push((item, w));
+                        }
+                    }
+                }
             }
-        }
-        let hot_totals: Vec<(u64, u64)> = hot_fold.into_iter().collect();
+            // Sorted by key, matching the landmark fold's contract.
+            acc.sort_unstable_by_key(|e| e.0);
+            acc
+        };
         let merged = if hot_totals.is_empty() {
             merged
         } else {
@@ -317,6 +332,57 @@ pub struct WindowStats {
     pub queries_served: u64,
     /// Latency digest over this engine's windowed queries.
     pub query_latency: LatencySummary,
+    /// Window-snapshot cache accounting (hits / misses / merges
+    /// avoided), aggregated across every clone of this engine. All
+    /// zero when the cache is disabled
+    /// ([`WindowedQueryEngine::without_cache`]).
+    pub cache: CacheStats,
+}
+
+/// The windowed sibling of the landmark engine's snapshot cache: one
+/// cached `Arc<WindowSnapshot>` keyed by `(window width, per-shard
+/// delta-ring seq vector)`.
+///
+/// The seq vector plays the role the registry version plays on the
+/// landmark path: ring contents change only when a shard publishes a
+/// delta, and every publication bumps that shard's seq
+/// ([`WindowStore::last_seq`]) — so an unchanged `(width, seqs)` key
+/// proves the same delta set would be collected again. The rebuild is
+/// validated seqlock-style (seqs read before and after the ring
+/// collection must agree) and serialized by a mutex so one publication
+/// costs one window merge, not one per concurrent reader.
+#[derive(Debug)]
+struct WindowCache {
+    /// `(width, per-shard seqs, view)`; written only under `rebuild`.
+    #[allow(clippy::type_complexity)]
+    slot: RwLock<Option<(usize, Vec<u64>, Arc<WindowSnapshot>)>>,
+    /// Serializes rebuilds (never held on the hit path).
+    rebuild: Mutex<()>,
+    /// Shared hit/miss accounting.
+    counters: CacheCounters,
+}
+
+impl WindowCache {
+    fn new() -> Self {
+        Self {
+            slot: RwLock::new(None),
+            rebuild: Mutex::new(()),
+            counters: CacheCounters::new(),
+        }
+    }
+
+    /// The cached view, if it was built for exactly this key.
+    fn lookup(&self, width: usize, seqs: &[u64]) -> Option<Arc<WindowSnapshot>> {
+        let slot = self.slot.read().expect("window cache poisoned");
+        slot.as_ref().and_then(|(w, s, view)| {
+            (*w == width && s == seqs).then(|| view.clone())
+        })
+    }
+
+    fn install(&self, width: usize, seqs: Vec<u64>, view: &Arc<WindowSnapshot>) {
+        *self.slot.write().expect("window cache poisoned") =
+            Some((width, seqs, view.clone()));
+    }
 }
 
 /// Cheap-to-clone handle serving sliding-window queries over the delta
@@ -325,6 +391,9 @@ pub struct WindowStats {
 pub struct WindowedQueryEngine {
     store: Arc<WindowStore>,
     latency: Arc<LatencyHistogram>,
+    /// Shared window-snapshot cache ([`WindowCache`]); `None` =
+    /// uncached, every windowed query re-merges its delta set.
+    cache: Option<Arc<WindowCache>>,
     /// Default window width (epochs) for the no-argument sugar.
     window_epochs: usize,
     /// k-majority parameter for [`WindowedQueryEngine::frequent_window`].
@@ -334,14 +403,30 @@ pub struct WindowedQueryEngine {
 impl WindowedQueryEngine {
     /// Attach an engine to a store. `window_epochs` is the default
     /// window width; `k_majority` parameterizes
-    /// [`WindowedQueryEngine::frequent_window`].
+    /// [`WindowedQueryEngine::frequent_window`]. The window cache is on
+    /// by default.
     pub fn new(store: Arc<WindowStore>, window_epochs: usize, k_majority: u64) -> Self {
         Self {
             store,
             latency: Arc::new(LatencyHistogram::new()),
+            cache: Some(Arc::new(WindowCache::new())),
             window_epochs: window_epochs.max(1),
             k_majority,
         }
+    }
+
+    /// Disable the window cache on this handle (and clones made from
+    /// it afterwards): every windowed query re-merges. The bench
+    /// baseline, mirroring [`QueryEngine::without_cache`]
+    /// (`crate::query::QueryEngine::without_cache`).
+    pub fn without_cache(mut self) -> Self {
+        self.cache = None;
+        self
+    }
+
+    /// Window-cache accounting (all zero when the cache is off).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map_or_else(CacheStats::default, |c| c.counters.stats())
     }
 
     /// The shared delta store (for publishers / the coordinator).
@@ -359,32 +444,96 @@ impl WindowedQueryEngine {
     /// published — or no longer retains — that many). This is the only
     /// place window merge work happens; the query sugar below goes
     /// through it.
-    pub fn window(&self, epochs: usize) -> WindowSnapshot {
-        self.snapshot_of(self.store.window(epochs.max(1)))
-    }
-
-    /// Coarse time-based window: merge every retained delta published
-    /// within the last `max_age` (granularity = one epoch).
-    pub fn window_by_age(&self, max_age: Duration) -> WindowSnapshot {
-        self.snapshot_of(self.store.window_by_age(max_age))
-    }
-
-    /// The default-width window (`window_epochs` epochs).
-    pub fn latest(&self) -> WindowSnapshot {
-        self.window(self.window_epochs)
-    }
-
-    fn snapshot_of(&self, parts: Vec<Arc<DeltaSummary>>) -> WindowSnapshot {
+    ///
+    /// Between delta publications a given width's merged window is
+    /// immutable, so concurrent callers share one `Arc<WindowSnapshot>`
+    /// (see [`WindowCache`]); any shard's next publication invalidates
+    /// it within one seq-vector check.
+    pub fn window(&self, epochs: usize) -> Arc<WindowSnapshot> {
+        let width = epochs.max(1);
         let t0 = Instant::now();
+        let snap = self.window_inner(width);
+        self.latency.record(t0.elapsed());
+        self.store.count_query();
+        snap
+    }
+
+    fn window_inner(&self, width: usize) -> Arc<WindowSnapshot> {
+        let Some(cache) = &self.cache else {
+            return Arc::new(self.build_window(width).0);
+        };
+        // Fast path: seq-vector compare + Arc clone.
+        if let Some(view) = cache.lookup(width, &self.seq_vector()) {
+            cache.counters.record_hit();
+            cache.counters.record_merge_avoided();
+            return view;
+        }
+        // Slow path: exactly one reader re-merges per ring change.
+        let _rebuild = cache.rebuild.lock().expect("window cache poisoned");
+        if let Some(view) = cache.lookup(width, &self.seq_vector()) {
+            cache.counters.record_merge_avoided();
+            return view;
+        }
+        let (snap, key) = self.build_window(width);
+        let snap = Arc::new(snap);
+        cache.counters.record_miss();
+        if let Some(seqs) = key {
+            cache.install(width, seqs, &snap);
+        }
+        snap
+    }
+
+    /// Build a window view, seqlock-validating that no delta landed
+    /// while the ring was being collected. Returns the view plus the
+    /// seq-vector key it may be cached under (`None` when a publisher
+    /// raced the collection — the view is still a valid answer, each
+    /// delta being individually consistent, but no single key ever
+    /// described it).
+    fn build_window(&self, width: usize) -> (WindowSnapshot, Option<Vec<u64>>) {
+        let mut parts = Vec::new();
+        let mut key = None;
+        for _attempt in 0..2 {
+            let s1 = self.seq_vector();
+            parts = self.store.window(width);
+            if self.seq_vector() == s1 {
+                key = Some(s1);
+                break;
+            }
+        }
         let snap = WindowSnapshot::build(
             parts,
             self.store.k(),
             self.store.disjoint(),
             self.store.shards(),
         );
+        (snap, key)
+    }
+
+    /// Per-shard newest delta seqs — the cache key material.
+    fn seq_vector(&self) -> Vec<u64> {
+        (0..self.store.shards()).map(|s| self.store.last_seq(s)).collect()
+    }
+
+    /// Coarse time-based window: merge every retained delta published
+    /// within the last `max_age` (granularity = one epoch). Never
+    /// cached — the delta set is wall-clock-dependent, so no seq key
+    /// describes it.
+    pub fn window_by_age(&self, max_age: Duration) -> Arc<WindowSnapshot> {
+        let t0 = Instant::now();
+        let snap = Arc::new(WindowSnapshot::build(
+            self.store.window_by_age(max_age),
+            self.store.k(),
+            self.store.disjoint(),
+            self.store.shards(),
+        ));
         self.latency.record(t0.elapsed());
         self.store.count_query();
         snap
+    }
+
+    /// The default-width window (`window_epochs` epochs).
+    pub fn latest(&self) -> Arc<WindowSnapshot> {
+        self.window(self.window_epochs)
     }
 
     /// Top-`m` items over the last `epochs` epochs, descending.
@@ -425,6 +574,7 @@ impl WindowedQueryEngine {
             per_shard_seq: (0..shards).map(|s| self.store.last_seq(s)).collect(),
             queries_served: self.store.queries_served(),
             query_latency: self.latency.summary(),
+            cache: self.cache_stats(),
         }
     }
 }
@@ -643,5 +793,53 @@ mod tests {
         assert_eq!(s.per_shard_seq, vec![3, 0]);
         let _ = engine.top_k_window(2, 1);
         assert_eq!(engine.window_stats().query_latency.count, 1);
+    }
+
+    #[test]
+    fn window_cache_reuses_views_between_publications() {
+        let store = WindowStore::new(2, 4, 16);
+        let engine = WindowedQueryEngine::new(store.clone(), 2, 16);
+        store.publish(0, summary_of(&[1, 1, 2], 16), false);
+        store.publish(1, summary_of(&[3], 16), false);
+
+        // Same (width, seqs) key → one merge, shared Arc.
+        let a = engine.window(2);
+        let b = engine.window(2);
+        assert!(Arc::ptr_eq(&a, &b), "cached view must be shared");
+        let s = engine.cache_stats();
+        assert_eq!((s.hits, s.misses, s.merges_avoided), (1, 1, 1));
+
+        // A different width is a different key.
+        let wide = engine.window(4);
+        assert!(!Arc::ptr_eq(&b, &wide));
+        assert_eq!(engine.cache_stats().misses, 2);
+
+        // Any shard's publication invalidates within one check.
+        store.publish(0, summary_of(&[9, 9], 16), false);
+        let c = engine.window(4);
+        assert!(!Arc::ptr_eq(&wide, &c), "stale view served after publish");
+        assert_eq!(c.n(), 6);
+
+        // Clones share the cache; stats surface it; every call counted.
+        let clone = engine.clone();
+        let d = clone.window(4);
+        assert!(Arc::ptr_eq(&c, &d));
+        let ws = engine.window_stats();
+        assert_eq!(ws.cache.hits, 2);
+        assert_eq!(ws.queries_served, 5);
+        assert_eq!(ws.query_latency.count, 5);
+    }
+
+    #[test]
+    fn uncached_window_engine_rebuilds_every_query() {
+        let store = WindowStore::new(1, 4, 16);
+        let engine = WindowedQueryEngine::new(store.clone(), 2, 16).without_cache();
+        store.publish(0, summary_of(&[5, 5, 6], 16), false);
+        let a = engine.window(2);
+        let b = engine.window(2);
+        assert!(!Arc::ptr_eq(&a, &b), "uncached engine must rebuild");
+        assert_eq!(a.summary().counters(), b.summary().counters());
+        assert_eq!(engine.cache_stats(), CacheStats::default());
+        assert_eq!(engine.window_stats().queries_served, 2);
     }
 }

@@ -297,6 +297,75 @@ fn adaptive_routing_over_the_wire_matches_oracle() {
     }
 }
 
+/// The read-path cache over the wire: once an 8-client burst settles,
+/// repeated identical queries are answered from one shared merged view
+/// — `cache_hits > 0` in the wire stats — and caching changes nothing
+/// about the answers: byte-identical repeats, every oracle bound
+/// intact.
+#[test]
+fn wire_queries_share_the_cached_snapshot() {
+    let server = Server::bind(&"127.0.0.1:0".parse().unwrap(), serve_cfg()).unwrap();
+    let cfg = loadgen_cfg();
+    let total = cfg.clients as u64 * cfg.items_per_client;
+    let report = run_loadgen(server.endpoint(), &cfg).unwrap();
+    assert_eq!(report.items_acked, total, "every frame acked");
+
+    let truth = oracle(&cfg);
+    await_coverage(&server, total);
+
+    // `await_coverage` fires refresh requests that idle shards may
+    // honor up to one IDLE_POLL later; wait for the version to go
+    // quiet so the hit assertion below is deterministic.
+    let eng = server.queries();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let v = eng.registry().version();
+        std::thread::sleep(Duration::from_millis(50));
+        if eng.registry().version() == v {
+            break;
+        }
+        assert!(Instant::now() < deadline, "registry version never quiesced");
+    }
+
+    // Ingest is idle now, so the registry version is stable: the first
+    // query may merge, every repeat must be a version-match hit.
+    let mut q = QueryClient::connect(server.endpoint()).unwrap();
+    let answer = q.top_k(K as u32, 0).unwrap();
+    let again = q.top_k(K as u32, 0).unwrap();
+    assert_eq!(answer, again, "cached wire answer diverged from the fresh one");
+
+    // The cached answer honors the exact same oracle bounds as the
+    // uncached acceptance test above.
+    assert_eq!(answer.n, total);
+    assert!(answer.epsilon <= total / K as u64);
+    for c in &answer.counters {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(c.count >= f, "underestimate on item {}", c.item);
+        assert!(
+            c.count - f <= answer.epsilon,
+            "overestimate {} > ε {} on item {}",
+            c.count - f,
+            answer.epsilon,
+            c.item
+        );
+        assert!(c.count - c.err <= f, "per-counter bound on item {}", c.item);
+    }
+
+    // The cache must be observable in the wire stats.
+    let s = q.stats().unwrap();
+    assert!(s.cache_hits > 0, "repeat query never hit: {s:?}");
+    assert!(
+        s.merges_avoided >= s.cache_hits,
+        "merges_avoided {} < cache_hits {}",
+        s.merges_avoided,
+        s.cache_hits
+    );
+
+    let (result, stats) = server.finish();
+    assert_eq!(result.stats.items, total);
+    assert!(stats.cache.hits > 0, "drain stats lost the cache counters");
+}
+
 /// Raw-socket abuse: garbage kinds, truncated frames, and a bad hello
 /// each kill only their own connection. A well-behaved client ingests
 /// through the noise and the pool keeps answering queries.

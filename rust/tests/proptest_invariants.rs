@@ -842,6 +842,9 @@ fn random_frame(rng: &mut SplitMix64) -> pss::serve::Frame {
             ingest_connections: rng.next_u64(),
             query_connections: rng.next_u64(),
             proto_errors: rng.next_u64(),
+            cache_hits: rng.next_u64(),
+            cache_misses: rng.next_u64(),
+            merges_avoided: rng.next_u64(),
         }),
         11 => Frame::HelloOk { version: rng.next_u64() as u16 },
         12 => Frame::Shutdown,
@@ -1169,5 +1172,182 @@ fn prop_adaptive_routing_bounds() {
                 );
             }
         }
+    }
+}
+
+/// Property (read-path cache): the epoch-versioned snapshot cache is
+/// invisible. A writer thread interleaves epoch publications and
+/// hot-set installs while reader threads query a cached engine and an
+/// uncached engine over the same registry; whenever the two views carry
+/// the same registry version they must be bit-identical — counters, n,
+/// ε and the exact hot exports. (Version equality is sufficient:
+/// incoherent seqlock builds always carry a strictly newer tag, so two
+/// equal tags prove both views saw exactly the same slot set.) After
+/// the writer quiesces, one more publication must invalidate the cache
+/// within a single version check.
+#[test]
+fn prop_snapshot_cache_coherent() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use pss::metrics::CacheStats;
+    use pss::query::{EpochRegistry, QueryEngine};
+    use pss::summary::Summary as Sum;
+    use pss::util::shard_of;
+
+    enum Ev {
+        Publish(usize, Sum, Vec<(u64, u64)>, bool),
+        HotSet(Vec<u64>),
+    }
+
+    // Threaded trials are pricier than the sequential properties, so
+    // this one runs a quarter of the usual count.
+    for seed in 1900..1900 + TRIALS / 4 {
+        let mut rng = SplitMix64::new(seed);
+        let shards = 1 + rng.next_below(4) as usize;
+        let k = 8 + rng.next_below(128) as usize;
+        let items = random_stream(&mut rng);
+        let n_epochs = 2 + rng.next_below(6) as usize;
+        // Keys 0 and 1 are the stream's heavy candidates; routing them
+        // to exact side tables exercises the hot-fold path of
+        // MergedSnapshot::build. Trials where they never occur cover
+        // the no-hot-tables skip path instead.
+        let hot_keys = [0u64, 1];
+
+        let registry = EpochRegistry::new(shards, k);
+        registry.set_disjoint(true);
+        let cached = QueryEngine::new(registry.clone(), k as u64);
+        let fresh = QueryEngine::new(registry.clone(), k as u64).without_cache();
+
+        // Pre-build every publication offline (the coordinator also
+        // publishes frozen summaries; the race under test is
+        // publish-vs-query, not summary construction).
+        let mut workers: Vec<StreamSummary> =
+            (0..shards).map(|_| StreamSummary::new(k)).collect();
+        let mut partials: Vec<HashMap<u64, u64>> = vec![HashMap::new(); shards];
+        let mut scatter: Vec<Vec<u64>> = vec![Vec::new(); shards];
+        let mut cursor = 0u64;
+        let mut events: Vec<Ev> = Vec::new();
+        let chunk = items.len() / n_epochs + 1;
+        let n_chunks = (items.len() + chunk - 1) / chunk;
+        for (e, block) in items.chunks(chunk).enumerate() {
+            for &it in block {
+                if hot_keys.contains(&it) {
+                    let s = (cursor % shards as u64) as usize;
+                    cursor += 1;
+                    *partials[s].entry(it).or_default() += 1;
+                } else {
+                    scatter[shard_of(it, shards)].push(it);
+                }
+            }
+            if rng.next_below(3) == 0 {
+                events.push(Ev::HotSet(hot_keys.to_vec()));
+            }
+            for (s, sub) in scatter.iter_mut().enumerate() {
+                workers[s].offer_all(sub);
+                sub.clear();
+                let mut hot: Vec<(u64, u64)> =
+                    partials[s].iter().map(|(&i, &w)| (i, w)).collect();
+                hot.sort_unstable();
+                events.push(Ev::Publish(s, workers[s].freeze(), hot, e + 1 == n_chunks));
+            }
+        }
+
+        let done = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let registry_w = registry.clone();
+            let done_ref = &done;
+            scope.spawn(move || {
+                for ev in events {
+                    match ev {
+                        Ev::Publish(s, summary, hot, finished) => {
+                            registry_w.publish_with_hot(s, summary, finished, hot);
+                        }
+                        Ev::HotSet(keys) => {
+                            registry_w.publish_hot_set(keys);
+                        }
+                    }
+                }
+                done_ref.store(true, Ordering::Release);
+            });
+            for _ in 0..2 {
+                let cached = &cached;
+                let fresh = &fresh;
+                scope.spawn(move || {
+                    let mut compared = 0u32;
+                    let mut iters = 0u32;
+                    while (!done_ref.load(Ordering::Acquire) || compared == 0)
+                        && iters < 200_000
+                    {
+                        iters += 1;
+                        let view = cached.snapshot();
+                        let check = fresh.snapshot();
+                        if view.version() != check.version() {
+                            continue; // a publish landed in between
+                        }
+                        compared += 1;
+                        assert_eq!(
+                            view.summary().counters(),
+                            check.summary().counters(),
+                            "seed {seed}: cached counters diverge at v{}",
+                            view.version()
+                        );
+                        assert_eq!(view.n(), check.n(), "seed {seed}: cached n");
+                        assert_eq!(view.epsilon(), check.epsilon(), "seed {seed}: cached ε");
+                        assert_eq!(
+                            view.hot_exports(),
+                            check.hot_exports(),
+                            "seed {seed}: cached hot exports"
+                        );
+                    }
+                    assert!(compared > 0, "seed {seed}: reader never matched a version");
+                });
+            }
+        });
+
+        // Quiescent: the next snapshot must carry the current version …
+        let settled = cached.snapshot();
+        assert_eq!(
+            settled.version(),
+            registry.version(),
+            "seed {seed}: settled snapshot is stale"
+        );
+        // … and one more publication must invalidate it within a single
+        // version check (the hit path's only validity test).
+        let extra: Vec<u64> = (2u64..)
+            .filter(|&x| shard_of(x, shards) == 0)
+            .take(64)
+            .collect();
+        workers[0].offer_all(&extra);
+        let v_before = registry.version();
+        registry.publish(0, workers[0].freeze(), true);
+        assert!(registry.version() > v_before, "seed {seed}: publish must bump");
+        let after = cached.snapshot();
+        assert_eq!(
+            after.version(),
+            registry.version(),
+            "seed {seed}: publish did not invalidate within one check"
+        );
+        assert!(
+            !std::sync::Arc::ptr_eq(&settled, &after),
+            "seed {seed}: stale view served after publish"
+        );
+        let check = fresh.snapshot();
+        assert_eq!(
+            after.summary().counters(),
+            check.summary().counters(),
+            "seed {seed}: post-invalidation counters diverge"
+        );
+
+        let cs = cached.cache_stats();
+        assert!(cs.misses >= 1, "seed {seed}: someone must have merged");
+        assert!(
+            cs.merges_avoided >= cs.hits,
+            "seed {seed}: merges_avoided ≥ hits by definition"
+        );
+        assert_eq!(
+            fresh.cache_stats(),
+            CacheStats::default(),
+            "seed {seed}: uncached engine must not account cache traffic"
+        );
     }
 }
