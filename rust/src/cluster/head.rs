@@ -10,36 +10,125 @@
 //! `SummaryRequest` → `SummarySnapshot` back, and a final
 //! `drain: true` exchange that stops each worker and collects its
 //! drained state.
+//!
+//! ## Supervision and degraded mode
+//!
+//! Every wire operation carries a deadline (the serve-layer clients),
+//! so a dead or wedged worker surfaces as a typed error instead of
+//! hanging the head. When that happens — an ingest send fails, the
+//! spawned child exits, or [`MAX_SNAP_FAILURES`] consecutive snapshot
+//! fetches fail — the head *retires* the worker: child killed and
+//! reaped, stale unix socket unlinked, and every item ever sent to it
+//! accounted in [`ClusterHead::mass_lost`]. Under
+//! [`Supervision::Quarantine`] (default) the slot stays dead and
+//! [`ClusterHead::poll`]/[`ClusterHead::drain`] proceed over the
+//! survivors, yielding a [`ClusterView`] flagged
+//! [`degraded`](ClusterView::degraded) with survivor-only ε; under
+//! [`Supervision::Restart`] a spawned slot gets a fresh worker (the
+//! dead one's mass is still lost — a fresh Space Saving summary cannot
+//! recover evicted history).
+//!
+//! Keyed routing never re-routes a dead worker's key range: its items
+//! are dropped (and accounted lost) because shipping them to a
+//! survivor would break the key-disjointness [`merge_disjoint`]'s
+//! ε = maxᵢ εᵢ bound rests on. Block routing simply skips dead slots
+//! in the round-robin. Either way the conservation invariant the tests
+//! pin is `view.n() + mass_lost == items sent`.
+//!
+//! [`merge_disjoint`]: crate::summary::merge_disjoint
 
 use std::path::{Path, PathBuf};
-use std::process::{Child, Command, Stdio};
+use std::process::{Child, Command, ExitStatus, Stdio};
 use std::time::{Duration, Instant};
 
 use super::snapshot::{ClusterRouting, ClusterView, WorkerSummary};
 use crate::metrics::{CacheCounters, CacheStats};
 use crate::serve::{Endpoint, IngestClient, SnapshotClient, WireSnapshot};
-use crate::util::shard_of;
+use crate::util::{shard_of, Backoff};
+
+/// Consecutive snapshot-fetch failures before a worker whose process
+/// the head cannot observe (a `connect`ed remote) is declared dead.
+/// Spawned children are declared dead as soon as `try_wait` reaps them.
+pub const MAX_SNAP_FAILURES: u32 = 3;
+
+/// What the head does with a worker it has declared dead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Supervision {
+    /// Leave the slot dead: polls and the drain proceed over the
+    /// surviving subset and the merged view is flagged degraded.
+    #[default]
+    Quarantine,
+    /// Spawn a fresh worker on the dead slot (spawned workers only —
+    /// connected remotes are quarantined regardless). The dead
+    /// worker's mass is still lost; the replacement takes over the
+    /// slot's share of the stream from here on.
+    Restart,
+}
 
 /// One worker process as the head sees it: its endpoint, the two live
 /// connections, and — when the head spawned it — the child process
-/// handle.
+/// handle, plus the supervision state.
 struct WorkerLink {
     endpoint: Endpoint,
     ingest: Option<IngestClient>,
     snap: Option<SnapshotClient>,
     child: Option<Child>,
+    /// False once supervision declared this worker dead.
+    alive: bool,
+    /// Consecutive snapshot-fetch failures (reset on success).
+    snap_failures: u32,
+    /// Item mass written to this worker so far. If the worker dies,
+    /// the whole figure moves to [`ClusterHead::mass_lost`]: its
+    /// snapshot is discarded, so everything it was sent leaves the
+    /// merged total.
+    sent_mass: u64,
+    /// Exit status captured when supervision reaped the child.
+    status: Option<ExitStatus>,
+}
+
+impl WorkerLink {
+    fn new(endpoint: Endpoint, ingest: IngestClient, snap: SnapshotClient, child: Option<Child>) -> Self {
+        WorkerLink {
+            endpoint,
+            ingest: Some(ingest),
+            snap: Some(snap),
+            child,
+            alive: true,
+            snap_failures: 0,
+            sent_mass: 0,
+            status: None,
+        }
+    }
+
+    /// Kill and reap the child if it is still running, returning its
+    /// exit status when there was one to collect.
+    fn reap(&mut self) -> Option<ExitStatus> {
+        let mut child = self.child.take()?;
+        if child.try_wait().ok().flatten().is_none() {
+            let _ = child.kill();
+        }
+        child.wait().ok()
+    }
+
+    /// Remove the worker's unix socket file. Only meaningful for
+    /// spawned workers (the head owns their sockets); a dead worker
+    /// cannot unlink its own listener, and a stale file would wedge
+    /// the next bind or a restart.
+    fn unlink_socket(&self) {
+        if let Endpoint::Unix(path) = &self.endpoint {
+            let _ = std::fs::remove_file(path);
+        }
+    }
 }
 
 impl Drop for WorkerLink {
     fn drop(&mut self) {
         // A worker that was drained cleanly has already exited; this
         // is the abnormal path (head error / panic) — don't leave
-        // orphan processes behind.
-        if let Some(mut child) = self.child.take() {
-            if child.try_wait().ok().flatten().is_none() {
-                let _ = child.kill();
-                let _ = child.wait();
-            }
+        // orphan processes or their stale socket files behind.
+        if self.child.is_some() {
+            self.reap();
+            self.unlink_socket();
         }
     }
 }
@@ -49,38 +138,59 @@ impl Drop for WorkerLink {
 pub struct WorkerExit {
     /// The worker's endpoint (for reporting).
     pub endpoint: Endpoint,
-    /// Its final (`finished: true`) snapshot.
-    pub snapshot: WireSnapshot,
+    /// Its final (`finished: true`) snapshot — `None` for a worker
+    /// that died before the drain could collect one.
+    pub snapshot: Option<WireSnapshot>,
     /// Exit status, for workers the head spawned (`None` for workers
     /// it only connected to — they own their own lifecycle).
-    pub status: Option<std::process::ExitStatus>,
+    pub status: Option<ExitStatus>,
+    /// Whether the worker survived to contribute its final state.
+    pub live: bool,
 }
 
 /// The result of draining a cluster: the merged final view plus each
 /// worker's exit record.
 #[derive(Debug)]
 pub struct ClusterDrain {
-    /// Merged view over every worker's final snapshot.
+    /// Merged view over every surviving worker's final snapshot
+    /// (degraded if any worker died).
     pub view: ClusterView,
     /// Per-worker final snapshots and exit statuses.
     pub workers: Vec<WorkerExit>,
+    /// Item mass sent to workers that died (discarded with their
+    /// snapshots): `view.n() + mass_lost` = items the head sent.
+    pub mass_lost: u64,
+}
+
+/// How to respawn a dead slot (recorded by
+/// [`ClusterHead::spawn_local`]).
+struct RespawnSpec {
+    program: PathBuf,
+    dir: PathBuf,
+    worker_args: Vec<String>,
 }
 
 /// Head-side handle over `P` worker processes.
 pub struct ClusterHead {
     workers: Vec<WorkerLink>,
     routing: ClusterRouting,
+    supervision: Supervision,
+    deadline: Duration,
+    /// Item mass accounted to dead workers (their snapshots are
+    /// discarded, so this mass leaves the merged total).
+    mass_lost: u64,
+    respawn: Option<RespawnSpec>,
     /// Round-robin cursor (block routing).
     next: usize,
     /// Per-worker staging buffers (keyed routing).
     staged: Vec<Vec<(u64, u64)>>,
     /// Last merged poll view, keyed by each worker's
-    /// `(epoch, n, finished)` triple. A worker whose coordinator
+    /// `(epoch, n, finished, alive)` tuple. A worker whose coordinator
     /// published nothing new answers the same snapshot again, so an
     /// unchanged key vector proves re-validating and re-merging would
     /// reproduce the cached view — the fetch still happens (it's the
     /// staleness probe), only the merge is skipped.
-    poll_cache: Option<(Vec<(u64, u64, bool)>, ClusterView)>,
+    poll_cache: Option<(Vec<(u64, u64, bool, bool)>, ClusterView)>,
     /// Poll-cache accounting (`merges_avoided == hits` here: `poll`
     /// takes `&mut self`, so there is no concurrent-rebuild reuse).
     poll_counters: CacheCounters,
@@ -90,24 +200,17 @@ impl ClusterHead {
     /// Connect to already-running workers.
     pub fn connect(endpoints: &[Endpoint], routing: ClusterRouting) -> crate::Result<ClusterHead> {
         anyhow::ensure!(!endpoints.is_empty(), "a cluster needs at least one worker");
+        let deadline = crate::serve::client::DEFAULT_DEADLINE;
         let mut workers = Vec::with_capacity(endpoints.len());
         for ep in endpoints {
-            workers.push(WorkerLink {
-                endpoint: ep.clone(),
-                ingest: Some(IngestClient::connect(ep)?),
-                snap: Some(SnapshotClient::connect(ep)?),
-                child: None,
-            });
+            workers.push(WorkerLink::new(
+                ep.clone(),
+                IngestClient::connect_with_deadline(ep, deadline)?,
+                SnapshotClient::connect_with_deadline(ep, deadline)?,
+                None,
+            ));
         }
-        let staged = vec![Vec::new(); workers.len()];
-        Ok(ClusterHead {
-            workers,
-            routing,
-            next: 0,
-            staged,
-            poll_cache: None,
-            poll_counters: CacheCounters::new(),
-        })
+        Ok(Self::assemble(workers, routing, deadline, None))
     }
 
     /// Spawn `processes` local workers (`program cluster --worker
@@ -125,66 +228,87 @@ impl ClusterHead {
         worker_args: &[String],
     ) -> crate::Result<ClusterHead> {
         anyhow::ensure!(processes >= 1, "a cluster needs at least one worker");
+        let deadline = crate::serve::client::DEFAULT_DEADLINE;
         let mut links: Vec<(PathBuf, Child)> = Vec::with_capacity(processes);
         for i in 0..processes {
             let sock = dir.join(format!("pss-worker-{i}.sock"));
-            let _ = std::fs::remove_file(&sock);
-            let child = Command::new(program)
-                .arg("cluster")
-                .arg("--worker")
-                .arg("--listen")
-                .arg(format!("unix:{}", sock.display()))
-                .args(worker_args)
-                .stdin(Stdio::null())
-                .spawn()
-                .map_err(|e| anyhow::Error::msg(format!("spawning worker {i}: {e}")))?;
-            links.push((sock, child));
+            links.push((sock.clone(), spawn_worker(program, &sock, worker_args, i)?));
         }
 
-        let deadline = Instant::now() + Duration::from_secs(10);
         let mut workers = Vec::with_capacity(processes);
         for (i, (sock, mut child)) in links.into_iter().enumerate() {
-            // The worker binds before it prints anything, so readiness
-            // is simply "the socket accepts" — retry until the
-            // deadline, failing fast if the child already died.
             let endpoint = Endpoint::Unix(sock);
-            let ingest = loop {
-                match IngestClient::connect(&endpoint) {
-                    Ok(c) => break c,
-                    Err(e) => {
-                        if let Some(status) = child.try_wait().ok().flatten() {
-                            anyhow::bail!("worker {i} exited before accepting: {status}");
-                        }
-                        anyhow::ensure!(
-                            Instant::now() < deadline,
-                            "worker {i} never came up: {e}"
-                        );
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
+            let (ingest, snap) = match await_worker(&endpoint, &mut child, deadline, i) {
+                Ok(pair) => pair,
+                Err(e) => {
+                    // Don't leak the siblings that did come up (their
+                    // links aren't constructed yet, so Drop can't).
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(e);
                 }
             };
-            let snap = SnapshotClient::connect(&endpoint)?;
-            workers.push(WorkerLink {
-                endpoint,
-                ingest: Some(ingest),
-                snap: Some(snap),
-                child: Some(child),
-            });
+            workers.push(WorkerLink::new(endpoint, ingest, snap, Some(child)));
         }
+        let respawn = RespawnSpec {
+            program: program.to_path_buf(),
+            dir: dir.to_path_buf(),
+            worker_args: worker_args.to_vec(),
+        };
+        Ok(Self::assemble(workers, routing, deadline, Some(respawn)))
+    }
+
+    fn assemble(
+        workers: Vec<WorkerLink>,
+        routing: ClusterRouting,
+        deadline: Duration,
+        respawn: Option<RespawnSpec>,
+    ) -> ClusterHead {
         let staged = vec![Vec::new(); workers.len()];
-        Ok(ClusterHead {
+        ClusterHead {
             workers,
             routing,
+            supervision: Supervision::default(),
+            deadline,
+            mass_lost: 0,
+            respawn,
             next: 0,
             staged,
             poll_cache: None,
             poll_counters: CacheCounters::new(),
-        })
+        }
     }
 
-    /// Number of workers.
+    /// What to do with workers that die (default
+    /// [`Supervision::Quarantine`]).
+    pub fn with_supervision(mut self, supervision: Supervision) -> ClusterHead {
+        self.supervision = supervision;
+        self
+    }
+
+    /// Per-operation wire deadline for connections the head opens from
+    /// here on (reconnects and restarts; the initial connections use
+    /// the serve-layer default).
+    pub fn with_deadline(mut self, deadline: Duration) -> ClusterHead {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Number of worker slots (live and dead).
     pub fn processes(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Worker slots still alive.
+    pub fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Item mass sent to workers that have since died (discarded with
+    /// their snapshots), plus keyed-routing items dropped because
+    /// their home worker is dead.
+    pub fn mass_lost(&self) -> u64 {
+        self.mass_lost
     }
 
     /// How ingest is partitioned.
@@ -197,17 +321,94 @@ impl ClusterHead {
         self.workers.iter().map(|w| w.endpoint.clone()).collect()
     }
 
+    /// OS pid of spawned worker `i` (`None` for connected remotes or
+    /// dead slots). The fault-injection harness kills workers by pid
+    /// to exercise supervision exactly as an external failure would.
+    pub fn worker_pid(&self, i: usize) -> Option<u32> {
+        self.workers.get(i).and_then(|w| w.child.as_ref()).map(|c| c.id())
+    }
+
+    /// Declare worker `i` dead: close its connections, kill and reap
+    /// the child, unlink its socket, move its mass to `mass_lost` —
+    /// then, under [`Supervision::Restart`] on a spawned slot, try to
+    /// bring up a replacement.
+    fn retire(&mut self, i: usize, why: &anyhow::Error) {
+        let w = &mut self.workers[i];
+        if !w.alive {
+            return;
+        }
+        w.alive = false;
+        w.ingest = None;
+        w.snap = None;
+        self.mass_lost += w.sent_mass;
+        w.sent_mass = 0;
+        let spawned = w.child.is_some();
+        w.status = w.reap();
+        if spawned {
+            w.unlink_socket();
+        }
+        eprintln!(
+            "cluster head: worker {i} ({}) retired after: {why}",
+            self.workers[i].endpoint
+        );
+        self.poll_cache = None;
+        if self.supervision == Supervision::Restart && spawned {
+            if let Err(e) = self.restart(i) {
+                eprintln!("cluster head: restarting worker {i} failed ({e}); quarantined");
+            }
+        }
+    }
+
+    /// Spawn a fresh worker on slot `i` and reconnect. The replacement
+    /// starts empty: the dead worker's mass stays lost.
+    fn restart(&mut self, i: usize) -> crate::Result<()> {
+        let spec = self
+            .respawn
+            .as_ref()
+            .ok_or_else(|| anyhow::Error::msg("no respawn spec (connected cluster)"))?;
+        let sock = spec.dir.join(format!("pss-worker-{i}.sock"));
+        let mut child = spawn_worker(&spec.program, &sock, &spec.worker_args, i)?;
+        let endpoint = Endpoint::Unix(sock);
+        let (ingest, snap) = match await_worker(&endpoint, &mut child, self.deadline, i) {
+            Ok(pair) => pair,
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(e);
+            }
+        };
+        let status = self.workers[i].status.take();
+        self.workers[i] = WorkerLink::new(endpoint, ingest, snap, Some(child));
+        // Keep the original exit status for the final report even
+        // though the slot is live again.
+        self.workers[i].status = status;
+        Ok(())
+    }
+
     /// Route one chunk of weighted runs to the cluster. Keyed routing
     /// partitions each run to its item's home worker
     /// (`shard_of(item, P)` — the same hash the in-process keyed
     /// router uses); block routing ships the whole chunk to the next
-    /// worker round-robin.
+    /// live worker round-robin.
+    ///
+    /// A send that kills a worker does not fail the stream: the worker
+    /// is retired, its mass accounted lost, and the call succeeds as
+    /// long as at least one worker survives. Keyed routing drops (and
+    /// accounts) runs homed on dead workers rather than re-routing
+    /// them — re-routing would break the key-disjointness the keyed
+    /// merge bound rests on.
     pub fn send_runs(&mut self, runs: &[(u64, u64)]) -> crate::Result<()> {
         match self.routing {
             ClusterRouting::Block => {
-                let w = self.next;
-                self.next = (self.next + 1) % self.workers.len();
-                self.ingest_mut(w)?.send_runs(runs)
+                let mass: u64 = runs.iter().map(|&(_, w)| w).sum();
+                let w = self.next_live()?;
+                self.next = (w + 1) % self.workers.len();
+                self.workers[w].sent_mass += mass;
+                if let Err(e) = self.send_to(w, |c| c.send_runs(runs)) {
+                    self.retire(w, &e);
+                    self.ensure_some_live()?;
+                }
+                Ok(())
             }
             ClusterRouting::Keyed => {
                 let p = self.workers.len();
@@ -220,18 +421,23 @@ impl ClusterHead {
                 // take/put-back so the staged buffers and the clients
                 // can be borrowed simultaneously.
                 let staged = std::mem::take(&mut self.staged);
-                let mut res = Ok(());
                 for (w, buf) in staged.iter().enumerate() {
                     if buf.is_empty() {
                         continue;
                     }
-                    res = self.ingest_mut(w).and_then(|c| c.send_runs(buf));
-                    if res.is_err() {
-                        break;
+                    let mass: u64 = buf.iter().map(|&(_, wt)| wt).sum();
+                    if !self.workers[w].alive {
+                        // Dead home worker: the key range is lost.
+                        self.mass_lost += mass;
+                        continue;
+                    }
+                    self.workers[w].sent_mass += mass;
+                    if let Err(e) = self.send_to(w, |c| c.send_runs(buf)) {
+                        self.retire(w, &e);
                     }
                 }
                 self.staged = staged;
-                res
+                self.ensure_some_live()
             }
         }
     }
@@ -242,9 +448,14 @@ impl ClusterHead {
     pub fn send_items(&mut self, items: &[u64]) -> crate::Result<()> {
         match self.routing {
             ClusterRouting::Block => {
-                let w = self.next;
-                self.next = (self.next + 1) % self.workers.len();
-                self.ingest_mut(w)?.send_items(items)
+                let w = self.next_live()?;
+                self.next = (w + 1) % self.workers.len();
+                self.workers[w].sent_mass += items.len() as u64;
+                if let Err(e) = self.send_to(w, |c| c.send_items(items)) {
+                    self.retire(w, &e);
+                    self.ensure_some_live()?;
+                }
+                Ok(())
             }
             ClusterRouting::Keyed => {
                 let runs: Vec<(u64, u64)> = items.iter().map(|&i| (i, 1)).collect();
@@ -253,27 +464,96 @@ impl ClusterHead {
         }
     }
 
-    /// Pull a live snapshot from every worker and merge. Workers
-    /// refresh their epoch view on each request, so repeated polls
-    /// converge on the ingested mass once epochs publish.
+    /// The next live slot at or after the round-robin cursor.
+    fn next_live(&mut self) -> crate::Result<usize> {
+        let p = self.workers.len();
+        for step in 0..p {
+            let w = (self.next + step) % p;
+            if self.workers[w].alive {
+                return Ok(w);
+            }
+        }
+        anyhow::bail!("every worker is dead ({} lost items)", self.mass_lost)
+    }
+
+    fn ensure_some_live(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.workers.iter().any(|w| w.alive),
+            "every worker is dead ({} lost items)",
+            self.mass_lost
+        );
+        Ok(())
+    }
+
+    fn send_to(
+        &mut self,
+        w: usize,
+        f: impl FnOnce(&mut IngestClient) -> crate::Result<()>,
+    ) -> crate::Result<()> {
+        let client = self.workers[w]
+            .ingest
+            .as_mut()
+            .ok_or_else(|| anyhow::Error::msg(format!("worker {w} ingest already closed")))?;
+        f(client)
+    }
+
+    /// Pull a live snapshot from every surviving worker and merge.
+    /// Workers refresh their epoch view on each request, so repeated
+    /// polls converge on the ingested mass once epochs publish. Dead
+    /// workers contribute a lost placeholder, so the view reports
+    /// `workers_live`/`workers_total` and flags itself degraded.
+    ///
+    /// A failed fetch closes that snapshot connection and reconnects
+    /// on the next poll; [`MAX_SNAP_FAILURES`] consecutive failures
+    /// (or a reaped child) retire the worker.
     ///
     /// Polls always fetch (that is the staleness probe), but when every
-    /// worker answers the same `(epoch, n, finished)` triple as the
-    /// previous poll, the head skips validation + merge and clones the
-    /// cached [`ClusterView`] instead ([`ClusterHead::poll_cache_stats`]).
+    /// worker answers the same `(epoch, n, finished, alive)` tuple as
+    /// the previous poll, the head skips validation + merge and clones
+    /// the cached [`ClusterView`] instead
+    /// ([`ClusterHead::poll_cache_stats`]).
     pub fn poll(&mut self) -> crate::Result<ClusterView> {
         let routing = self.routing;
-        let mut snaps = Vec::with_capacity(self.workers.len());
-        for (i, w) in self.workers.iter_mut().enumerate() {
-            let snap = w
-                .snap
-                .as_mut()
-                .ok_or_else(|| anyhow::Error::msg(format!("worker {i} already drained")))?
-                .fetch(false)?;
-            snaps.push(snap);
+        let mut snaps: Vec<Option<WireSnapshot>> = Vec::with_capacity(self.workers.len());
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive {
+                snaps.push(None);
+                continue;
+            }
+            // A spawned child that exited is dead no matter how its
+            // last fetch went.
+            if let Some(child) = self.workers[i].child.as_mut() {
+                if let Ok(Some(status)) = child.try_wait() {
+                    self.retire(i, &anyhow::Error::msg(format!("process exited: {status}")));
+                    snaps.push(None);
+                    continue;
+                }
+            }
+            match self.fetch_snapshot(i) {
+                Ok(snap) => {
+                    self.workers[i].snap_failures = 0;
+                    snaps.push(Some(snap));
+                }
+                Err(e) => {
+                    // The stream may be desynced mid-frame: drop the
+                    // connection and reconnect on the next poll.
+                    self.workers[i].snap = None;
+                    self.workers[i].snap_failures += 1;
+                    if self.workers[i].snap_failures >= MAX_SNAP_FAILURES {
+                        self.retire(i, &e);
+                    }
+                    snaps.push(None);
+                }
+            }
         }
-        let key: Vec<(u64, u64, bool)> =
-            snaps.iter().map(|s| (s.epoch, s.n, s.finished)).collect();
+        let key: Vec<(u64, u64, bool, bool)> = snaps
+            .iter()
+            .zip(&self.workers)
+            .map(|(s, w)| match s {
+                Some(s) => (s.epoch, s.n, s.finished, w.alive),
+                None => (0, 0, false, w.alive),
+            })
+            .collect();
         if let Some((cached_key, view)) = &self.poll_cache {
             if *cached_key == key {
                 self.poll_counters.record_hit();
@@ -283,12 +563,30 @@ impl ClusterHead {
         }
         let mut parts = Vec::with_capacity(snaps.len());
         for snap in snaps {
-            parts.push(WorkerSummary::try_from(snap).map_err(anyhow::Error::msg)?);
+            parts.push(match snap {
+                Some(snap) => WorkerSummary::try_from(snap).map_err(anyhow::Error::msg)?,
+                None => WorkerSummary::lost(),
+            });
         }
         let view = ClusterView::build(&parts, routing).map_err(anyhow::Error::msg)?;
         self.poll_counters.record_miss();
         self.poll_cache = Some((key, view.clone()));
         Ok(view)
+    }
+
+    /// One snapshot fetch from worker `i`, reconnecting first if the
+    /// previous poll dropped the connection.
+    fn fetch_snapshot(&mut self, i: usize) -> crate::Result<WireSnapshot> {
+        if self.workers[i].snap.is_none() {
+            let snap =
+                SnapshotClient::connect_with_deadline(&self.workers[i].endpoint, self.deadline)?;
+            self.workers[i].snap = Some(snap);
+        }
+        self.workers[i]
+            .snap
+            .as_mut()
+            .expect("just reconnected")
+            .fetch(false)
     }
 
     /// Poll-cache accounting: hits are polls whose worker snapshots
@@ -297,39 +595,113 @@ impl ClusterHead {
         self.poll_counters.stats()
     }
 
-    /// Drain the cluster: flush and close every ingest connection,
-    /// issue `SummaryRequest { drain: true }` to every worker, merge
-    /// the final snapshots, and reap spawned children — asserting
-    /// nothing ingested was lost (each worker's final snapshot is its
-    /// drained coordinator state).
+    /// Drain the cluster: flush and close every surviving ingest
+    /// connection, issue `SummaryRequest { drain: true }` to every
+    /// surviving worker, merge the final snapshots, and reap spawned
+    /// children. Workers that died (before or during the drain) are
+    /// recorded with `live: false` and their mass in `mass_lost`; the
+    /// merged view covers the survivors and is flagged degraded.
+    /// Conservation: `view.n() + mass_lost` = items sent.
     pub fn drain(mut self) -> crate::Result<ClusterDrain> {
         let routing = self.routing;
-        let mut exits = Vec::with_capacity(self.workers.len());
         let mut parts = Vec::with_capacity(self.workers.len());
-        for (i, w) in self.workers.iter_mut().enumerate() {
-            if let Some(ingest) = w.ingest.take() {
-                ingest.finish()?;
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive {
+                parts.push(None);
+                continue;
             }
-            let snap = w
-                .snap
-                .take()
-                .ok_or_else(|| anyhow::Error::msg(format!("worker {i} already drained")))?
-                .drain()?;
-            let status = match w.child.take() {
-                Some(mut child) => Some(child.wait()?),
-                None => None,
-            };
-            parts.push(WorkerSummary::try_from(snap.clone()).map_err(anyhow::Error::msg)?);
-            exits.push(WorkerExit { endpoint: w.endpoint.clone(), snapshot: snap, status });
+            let drained: crate::Result<WireSnapshot> = (|| {
+                if let Some(ingest) = self.workers[i].ingest.take() {
+                    ingest.finish()?;
+                }
+                self.workers[i]
+                    .snap
+                    .take()
+                    .ok_or_else(|| anyhow::Error::msg(format!("worker {i} already drained")))?
+                    .drain()
+            })();
+            match drained {
+                Ok(snap) => {
+                    let status = match self.workers[i].child.take() {
+                        Some(mut child) => Some(child.wait()?),
+                        None => None,
+                    };
+                    self.workers[i].status = status;
+                    parts.push(Some(snap));
+                }
+                Err(e) => {
+                    self.retire(i, &e);
+                    // Restart supervision may have revived the slot,
+                    // but a fresh worker has nothing to contribute to
+                    // this final merge.
+                    parts.push(None);
+                }
+            }
         }
-        let view = ClusterView::build(&parts, routing).map_err(anyhow::Error::msg)?;
-        Ok(ClusterDrain { view, workers: exits })
+        let mut exits = Vec::with_capacity(self.workers.len());
+        let mut summaries = Vec::with_capacity(self.workers.len());
+        for (w, snap) in self.workers.iter_mut().zip(&parts) {
+            summaries.push(match snap {
+                Some(snap) => {
+                    WorkerSummary::try_from(snap.clone()).map_err(anyhow::Error::msg)?
+                }
+                None => WorkerSummary::lost(),
+            });
+            exits.push(WorkerExit {
+                endpoint: w.endpoint.clone(),
+                snapshot: snap.clone(),
+                status: w.status.take(),
+                live: snap.is_some(),
+            });
+        }
+        let view = ClusterView::build(&summaries, routing).map_err(anyhow::Error::msg)?;
+        Ok(ClusterDrain { view, workers: exits, mass_lost: self.mass_lost })
     }
+}
 
-    fn ingest_mut(&mut self, w: usize) -> crate::Result<&mut IngestClient> {
-        self.workers[w]
-            .ingest
-            .as_mut()
-            .ok_or_else(|| anyhow::Error::msg(format!("worker {w} ingest already closed")))
-    }
+/// Exec one worker process listening on `sock`.
+fn spawn_worker(
+    program: &Path,
+    sock: &Path,
+    worker_args: &[String],
+    i: usize,
+) -> crate::Result<Child> {
+    let _ = std::fs::remove_file(sock);
+    Command::new(program)
+        .arg("cluster")
+        .arg("--worker")
+        .arg("--listen")
+        .arg(format!("unix:{}", sock.display()))
+        .args(worker_args)
+        .stdin(Stdio::null())
+        .spawn()
+        .map_err(|e| anyhow::Error::msg(format!("spawning worker {i}: {e}")))
+}
+
+/// Wait for a just-spawned worker to accept, with capped-exponential
+/// backoff between probes, failing fast if the child already died.
+/// The worker binds before it prints anything, so readiness is simply
+/// "the socket accepts".
+fn await_worker(
+    endpoint: &Endpoint,
+    child: &mut Child,
+    deadline: Duration,
+    i: usize,
+) -> crate::Result<(IngestClient, SnapshotClient)> {
+    let give_up = Instant::now() + Duration::from_secs(10);
+    let mut backoff = Backoff::new(Duration::from_millis(5), Duration::from_millis(200), i as u64);
+    let ingest = loop {
+        match IngestClient::connect_with_deadline(endpoint, deadline) {
+            Ok(c) => break c,
+            Err(e) => {
+                if let Some(status) = child.try_wait().ok().flatten() {
+                    anyhow::bail!("worker {i} exited before accepting: {status}");
+                }
+                anyhow::ensure!(Instant::now() < give_up, "worker {i} never came up: {e}");
+                backoff.sleep();
+            }
+        }
+    };
+    let snap = SnapshotClient::connect_with_deadline(endpoint, deadline)?;
+    Ok((ingest, snap))
 }

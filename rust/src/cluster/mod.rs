@@ -35,7 +35,7 @@ pub mod head;
 pub mod snapshot;
 pub mod worker;
 
-pub use head::{ClusterDrain, ClusterHead, WorkerExit};
+pub use head::{ClusterDrain, ClusterHead, Supervision, WorkerExit, MAX_SNAP_FAILURES};
 pub use snapshot::{
     flat_combine, tree_combine, ClusterError, ClusterRouting, ClusterView, SnapshotError,
     WorkerSummary,
@@ -108,10 +108,13 @@ mod tests {
 
         let drained = head.drain().unwrap();
         assert_eq!(drained.view.n(), total, "no mass lost across processes");
+        assert_eq!(drained.mass_lost, 0);
         assert!(drained.view.all_finished());
+        assert!(!drained.view.degraded());
         assert_eq!(drained.workers.len(), 2);
         for w in &drained.workers {
-            assert!(w.snapshot.finished);
+            assert!(w.live);
+            assert!(w.snapshot.as_ref().expect("live workers carry a snapshot").finished);
             assert!(w.status.is_none(), "connected (not spawned) workers have no status");
         }
         // Under-full everywhere → every estimate is exact.

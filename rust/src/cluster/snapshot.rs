@@ -130,6 +130,10 @@ pub struct WorkerSummary {
     pub disjoint: bool,
     /// Whether this is the worker's *final* (drained) state.
     pub finished: bool,
+    /// Whether the worker was alive to contribute this state. Dead
+    /// workers are represented by [`WorkerSummary::lost`] placeholders
+    /// so the merged view can report the full slot count.
+    pub live: bool,
 }
 
 impl WorkerSummary {
@@ -137,6 +141,24 @@ impl WorkerSummary {
     /// plus exact hot mass).
     pub fn total_mass(&self) -> u64 {
         self.summary.n() + self.hot.iter().map(|c| c.count).sum::<u64>()
+    }
+
+    /// The placeholder for a worker that died: contributes nothing and
+    /// is skipped by the merge (including the block equal-budget
+    /// check), but keeps the slot visible so the merged view can
+    /// report `workers_live` / `workers_total` and flag itself
+    /// [`degraded`](ClusterView::degraded).
+    pub fn lost() -> WorkerSummary {
+        WorkerSummary {
+            epoch: 0,
+            summary: Summary::new(1, 0, Vec::new()),
+            hot: Vec::new(),
+            epsilon: 0,
+            min_count: 0,
+            disjoint: false,
+            finished: false,
+            live: false,
+        }
     }
 }
 
@@ -175,6 +197,7 @@ impl TryFrom<WireSnapshot> for WorkerSummary {
             min_count: w.min_count,
             disjoint: w.disjoint,
             finished: w.finished,
+            live: true,
         })
     }
 }
@@ -241,49 +264,60 @@ pub struct ClusterView {
     routing: ClusterRouting,
     epsilon: u64,
     unmonitored: u64,
-    workers: usize,
+    workers_total: usize,
+    workers_live: usize,
     finished: bool,
     max_epoch: u64,
 }
 
 impl ClusterView {
-    /// Merge validated worker summaries under `routing`.
+    /// Merge validated worker summaries under `routing`. Slots marked
+    /// dead ([`WorkerSummary::lost`]) are skipped by the merge, the ε
+    /// accounting, and the block equal-budget check — the view covers
+    /// the survivors only and says so ([`ClusterView::degraded`],
+    /// [`ClusterView::workers_live`]). Zero survivors is
+    /// [`ClusterError::NoWorkers`].
     ///
     /// Keyed: concatenate ([`merge_disjoint`] — debug builds assert the
-    /// caller really did key-partition), `ε = maxᵢ εᵢ`. Block:
-    /// recursive-halving [`tree_combine`] (equal `k` required),
-    /// `ε = Σᵢ εᵢ`. Either way the exact hot partials are summed per
-    /// item across workers and absorbed once at the top, with the
-    /// summed history bounds.
+    /// caller really did key-partition), `ε = maxᵢ εᵢ` over live
+    /// workers. Block: recursive-halving [`tree_combine`] (equal `k`
+    /// required), `ε = Σᵢ εᵢ` over live workers — survivor-only sums
+    /// are sound because the merged state contains survivor substreams
+    /// only; the dead workers' mass is *absent*, not approximated.
+    /// Either way the exact hot partials are summed per item across
+    /// live workers and absorbed once at the top, with the summed
+    /// history bounds.
     pub fn build(
         workers: &[WorkerSummary],
         routing: ClusterRouting,
     ) -> Result<ClusterView, ClusterError> {
-        if workers.is_empty() {
+        let live: Vec<(usize, &WorkerSummary)> =
+            workers.iter().enumerate().filter(|(_, w)| w.live).collect();
+        if live.is_empty() {
             return Err(ClusterError::NoWorkers);
         }
-        let leaves: Vec<&Summary> = workers.iter().map(|w| &w.summary).collect();
+        let leaves: Vec<&Summary> = live.iter().map(|(_, w)| &w.summary).collect();
         let (ss, epsilon, unmonitored) = match routing {
             ClusterRouting::Keyed => (
                 merge_disjoint(&leaves),
-                workers.iter().map(|w| w.epsilon).max().unwrap_or(0),
-                workers.iter().map(|w| w.min_count).max().unwrap_or(0),
+                live.iter().map(|(_, w)| w.epsilon).max().unwrap_or(0),
+                live.iter().map(|(_, w)| w.min_count).max().unwrap_or(0),
             ),
             ClusterRouting::Block => {
                 let expected = leaves[0].k();
-                for (i, l) in leaves.iter().enumerate() {
+                for ((i, _), l) in live.iter().zip(&leaves) {
                     if l.k() != expected {
                         return Err(ClusterError::MismatchedBudget {
                             expected,
                             got: l.k(),
-                            worker: i,
+                            worker: *i,
                         });
                     }
                 }
                 (
                     tree_combine(&leaves),
-                    workers.iter().map(|w| w.epsilon).sum(),
-                    workers.iter().map(|w| w.min_count).sum(),
+                    live.iter().map(|(_, w)| w.epsilon).sum(),
+                    live.iter().map(|(_, w)| w.min_count).sum(),
                 )
             }
         };
@@ -294,7 +328,7 @@ impl ClusterView {
         // the history *it* may have evicted.
         let mut extras: Vec<(u64, u64)> = Vec::new();
         let mut bounds: HashMap<u64, u64> = HashMap::new();
-        for w in workers {
+        for (_, w) in &live {
             for c in &w.hot {
                 match extras.iter_mut().find(|(item, _)| *item == c.item) {
                     Some((_, weight)) => *weight += c.count,
@@ -314,9 +348,10 @@ impl ClusterView {
             routing,
             epsilon,
             unmonitored,
-            workers: workers.len(),
-            finished: workers.iter().all(|w| w.finished),
-            max_epoch: workers.iter().map(|w| w.epoch).max().unwrap_or(0),
+            workers_total: workers.len(),
+            workers_live: live.len(),
+            finished: live.iter().all(|(_, w)| w.finished),
+            max_epoch: live.iter().map(|(_, w)| w.epoch).max().unwrap_or(0),
         })
     }
 
@@ -342,12 +377,30 @@ impl ClusterView {
         self.routing
     }
 
-    /// Number of workers merged into this view.
+    /// Number of live workers merged into this view.
     pub fn workers(&self) -> usize {
-        self.workers
+        self.workers_live
     }
 
-    /// Whether every worker contributed its *final* (drained) state.
+    /// Worker slots the cluster was built with, live and dead.
+    pub fn workers_total(&self) -> usize {
+        self.workers_total
+    }
+
+    /// Workers that actually contributed (alias of
+    /// [`ClusterView::workers`], named for degraded-mode reporting).
+    pub fn workers_live(&self) -> usize {
+        self.workers_live
+    }
+
+    /// Whether any worker slot was dead when this view was merged: the
+    /// view covers the surviving substreams only.
+    pub fn degraded(&self) -> bool {
+        self.workers_live < self.workers_total
+    }
+
+    /// Whether every *live* worker contributed its *final* (drained)
+    /// state.
     pub fn all_finished(&self) -> bool {
         self.finished
     }
@@ -540,6 +593,57 @@ mod tests {
         let p = view.point(99);
         assert!(!p.monitored);
         assert_eq!(p.estimate, 14, "block unmonitored bound is the sum of worker bounds");
+    }
+
+    /// Degraded merges: lost slots are skipped but stay accounted.
+    /// Same workers as the keyed hand trace plus a dead third slot —
+    /// every estimate and the survivor-only ε must match the 2-worker
+    /// trace, with the view flagged degraded.
+    #[test]
+    fn degraded_merge_covers_survivors_and_says_so() {
+        let w0 = WorkerSummary::try_from(wire(
+            100,
+            10,
+            &[(4, 30, 0), (2, 60, 4)],
+            &[(8, 25, 4)],
+        ))
+        .unwrap();
+        let w1 = WorkerSummary::try_from(wire(40, 10, &[(5, 10, 0), (3, 25, 2)], &[])).unwrap();
+
+        let full = ClusterView::build(&[w0.clone(), w1.clone()], ClusterRouting::Keyed).unwrap();
+        assert!(!full.degraded());
+        assert_eq!(full.workers_total(), 2);
+
+        let view = ClusterView::build(
+            &[w0.clone(), w1.clone(), WorkerSummary::lost()],
+            ClusterRouting::Keyed,
+        )
+        .unwrap();
+        assert!(view.degraded());
+        assert_eq!(view.workers_total(), 3);
+        assert_eq!(view.workers_live(), 2);
+        assert_eq!(view.workers(), 2);
+        assert_eq!(view.n(), full.n(), "dead slots contribute no mass");
+        assert_eq!(view.epsilon(), full.epsilon(), "ε is survivor-only (max over live)");
+        assert_eq!(view.top_k(5), full.top_k(5));
+        assert_eq!(view.point(8).estimate, 29);
+
+        // Block routing: the dead slot must also be exempt from the
+        // equal-budget check (its placeholder k=1 would trip it), and
+        // ε sums over survivors only.
+        let b0 = WorkerSummary::try_from(wire(20, 2, &[(2, 8, 0), (1, 12, 0)], &[])).unwrap();
+        let b1 = WorkerSummary::try_from(wire(15, 2, &[(3, 6, 0), (1, 9, 0)], &[])).unwrap();
+        let view =
+            ClusterView::build(&[b0, WorkerSummary::lost(), b1], ClusterRouting::Block).unwrap();
+        assert!(view.degraded());
+        assert_eq!(view.n(), 35);
+        assert_eq!(view.epsilon(), 17, "Σ over live εᵢ only");
+
+        // Zero survivors cannot produce a view.
+        assert_eq!(
+            ClusterView::build(&[WorkerSummary::lost()], ClusterRouting::Keyed).unwrap_err(),
+            ClusterError::NoWorkers
+        );
     }
 
     #[test]

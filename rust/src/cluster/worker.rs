@@ -76,5 +76,11 @@ mod tests {
         assert_eq!(result.stats.items, 100);
         assert_eq!(stats.worker_connections, 1);
         assert_eq!(result.summary.counters().iter().find(|c| c.item == 3).unwrap().count, 70);
+        // A cleanly drained worker unlinks its own listener socket —
+        // the same invariant head-side supervision enforces for
+        // workers that die (no stale socket files either way).
+        if let Endpoint::Unix(path) = &endpoint {
+            assert!(!path.exists(), "drained worker left its socket file behind");
+        }
     }
 }

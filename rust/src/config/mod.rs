@@ -63,6 +63,11 @@ pub struct RunConfig {
     /// Epoch-versioned snapshot caching on the read path (default on;
     /// `--no-snapshot-cache` benchmarks the uncached baseline).
     pub snapshot_cache: bool,
+    /// Per-operation wire deadline, in milliseconds: serve-layer
+    /// clients bound every blocking read/write by it, servers use it
+    /// as the per-write deadline, cluster heads as the snapshot/ack
+    /// deadline. No blocking socket call outlives it.
+    pub deadline_ms: u64,
     /// Run the PJRT offline verification afterwards.
     pub verify: bool,
 }
@@ -90,6 +95,7 @@ impl Default for RunConfig {
             delta_ring: 0,
             window_epochs: 8,
             snapshot_cache: true,
+            deadline_ms: 30_000,
             verify: false,
         }
     }
@@ -127,6 +133,7 @@ impl RunConfig {
         if let Some(v) = get_u("delta_ring") { c.delta_ring = v as usize; }
         if let Some(v) = get_u("window_epochs") { c.window_epochs = v as usize; }
         if let Some(v) = j.get("snapshot_cache").and_then(|v| v.as_bool()) { c.snapshot_cache = v; }
+        if let Some(v) = get_u("deadline_ms") { c.deadline_ms = v; }
         if let Some(v) = j.get("verify").and_then(|v| v.as_bool()) { c.verify = v; }
         c.validate()?;
         Ok(c)
@@ -142,6 +149,7 @@ impl RunConfig {
         anyhow::ensure!(self.threads >= 1, "threads must be positive");
         anyhow::ensure!(self.chunk_len >= 1, "chunk_len must be positive");
         anyhow::ensure!(self.window_epochs >= 1, "window_epochs must be positive");
+        anyhow::ensure!(self.deadline_ms >= 1, "deadline_ms must be positive");
         Ok(())
     }
 
@@ -153,12 +161,12 @@ impl RunConfig {
               \"queue_depth\": {}, \"routing\": \"{}\", \"transport\": \"{}\",\n \
               \"structure\": \"{}\", \"batch_ingest\": {}, \"epoch_items\": {},\n \
               \"delta_ring\": {}, \"window_epochs\": {}, \"snapshot_cache\": {},\n \
-              \"verify\": {}}}",
+              \"deadline_ms\": {}, \"verify\": {}}}",
             self.n, self.universe, self.skew, self.shift, self.seed, self.k,
             self.k_majority, self.threads, self.chunk_len, self.queue_depth,
             self.routing, self.transport, self.structure, self.batch_ingest,
             self.epoch_items, self.delta_ring, self.window_epochs,
-            self.snapshot_cache, self.verify
+            self.snapshot_cache, self.deadline_ms, self.verify
         )
     }
 
@@ -287,6 +295,23 @@ mod tests {
         assert_eq!(c, c2);
         // window_epochs must be positive.
         std::fs::write(&p, r#"{"window_epochs": 0}"#).unwrap();
+        assert!(RunConfig::from_json_file(&p).is_err());
+    }
+
+    #[test]
+    fn deadline_ms_defaults_roundtrips_and_validates() {
+        let c = RunConfig::default();
+        assert_eq!(c.deadline_ms, 30_000, "deadlines are on by default");
+        let d = TempDir::new().unwrap();
+        let p = d.path().join("cfg.json");
+        std::fs::write(&p, r#"{"deadline_ms": 1500}"#).unwrap();
+        let c = RunConfig::from_json_file(&p).unwrap();
+        assert_eq!(c.deadline_ms, 1500);
+        std::fs::write(&p, c.to_json()).unwrap();
+        assert_eq!(RunConfig::from_json_file(&p).unwrap(), c);
+        // A zero deadline would mean every wire operation times out
+        // immediately — reject it at load time.
+        std::fs::write(&p, r#"{"deadline_ms": 0}"#).unwrap();
         assert!(RunConfig::from_json_file(&p).is_err());
     }
 

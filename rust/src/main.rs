@@ -24,8 +24,16 @@
 //!   `--workers a,b,...` connects to running ones; the head partitions
 //!   a generated stream across them, polls their summary snapshots,
 //!   and reports the merged cluster-scope top-k / k-majority with the
-//!   routing-dependent ε bound. `--worker --listen E` is the worker
-//!   side (spawned by the head, or run by hand on remote hosts).
+//!   routing-dependent ε bound. Workers that die mid-run are retired
+//!   (`--supervision quarantine`, the default) or respawned
+//!   (`--supervision restart`); the merged view is flagged degraded
+//!   and lost mass is accounted, so the head still exits cleanly.
+//!   `--worker --listen E` is the worker side (spawned by the head, or
+//!   run by hand on remote hosts).
+//! * `faultgen` — deterministic fault injection against an in-process
+//!   server: a seeded `FaultLine` proxy drops, delays, truncates,
+//!   resets or scrambles the Nth wire frame while a deadline'd client
+//!   streams through it; reports how every layer observed the fault.
 //! * `bench` — machine-readable perf records: `--suite window` (delta
 //!   ring overhead, landmark vs windowed latency), `--suite transport`
 //!   (ring vs mpsc × routing), `--suite summary` (heap vs bucket vs
@@ -75,16 +83,23 @@ USAGE:
                [--epoch-items E] [--delta-ring R] [--window W]
                [--no-snapshot-cache]
                [--query-threads QT] [--max-ingest MI] [--duration-s S]
+               [--deadline-ms MS] [--hello-deadline-ms MS]
   pss loadgen  [--connect unix:/path|host:port] [--clients N] [--items M]
                [--chunk-len C] [--universe U] [--skew R] [--seed S]
                [--runs] [--inflight F] [--top M] [--window W] [--shutdown]
+               [--deadline-ms MS]
   pss cluster  [--processes P | --workers ep1,ep2,...]
                [--cluster-routing keyed|block] [--n N] [--universe U]
                [--skew R] [--seed S] [--chunk-len C] [--k K] [--threads T]
                [--epoch-items E] [--interval-ms I] [--top M]
+               [--supervision quarantine|restart] [--deadline-ms MS]
   pss cluster  --worker --listen unix:/path|host:port [--k K] [--threads T]
                [--epoch-items E] [--routing rr|ll|keyed|keyed-adaptive]
                [--structure heap|bucket|compact]
+  pss faultgen [--fault drop|delay|truncate|reset|garbage] [--at-frame F]
+               [--direction c2s|s2c] [--delay-ms MS] [--truncate-bytes B]
+               [--items N] [--chunk-len C] [--inflight F] [--seed S]
+               [--deadline-ms MS] [--k K] [--threads T] [--epoch-items E]
   pss bench    [--suite window|transport|summary|routing|cluster|query]
                [--n N] [--k K]
                [--threads T] [--processes P] [--window W] [--delta-ring R]
@@ -111,6 +126,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "cluster" => cmd_cluster(&args),
+        "faultgen" => cmd_faultgen(&args),
         "bench" => cmd_bench(&args),
         "repro" => cmd_repro(&args),
         "verify" => cmd_verify(&args),
@@ -191,6 +207,7 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
         cfg.delta_ring = cfg.delta_ring.max(cfg.window_epochs.saturating_mul(2));
     }
     if let Some(v) = args.get("delta-ring") { cfg.delta_ring = v.parse()?; }
+    if let Some(v) = args.get("deadline-ms") { cfg.deadline_ms = v.parse()?; }
     if args.has("no-snapshot-cache") { cfg.snapshot_cache = false; }
     if args.has("verify") { cfg.verify = true; }
     cfg.validate()?;
@@ -479,6 +496,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let query_threads: usize = args.get_or("query-threads", 2).map_err(anyhow::Error::msg)?;
     let max_ingest: usize = args.get_or("max-ingest", 64).map_err(anyhow::Error::msg)?;
     let duration_s: u64 = args.get_or("duration-s", 0).map_err(anyhow::Error::msg)?;
+    let hello_deadline_ms: u64 =
+        args.get_or("hello-deadline-ms", 5_000).map_err(anyhow::Error::msg)?;
 
     let server = Server::bind(
         &endpoint,
@@ -486,6 +505,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             coordinator: cfg.coordinator(),
             query_threads,
             max_ingest,
+            hello_deadline: std::time::Duration::from_millis(hello_deadline_ms.max(1)),
+            write_deadline: std::time::Duration::from_millis(cfg.deadline_ms),
             ..Default::default()
         },
     )?;
@@ -568,6 +589,9 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         seed: args.get_or("seed", 42).map_err(anyhow::Error::msg)?,
         runs: args.has("runs"),
         max_inflight: args.get_or("inflight", 4).map_err(anyhow::Error::msg)?,
+        deadline: std::time::Duration::from_millis(
+            args.get_or("deadline-ms", 30_000u64).map_err(anyhow::Error::msg)?.max(1),
+        ),
     };
     let top: usize = args.get_or("top", 10).map_err(anyhow::Error::msg)?;
     let window: u32 = args.get_or("window", 0).map_err(anyhow::Error::msg)?;
@@ -659,7 +683,7 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
 /// polls live merged views while streaming, then drains every worker
 /// and reports the cluster-scope top-k / k-majority.
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
-    use pss::cluster::{run_worker, ClusterHead, ClusterRouting};
+    use pss::cluster::{run_worker, ClusterHead, ClusterRouting, Supervision};
     use pss::serve::{Endpoint, ServeConfig};
 
     if args.has("worker") {
@@ -679,6 +703,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             ServeConfig {
                 coordinator: cfg.coordinator(),
                 query_threads,
+                write_deadline: std::time::Duration::from_millis(cfg.deadline_ms),
                 ..Default::default()
             },
             |ep| {
@@ -708,8 +733,14 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let top: usize = args.get_or("top", 10).map_err(anyhow::Error::msg)?;
     let interval_ms: u64 = args.get_or("interval-ms", 500).map_err(anyhow::Error::msg)?;
     let k_majority: u64 = args.get_or("k-majority", 1000).map_err(anyhow::Error::msg)?;
+    let deadline_ms: u64 = args.get_or("deadline-ms", 30_000u64).map_err(anyhow::Error::msg)?;
+    let supervision = match args.get("supervision").unwrap_or("quarantine") {
+        "quarantine" => Supervision::Quarantine,
+        "restart" => Supervision::Restart,
+        other => anyhow::bail!("unknown --supervision '{other}' (quarantine|restart)"),
+    };
 
-    let mut head = if let Some(list) = args.get("workers") {
+    let head = if let Some(list) = args.get("workers") {
         let endpoints: Vec<Endpoint> = list
             .split(',')
             .map(|s| s.trim().parse())
@@ -723,9 +754,16 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         // `pss cluster --k 4000 --threads 2` means per-worker sessions
         // of that shape.
         let mut worker_args: Vec<String> = Vec::new();
-        for flag in
-            ["k", "k-majority", "threads", "epoch-items", "routing", "transport", "structure"]
-        {
+        for flag in [
+            "k",
+            "k-majority",
+            "threads",
+            "epoch-items",
+            "routing",
+            "transport",
+            "structure",
+            "deadline-ms",
+        ] {
             if let Some(v) = args.get(flag) {
                 worker_args.push(format!("--{flag}"));
                 worker_args.push(v.to_string());
@@ -740,6 +778,9 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         );
         ClusterHead::spawn_local(&exe, &dir, processes, routing, &worker_args)?
     };
+    let mut head = head
+        .with_supervision(supervision)
+        .with_deadline(std::time::Duration::from_millis(deadline_ms.max(1)));
 
     let source: Box<dyn ItemSource> = if skew > 0.0 {
         Box::new(GeneratedSource::zipf_mandelbrot(n, universe, skew, 0.0, seed))
@@ -761,8 +802,17 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             let view = head.poll()?;
             let line: Vec<String> =
                 view.top_k(top).iter().map(|c| format!("{}:{}", c.item, c.count)).collect();
+            let health = if view.degraded() {
+                format!(
+                    " degraded=true workers_live={} workers_total={}",
+                    view.workers_live(),
+                    view.workers_total(),
+                )
+            } else {
+                String::new()
+            };
             println!(
-                "[{:6.2}s] N={} ({}% of sent) ε={} top{top}=[{}]",
+                "[{:6.2}s] N={} ({}% of sent) ε={} top{top}=[{}]{health}",
                 t0.elapsed().as_secs_f64(),
                 view.n(),
                 view.n() * 100 / pos.max(1),
@@ -775,10 +825,14 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     println!("draining {} workers ...", head.processes());
     let drained = head.drain()?;
     let elapsed = t0.elapsed().as_secs_f64();
+    // Every item is accounted for exactly once, dead workers included:
+    // what the merged view covers plus what died with retired workers
+    // must equal what was sent.
     anyhow::ensure!(
-        drained.view.n() == n,
-        "mass lost across processes: merged N={} of {n} sent",
-        drained.view.n()
+        drained.view.n() + drained.mass_lost == n,
+        "mass unaccounted across processes: merged N={} + lost {} of {n} sent",
+        drained.view.n(),
+        drained.mass_lost,
     );
     println!(
         "cluster drained {n} items in {elapsed:.3}s ({:.2} M items/s) across {} workers — merged N={}, ε={} ({routing} routing)",
@@ -787,6 +841,14 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         drained.view.n(),
         drained.view.epsilon(),
     );
+    if drained.view.degraded() {
+        println!(
+            "degraded=true workers_live={} workers_total={} mass_lost={} — merged view covers the survivors only; ε holds over their streams",
+            drained.view.workers_live(),
+            drained.view.workers_total(),
+            drained.mass_lost,
+        );
+    }
     for c in drained.view.top_k(top) {
         println!("  item {:>12}  f̂={:<12} ε≤{}", c.item, c.count, c.err);
     }
@@ -801,19 +863,143 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         let status = match &w.status {
             Some(s) if s.success() => "exit 0".to_string(),
             Some(s) => format!("EXIT {s}"),
-            None => "remote".to_string(),
+            None if w.live => "remote".to_string(),
+            None => "lost".to_string(),
         };
-        println!(
-            "  worker {}: mass={} epoch={} [{status}]",
-            w.endpoint,
-            w.snapshot.total_mass(),
-            w.snapshot.epoch,
-        );
+        match &w.snapshot {
+            Some(snap) => println!(
+                "  worker {}: mass={} epoch={} [{status}]",
+                w.endpoint,
+                snap.total_mass(),
+                snap.epoch,
+            ),
+            None => println!("  worker {}: retired, no final snapshot [{status}]", w.endpoint),
+        }
     }
-    if let Some(w) = drained.workers.iter().find(|w| w.status.as_ref().is_some_and(|s| !s.success()))
+    // A worker the head already retired (crashed, killed, quarantined)
+    // is expected to carry a non-zero exit status — that's the failure
+    // the degraded drain just absorbed. Only a worker that drained as
+    // live and *then* exited abnormally is a real error.
+    if let Some(w) = drained
+        .workers
+        .iter()
+        .find(|w| w.live && w.status.as_ref().is_some_and(|s| !s.success()))
     {
         anyhow::bail!("worker {} exited abnormally", w.endpoint);
     }
+    Ok(())
+}
+
+/// `pss faultgen` — deterministic fault injection against a live
+/// in-process server: bind a `pss serve` session, put a seeded
+/// `FaultLine` proxy in front of it, stream a generated workload
+/// through the proxy with a deadline'd ingest client, and report how
+/// every layer observed the injected fault — the client's typed error,
+/// the server's protocol-error and deadline-expiration counters, and
+/// the proxy's own fault accounting. The same fault plans drive the
+/// robustness tests; this mode reproduces them from the shell.
+fn cmd_faultgen(args: &Args) -> anyhow::Result<()> {
+    use pss::serve::{
+        Direction, Endpoint, FaultAction, FaultLine, FaultPlan, IngestClient, QueryClient,
+        ServeConfig, Server,
+    };
+
+    let cfg = load_config(args)?;
+    anyhow::ensure!(
+        cfg.epoch_items > 0,
+        "faultgen queries live snapshots; --epoch-items must be > 0"
+    );
+    let fault = args.get("fault").unwrap_or("drop");
+    let at_frame: u64 = args.get_or("at-frame", 3).map_err(anyhow::Error::msg)?;
+    let direction: Direction =
+        args.get_or("direction", Direction::ClientToServer).map_err(anyhow::Error::msg)?;
+    let delay_ms: u64 = args.get_or("delay-ms", 200).map_err(anyhow::Error::msg)?;
+    let truncate_bytes: usize = args.get_or("truncate-bytes", 4).map_err(anyhow::Error::msg)?;
+    let items: u64 = args.get_or("items", 100_000).map_err(anyhow::Error::msg)?;
+    let chunk_len: usize = args.get_or("chunk-len", 4096).map_err(anyhow::Error::msg)?;
+    let inflight: usize = args.get_or("inflight", 4).map_err(anyhow::Error::msg)?;
+    // Snappy default: a dropped ack should surface in seconds, not the
+    // serve-layer's 30s production default. --deadline-ms overrides.
+    let deadline = std::time::Duration::from_millis(
+        args.get_or("deadline-ms", 2_000u64).map_err(anyhow::Error::msg)?.max(1),
+    );
+    let action = match fault {
+        "drop" => FaultAction::Drop,
+        "delay" => FaultAction::Delay(std::time::Duration::from_millis(delay_ms)),
+        "truncate" => FaultAction::Truncate(truncate_bytes),
+        "reset" => FaultAction::Reset,
+        "garbage" => FaultAction::Garbage,
+        other => anyhow::bail!("unknown --fault '{other}' (drop|delay|truncate|reset|garbage)"),
+    };
+
+    let listen: Endpoint = "127.0.0.1:0".parse().map_err(anyhow::Error::msg)?;
+    let server = Server::bind(
+        &listen,
+        ServeConfig {
+            coordinator: cfg.coordinator(),
+            query_threads: 1,
+            write_deadline: deadline,
+            ..Default::default()
+        },
+    )?;
+    let upstream = server.endpoint().clone();
+    let plan = FaultPlan::single(direction, at_frame, action);
+    let proxy = FaultLine::spawn(&listen, &upstream, plan, cfg.seed)?;
+    println!(
+        "faultgen: {fault} on {direction} frame #{at_frame} (seed {}) — client → {} → {upstream}, deadline {deadline:?}",
+        cfg.seed,
+        proxy.endpoint(),
+    );
+
+    let source: Box<dyn ItemSource> = if cfg.skew > 0.0 {
+        Box::new(GeneratedSource::zipf_mandelbrot(items, cfg.universe, cfg.skew, cfg.shift, cfg.seed))
+    } else {
+        Box::new(GeneratedSource::uniform(items, cfg.universe, cfg.seed))
+    };
+    let t0 = std::time::Instant::now();
+    let client = IngestClient::connect_with_deadline(proxy.endpoint(), deadline)?
+        .with_inflight(inflight);
+    let mut buf = vec![0u64; chunk_len];
+    let mut pos = 0u64;
+    let outcome = (|| -> anyhow::Result<(u64, u64)> {
+        let mut client = client;
+        while pos < items {
+            let take = ((items - pos) as usize).min(chunk_len);
+            source.fill(pos, &mut buf[..take]);
+            client.send_items(&buf[..take])?;
+            pos += take as u64;
+        }
+        let (frames, acked, _latency) = client.finish()?;
+        Ok((frames, acked))
+    })();
+    match &outcome {
+        Ok((frames, acked)) => println!(
+            "ingest survived the fault: {frames} frames sent, {acked} of {items} items acked in {:.3}s",
+            t0.elapsed().as_secs_f64(),
+        ),
+        Err(e) => println!(
+            "ingest failed as injected after {pos} of {items} items sent ({:.3}s): {e:#}",
+            t0.elapsed().as_secs_f64(),
+        ),
+    }
+
+    // Ask the server what it saw — directly, not through the proxy.
+    let mut q = QueryClient::connect_with_deadline(&upstream, deadline)?;
+    let s = q.stats()?;
+    println!(
+        "server saw: {} items in {} chunks, {} ingest connections, {} protocol errors, {} deadline expirations",
+        s.items, s.chunks, s.ingest_connections, s.proto_errors, s.deadline_expirations,
+    );
+    q.shutdown_server()?;
+    drop(q);
+    server.wait_shutdown(Some(std::time::Duration::from_secs(10)));
+    let (result, stats) = server.finish();
+    let fstats = proxy.finish();
+    println!("proxy injected: {fstats}");
+    println!(
+        "server drained {} items; {} protocol errors, {} deadline expirations total",
+        result.stats.items, stats.proto_errors, stats.deadline_expirations,
+    );
     Ok(())
 }
 

@@ -1,0 +1,129 @@
+//! Wait-free counters for the fault-injection proxy
+//! ([`FaultLine`](crate::serve::FaultLine)).
+//!
+//! Same discipline as [`CacheCounters`](super::CacheCounters): relaxed
+//! `fetch_add`s shared behind an `Arc` by every proxy connection, read
+//! as a plain-value snapshot when the harness reports.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared accounting for one fault-injection proxy.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    forwarded: AtomicU64,
+    dropped: AtomicU64,
+    delayed: AtomicU64,
+    garbled: AtomicU64,
+    truncated: AtomicU64,
+    reset: AtomicU64,
+}
+
+impl FaultCounters {
+    /// Fresh counters, all zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One frame forwarded unmodified.
+    pub fn record_forwarded(&self) {
+        self.forwarded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One frame swallowed (never reached the other side).
+    pub fn record_dropped(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One frame held back before forwarding.
+    pub fn record_delayed(&self) {
+        self.delayed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One frame forwarded with its kind and body randomized.
+    pub fn record_garbled(&self) {
+        self.garbled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One frame cut short mid-image, connection killed after.
+    pub fn record_truncated(&self) {
+        self.truncated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One connection reset outright at a frame boundary.
+    pub fn record_reset(&self) {
+        self.reset.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy (each field individually exact; relaxed
+    /// relative to each other).
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            forwarded: self.forwarded.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            delayed: self.delayed.load(Ordering::Relaxed),
+            garbled: self.garbled.load(Ordering::Relaxed),
+            truncated: self.truncated.load(Ordering::Relaxed),
+            reset: self.reset.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value snapshot of [`FaultCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Frames forwarded unmodified.
+    pub forwarded: u64,
+    /// Frames swallowed.
+    pub dropped: u64,
+    /// Frames delayed before forwarding.
+    pub delayed: u64,
+    /// Frames forwarded with randomized content.
+    pub garbled: u64,
+    /// Frames truncated mid-image (kills the connection).
+    pub truncated: u64,
+    /// Connections reset at a frame boundary.
+    pub reset: u64,
+}
+
+impl FaultStats {
+    /// Total faults injected (everything except clean forwards).
+    pub fn injected(&self) -> u64 {
+        self.dropped + self.delayed + self.garbled + self.truncated + self.reset
+    }
+}
+
+impl fmt::Display for FaultStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} forwarded, {} dropped, {} delayed, {} garbled, {} truncated, {} reset",
+            self.forwarded, self.dropped, self.delayed, self.garbled, self.truncated, self.reset
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let c = FaultCounters::new();
+        assert_eq!(c.stats(), FaultStats::default());
+        c.record_forwarded();
+        c.record_forwarded();
+        c.record_dropped();
+        c.record_delayed();
+        c.record_garbled();
+        c.record_truncated();
+        c.record_reset();
+        let s = c.stats();
+        assert_eq!(s.forwarded, 2);
+        assert_eq!(s.injected(), 5);
+        assert_eq!(
+            s.to_string(),
+            "2 forwarded, 1 dropped, 1 delayed, 1 garbled, 1 truncated, 1 reset"
+        );
+    }
+}

@@ -7,16 +7,20 @@
 //!   query path (per-query latency, snapshot staleness).
 //! * [`cache`] — hit/miss/merges-avoided counters for the
 //!   epoch-versioned snapshot caches on the read path.
+//! * [`fault`] — injected-fault accounting for the deterministic
+//!   fault-injection proxy in the serve layer.
 //! * [`report`] — paper-style ASCII tables and figure series (+ CSV).
 
 pub mod accuracy;
 pub mod cache;
+pub mod fault;
 pub mod latency;
 pub mod report;
 pub mod timing;
 
 pub use accuracy::{average_relative_error, precision, recall, AccuracyReport};
 pub use cache::{CacheCounters, CacheStats};
+pub use fault::{FaultCounters, FaultStats};
 pub use latency::{LatencyHistogram, LatencySummary};
 pub use report::{Series, Table};
 pub use timing::{fractional_overhead, PhaseTimes};

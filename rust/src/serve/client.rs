@@ -24,27 +24,78 @@ use crate::gen::{GeneratedSource, ItemSource};
 use crate::metrics::{LatencyHistogram, LatencySummary};
 use crate::query::{PointEstimate, ThresholdReport};
 use crate::summary::{ChunkAggregator, Counter};
+use crate::util::Backoff;
 
 use super::proto::{
-    encode_hello, encode_items_into, encode_runs_into, read_frame, write_frame, Frame, Role,
-    WireSnapshot, WireStats, MAX_FRAME_MASS, MAX_ITEMS_PER_FRAME, MAX_RUNS_PER_FRAME, VERSION,
+    encode_hello, encode_items_into, encode_runs_into, write_frame, Frame, FrameReader, Poll,
+    ProtoError, Role, WireSnapshot, WireStats, MAX_FRAME_MASS, MAX_ITEMS_PER_FRAME,
+    MAX_RUNS_PER_FRAME, VERSION,
 };
 use super::server::{AnyStream, Endpoint};
 
-/// Connect, send the hello, and require a `HelloOk`.
-fn handshake(endpoint: &Endpoint, role: Role) -> crate::Result<AnyStream> {
+/// Default overall deadline for every blocking read and write. Override
+/// per client with `with_deadline` / `connect_with_deadline`.
+pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(30);
+
+/// OS-level read timeout: how often a blocked read wakes so the
+/// resumable [`FrameReader`] can check the overall deadline. Short
+/// enough that small deadlines overshoot by at most one quantum.
+const POLL_QUANTUM: Duration = Duration::from_millis(50);
+
+/// Read one complete frame within `deadline` (resumable across OS read
+/// timeouts). `Ok(None)` is a clean close at a frame boundary; an
+/// expired deadline is [`ProtoError::Timeout`]. Takes the stream and
+/// reader as separate borrows so callers can keep mutating their other
+/// fields while the returned body is alive.
+fn read_reply<'a>(
+    stream: &mut AnyStream,
+    reader: &'a mut FrameReader,
+    deadline: Duration,
+) -> Result<Option<(u8, &'a [u8])>, ProtoError> {
+    match reader.poll_deadline(stream, deadline)? {
+        Poll::Frame(kind, body) => Ok(Some((kind, body))),
+        Poll::Eof => Ok(None),
+        Poll::Pending => unreachable!("poll_deadline never yields Pending"),
+    }
+}
+
+/// Call `connect` up to `attempts` times, sleeping per `backoff`
+/// between failures. The last error is returned annotated with the
+/// attempt count.
+fn retry_connect<T>(
+    attempts: u32,
+    backoff: &mut Backoff,
+    mut connect: impl FnMut() -> crate::Result<T>,
+) -> crate::Result<T> {
+    let attempts = attempts.max(1);
+    let mut last = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            backoff.sleep();
+        }
+        match connect() {
+            Ok(v) => return Ok(v),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.expect("at least one attempt ran").context(format!("after {attempts} attempts")))
+}
+
+/// Connect, send the hello, and require a `HelloOk` within `deadline`.
+fn handshake(endpoint: &Endpoint, role: Role, deadline: Duration) -> crate::Result<AnyStream> {
     let mut stream = endpoint
         .connect()
         .map_err(|e| anyhow::anyhow!("connect {endpoint}: {e}"))?;
-    // Client reads are blocking with a generous safety-net timeout so a
-    // wedged server fails loudly instead of hanging the caller forever.
-    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    // Reads wake every POLL_QUANTUM so the resumable reader can enforce
+    // the overall deadline; writes get the deadline as an OS timeout
+    // (a write that blocks that long means a dead or wedged peer).
+    stream.set_read_timeout(Some(POLL_QUANTUM))?;
+    stream.set_write_timeout(Some(deadline.max(Duration::from_millis(1))))?;
     stream.write_all(&encode_hello(role))?;
     stream.flush()?;
-    let mut scratch = Vec::new();
-    match read_frame(&mut stream, &mut scratch)? {
-        Some((kind, body)) => match Frame::decode(kind, body)? {
+    let mut reader = FrameReader::new();
+    match read_reply(&mut stream, &mut reader, deadline) {
+        Ok(Some((kind, body))) => match Frame::decode(kind, body)? {
             Frame::HelloOk { version } => {
                 anyhow::ensure!(
                     version == VERSION,
@@ -57,7 +108,11 @@ fn handshake(endpoint: &Endpoint, role: Role) -> crate::Result<AnyStream> {
             }
             other => anyhow::bail!("unexpected reply to hello: {other:?}"),
         },
-        None => anyhow::bail!("server closed during handshake"),
+        Ok(None) => anyhow::bail!("server closed during handshake"),
+        Err(ProtoError::Timeout) => {
+            anyhow::bail!("deadline expired: no hello reply within {deadline:?}")
+        }
+        Err(e) => Err(e.into()),
     }
 }
 
@@ -71,29 +126,51 @@ fn handshake(endpoint: &Endpoint, role: Role) -> crate::Result<AnyStream> {
 pub struct IngestClient {
     stream: AnyStream,
     wire: Vec<u8>,
-    scratch: Vec<u8>,
+    reader: FrameReader,
     seq: u64,
     inflight: VecDeque<(u64, Instant)>,
     max_inflight: usize,
+    deadline: Duration,
     latency: LatencyHistogram,
     acked_items: u64,
     frames: u64,
 }
 
 impl IngestClient {
-    /// Connect and handshake as an ingest producer.
+    /// Connect and handshake as an ingest producer (default deadline).
     pub fn connect(endpoint: &Endpoint) -> crate::Result<IngestClient> {
+        Self::connect_with_deadline(endpoint, DEFAULT_DEADLINE)
+    }
+
+    /// Connect with an explicit per-operation deadline: the handshake,
+    /// every ack read, and every frame write must finish within it.
+    pub fn connect_with_deadline(
+        endpoint: &Endpoint,
+        deadline: Duration,
+    ) -> crate::Result<IngestClient> {
         Ok(IngestClient {
-            stream: handshake(endpoint, Role::Ingest)?,
+            stream: handshake(endpoint, Role::Ingest, deadline)?,
             wire: Vec::new(),
-            scratch: Vec::new(),
+            reader: FrameReader::new(),
             seq: 0,
             inflight: VecDeque::new(),
             max_inflight: 4,
+            deadline,
             latency: LatencyHistogram::new(),
             acked_items: 0,
             frames: 0,
         })
+    }
+
+    /// Connect with retry: transient connect/handshake failures sleep
+    /// per `backoff` and try again, up to `attempts` total.
+    pub fn connect_retry(
+        endpoint: &Endpoint,
+        deadline: Duration,
+        attempts: u32,
+        backoff: &mut Backoff,
+    ) -> crate::Result<IngestClient> {
+        retry_connect(attempts, backoff, || Self::connect_with_deadline(endpoint, deadline))
     }
 
     /// Bound on unacked frames (default 4). 1 degenerates to
@@ -154,13 +231,25 @@ impl IngestClient {
         Ok(())
     }
 
-    /// Block for the next ack; acks arrive strictly in send order.
+    /// Block for the next ack (bounded by the deadline); acks arrive
+    /// strictly in send order. A silent server — alive at the TCP level
+    /// but no longer acking — surfaces as a typed deadline error here
+    /// instead of wedging the pipelining loop forever.
     fn recv_ack(&mut self) -> crate::Result<()> {
         let (want, sent_at) = self
             .inflight
             .pop_front()
             .ok_or_else(|| anyhow::anyhow!("recv_ack with nothing in flight"))?;
-        match read_frame(&mut self.stream, &mut self.scratch)? {
+        let reply = match read_reply(&mut self.stream, &mut self.reader, self.deadline) {
+            Ok(reply) => reply,
+            Err(ProtoError::Timeout) => anyhow::bail!(
+                "deadline expired: no ack for seq {want} within {:?} ({} more frames in flight)",
+                self.deadline,
+                self.inflight.len()
+            ),
+            Err(e) => return Err(e.into()),
+        };
+        match reply {
             Some((kind, body)) => match Frame::decode(kind, body)? {
                 Frame::IngestAck { seq, items } => {
                     anyhow::ensure!(
@@ -232,24 +321,53 @@ fn from_wire(counters: Vec<super::proto::WireCounter>) -> Vec<Counter> {
 pub struct QueryClient {
     stream: AnyStream,
     wire: Vec<u8>,
-    scratch: Vec<u8>,
+    reader: FrameReader,
+    deadline: Duration,
 }
 
 impl QueryClient {
-    /// Connect and handshake as a query reader.
+    /// Connect and handshake as a query reader (default deadline).
     pub fn connect(endpoint: &Endpoint) -> crate::Result<QueryClient> {
+        Self::connect_with_deadline(endpoint, DEFAULT_DEADLINE)
+    }
+
+    /// Connect with an explicit per-round-trip deadline.
+    pub fn connect_with_deadline(
+        endpoint: &Endpoint,
+        deadline: Duration,
+    ) -> crate::Result<QueryClient> {
         Ok(QueryClient {
-            stream: handshake(endpoint, Role::Query)?,
+            stream: handshake(endpoint, Role::Query, deadline)?,
             wire: Vec::new(),
-            scratch: Vec::new(),
+            reader: FrameReader::new(),
+            deadline,
         })
     }
 
-    /// One request/response round trip; server `Error` frames become
-    /// `Err` here.
+    /// Connect with retry: transient connect/handshake failures sleep
+    /// per `backoff` and try again, up to `attempts` total.
+    pub fn connect_retry(
+        endpoint: &Endpoint,
+        deadline: Duration,
+        attempts: u32,
+        backoff: &mut Backoff,
+    ) -> crate::Result<QueryClient> {
+        retry_connect(attempts, backoff, || Self::connect_with_deadline(endpoint, deadline))
+    }
+
+    /// One request/response round trip (bounded by the deadline);
+    /// server `Error` frames become `Err` here.
     fn request(&mut self, frame: &Frame) -> crate::Result<Frame> {
         write_frame(&mut self.stream, frame, &mut self.wire)?;
-        match read_frame(&mut self.stream, &mut self.scratch)? {
+        let reply = match read_reply(&mut self.stream, &mut self.reader, self.deadline) {
+            Ok(reply) => reply,
+            Err(ProtoError::Timeout) => anyhow::bail!(
+                "deadline expired: no reply to {frame:?} within {:?}",
+                self.deadline
+            ),
+            Err(e) => return Err(e.into()),
+        };
+        match reply {
             Some((kind, body)) => match Frame::decode(kind, body)? {
                 Frame::Error { code, message } => {
                     anyhow::bail!("server error ({code:?}): {message}")
@@ -324,26 +442,55 @@ impl QueryClient {
 pub struct SnapshotClient {
     stream: AnyStream,
     wire: Vec<u8>,
-    scratch: Vec<u8>,
+    reader: FrameReader,
+    deadline: Duration,
 }
 
 impl SnapshotClient {
-    /// Connect and handshake as a cluster head.
+    /// Connect and handshake as a cluster head (default deadline).
     pub fn connect(endpoint: &Endpoint) -> crate::Result<SnapshotClient> {
+        Self::connect_with_deadline(endpoint, DEFAULT_DEADLINE)
+    }
+
+    /// Connect with an explicit per-round-trip deadline.
+    pub fn connect_with_deadline(
+        endpoint: &Endpoint,
+        deadline: Duration,
+    ) -> crate::Result<SnapshotClient> {
         Ok(SnapshotClient {
-            stream: handshake(endpoint, Role::Worker)?,
+            stream: handshake(endpoint, Role::Worker, deadline)?,
             wire: Vec::new(),
-            scratch: Vec::new(),
+            reader: FrameReader::new(),
+            deadline,
         })
     }
 
-    /// One snapshot round trip. `drain: true` asks the worker to stop
-    /// ingesting, drain its coordinator and reply with the *final*
-    /// state (`finished: true`) before shutting down — after which this
-    /// connection is spent.
+    /// Connect with retry: transient connect/handshake failures sleep
+    /// per `backoff` and try again, up to `attempts` total.
+    pub fn connect_retry(
+        endpoint: &Endpoint,
+        deadline: Duration,
+        attempts: u32,
+        backoff: &mut Backoff,
+    ) -> crate::Result<SnapshotClient> {
+        retry_connect(attempts, backoff, || Self::connect_with_deadline(endpoint, deadline))
+    }
+
+    /// One snapshot round trip (bounded by the deadline). `drain: true`
+    /// asks the worker to stop ingesting, drain its coordinator and
+    /// reply with the *final* state (`finished: true`) before shutting
+    /// down — after which this connection is spent.
     pub fn fetch(&mut self, drain: bool) -> crate::Result<WireSnapshot> {
         write_frame(&mut self.stream, &Frame::SummaryRequest { drain }, &mut self.wire)?;
-        match read_frame(&mut self.stream, &mut self.scratch)? {
+        let reply = match read_reply(&mut self.stream, &mut self.reader, self.deadline) {
+            Ok(reply) => reply,
+            Err(ProtoError::Timeout) => anyhow::bail!(
+                "deadline expired: no snapshot within {:?} (drain: {drain})",
+                self.deadline
+            ),
+            Err(e) => return Err(e.into()),
+        };
+        match reply {
             Some((kind, body)) => match Frame::decode(kind, body)? {
                 Frame::SummarySnapshot(s) => Ok(s),
                 Frame::Error { code, message } => {
@@ -390,6 +537,9 @@ pub struct LoadgenConfig {
     pub runs: bool,
     /// Per-connection in-flight frame window.
     pub max_inflight: usize,
+    /// Per-operation deadline for every client (handshake, ack reads,
+    /// frame writes).
+    pub deadline: Duration,
 }
 
 impl Default for LoadgenConfig {
@@ -404,6 +554,7 @@ impl Default for LoadgenConfig {
             seed: 42,
             runs: false,
             max_inflight: 4,
+            deadline: DEFAULT_DEADLINE,
         }
     }
 }
@@ -477,8 +628,11 @@ pub fn run_loadgen(endpoint: &Endpoint, cfg: &LoadgenConfig) -> crate::Result<Lo
                         } else {
                             GeneratedSource::uniform(n, cfg.universe, seed)
                         };
-                        let mut client =
-                            IngestClient::connect(endpoint)?.with_inflight(cfg.max_inflight);
+                        let mut client = IngestClient::connect_with_deadline(
+                            endpoint,
+                            cfg.deadline,
+                        )?
+                        .with_inflight(cfg.max_inflight);
                         let mut buf = vec![0u64; cfg.chunk_len];
                         let mut agg = ChunkAggregator::with_capacity(cfg.chunk_len);
                         let mut pos = 0u64;
@@ -684,6 +838,132 @@ mod tests {
         assert_eq!(result.stats.items, 1000);
         assert_eq!(stats.worker_connections, 1);
         assert_eq!(stats.proto_errors, 0);
+    }
+
+    /// A hand-rolled "server" that completes the hello and then
+    /// misbehaves per `acks_before_silence`: ack that many ingest
+    /// frames, then either go silent (keep reading, never ack) or die
+    /// (close the socket).
+    fn treacherous_server(
+        acks_before_silence: u64,
+        die_after: bool,
+    ) -> (Endpoint, std::thread::JoinHandle<()>) {
+        use super::super::proto::{read_frame, read_hello};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = Endpoint::Tcp(listener.local_addr().unwrap().to_string());
+        let handle = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            assert_eq!(read_hello(&mut s).unwrap(), Role::Ingest);
+            let mut wire = Vec::new();
+            write_frame(&mut s, &Frame::HelloOk { version: VERSION }, &mut wire).unwrap();
+            let mut scratch = Vec::new();
+            let mut acked = 0u64;
+            while let Ok(Some((_, body))) = read_frame(&mut s, &mut scratch) {
+                if acked < acks_before_silence {
+                    let seq = u64::from_le_bytes(body[..8].try_into().unwrap());
+                    let items = ((body.len() - 8) / 8) as u64;
+                    if write_frame(&mut s, &Frame::IngestAck { seq, items }, &mut wire).is_err()
+                    {
+                        return;
+                    }
+                    acked += 1;
+                } else if die_after {
+                    return; // drop the socket: the "crash"
+                }
+                // else: silent — keep draining frames, never ack.
+            }
+        });
+        (ep, handle)
+    }
+
+    #[test]
+    fn silent_server_mid_burst_hits_the_deadline() {
+        // Regression: the pipelined client blocks on an ack read once
+        // the in-flight window fills; with a server that stops acking
+        // mid-burst that read used to hang forever. The deadline must
+        // turn it into a typed error, promptly.
+        let (ep, server) = treacherous_server(1, false);
+        let mut c = IngestClient::connect_with_deadline(&ep, Duration::from_millis(300))
+            .unwrap()
+            .with_inflight(2);
+        let t0 = Instant::now();
+        let err = (0..64u64)
+            .find_map(|i| c.send_items(&[i; 8]).err())
+            .expect("a silent server must surface an error, not hang");
+        assert!(
+            err.to_string().contains("deadline expired"),
+            "want a typed deadline error, got: {err}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "the deadline must fire promptly, not after the old 30s safety net"
+        );
+        drop(c); // closes the socket; the server thread sees EOF
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn server_death_mid_burst_is_a_typed_error() {
+        let (ep, server) = treacherous_server(1, true);
+        let mut c = IngestClient::connect_with_deadline(&ep, Duration::from_secs(5))
+            .unwrap()
+            .with_inflight(2);
+        let err = match (0..64u64).find_map(|i| c.send_items(&[i; 8]).err()) {
+            Some(e) => e,
+            // All writes may land in socket buffers before the close is
+            // observed; the drain must fail instead.
+            None => c.finish().expect_err("finish against a dead server must fail"),
+        };
+        let msg = err.to_string().to_lowercase();
+        assert!(
+            msg.contains("unacked")
+                || msg.contains("truncat")
+                || msg.contains("pipe")
+                || msg.contains("reset")
+                || msg.contains("connection"),
+            "want a typed closed/truncated error, got: {err}"
+        );
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_reaches_a_late_server() {
+        use crate::util::Backoff;
+        // Nothing is listening yet; a connect_retry with a few attempts
+        // must succeed once the server appears between attempts.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener); // free the port: first attempts fail
+        let ep = Endpoint::Tcp(addr.clone());
+        let opener = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            tiny_server_at(&addr)
+        });
+        let mut backoff =
+            Backoff::new(Duration::from_millis(20), Duration::from_millis(100), 7);
+        let c = QueryClient::connect_retry(&ep, Duration::from_secs(5), 50, &mut backoff)
+            .expect("retry must outlast the startup gap");
+        assert!(backoff.attempt() > 0, "at least one failed attempt backed off");
+        drop(c);
+        opener.join().unwrap().finish();
+    }
+
+    fn tiny_server_at(addr: &str) -> Server {
+        Server::bind(
+            &Endpoint::Tcp(addr.to_string()),
+            ServeConfig {
+                coordinator: CoordinatorConfig {
+                    shards: 2,
+                    k: 64,
+                    k_majority: 8,
+                    epoch_items: 200,
+                    ..Default::default()
+                },
+                query_threads: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap()
     }
 
     #[test]

@@ -27,8 +27,15 @@
 //! worker's *pre-absorb* merged summary plus its exact hot side table,
 //! so the head can replay the merge and keep the per-worker ε bounds
 //! honest (see `cluster/`).
+//!
+//! Protocol v4 adds the deadline layer: every blocking read and write
+//! carries a deadline ([`ProtoError::Timeout`] /
+//! [`ErrorCode::Timeout`]), and [`faultline`] provides the
+//! deterministic fault-injection proxy ([`faultline::FaultLine`]) the
+//! failure-path tests and `pss faultgen` drive against it.
 
 pub mod client;
+pub mod faultline;
 pub mod proto;
 pub mod server;
 
@@ -36,6 +43,7 @@ pub use client::{
     run_loadgen, IngestClient, LoadgenConfig, LoadgenReport, QueryClient, SnapshotClient,
     TopKAnswer,
 };
+pub use faultline::{Direction, FaultAction, FaultLine, FaultPlan, FaultRule};
 pub use proto::{
     ErrorCode, Frame, FrameReader, ProtoError, Role, WireCounter, WireSnapshot, WireStats,
 };

@@ -54,14 +54,17 @@
 //! `f ≤ f̂ ≤ f + ε` guarantee.
 
 use std::io::{Read, Write};
+use std::time::{Duration, Instant};
 
 /// Connection magic: `b"PSS1"` read as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"PSS1");
 
 /// Protocol version carried in the hello. Version 2 added the worker
 /// role and the cluster snapshot frames; version 3 widened
-/// [`Frame::StatsResult`] with the query-cache counters.
-pub const VERSION: u16 = 3;
+/// [`Frame::StatsResult`] with the query-cache counters; version 4
+/// added the deadline layer ([`ErrorCode::Timeout`] and the
+/// `deadline_expirations` stats counter).
+pub const VERSION: u16 = 4;
 
 /// Hard cap on `len` (kind + body), bytes. 16 MiB ≈ a 2M-item flat
 /// chunk — far past any sane chunk_len, small enough to bound a
@@ -185,6 +188,9 @@ pub enum ErrorCode {
     Overloaded,
     /// Windowed query against a server with no delta ring.
     WindowUnavailable,
+    /// A read or write deadline expired mid-exchange; the peer closed
+    /// the connection rather than block forever.
+    Timeout,
     /// Code not understood by this build (forward compatibility).
     Unknown(u16),
 }
@@ -201,6 +207,7 @@ impl ErrorCode {
             ErrorCode::ShuttingDown => 6,
             ErrorCode::Overloaded => 7,
             ErrorCode::WindowUnavailable => 8,
+            ErrorCode::Timeout => 9,
             ErrorCode::Unknown(c) => c,
         }
     }
@@ -216,6 +223,7 @@ impl ErrorCode {
             6 => ErrorCode::ShuttingDown,
             7 => ErrorCode::Overloaded,
             8 => ErrorCode::WindowUnavailable,
+            9 => ErrorCode::Timeout,
             other => ErrorCode::Unknown(other),
         }
     }
@@ -259,6 +267,9 @@ pub struct WireStats {
     /// Merges avoided (hits plus slow-path reuses of a view another
     /// reader built concurrently); `≥ cache_hits`.
     pub merges_avoided: u64,
+    /// Connections the server closed because a read or write deadline
+    /// expired (slow, stalled, or vanished peers).
+    pub deadline_expirations: u64,
 }
 
 /// A worker's full merged Space Saving state, shipped to the cluster
@@ -454,6 +465,11 @@ pub enum ProtoError {
     MassTooLarge(u64),
     /// Error-frame message is not UTF-8.
     BadUtf8,
+    /// A blocking read or write exceeded its deadline. Distinct from
+    /// [`ProtoError::Io`] so callers can branch on "peer is slow or
+    /// dead" versus "stream is broken" — the former is retryable, the
+    /// latter is not.
+    Timeout,
     /// Underlying socket error.
     Io(std::io::ErrorKind),
 }
@@ -465,6 +481,7 @@ impl ProtoError {
             ProtoError::BadMagic(_) => ErrorCode::BadMagic,
             ProtoError::BadVersion(_) => ErrorCode::BadVersion,
             ProtoError::FrameTooLarge(_) | ProtoError::MassTooLarge(_) => ErrorCode::TooLarge,
+            ProtoError::Timeout => ErrorCode::Timeout,
             _ => ErrorCode::Malformed,
         }
     }
@@ -489,6 +506,7 @@ impl std::fmt::Display for ProtoError {
                 write!(f, "ingest mass {m} over cap {MAX_FRAME_MASS}")
             }
             ProtoError::BadUtf8 => write!(f, "error message is not UTF-8"),
+            ProtoError::Timeout => write!(f, "deadline expired mid-exchange"),
             ProtoError::Io(k) => write!(f, "io error: {k:?}"),
         }
     }
@@ -498,10 +516,17 @@ impl std::error::Error for ProtoError {}
 
 impl From<std::io::Error> for ProtoError {
     fn from(e: std::io::Error) -> Self {
-        if e.kind() == std::io::ErrorKind::UnexpectedEof {
-            ProtoError::Truncated
-        } else {
-            ProtoError::Io(e.kind())
+        match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => ProtoError::Truncated,
+            // OS-level socket timeouts (SO_RCVTIMEO/SO_SNDTIMEO)
+            // surface as either kind depending on platform. The
+            // resumable [`FrameReader::poll`] intercepts these as
+            // [`Poll::Pending`] before this conversion runs; everywhere
+            // else — blocking client reads, `write_frame`, the hello
+            // exchange — an expired OS timeout is a typed deadline
+            // failure, never a generic io error.
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ProtoError::Timeout,
+            kind => ProtoError::Io(kind),
         }
     }
 }
@@ -646,6 +671,7 @@ impl Frame {
                     s.cache_hits,
                     s.cache_misses,
                     s.merges_avoided,
+                    s.deadline_expirations,
                 ] {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
@@ -794,7 +820,7 @@ impl Frame {
                 Ok(Frame::KMajorityResult { n, epsilon, threshold, guaranteed, possible })
             }
             kind::STATS_RESULT => {
-                if body.len() != 88 {
+                if body.len() != 96 {
                     return Err(bad());
                 }
                 let f = |i: usize| take_u64(body, i * 8).unwrap();
@@ -810,6 +836,7 @@ impl Frame {
                     cache_hits: f(8),
                     cache_misses: f(9),
                     merges_avoided: f(10),
+                    deadline_expirations: f(11),
                 }))
             }
             kind::HELLO_OK => {
@@ -994,6 +1021,43 @@ impl FrameReader {
     /// frame boundary returns [`Poll::Eof`]; a close mid-frame is
     /// [`ProtoError::Truncated`].
     pub fn poll(&mut self, r: &mut impl Read) -> Result<Poll<'_>, ProtoError> {
+        match self.step(r)? {
+            Step::Pending => Ok(Poll::Pending),
+            Step::Eof => Ok(Poll::Eof),
+            Step::Frame => Ok(Poll::Frame(self.buf[0], &self.buf[1..])),
+        }
+    }
+
+    /// Like [`poll`](Self::poll), but keeps retrying `Pending` until a
+    /// frame completes or `deadline` elapses, at which point it fails
+    /// with [`ProtoError::Timeout`]. Progress is cumulative across OS
+    /// read timeouts (the resumable state absorbs them), so this is the
+    /// blocking-with-deadline read every client uses: set a short OS
+    /// read timeout on the socket (the poll quantum) and an overall
+    /// deadline here.
+    pub fn poll_deadline(
+        &mut self,
+        r: &mut impl Read,
+        deadline: Duration,
+    ) -> Result<Poll<'_>, ProtoError> {
+        let start = Instant::now();
+        loop {
+            match self.step(r)? {
+                Step::Pending => {
+                    if start.elapsed() >= deadline {
+                        return Err(ProtoError::Timeout);
+                    }
+                }
+                Step::Eof => return Ok(Poll::Eof),
+                Step::Frame => return Ok(Poll::Frame(self.buf[0], &self.buf[1..])),
+            }
+        }
+    }
+
+    /// One read attempt; the borrow-free core both poll flavors wrap.
+    /// On `Step::Frame` the reader state is already reset and the frame
+    /// sits in `self.buf` (`kind` at 0, body after).
+    fn step(&mut self, r: &mut impl Read) -> Result<Step, ProtoError> {
         // Phase 1: the 4-byte length header.
         while self.need.is_none() {
             if self.header_got == 4 {
@@ -1015,7 +1079,7 @@ impl FrameReader {
                     return if self.mid_frame() {
                         Err(ProtoError::Truncated)
                     } else {
-                        Ok(Poll::Eof)
+                        Ok(Step::Eof)
                     };
                 }
                 Ok(n) => self.header_got += n,
@@ -1024,7 +1088,7 @@ impl FrameReader {
                     if e.kind() == std::io::ErrorKind::WouldBlock
                         || e.kind() == std::io::ErrorKind::TimedOut =>
                 {
-                    return Ok(Poll::Pending);
+                    return Ok(Step::Pending);
                 }
                 Err(e) => return Err(e.into()),
             }
@@ -1040,7 +1104,7 @@ impl FrameReader {
                     if e.kind() == std::io::ErrorKind::WouldBlock
                         || e.kind() == std::io::ErrorKind::TimedOut =>
                 {
-                    return Ok(Poll::Pending);
+                    return Ok(Step::Pending);
                 }
                 Err(e) => return Err(e.into()),
             }
@@ -1050,8 +1114,17 @@ impl FrameReader {
         // header parse).
         self.header_got = 0;
         self.need = None;
-        Ok(Poll::Frame(self.buf[0], &self.buf[1..]))
+        Ok(Step::Frame)
     }
+}
+
+/// Owned mirror of [`Poll`] used by [`FrameReader::step`] so the retry
+/// loop in [`FrameReader::poll_deadline`] does not fight the borrow on
+/// the frame buffer.
+enum Step {
+    Frame,
+    Pending,
+    Eof,
 }
 
 /// Encode and write one frame through `buf` (reused; no steady-state
@@ -1204,6 +1277,7 @@ mod tests {
                 cache_hits: 9,
                 cache_misses: 10,
                 merges_avoided: 11,
+                deadline_expirations: 12,
             }),
             Frame::HelloOk { version: VERSION },
             Frame::Shutdown,
@@ -1398,7 +1472,8 @@ mod tests {
             (kind::STATS, 1),
             (kind::POINT_RESULT, 24),
             (kind::STATS_RESULT, 64),
-            (kind::STATS_RESULT, 87),
+            (kind::STATS_RESULT, 88),
+            (kind::STATS_RESULT, 95),
             (kind::HELLO_OK, 3),
             (kind::SHUTDOWN, 2),
             (kind::SUMMARY_REQUEST, 0),
@@ -1595,6 +1670,68 @@ mod tests {
         ));
     }
 
+    /// A reader that yields a byte prefix, then `WouldBlock` forever —
+    /// a peer that sent part of a frame and went silent.
+    struct PrefixThenStall {
+        data: Vec<u8>,
+        pos: usize,
+    }
+
+    impl std::io::Read for PrefixThenStall {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            out[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn poll_deadline_completes_or_times_out() {
+        // A dribbled stream completes under the deadline: WouldBlock
+        // gaps cost retries, not the frame.
+        let wire = Frame::IngestAck { seq: 1, items: 2 }.encode();
+        let mut r = Dribble { data: wire, pos: 0, starve: false };
+        let mut fr = FrameReader::new();
+        match fr.poll_deadline(&mut r, Duration::from_secs(5)).unwrap() {
+            Poll::Frame(k, body) => {
+                assert_eq!(
+                    Frame::decode(k, body).unwrap(),
+                    Frame::IngestAck { seq: 1, items: 2 }
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A peer that goes silent before the first byte is a typed
+        // Timeout, not a hang or an io error.
+        let mut silent = PrefixThenStall { data: vec![], pos: 0 };
+        let mut fr = FrameReader::new();
+        assert_eq!(
+            fr.poll_deadline(&mut silent, Duration::ZERO).unwrap_err(),
+            ProtoError::Timeout
+        );
+        assert!(!fr.mid_frame());
+        // A peer that stalls mid-frame times out too, and the partial
+        // bytes stay buffered (a later retry could still finish).
+        let mut partial = PrefixThenStall { data: Frame::Stats.encode()[..2].to_vec(), pos: 0 };
+        let mut fr = FrameReader::new();
+        assert_eq!(
+            fr.poll_deadline(&mut partial, Duration::from_millis(1)).unwrap_err(),
+            ProtoError::Timeout
+        );
+        assert!(fr.mid_frame(), "partial header survives the timeout");
+    }
+
+    #[test]
+    fn io_timeouts_map_to_typed_timeout() {
+        for kind in [std::io::ErrorKind::WouldBlock, std::io::ErrorKind::TimedOut] {
+            assert_eq!(ProtoError::from(std::io::Error::from(kind)), ProtoError::Timeout);
+        }
+        assert_eq!(ProtoError::Timeout.code(), ErrorCode::Timeout);
+    }
+
     #[test]
     fn error_codes_roundtrip() {
         for code in [
@@ -1606,6 +1743,7 @@ mod tests {
             ErrorCode::ShuttingDown,
             ErrorCode::Overloaded,
             ErrorCode::WindowUnavailable,
+            ErrorCode::Timeout,
             ErrorCode::Unknown(999),
         ] {
             assert_eq!(ErrorCode::from_u16(code.to_u16()), code);

@@ -219,14 +219,48 @@ impl Write for AnyStream {
     }
 }
 
-enum AnyListener {
+pub(crate) enum AnyListener {
     Tcp(TcpListener),
     #[cfg(unix)]
     Unix(UnixListener),
 }
 
 impl AnyListener {
-    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+    /// Bind on `endpoint`: resolves ephemeral TCP ports and clears
+    /// stale unix socket files. Returns the listener, the resolved
+    /// endpoint and the unix path the owner must unlink on shutdown.
+    pub(crate) fn bind(
+        endpoint: &Endpoint,
+    ) -> crate::Result<(AnyListener, Endpoint, Option<PathBuf>)> {
+        match endpoint {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+                let actual = l.local_addr()?;
+                Ok((AnyListener::Tcp(l), Endpoint::Tcp(actual.to_string()), None))
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                // A stale socket file from a dead server blocks the
+                // bind; remove it (connect-refused is the live check a
+                // production server would do — this is a demo service).
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .map_err(|e| anyhow::anyhow!("bind {}: {e}", path.display()))?;
+                Ok((
+                    AnyListener::Unix(l),
+                    Endpoint::Unix(path.clone()),
+                    Some(path.clone()),
+                ))
+            }
+            #[cfg(not(unix))]
+            Endpoint::Unix(p) => {
+                anyhow::bail!("unix endpoint {} unsupported on this target", p.display())
+            }
+        }
+    }
+
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
         match self {
             AnyListener::Tcp(l) => l.set_nonblocking(nb),
             #[cfg(unix)]
@@ -234,7 +268,7 @@ impl AnyListener {
         }
     }
 
-    fn accept(&self) -> std::io::Result<AnyStream> {
+    pub(crate) fn accept(&self) -> std::io::Result<AnyStream> {
         match self {
             AnyListener::Tcp(l) => l.accept().map(|(s, _)| AnyStream::Tcp(s)),
             #[cfg(unix)]
@@ -259,6 +293,12 @@ pub struct ServeConfig {
     /// Socket poll granularity: how long an idle connection thread
     /// blocks in a read before re-checking the shutdown flag.
     pub poll: Duration,
+    /// How long a freshly accepted peer gets to complete the hello
+    /// before the connection is dropped with a [`ErrorCode::Timeout`].
+    pub hello_deadline: Duration,
+    /// Per-write deadline on every connection: a peer that stops
+    /// reading cannot pin a connection thread past this.
+    pub write_deadline: Duration,
 }
 
 impl Default for ServeConfig {
@@ -268,6 +308,8 @@ impl Default for ServeConfig {
             query_threads: 2,
             max_ingest: 64,
             poll: Duration::from_millis(50),
+            hello_deadline: Duration::from_secs(5),
+            write_deadline: Duration::from_secs(30),
         }
     }
 }
@@ -285,6 +327,8 @@ struct Shared {
     k_majority: u64,
     shutdown: AtomicBool,
     poll: Duration,
+    hello_deadline: Duration,
+    write_deadline: Duration,
     max_ingest: usize,
     ingest_active: AtomicUsize,
     ingest_conns: AtomicU64,
@@ -292,6 +336,7 @@ struct Shared {
     worker_conns: AtomicU64,
     frames_in: AtomicU64,
     proto_errors: AtomicU64,
+    deadline_expirations: AtomicU64,
 }
 
 impl Shared {
@@ -327,6 +372,7 @@ impl Shared {
             cache_hits: cache.hits,
             cache_misses: cache.misses,
             merges_avoided: cache.merges_avoided,
+            deadline_expirations: self.deadline_expirations.load(Ordering::Relaxed),
         }
     }
 
@@ -362,6 +408,9 @@ pub struct ServeStats {
     pub frames: u64,
     /// Connections terminated with a protocol error.
     pub proto_errors: u64,
+    /// Connections closed because a read or write deadline expired
+    /// (counted within `proto_errors` too).
+    pub deadline_expirations: u64,
     /// Snapshot-cache accounting over the server's query engines
     /// (landmark + windowed, summed across the query pool).
     pub cache: crate::metrics::CacheStats,
@@ -387,32 +436,7 @@ impl Server {
     pub fn bind(endpoint: &Endpoint, cfg: ServeConfig) -> crate::Result<Server> {
         anyhow::ensure!(cfg.query_threads >= 1, "query_threads must be >= 1");
         anyhow::ensure!(cfg.max_ingest >= 1, "max_ingest must be >= 1");
-        let (listener, endpoint, unix_path) = match endpoint {
-            Endpoint::Tcp(addr) => {
-                let l = TcpListener::bind(addr.as_str())
-                    .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
-                let actual = l.local_addr()?;
-                (AnyListener::Tcp(l), Endpoint::Tcp(actual.to_string()), None)
-            }
-            #[cfg(unix)]
-            Endpoint::Unix(path) => {
-                // A stale socket file from a dead server blocks the
-                // bind; remove it (connect-refused is the live check a
-                // production server would do — this is a demo service).
-                let _ = std::fs::remove_file(path);
-                let l = UnixListener::bind(path)
-                    .map_err(|e| anyhow::anyhow!("bind {}: {e}", path.display()))?;
-                (
-                    AnyListener::Unix(l),
-                    Endpoint::Unix(path.clone()),
-                    Some(path.clone()),
-                )
-            }
-            #[cfg(not(unix))]
-            Endpoint::Unix(p) => {
-                anyhow::bail!("unix endpoint {} unsupported on this target", p.display())
-            }
-        };
+        let (listener, endpoint, unix_path) = AnyListener::bind(endpoint)?;
         listener.set_nonblocking(true)?;
 
         let k_majority = cfg.coordinator.k_majority;
@@ -426,6 +450,8 @@ impl Server {
             k_majority,
             shutdown: AtomicBool::new(false),
             poll: cfg.poll,
+            hello_deadline: cfg.hello_deadline,
+            write_deadline: cfg.write_deadline,
             max_ingest: cfg.max_ingest,
             ingest_active: AtomicUsize::new(0),
             ingest_conns: AtomicU64::new(0),
@@ -433,6 +459,7 @@ impl Server {
             worker_conns: AtomicU64::new(0),
             frames_in: AtomicU64::new(0),
             proto_errors: AtomicU64::new(0),
+            deadline_expirations: AtomicU64::new(0),
         });
 
         // Query pool: fixed worker threads pulling accepted query
@@ -554,6 +581,7 @@ impl Server {
             worker_connections: self.shared.worker_conns.load(Ordering::Relaxed),
             frames: self.shared.frames_in.load(Ordering::Relaxed),
             proto_errors: self.shared.proto_errors.load(Ordering::Relaxed),
+            deadline_expirations: self.shared.deadline_expirations.load(Ordering::Relaxed),
             cache: self.shared.cache_stats(),
         };
         (result, stats)
@@ -605,18 +633,29 @@ fn send_error(stream: &mut AnyStream, wire: &mut Vec<u8>, code: ErrorCode, messa
     let _ = stream.shutdown(std::net::Shutdown::Both);
 }
 
+/// Record a protocol failure (deadline expiries separately), answer the
+/// peer with the typed error, and close the connection.
+fn fail_conn(stream: &mut AnyStream, shared: &Shared, wire: &mut Vec<u8>, e: &ProtoError) {
+    shared.proto_errors.fetch_add(1, Ordering::Relaxed);
+    if matches!(e, ProtoError::Timeout) {
+        shared.deadline_expirations.fetch_add(1, Ordering::Relaxed);
+    }
+    send_error(stream, wire, e.code(), e.to_string());
+}
+
 /// Validate the hello and dispatch the connection by role.
 fn greet(mut stream: AnyStream, shared: &Arc<Shared>, query_tx: &Sender<AnyStream>) {
     let mut wire = Vec::new();
-    // A peer gets 5 seconds to say hello; write side is bounded so a
-    // peer that never reads cannot pin this thread forever.
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    // A peer gets `hello_deadline` to say hello (an expired deadline
+    // surfaces as a typed `ProtoError::Timeout`); the write side is
+    // bounded so a peer that never reads cannot pin this thread
+    // forever.
+    let _ = stream.set_read_timeout(Some(shared.hello_deadline));
+    let _ = stream.set_write_timeout(Some(shared.write_deadline));
     let role = match read_hello(&mut stream) {
         Ok(role) => role,
         Err(e) => {
-            shared.proto_errors.fetch_add(1, Ordering::Relaxed);
-            send_error(&mut stream, &mut wire, e.code(), e.to_string());
+            fail_conn(&mut stream, shared, &mut wire, &e);
             return;
         }
     };
@@ -735,8 +774,7 @@ fn ingest_conn(stream: &mut AnyStream, shared: &Arc<Shared>, wire: &mut Vec<u8>)
             Ok(Poll::Pending) => {}
             Ok(Poll::Eof) => return, // clean close
             Err(e) => {
-                shared.proto_errors.fetch_add(1, Ordering::Relaxed);
-                send_error(stream, wire, e.code(), e.to_string());
+                fail_conn(stream, shared, wire, &e);
                 return;
             }
         }
@@ -850,8 +888,7 @@ fn query_conn(stream: &mut AnyStream, shared: &Arc<Shared>) {
             Ok(Poll::Pending) => {}
             Ok(Poll::Eof) => return,
             Err(e) => {
-                shared.proto_errors.fetch_add(1, Ordering::Relaxed);
-                send_error(stream, &mut wire, e.code(), e.to_string());
+                fail_conn(stream, shared, &mut wire, &e);
                 return;
             }
         }
@@ -1035,8 +1072,7 @@ fn worker_conn(stream: &mut AnyStream, shared: &Arc<Shared>, wire: &mut Vec<u8>)
             Ok(Poll::Pending) => {}
             Ok(Poll::Eof) => return,
             Err(e) => {
-                shared.proto_errors.fetch_add(1, Ordering::Relaxed);
-                send_error(stream, wire, e.code(), e.to_string());
+                fail_conn(stream, shared, wire, &e);
                 return;
             }
         }

@@ -1,0 +1,127 @@
+//! Capped exponential backoff with deterministic seeded jitter.
+//!
+//! One policy shared by every reconnect/retry loop in the tree — the
+//! serve-layer clients' connect retries and the cluster head's worker
+//! readiness probing — so retry behaviour is a single auditable
+//! schedule instead of ad-hoc `sleep(10ms)` loops.
+//!
+//! The schedule is the classic capped doubling: attempt `i` has a
+//! *nominal* delay `min(cap, base · 2^i)`, and the actual delay adds
+//! jitter drawn from a seeded [`SplitMix64`] in `[0, nominal/2]`, so
+//! every delay lands in `[nominal, 1.5·nominal]`. Because
+//! `1.5 · nominal_i < 2 · nominal_i = nominal_{i+1}`, the jittered
+//! schedule stays monotone non-decreasing until the cap, and because
+//! the jitter source is a fixed-seed PRNG the whole schedule is
+//! reproducible — tests can assert exact delays per seed.
+
+use std::time::Duration;
+
+use super::rng::SplitMix64;
+
+/// Deterministic capped-exponential backoff schedule.
+///
+/// ```
+/// use std::time::Duration;
+/// use pss::util::Backoff;
+///
+/// let mut b = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 7);
+/// let first = b.next_delay();
+/// assert!(first >= Duration::from_millis(10) && first <= Duration::from_millis(15));
+/// // Same seed ⇒ same schedule.
+/// let mut b2 = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 7);
+/// assert_eq!(b2.next_delay(), first);
+/// ```
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: SplitMix64,
+}
+
+impl Backoff {
+    /// Shift cap for the doubling exponent — far beyond any cap that
+    /// fits in a `Duration`, present only to keep `1 << attempt` from
+    /// overflowing on very long retry loops.
+    const MAX_SHIFT: u32 = 20;
+
+    /// A schedule starting at `base`, doubling per attempt up to
+    /// `cap`, jittered by a PRNG seeded with `seed`. A zero `base` is
+    /// clamped to 1µs so the schedule actually progresses.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        let base = base.max(Duration::from_micros(1));
+        Self { base, cap: cap.max(base), attempt: 0, rng: SplitMix64::new(seed) }
+    }
+
+    /// The un-jittered delay for attempt `i`: `min(cap, base · 2^i)`.
+    pub fn nominal(&self, attempt: u32) -> Duration {
+        let base_us = self.base.as_micros() as u64;
+        let cap_us = self.cap.as_micros() as u64;
+        let nominal = base_us.saturating_mul(1u64 << attempt.min(Self::MAX_SHIFT));
+        Duration::from_micros(nominal.min(cap_us))
+    }
+
+    /// The next delay in the schedule: nominal for the current attempt
+    /// plus seeded jitter in `[0, nominal/2]`, then advances the
+    /// attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let nominal = self.nominal(self.attempt).as_micros() as u64;
+        let jitter = self.rng.next_below(nominal / 2 + 1);
+        self.attempt = self.attempt.saturating_add(1);
+        Duration::from_micros(nominal + jitter)
+    }
+
+    /// Sleep for [`next_delay`](Self::next_delay) — the common use.
+    pub fn sleep(&mut self) {
+        std::thread::sleep(self.next_delay());
+    }
+
+    /// How many delays have been taken so far.
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Rewind to attempt 0 (after a success) without reseeding the
+    /// jitter source, so a later failure burst starts fast again.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_doubles_to_cap() {
+        let b = Backoff::new(Duration::from_millis(10), Duration::from_millis(100), 1);
+        assert_eq!(b.nominal(0), Duration::from_millis(10));
+        assert_eq!(b.nominal(1), Duration::from_millis(20));
+        assert_eq!(b.nominal(2), Duration::from_millis(40));
+        assert_eq!(b.nominal(3), Duration::from_millis(80));
+        assert_eq!(b.nominal(4), Duration::from_millis(100), "capped");
+        assert_eq!(b.nominal(63), Duration::from_millis(100), "stays capped, no overflow");
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let mut a = Backoff::new(Duration::from_millis(4), Duration::from_millis(64), 42);
+        let mut b = Backoff::new(Duration::from_millis(4), Duration::from_millis(64), 42);
+        for i in 0..10 {
+            let nominal = a.nominal(i);
+            let d = a.next_delay();
+            assert!(d >= nominal, "attempt {i}: {d:?} < nominal {nominal:?}");
+            assert!(d <= nominal + nominal / 2, "attempt {i}: {d:?} too jittered");
+            assert_eq!(d, b.next_delay(), "attempt {i}: same seed must agree");
+        }
+        assert_eq!(a.attempt(), 10);
+        a.reset();
+        assert_eq!(a.attempt(), 0);
+    }
+
+    #[test]
+    fn zero_base_is_clamped() {
+        let mut b = Backoff::new(Duration::ZERO, Duration::from_millis(1), 3);
+        assert!(b.next_delay() >= Duration::from_micros(1));
+    }
+}

@@ -2,6 +2,7 @@
 //! integer hashing, and an open-addressing hash map tuned for the Space
 //! Saving hot loop.
 
+pub mod backoff;
 pub mod benchkit;
 pub mod fastmap;
 pub mod hash;
@@ -9,6 +10,7 @@ pub mod json;
 pub mod rng;
 pub mod testdir;
 
+pub use backoff::Backoff;
 pub use fastmap::FastMap;
 pub use hash::{fib_hash32, mix64, shard_of, spread_of};
 pub use json::Json;

@@ -156,3 +156,116 @@ fn cluster_matches_single_process_oracle() {
         check_against_oracle(&view, &truth);
     }
 }
+
+/// Kill one of four spawned workers mid-ingest — an external failure
+/// the head cannot see coming. Supervision must retire the dead slot
+/// and keep streaming to the survivors; the drained result is flagged
+/// degraded; and every item is accounted exactly once: merged `N` plus
+/// the retired slot's lost mass equals what was sent. Survivors still
+/// exit 0 and no stale socket file is left behind.
+#[test]
+fn killing_one_of_four_workers_mid_ingest_degrades_cleanly() {
+    let program = Path::new(env!("CARGO_BIN_EXE_pss"));
+    let dir = pss::util::TempDir::new().expect("temp dir");
+    let worker_args: Vec<String> = [
+        "--k", "512", "--threads", "2", "--epoch-items", "10000", "--k-majority", "200",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let mut head =
+        ClusterHead::spawn_local(program, dir.path(), 4, ClusterRouting::Block, &worker_args)
+            .expect("spawn workers");
+    assert_eq!(head.live_workers(), 4);
+    let endpoints = head.endpoints();
+
+    let src = GeneratedSource::zipf_mandelbrot(N, UNIVERSE, SKEW, 0.0, SEED);
+    let mut buf = vec![0u64; CHUNK];
+    let mut pos = 0u64;
+    // First half: all four workers take their round-robin share.
+    while pos < N / 2 {
+        let take = ((N / 2 - pos) as usize).min(CHUNK);
+        src.fill(pos, &mut buf[..take]);
+        head.send_items(&buf[..take]).expect("ingest (healthy)");
+        pos += take as u64;
+    }
+
+    // SIGKILL a worker: its sockets close with the process, so the
+    // head sees a broken pipe / EOF — never a hang.
+    let victim = head.worker_pid(1).expect("spawned workers have pids");
+    let killed = std::process::Command::new("kill")
+        .args(["-9", &victim.to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(killed.success(), "kill -9 {victim} failed");
+
+    // Second half: every send must still succeed — the head retires
+    // the dead slot on first contact and routes around it.
+    while pos < N {
+        let take = ((N - pos) as usize).min(CHUNK);
+        src.fill(pos, &mut buf[..take]);
+        head.send_items(&buf[..take]).expect("ingest (degraded)");
+        pos += take as u64;
+    }
+
+    // Supervision has noticed by now (send path or child reaping); the
+    // live view says so explicitly.
+    let live = head.poll().expect("degraded poll");
+    assert!(live.degraded(), "a dead worker must flag the view degraded");
+    assert_eq!(live.workers_live(), 3);
+    assert_eq!(live.workers_total(), 4);
+    assert_eq!(head.live_workers(), 3);
+    assert!(head.mass_lost() > 0, "the dead worker had been sent mass");
+
+    let drained = head.drain().expect("degraded drain");
+    assert!(drained.view.degraded());
+    assert_eq!(drained.view.workers_live(), 3);
+    assert_eq!(drained.view.workers_total(), 4);
+    assert!(drained.view.all_finished(), "survivors drain to final snapshots");
+    assert!(drained.mass_lost > 0);
+    assert_eq!(
+        drained.view.n() + drained.mass_lost,
+        N,
+        "every item accounted exactly once: merged + lost = sent"
+    );
+
+    // The ε bound still holds against global truth: survivors saw a
+    // subset of the stream, so estimates may under-count globally, but
+    // can never over-count past f + ε (f_subset ≤ f_global).
+    let truth = exact_counts();
+    let eps = drained.view.epsilon();
+    for c in drained.view.summary().counters() {
+        let f = truth.get(&c.item).copied().unwrap_or(0);
+        assert!(
+            c.count <= f + eps,
+            "bound violation in degraded view: item {} f̂={} > f={f} + ε={eps}",
+            c.item,
+            c.count
+        );
+    }
+
+    let mut survivors = 0;
+    for (i, w) in drained.workers.iter().enumerate() {
+        if w.live {
+            survivors += 1;
+            assert!(w.snapshot.as_ref().expect("live workers carry a snapshot").finished);
+            assert!(
+                w.status.expect("spawned workers report exit status").success(),
+                "surviving worker {i} must exit 0"
+            );
+        } else {
+            assert!(w.snapshot.is_none(), "retired workers carry no snapshot");
+            let status = w.status.expect("the killed worker was reaped");
+            assert!(!status.success(), "a SIGKILLed worker cannot exit 0");
+        }
+    }
+    assert_eq!(survivors, 3);
+
+    // No stale socket files: the killed worker's socket was unlinked by
+    // supervision, the survivors' by their own clean drain.
+    for ep in &endpoints {
+        if let pss::serve::Endpoint::Unix(path) = ep {
+            assert!(!path.exists(), "stale socket file left behind: {}", path.display());
+        }
+    }
+}

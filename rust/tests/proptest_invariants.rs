@@ -1351,3 +1351,162 @@ fn prop_snapshot_cache_coherent() {
         );
     }
 }
+
+/// Property 14 (backoff schedule): for random (base, cap, seed), every
+/// delay lands in the documented jitter window `[nominal,
+/// 1.5·nominal]`, never exceeds `1.5·cap`, doubles monotonically until
+/// the cap, and the whole schedule is reproducible per seed.
+#[test]
+fn prop_backoff_schedule_bounded() {
+    use std::time::Duration;
+
+    use pss::util::Backoff;
+
+    let mut meta = SplitMix64::new(0xbac0_ff5e);
+    for trial in 0..TRIALS {
+        let seed = meta.next_u64();
+        let base_us = 1 + meta.next_u64() % 10_000;
+        let cap_us = base_us + meta.next_u64() % 1_000_000;
+        let base = Duration::from_micros(base_us);
+        let cap = Duration::from_micros(cap_us);
+        let mut a = Backoff::new(base, cap, seed);
+        let mut b = Backoff::new(base, cap, seed);
+        let mut prev = Duration::ZERO;
+        let mut prev_nominal = Duration::ZERO;
+        for i in 0..20u32 {
+            let nominal = a.nominal(i);
+            assert!(nominal <= cap, "trial {trial} attempt {i}: nominal past the cap");
+            let d = a.next_delay();
+            assert_eq!(d, b.next_delay(), "trial {trial} attempt {i}: same seed must agree");
+            assert!(
+                d >= nominal && d <= nominal + nominal / 2,
+                "trial {trial} attempt {i}: {d:?} outside [{nominal:?}, 1.5·nominal]"
+            );
+            assert!(d <= cap + cap / 2, "trial {trial} attempt {i}: {d:?} > 1.5·cap {cap:?}");
+            // While still doubling (below the cap), jitter cannot make
+            // the schedule regress: 1.5·nominalᵢ < 2·nominalᵢ = nominalᵢ₊₁.
+            if i > 0 && nominal == prev_nominal * 2 {
+                assert!(d >= prev, "trial {trial} attempt {i}: schedule regressed before cap");
+            }
+            prev = d;
+            prev_nominal = nominal;
+        }
+        assert_eq!(a.attempt(), 20);
+        a.reset();
+        assert_eq!(a.attempt(), 0, "trial {trial}: reset rewinds the attempt counter");
+        let first_again = a.next_delay();
+        let n0 = a.nominal(0);
+        assert!(
+            first_again >= n0 && first_again <= n0 + n0 / 2,
+            "trial {trial}: post-reset delay must restart from the base window"
+        );
+    }
+}
+
+/// Random well-formed frame stream: `[len:u32 LE][kind][body]` with
+/// random kinds and body lengths; frame 0 always carries ≥ 8 body
+/// bytes so garbage-scramble divergence checks cannot collide by
+/// chance. Returns the wire image and the per-frame body lengths.
+fn random_frame_stream(rng: &mut SplitMix64) -> (Vec<u8>, Vec<usize>) {
+    let count = 2 + (rng.next_u64() % 9) as usize;
+    let mut wire = Vec::new();
+    let mut lens = Vec::new();
+    for f in 0..count {
+        let body_len =
+            if f == 0 { 8 + (rng.next_u64() % 56) as usize } else { (rng.next_u64() % 64) as usize };
+        let kind = (rng.next_u64() % 0x30) as u8;
+        wire.extend_from_slice(&(body_len as u32 + 1).to_le_bytes());
+        wire.push(kind);
+        for _ in 0..body_len {
+            wire.push((rng.next_u64() & 0xff) as u8);
+        }
+        lens.push(body_len);
+    }
+    (wire, lens)
+}
+
+/// Property 15 (fault injection is deterministic): for random frame
+/// streams and random fault plans, `FaultPlan::apply_stream` under the
+/// same `(plan, direction, seed)` observes byte-identical output and
+/// the same kill verdict; plans whose matching rules only delay (or
+/// never match) are byte-transparent; the connection dies iff a
+/// matching rule is a killing action; and `Garbage` — the only
+/// seed-sensitive action — scrambles identically under the same seed
+/// but differently under another, with the frame envelope intact.
+#[test]
+fn prop_faultline_deterministic() {
+    use std::time::Duration;
+
+    use pss::serve::{Direction, FaultAction, FaultPlan, FaultRule};
+
+    let mut meta = SplitMix64::new(0xfa01_71e5);
+    for trial in 0..TRIALS {
+        let mut rng = SplitMix64::new(meta.next_u64());
+        let (wire, lens) = random_frame_stream(&mut rng);
+        let frames = lens.len() as u64;
+
+        let n_rules = 1 + (rng.next_u64() % 3) as usize;
+        let mut rules = Vec::new();
+        for _ in 0..n_rules {
+            let direction = if rng.next_u64() % 2 == 0 {
+                Direction::ClientToServer
+            } else {
+                Direction::ServerToClient
+            };
+            let action = match rng.next_u64() % 5 {
+                0 => FaultAction::Drop,
+                1 => FaultAction::Delay(Duration::from_millis(rng.next_u64() % 50)),
+                2 => FaultAction::Truncate((rng.next_u64() % 32) as usize),
+                3 => FaultAction::Reset,
+                _ => FaultAction::Garbage,
+            };
+            // Some indices land past the stream on purpose: rules that
+            // never fire must leave it untouched.
+            rules.push(FaultRule { frame_index: rng.next_u64() % (frames + 2), direction, action });
+        }
+        let plan = FaultPlan::new(rules);
+        let seed = rng.next_u64();
+
+        for direction in [Direction::ClientToServer, Direction::ServerToClient] {
+            let (a, killed_a) = plan.apply_stream(direction, seed, &wire);
+            let (b, killed_b) = plan.apply_stream(direction, seed, &wire);
+            assert_eq!(a, b, "trial {trial} {direction}: same seed+plan must observe same bytes");
+            assert_eq!(killed_a, killed_b, "trial {trial} {direction}: kill verdict must agree");
+
+            let fired: Vec<FaultAction> =
+                (0..frames).filter_map(|i| plan.rule_for(direction, i)).collect();
+            if fired.iter().all(|f| matches!(f, FaultAction::Delay(_))) {
+                assert_eq!(
+                    a, wire,
+                    "trial {trial} {direction}: delay-only plans are byte-transparent"
+                );
+                assert!(!killed_a);
+            }
+            let lethal = fired
+                .iter()
+                .any(|f| matches!(f, FaultAction::Reset | FaultAction::Truncate(_)));
+            assert_eq!(
+                killed_a, lethal,
+                "trial {trial} {direction}: killed iff a matching rule resets or truncates"
+            );
+
+            // Garbage alone: same seed reproduces the scramble, a
+            // different seed diverges (frame 0 has ≥ 8 body bytes), and
+            // the length header + total length survive untouched.
+            let gplan = FaultPlan::single(direction, 0, FaultAction::Garbage);
+            let (g1, k1) = gplan.apply_stream(direction, seed, &wire);
+            let (g2, _) = gplan.apply_stream(direction, seed, &wire);
+            let (g3, _) = gplan.apply_stream(direction, seed.wrapping_add(1), &wire);
+            assert!(!k1, "trial {trial} {direction}: garbage keeps the connection alive");
+            assert_eq!(g1, g2, "trial {trial} {direction}: garbage must be seed-deterministic");
+            assert_ne!(g1, g3, "trial {trial} {direction}: different seed, different scramble");
+            assert_eq!(g1.len(), wire.len(), "trial {trial} {direction}: envelope intact");
+            assert_eq!(g1[..4], wire[..4], "trial {trial} {direction}: length header intact");
+            assert_ne!(
+                g1[4..5 + lens[0]],
+                wire[4..5 + lens[0]],
+                "trial {trial} {direction}: frame-0 payload must actually scramble"
+            );
+        }
+    }
+}
